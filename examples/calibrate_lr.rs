@@ -1,0 +1,55 @@
+//! Internal calibration tool: sweep (optimizer × eta) on short bert-tiny
+//! runs to locate the LR where LAMB degrades but LANS holds (used to pick
+//! the constants in benches/table2_convergence.rs).
+
+use anyhow::Result;
+use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::coordinator::{TrainStatus, Trainer};
+use lans::optim::{from_ratios, Hyper};
+use lans::runtime::Engine;
+
+fn main() -> Result<()> {
+    let meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
+    let engine = Engine::cpu()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = args.first().map(|s| s.parse().unwrap()).unwrap_or(40);
+    let batch: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(32);
+
+    for eta in [0.02, 0.05, 0.1, 0.2, 0.4] {
+        for opt in ["lans", "lamb"] {
+            let cfg = TrainConfig {
+                meta_path: meta.clone(),
+                optimizer: opt.into(),
+                backend: OptBackend::Native,
+                workers: 4,
+                global_batch: batch,
+                steps,
+                seed: 1,
+                eval_every: 0,
+                eval_batches: 2,
+                hyper: Hyper::default(),
+                schedule: from_ratios(eta, steps, 0.4265, 0.2735),
+                data: DataConfig {
+                    source: "synthetic".into(),
+                    vocab: 2048,
+                    corpus_tokens: 64 * 800,
+                    seed: 7,
+                },
+                checkpoint: None,
+                resume_from: None,
+                curve_out: None,
+                stop_on_divergence: false,
+            };
+            let mut tr = Trainer::with_engine(cfg, engine.clone())?;
+            let rep = tr.run()?;
+            println!(
+                "eta {eta:<5} {opt:<5} batch {batch:<4} steps {steps:<4} -> ema {:.4} final {:.4} eval {:.4} {:?}",
+                rep.recorder.ema_loss().unwrap_or(f64::NAN),
+                rep.recorder.last_loss().unwrap_or(f64::NAN),
+                rep.final_eval_loss.unwrap_or(f64::NAN),
+                rep.status == TrainStatus::Completed
+            );
+        }
+    }
+    Ok(())
+}

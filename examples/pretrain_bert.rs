@@ -1,0 +1,134 @@
+//! The headline end-to-end driver: two-phase BERT pretraining with LANS,
+//! exactly the paper's recipe at laptop scale.
+//!
+//!   phase 1: short sequences (seq 64 here / 128 in the paper), large batch,
+//!            Table-1 stage-1 schedule (warmup 42.65%, const 27.35%)
+//!   phase 2: long sequences (seq 128 here / 512), ~1/3 batch, resumed from
+//!            the phase-1 checkpoint, Table-1 stage-2 schedule
+//!            (warmup 19.2%, const 10.8%), step ratio 782/3519
+//!
+//! Workers run on disjoint shards (§3.4); gradients are combined with a real
+//! ring allreduce; the LANS update is bit-checked elsewhere against the
+//! Pallas artifact.  Loss curves land in target/pretrain_phase{1,2}.tsv and
+//! the run is recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts-phase2 && cargo run --release --example pretrain_bert
+//!     # optional: pretrain_bert <phase1_steps> (default 150)
+
+use anyhow::Result;
+use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::coordinator::{TrainStatus, Trainer};
+use lans::optim::Hyper;
+use lans::runtime::Engine;
+
+fn main() -> Result<()> {
+    let p1_meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
+    let p2_meta = std::path::PathBuf::from("artifacts/bert-tiny_s128_b1.meta.json");
+    if !p1_meta.exists() {
+        anyhow::bail!("run `make artifacts` first");
+    }
+    let phase1_steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().unwrap())
+        .unwrap_or(150);
+    // the paper's 782/3519 step ratio
+    let phase2_steps: u64 = ((phase1_steps as f64) * 782.0 / 3519.0).round() as u64;
+
+    let engine = Engine::cpu()?;
+    let data = DataConfig {
+        source: "synthetic".into(),
+        vocab: 2048,
+        corpus_tokens: 128 * 1200,
+        seed: 7,
+    };
+    let ckpt = std::path::PathBuf::from("target/pretrain_phase1.ckpt");
+
+    // ---- phase 1 ----------------------------------------------------------
+    let cfg1 = TrainConfig {
+        meta_path: p1_meta,
+        optimizer: "lans".into(),
+        backend: OptBackend::Native,
+        workers: 4,
+        global_batch: 32,
+        steps: phase1_steps,
+        seed: 42,
+        eval_every: 25,
+        eval_batches: 4,
+        hyper: Hyper::default(),
+        schedule: TrainConfig::paper_stage1_schedule(0.05, phase1_steps),
+        data: data.clone(),
+        checkpoint: Some(ckpt.clone()),
+        resume_from: None,
+        curve_out: Some("target/pretrain_phase1.tsv".into()),
+        stop_on_divergence: true,
+    };
+    let mut t1 = Trainer::with_engine(cfg1, engine.clone())?;
+    println!(
+        "=== phase 1: seq {}, effective batch {}, {} steps (stage-1 schedule) ===",
+        t1.meta().seq,
+        t1.effective_batch(),
+        phase1_steps
+    );
+    let r1 = t1.run()?;
+    assert_eq!(r1.status, TrainStatus::Completed, "phase 1 diverged");
+    let p1_first = r1.recorder.records.first().unwrap().loss;
+    println!(
+        "phase 1 done: loss {:.4} -> {:.4} | eval {:.4} | {:.0} tok/s\n",
+        p1_first,
+        r1.recorder.last_loss().unwrap(),
+        r1.final_eval_loss.unwrap(),
+        r1.recorder.tokens_per_second()
+    );
+
+    // ---- phase 2 ----------------------------------------------------------
+    if !p2_meta.exists() {
+        println!(
+            "phase-2 artifact missing (make artifacts-phase2) — stopping after phase 1"
+        );
+        return Ok(());
+    }
+    let cfg2 = TrainConfig {
+        meta_path: p2_meta,
+        optimizer: "lans".into(),
+        backend: OptBackend::Native,
+        workers: 4,
+        // paper: phase-2 batch ≈ phase-1/3 (96K -> 33K)
+        global_batch: 12,
+        steps: phase2_steps.max(5),
+        seed: 43,
+        eval_every: 10,
+        eval_batches: 4,
+        hyper: Hyper::default(),
+        schedule: TrainConfig::paper_stage2_schedule(0.037, phase2_steps.max(5)),
+        data,
+        checkpoint: None,
+        resume_from: Some(ckpt),
+        curve_out: Some("target/pretrain_phase2.tsv".into()),
+        stop_on_divergence: true,
+    };
+    let mut t2 = Trainer::with_engine(cfg2, engine)?;
+    println!(
+        "=== phase 2: seq {}, effective batch {}, {} steps (stage-2 schedule, warm-started) ===",
+        t2.meta().seq,
+        t2.effective_batch(),
+        phase2_steps.max(5)
+    );
+    let r2 = t2.run()?;
+    assert_eq!(r2.status, TrainStatus::Completed, "phase 2 diverged");
+    println!(
+        "phase 2 done: loss {:.4} -> {:.4} | eval {:.4}",
+        r2.recorder.records.first().unwrap().loss,
+        r2.recorder.last_loss().unwrap(),
+        r2.final_eval_loss.unwrap()
+    );
+    println!(
+        "\ntwo-phase pretraining complete; curves in target/pretrain_phase*.tsv"
+    );
+    // the warm start must carry over: phase-2 initial loss far below scratch
+    let p2_first = r2.recorder.records.first().unwrap().loss;
+    assert!(
+        p2_first < p1_first - 1.0,
+        "phase 2 did not inherit phase-1 progress ({p2_first:.3} vs scratch {p1_first:.3})"
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the bert-tiny AOT artifacts, trains for 40 steps with LANS on the
+//! embedded real-text corpus across 2 simulated workers, prints the loss
+//! curve, and evaluates on the held-out shard.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::coordinator::Trainer;
+use lans::optim::{Hyper, Schedule};
+
+fn main() -> Result<()> {
+    let meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
+    if !meta.exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+
+    let cfg = TrainConfig {
+        meta_path: meta,
+        optimizer: "lans".into(),
+        backend: OptBackend::Native,
+        workers: 2,
+        global_batch: 16,
+        steps: 40,
+        seed: 42,
+        eval_every: 10,
+        eval_batches: 4,
+        hyper: Hyper::default(),
+        schedule: Schedule::WarmupConstDecay {
+            eta: 0.02,
+            t_warmup: 8,
+            t_const: 16,
+            t_total: 40,
+        },
+        data: DataConfig {
+            source: "text".into(),
+            vocab: 2048,
+            corpus_tokens: 64 * 500,
+            seed: 7,
+        },
+        checkpoint: None,
+        resume_from: None,
+        curve_out: Some("target/quickstart_curve.tsv".into()),
+        stop_on_divergence: true,
+    };
+
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "quickstart: {} | {} params | effective batch {} sequences",
+        trainer.meta().tag,
+        trainer.meta().param_count,
+        trainer.effective_batch()
+    );
+    let report = trainer.run()?;
+
+    println!("\nstep   lr        loss     ema");
+    for r in report.recorder.records.iter().step_by(5) {
+        println!(
+            "{:<6} {:.2e}  {:.4}  {:.4}",
+            r.step, r.lr, r.loss, r.loss_ema
+        );
+    }
+    println!(
+        "\nfinal: loss {:.4} | held-out eval {:.4} | {:.0} tokens/s | curve -> target/quickstart_curve.tsv",
+        report.recorder.last_loss().unwrap(),
+        report.final_eval_loss.unwrap(),
+        report.recorder.tokens_per_second()
+    );
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT lowering driver: jax → HLO *text* artifacts + meta.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the rust ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per (config, seq, micro-batch) this emits:
+
+    fwd_bwd_<tag>.hlo.txt    (params…, tokens, pos, ids, w) → (loss, grads…)
+    eval_<tag>.hlo.txt       (params…, tokens, pos, ids, w) → (loss,)
+    opt_<opt>_<cfg>.hlo.txt  (params…, m…, v…, grads…, lr[1], step[1])
+                             → (params'…, m'…, v'…)
+    <tag>.meta.json          canonical param table + artifact signatures
+
+Usage:  python -m compile.aot --config bert-tiny --seq 64 --batch 4 \
+            --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import decay_mask, get_config, int_prod, param_specs
+from .model import make_eval_loss, make_fwd_bwd
+from .optim import OptHyper, make_opt_step
+
+OPTIMIZERS = ("lans", "lamb", "adamw", "adamw_bgn")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def mlm_slots_for(seq: int) -> int:
+    """BERT masks 15% of tokens; slot count is the padded prediction budget."""
+    return max(1, math.ceil(0.15 * seq))
+
+
+def _param_structs(cfg):
+    return tuple(jax.ShapeDtypeStruct(s, jnp.float32)
+                 for _, s in param_specs(cfg))
+
+
+def _batch_structs(batch: int, seq: int, slots: int):
+    return (jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            jax.ShapeDtypeStruct((batch, slots), jnp.int32),
+            jax.ShapeDtypeStruct((batch, slots), jnp.int32),
+            jax.ShapeDtypeStruct((batch, slots), jnp.float32))
+
+
+def lower_fwd_bwd(cfg, batch: int, seq: int) -> str:
+    slots = mlm_slots_for(seq)
+    n = len(param_specs(cfg))
+    fwd_bwd = make_fwd_bwd(cfg)
+
+    def flat(*args):
+        return fwd_bwd(tuple(args[:n]), *args[n:])
+
+    structs = _param_structs(cfg) + _batch_structs(batch, seq, slots)
+    return to_hlo_text(jax.jit(flat).lower(*structs))
+
+
+def lower_eval(cfg, batch: int, seq: int) -> str:
+    slots = mlm_slots_for(seq)
+    n = len(param_specs(cfg))
+    ev = make_eval_loss(cfg)
+
+    def flat(*args):
+        return ev(tuple(args[:n]), *args[n:])
+
+    structs = _param_structs(cfg) + _batch_structs(batch, seq, slots)
+    return to_hlo_text(jax.jit(flat).lower(*structs))
+
+
+def lower_opt(cfg, opt_name: str, hyper: OptHyper) -> str:
+    n = len(param_specs(cfg))
+    step_fn = make_opt_step(cfg, opt_name, hyper)
+
+    def flat(*args):
+        params = tuple(args[:n])
+        ms = tuple(args[n:2 * n])
+        vs = tuple(args[2 * n:3 * n])
+        grads = tuple(args[3 * n:4 * n])
+        lr, step = args[4 * n], args[4 * n + 1]
+        return step_fn(params, ms, vs, grads, lr, step)
+
+    ps = _param_structs(cfg)
+    scal = (jax.ShapeDtypeStruct((1,), jnp.float32),) * 2
+    return to_hlo_text(jax.jit(flat).lower(*(ps * 4 + scal)))
+
+
+def emit(cfg_name: str, batch: int, seq: int, out_dir: str,
+         optimizers=OPTIMIZERS, hyper: OptHyper = OptHyper(),
+         with_eval: bool = True) -> dict:
+    """Emit the full artifact set; returns the meta dict."""
+    cfg = get_config(cfg_name)
+    assert seq <= cfg.max_seq_len
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{cfg_name}_s{seq}_b{batch}"
+    slots = mlm_slots_for(seq)
+
+    def write(name, text):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {name} ({len(text)} chars)")
+        return name
+
+    artifacts = {}
+    artifacts["fwd_bwd"] = write(f"fwd_bwd_{tag}.hlo.txt",
+                                 lower_fwd_bwd(cfg, batch, seq))
+    if with_eval:
+        artifacts["eval"] = write(f"eval_{tag}.hlo.txt",
+                                  lower_eval(cfg, batch, seq))
+    for opt in optimizers:
+        artifacts[f"opt_{opt}"] = write(f"opt_{opt}_{cfg_name}.hlo.txt",
+                                        lower_opt(cfg, opt, hyper))
+
+    meta = {
+        "tag": tag,
+        "config": cfg.to_dict(),
+        "batch": batch,
+        "seq": seq,
+        "mlm_slots": slots,
+        "params": [{"name": n, "shape": list(s), "size": int_prod(s),
+                    "decay": decay_mask(n)}
+                   for n, s in param_specs(cfg)],
+        "param_count": cfg.param_count(),
+        "hyper": {"beta1": hyper.beta1, "beta2": hyper.beta2,
+                  "eps": hyper.eps, "weight_decay": hyper.weight_decay},
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, f"{tag}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote {tag}.meta.json")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="bert-tiny")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--optimizers", default=",".join(OPTIMIZERS))
+    ap.add_argument("--no-eval", action="store_true")
+    ap.add_argument("--phase2", action="store_true",
+                    help="also emit a phase-2 artifact at max_seq_len "
+                         "(the paper's two-phase pretraining)")
+    args = ap.parse_args()
+
+    opts = tuple(o for o in args.optimizers.split(",") if o)
+    print(f"emitting {args.config} seq={args.seq} batch={args.batch} "
+          f"-> {args.out_dir}")
+    emit(args.config, args.batch, args.seq, args.out_dir, opts,
+         with_eval=not args.no_eval)
+    if args.phase2:
+        cfg = get_config(args.config)
+        b2 = max(1, args.batch // 4)  # paper: phase-2 batch ≈ phase-1 / 3
+        print(f"emitting phase-2 {args.config} seq={cfg.max_seq_len} "
+              f"batch={b2}")
+        emit(args.config, b2, cfg.max_seq_len, args.out_dir,
+             optimizers=(), with_eval=not args.no_eval)
+
+
+if __name__ == "__main__":
+    main()

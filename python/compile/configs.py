@@ -1,0 +1,110 @@
+"""Model-size presets shared between the python compile path and the rust
+runtime (via ``<config>.meta.json``).
+
+The paper pretrains BERT-Large (L=24, H=1024).  We expose the whole family so
+that laptop-scale experiments (tiny/mini/small) and the cluster time model
+(base/large) read the same dimension table.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class BertConfig:
+    name: str
+    num_layers: int
+    hidden: int
+    num_heads: int
+    intermediate: int
+    vocab_size: int
+    max_seq_len: int
+    type_vocab: int = 2
+    layernorm_eps: float = 1e-12
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.num_heads == 0
+        return self.hidden // self.num_heads
+
+    def param_count(self) -> int:
+        """Total parameter count (matches ``param_specs``)."""
+        return sum(int_prod(shape) for _, shape in param_specs(self))
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def int_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# Vocab sizes for tiny/mini/small are synthetic-corpus vocabularies; base and
+# large use the true BERT WordPiece vocab size so FLOP/byte counts used by the
+# rust cluster time model are faithful to the paper's workload.
+PRESETS = {
+    "bert-tiny": BertConfig("bert-tiny", 2, 128, 2, 512, 2048, 128),
+    "bert-mini": BertConfig("bert-mini", 4, 256, 4, 1024, 8192, 128),
+    "bert-small": BertConfig("bert-small", 6, 512, 8, 2048, 8192, 128),
+    "bert-base": BertConfig("bert-base", 12, 768, 12, 3072, 30522, 512),
+    "bert-large": BertConfig("bert-large", 24, 1024, 16, 4096, 30522, 512),
+}
+
+
+def get_config(name: str) -> BertConfig:
+    if name not in PRESETS:
+        raise KeyError(f"unknown config {name!r}; have {sorted(PRESETS)}")
+    return PRESETS[name]
+
+
+def param_specs(cfg: BertConfig):
+    """Ordered list of (name, shape) for every parameter tensor.
+
+    The order defined here is THE canonical parameter order: jax flattens the
+    model params in this order when lowering, meta.json records it, and the
+    rust runtime marshals literals in the same order.  Each tensor is one
+    LAMB/LANS *block* (the paper's G_b).
+    """
+    specs = [
+        ("embeddings/word", (cfg.vocab_size, cfg.hidden)),
+        ("embeddings/position", (cfg.max_seq_len, cfg.hidden)),
+        ("embeddings/ln_scale", (cfg.hidden,)),
+        ("embeddings/ln_bias", (cfg.hidden,)),
+    ]
+    for i in range(cfg.num_layers):
+        p = f"encoder/layer_{i}"
+        specs += [
+            (f"{p}/attn/q_kernel", (cfg.hidden, cfg.hidden)),
+            (f"{p}/attn/q_bias", (cfg.hidden,)),
+            (f"{p}/attn/k_kernel", (cfg.hidden, cfg.hidden)),
+            (f"{p}/attn/k_bias", (cfg.hidden,)),
+            (f"{p}/attn/v_kernel", (cfg.hidden, cfg.hidden)),
+            (f"{p}/attn/v_bias", (cfg.hidden,)),
+            (f"{p}/attn/out_kernel", (cfg.hidden, cfg.hidden)),
+            (f"{p}/attn/out_bias", (cfg.hidden,)),
+            (f"{p}/attn/ln_scale", (cfg.hidden,)),
+            (f"{p}/attn/ln_bias", (cfg.hidden,)),
+            (f"{p}/ffn/in_kernel", (cfg.hidden, cfg.intermediate)),
+            (f"{p}/ffn/in_bias", (cfg.intermediate,)),
+            (f"{p}/ffn/out_kernel", (cfg.intermediate, cfg.hidden)),
+            (f"{p}/ffn/out_bias", (cfg.hidden,)),
+            (f"{p}/ffn/ln_scale", (cfg.hidden,)),
+            (f"{p}/ffn/ln_bias", (cfg.hidden,)),
+        ]
+    specs += [
+        ("mlm/transform_kernel", (cfg.hidden, cfg.hidden)),
+        ("mlm/transform_bias", (cfg.hidden,)),
+        ("mlm/ln_scale", (cfg.hidden,)),
+        ("mlm/ln_bias", (cfg.hidden,)),
+        ("mlm/output_bias", (cfg.vocab_size,)),
+    ]
+    return specs
+
+
+# Blocks that are excluded from weight decay (λ=0) in BERT convention:
+# biases and LayerNorm parameters.  The paper's apex implementation follows
+# the same convention.
+def decay_mask(name: str) -> bool:
+    return not (name.endswith("_bias") or "ln_scale" in name or "ln_bias" in name)

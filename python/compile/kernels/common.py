@@ -1,0 +1,83 @@
+"""Shared Pallas plumbing for the fused-optimizer kernels.
+
+Layout convention (the TPU adaptation of apex's multi-tensor-apply, see
+DESIGN.md §Hardware-Adaptation): every parameter block is flattened to 1-D,
+padded to a multiple of ``tile`` (default 1024 = 8 sublanes × 128 lanes),
+and the grid walks tiles.  Full-block reductions (the trust-ratio norms) are
+computed by accumulator kernels whose output block maps every grid step to
+the same (1,) slot — the canonical Pallas grid-reduction pattern.
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret-mode lowers to plain HLO that both jax-CPU
+and the rust PJRT client run bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 sublanes x 128 lanes of f32 — one native TPU vreg tile.
+DEFAULT_TILE = 1024
+
+# Matches ref.py and the rust implementation.
+NORM_EPS = 1e-16
+
+
+def padded_len(n: int, tile: int) -> int:
+    return ((n + tile - 1) // tile) * tile
+
+
+def pad_to_tile(a, tile: int):
+    """Pad a 1-D array with zeros to a multiple of ``tile``."""
+    n = a.shape[0]
+    p = padded_len(n, tile)
+    if p == n:
+        return a
+    return jnp.pad(a, (0, p - n))
+
+
+def _masked(vals, i, tile, n):
+    """Zero out lanes past the true block length ``n`` in grid step ``i``."""
+    idx = i * tile + jax.lax.iota(jnp.int32, tile)
+    return jnp.where(idx < n, vals, 0.0)
+
+
+def _sq_norm_kernel(a_ref, o_ref, *, tile, n):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = _masked(a_ref[...], i, tile, n)
+    o_ref[0] += jnp.sum(a * a)
+
+
+def sq_norm(a, tile: int = DEFAULT_TILE):
+    """Sum of squares of a 1-D (unpadded) array via a grid-accumulating
+    Pallas kernel.  Returns a () f32 scalar."""
+    n = a.shape[0]
+    ap = pad_to_tile(a, tile)
+    grid = ap.shape[0] // tile
+    out = pl.pallas_call(
+        functools.partial(_sq_norm_kernel, tile=tile, n=n),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(ap)
+    return out[0]
+
+
+def tile_spec(tile: int) -> pl.BlockSpec:
+    """BlockSpec walking a padded 1-D array tile by tile."""
+    return pl.BlockSpec((tile,), lambda i: (i,))
+
+
+def scalar_spec(k: int) -> pl.BlockSpec:
+    """BlockSpec broadcasting a small (k,) scalar-parameter array to every
+    grid step."""
+    return pl.BlockSpec((k,), lambda i: (0,))

@@ -1,0 +1,107 @@
+"""Pallas fused LAMB kernel (Algorithm 1 — the paper's baseline).
+
+Two grid passes per block (no gradient-normalization pass — LAMB feeds the
+raw gradient into the moments):
+
+  pass B  write m', v'; reduce ||x||^2 and ||r + wd x||^2
+  pass C  apply x' = x - coef * (r + wd x)
+          with coef = lr * phi(||x||) / ||r + wd x||
+
+HBM traffic: 8n reads + 3n writes = 11n words.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (DEFAULT_TILE, NORM_EPS, _masked, pad_to_tile,
+                     scalar_spec, tile_spec)
+
+
+def _moments_kernel(x_ref, m_ref, v_ref, g_ref, s_ref,
+                    m_out, v_out, sums_out, *, tile, n):
+    """s_ref: [beta1, beta2, inv_bc1, inv_bc2, eps, wd];
+    sums_out: [sum_x2, sum_u2]."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_out[...] = jnp.zeros_like(sums_out)
+
+    beta1, beta2 = s_ref[0], s_ref[1]
+    inv_bc1, inv_bc2 = s_ref[2], s_ref[3]
+    eps, wd = s_ref[4], s_ref[5]
+
+    x = x_ref[...]
+    g = g_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+    r = (m_new * inv_bc1) / (jnp.sqrt(v_new * inv_bc2) + eps)
+    u = r + wd * x
+    xm = _masked(x, i, tile, n)
+    um = _masked(u, i, tile, n)
+    sums_out[0] += jnp.sum(xm * xm)
+    sums_out[1] += jnp.sum(um * um)
+
+
+def _apply_kernel(x_ref, m_ref, v_ref, s_ref, x_out):
+    """s_ref: [inv_bc1, inv_bc2, eps, wd, coef]."""
+    inv_bc1, inv_bc2 = s_ref[0], s_ref[1]
+    eps, wd = s_ref[2], s_ref[3]
+    coef = s_ref[4]
+    x = x_ref[...]
+    r = (m_ref[...] * inv_bc1) / (jnp.sqrt(v_ref[...] * inv_bc2) + eps)
+    x_out[...] = x - coef * (r + wd * x)
+
+
+def _phi(norm, phi_min, phi_max):
+    if phi_min is None and phi_max is None:
+        return norm
+    return jnp.clip(norm, phi_min, phi_max)
+
+
+def lamb_update(x, m, v, g, *, lr, beta1, beta2, eps, wd, step,
+                phi_min=None, phi_max=None, tile: int = DEFAULT_TILE):
+    """One fused LAMB step on a flattened block.  Returns (x', m', v')."""
+    n = x.shape[0]
+    xp, mp, vp, gp = (pad_to_tile(a, tile) for a in (x, m, v, g))
+    grid = xp.shape[0] // tile
+
+    t = jnp.asarray(step, jnp.float32)
+    inv_bc1 = 1.0 / (1.0 - beta1 ** t)
+    inv_bc2 = 1.0 / (1.0 - beta2 ** t)
+
+    s_b = jnp.stack([jnp.float32(beta1), jnp.float32(beta2),
+                     inv_bc1, inv_bc2, jnp.float32(eps), jnp.float32(wd)])
+    m_new, v_new, sums = pl.pallas_call(
+        functools.partial(_moments_kernel, tile=tile, n=n),
+        grid=(grid,),
+        in_specs=[tile_spec(tile)] * 4 + [scalar_spec(6)],
+        out_specs=[tile_spec(tile), tile_spec(tile),
+                   pl.BlockSpec((2,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+                   jax.ShapeDtypeStruct((2,), jnp.float32)],
+        interpret=True,
+    )(xp, mp, vp, gp, s_b)
+
+    x_norm = jnp.sqrt(sums[0])
+    u_norm = jnp.maximum(jnp.sqrt(sums[1]), NORM_EPS)
+    coef = jnp.asarray(lr, jnp.float32) * _phi(x_norm, phi_min, phi_max) / u_norm
+
+    s_c = jnp.stack([inv_bc1, inv_bc2, jnp.float32(eps), jnp.float32(wd), coef])
+    x_new = pl.pallas_call(
+        _apply_kernel,
+        grid=(grid,),
+        in_specs=[tile_spec(tile)] * 3 + [scalar_spec(5)],
+        out_specs=tile_spec(tile),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp, m_new, v_new, s_c)
+
+    return x_new[:n], m_new[:n], v_new[:n]

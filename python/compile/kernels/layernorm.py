@@ -1,0 +1,115 @@
+"""Pallas fused LayerNorm with a hand-written VJP.
+
+BERT is LayerNorm-heavy (2 per encoder layer + embeddings + MLM head), and
+LayerNorm is the model-side fusion opportunity the XLA CPU pipeline misses
+most often, so it is the L1 kernel on the *model* path (the optimizer kernels
+are L1 on the update path).  Forward normalizes rows of an (R, H) matrix;
+backward produces dx per row plus grid-accumulated dscale/dbias.
+
+Pallas kernels are not auto-differentiated, so the pair is wired up with
+``jax.custom_vjp`` — this is what lets the fwd_bwd HLO artifact contain
+Pallas-lowered ops on both the forward and backward pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+
+
+def _pad_rows(a, rb):
+    r = a.shape[0]
+    p = ((r + rb - 1) // rb) * rb
+    if p == r:
+        return a
+    return jnp.pad(a, ((0, p - r), (0, 0)))
+
+
+def _fwd_kernel(x_ref, s_ref, b_ref, y_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x_hat = (x - mu) * jax.lax.rsqrt(var + eps)
+    y_ref[...] = x_hat * s_ref[...] + b_ref[...]
+
+
+def _bwd_kernel(x_ref, s_ref, dy_ref, dx_ref, ds_ref, db_ref,
+                *, eps, rows, rb):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ds_ref[...] = jnp.zeros_like(ds_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    x = x_ref[...]
+    dy = dy_ref[...]
+    scale = s_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rsig = jax.lax.rsqrt(var + eps)
+    x_hat = (x - mu) * rsig
+
+    wdy = dy * scale
+    c1 = jnp.mean(wdy, axis=-1, keepdims=True)
+    c2 = jnp.mean(wdy * x_hat, axis=-1, keepdims=True)
+    dx_ref[...] = (wdy - c1 - x_hat * c2) * rsig
+
+    # mask padded rows out of the parameter gradients
+    ridx = i * rb + jax.lax.iota(jnp.int32, rb)
+    live = (ridx < rows)[:, None]
+    ds_ref[...] += jnp.sum(jnp.where(live, dy * x_hat, 0.0), axis=0)
+    db_ref[...] += jnp.sum(jnp.where(live, dy, 0.0), axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x, scale, bias, eps=1e-12):
+    """Row-wise LayerNorm over the last axis of a 2-D array via Pallas."""
+    y, _ = _layernorm_fwd(x, scale, bias, eps)
+    return y
+
+
+def _layernorm_fwd(x, scale, bias, eps):
+    rows, h = x.shape
+    xp = _pad_rows(x, ROW_BLOCK)
+    grid = xp.shape[0] // ROW_BLOCK
+    y = pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, h), lambda i: (i, 0)),
+                  pl.BlockSpec((h,), lambda i: (0,)),
+                  pl.BlockSpec((h,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, scale, bias)
+    return y[:rows], (x, scale)
+
+
+def _layernorm_bwd(eps, res, dy):
+    x, scale = res
+    rows, h = x.shape
+    xp = _pad_rows(x, ROW_BLOCK)
+    dyp = _pad_rows(dy, ROW_BLOCK)
+    grid = xp.shape[0] // ROW_BLOCK
+    dx, dscale, dbias = pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps, rows=rows, rb=ROW_BLOCK),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, h), lambda i: (i, 0)),
+                  pl.BlockSpec((h,), lambda i: (0,)),
+                  pl.BlockSpec((ROW_BLOCK, h), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROW_BLOCK, h), lambda i: (i, 0)),
+                   pl.BlockSpec((h,), lambda i: (0,)),
+                   pl.BlockSpec((h,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, x.dtype),
+                   jax.ShapeDtypeStruct((h,), x.dtype),
+                   jax.ShapeDtypeStruct((h,), x.dtype)],
+        interpret=True,
+    )(xp, scale, dyp)
+    return dx[:rows], dscale, dbias
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

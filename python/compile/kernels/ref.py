@@ -1,0 +1,115 @@
+"""Pure-jnp correctness oracles for the Pallas optimizer kernels.
+
+Every function operates on one parameter *block* (the paper's x_{t,G_b}),
+flattened to 1-D, and implements the algorithm exactly as printed:
+
+* ``lamb_ref``  — Algorithm 1 of the paper (You et al.'s LAMB).
+* ``lans_ref``  — Algorithm 2 (LANS): per-block gradient normalization
+  (eq. 4) + the Nesterov-style convex combination of the momentum direction
+  ``r`` and the instantaneous direction ``c`` (eq. 7).
+* ``adamw_ref`` — AdamW (Loshchilov & Hutter), optionally with the paper's
+  blockwise gradient normalization (§4: the finetuning optimizer).
+
+The trust-ratio scaling function phi is the identity (the paper: "it is
+generally set to an identity mapping"), optionally clipped to
+[phi_min, phi_max] as in NVIDIA's reference implementations.
+"""
+
+import jax.numpy as jnp
+
+# Guard against 0/0 when a block norm vanishes (e.g. a freshly-initialised
+# bias block with zero gradient).  Matches the rust implementation.
+_NORM_EPS = 1e-16
+
+
+def _phi(norm, phi_min=None, phi_max=None):
+    if phi_min is None and phi_max is None:
+        return norm
+    return jnp.clip(norm, phi_min, phi_max)
+
+
+def _safe_div(num, den):
+    return num / jnp.maximum(den, _NORM_EPS)
+
+
+def lans_ref(x, m, v, g, *, lr, beta1, beta2, eps, wd, step,
+             phi_min=None, phi_max=None):
+    """One LANS step on a single block.  Returns (x_new, m_new, v_new).
+
+    ``step`` is the 1-based iteration counter t used for bias correction.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    # eq. (4): per-block gradient normalization.
+    g_norm = jnp.sqrt(jnp.sum(g * g))
+    g_tilde = _safe_div(g, g_norm)
+
+    m_new = beta1 * m + (1.0 - beta1) * g_tilde
+    v_new = beta2 * v + (1.0 - beta2) * g_tilde * g_tilde
+
+    t = jnp.asarray(step, jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    denom = jnp.sqrt(v_hat) + eps
+
+    r = m_hat / denom
+    # Algorithm 2 line 11: c uses the *unbias-corrected* normalized gradient
+    # (the paper removes the 1/(1-beta1^t) factor from the c-direction).
+    c = g_tilde / denom
+
+    r_full = r + wd * x
+    c_full = c + wd * x
+    x_norm = jnp.sqrt(jnp.sum(x * x))
+    r_norm = jnp.sqrt(jnp.sum(r_full * r_full))
+    c_norm = jnp.sqrt(jnp.sum(c_full * c_full))
+
+    scale = _phi(x_norm, phi_min, phi_max)
+    d = scale * (beta1 * _safe_div(r_full, r_norm)
+                 + (1.0 - beta1) * _safe_div(c_full, c_norm))
+    return x - lr * d, m_new, v_new
+
+
+def lamb_ref(x, m, v, g, *, lr, beta1, beta2, eps, wd, step,
+             phi_min=None, phi_max=None):
+    """One LAMB step on a single block (Algorithm 1)."""
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+
+    t = jnp.asarray(step, jnp.float32)
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    r = m_hat / (jnp.sqrt(v_hat) + eps)
+
+    u = r + wd * x
+    x_norm = jnp.sqrt(jnp.sum(x * x))
+    u_norm = jnp.sqrt(jnp.sum(u * u))
+    scale = _phi(x_norm, phi_min, phi_max)
+    return x - lr * scale * _safe_div(u, u_norm), m_new, v_new
+
+
+def adamw_ref(x, m, v, g, *, lr, beta1, beta2, eps, wd, step,
+              block_grad_norm=False):
+    """One AdamW step on a single block; ``block_grad_norm=True`` applies the
+    paper's eq. (4) normalization first (the finetuning optimizer of §4)."""
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    if block_grad_norm:
+        g = _safe_div(g, jnp.sqrt(jnp.sum(g * g)))
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    t = jnp.asarray(step, jnp.float32)
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    upd = m_hat / (jnp.sqrt(v_hat) + eps) + wd * x
+    return x - lr * upd, m_new, v_new
+
+
+def layernorm_ref(x, scale, bias, eps=1e-12):
+    """Row-wise LayerNorm oracle over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias

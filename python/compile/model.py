@@ -1,0 +1,164 @@
+"""L2: BERT encoder forward/backward with masked-LM loss, in jax.
+
+This is the compute graph the rust workers execute: ``make_fwd_bwd(cfg)``
+returns a function (params, batch) -> (loss, grads) that ``aot.py`` lowers to
+one HLO text artifact per (config, seq_len, micro_batch).  LayerNorm goes
+through the Pallas kernel (``kernels/layernorm.py``) so L1 code is on both
+the forward and the backward path of the artifact.
+
+Parameters travel as a *tuple in canonical order* (``configs.param_specs``) —
+the same order the rust runtime marshals literals in.  No pytree surprises:
+tuple in, tuple of grads out.
+
+Architecture = BERT post-LN as in Devlin et al.: word+position embeddings,
+N×(self-attention + FFN with GELU), MLM head with a GELU transform and the
+output projection *tied* to the word-embedding matrix.  NSP is omitted (as in
+RoBERTa and most reproductions; the paper's target metric is MLM-driven
+SQuAD quality, and NSP contributes <1% of FLOPs).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import BertConfig, param_specs
+from .kernels.layernorm import layernorm
+
+
+def gelu(x):
+    """tanh-approximation GELU (Hendrycks & Gimpel; the Megatron/GPT form).
+
+    The exact-erf form lowers to the `erf` HLO opcode, which the runtime's
+    XLA 0.5.1 text parser predates — the tanh approximation lowers to
+    parser-supported primitives and differs by <1e-3 everywhere.
+    """
+    c = np.sqrt(2.0 / np.pi).astype(np.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def init_params(cfg: BertConfig, seed: int = 0):
+    """Initialise parameters in canonical order.
+
+    BERT init: truncated-normal(0.02) for kernels and embeddings, zeros for
+    biases, ones for LayerNorm scales.
+    """
+    rng = np.random.default_rng(seed)
+
+    def trunc_normal(shape, std=0.02):
+        a = rng.standard_normal(size=shape).astype(np.float32)
+        return np.clip(a, -2.0, 2.0) * std
+
+    out = []
+    for name, shape in param_specs(cfg):
+        if name.endswith("ln_scale"):
+            out.append(np.ones(shape, np.float32))
+        elif name.endswith("_bias") or name.endswith("ln_bias"):
+            out.append(np.zeros(shape, np.float32))
+        else:
+            out.append(trunc_normal(shape))
+    return tuple(out)
+
+
+def _ln(x2d, scale, bias, eps):
+    return layernorm(x2d, scale, bias, eps)
+
+
+def _attention(h, p, cfg: BertConfig):
+    """Multi-head self-attention block (no padding mask: the data pipeline
+    always packs full-length sequences, matching the BERT pretraining
+    pipeline where documents are concatenated and split)."""
+    b, s, hd = h.shape
+    nh, dh = cfg.num_heads, cfg.head_dim
+
+    def proj(x, kernel, bias):
+        return (x.reshape(b * s, hd) @ kernel + bias).reshape(b, s, nh, dh)
+
+    q = proj(h, p["attn/q_kernel"], p["attn/q_bias"])
+    k = proj(h, p["attn/k_kernel"], p["attn/k_bias"])
+    v = proj(h, p["attn/v_kernel"], p["attn/v_bias"])
+
+    # (b, nh, s, s)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, hd)
+    out = ctx @ p["attn/out_kernel"] + p["attn/out_bias"]
+
+    res = h.reshape(b * s, hd) + out
+    return _ln(res, p["attn/ln_scale"], p["attn/ln_bias"],
+               cfg.layernorm_eps).reshape(b, s, hd)
+
+
+def _ffn(h, p, cfg: BertConfig):
+    b, s, hd = h.shape
+    x = h.reshape(b * s, hd)
+    inner = gelu(x @ p["ffn/in_kernel"] + p["ffn/in_bias"])
+    out = inner @ p["ffn/out_kernel"] + p["ffn/out_bias"]
+    return _ln(x + out, p["ffn/ln_scale"], p["ffn/ln_bias"],
+               cfg.layernorm_eps).reshape(b, s, hd)
+
+
+def _layer_view(params_by_name: dict, layer: int) -> dict:
+    pref = f"encoder/layer_{layer}/"
+    return {k[len(pref):]: v for k, v in params_by_name.items()
+            if k.startswith(pref)}
+
+
+def forward_mlm_loss(params: tuple, tokens, mlm_pos, mlm_ids, mlm_weights,
+                     cfg: BertConfig):
+    """Masked-LM loss.
+
+    tokens      (b, s)  int32 — input ids with [MASK] substitutions applied
+    mlm_pos     (b, p)  int32 — positions of prediction slots
+    mlm_ids     (b, p)  int32 — original token ids at those slots
+    mlm_weights (b, p)  f32   — 1.0 for live slots, 0.0 for padding slots
+    """
+    names = [n for n, _ in param_specs(cfg)]
+    p = dict(zip(names, params))
+    b, s = tokens.shape
+
+    emb = p["embeddings/word"][tokens] + p["embeddings/position"][:s][None]
+    h = _ln(emb.reshape(b * s, cfg.hidden), p["embeddings/ln_scale"],
+            p["embeddings/ln_bias"], cfg.layernorm_eps).reshape(b, s, cfg.hidden)
+
+    for i in range(cfg.num_layers):
+        lp = _layer_view(p, i)
+        h = _attention(h, lp, cfg)
+        h = _ffn(h, lp, cfg)
+
+    # gather prediction slots: (b, p, hidden)
+    sel = jnp.take_along_axis(h, mlm_pos[..., None], axis=1)
+    np_ = sel.shape[1]
+    x = sel.reshape(b * np_, cfg.hidden)
+    x = gelu(x @ p["mlm/transform_kernel"] + p["mlm/transform_bias"])
+    x = _ln(x, p["mlm/ln_scale"], p["mlm/ln_bias"], cfg.layernorm_eps)
+    # tied output embedding
+    logits = x @ p["embeddings/word"].T + p["mlm/output_bias"]
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = mlm_ids.reshape(b * np_)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    w = mlm_weights.reshape(b * np_)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def make_fwd_bwd(cfg: BertConfig):
+    """(params…, tokens, mlm_pos, mlm_ids, mlm_weights) → (loss, grads…)."""
+
+    def fwd_bwd(params, tokens, mlm_pos, mlm_ids, mlm_weights):
+        loss, grads = jax.value_and_grad(forward_mlm_loss)(
+            params, tokens, mlm_pos, mlm_ids, mlm_weights, cfg)
+        return (loss,) + tuple(grads)
+
+    return fwd_bwd
+
+
+def make_eval_loss(cfg: BertConfig):
+    """(params…, batch) → (loss,) — forward only, for held-out eval."""
+
+    def eval_loss(params, tokens, mlm_pos, mlm_ids, mlm_weights):
+        return (forward_mlm_loss(params, tokens, mlm_pos, mlm_ids,
+                                 mlm_weights, cfg),)
+
+    return eval_loss

@@ -1,0 +1,73 @@
+"""L2: whole-model optimizer steps over the canonical parameter tuple.
+
+``make_opt_step(cfg, name, hyper)`` builds the function that ``aot.py``
+lowers to ``opt_<name>_<cfg>.hlo.txt``:
+
+    (params…, m…, v…, grads…, lr[1], step[1]) → (params'…, m'…, v'…)
+
+Each parameter tensor is one LAMB/LANS block (the paper's G_b): it is
+flattened, run through the fused Pallas kernel, and reshaped back.  Weight
+decay follows the BERT convention (λ=0 on biases and LayerNorm parameters,
+``configs.decay_mask``), matching the authors' apex implementation.
+
+``lr`` and ``step`` are shape-(1,) f32 runtime inputs so one lowering serves
+the entire LR schedule; the schedule itself runs in rust.
+"""
+
+from dataclasses import dataclass
+
+from .configs import BertConfig, decay_mask, param_specs
+from .kernels.adamw import adamw_update
+from .kernels.lamb import lamb_update
+from .kernels.lans import lans_update
+
+
+@dataclass(frozen=True)
+class OptHyper:
+    """Optimizer hyper-parameters baked into the artifact (Table 1 has the
+    schedule-level knobs; these are the Adam-family constants)."""
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-6
+    weight_decay: float = 0.01
+    # phi clipping; None,None = identity (the paper's choice)
+    phi_min: float | None = None
+    phi_max: float | None = None
+
+
+KERNELS = {
+    "lans": lans_update,
+    "lamb": lamb_update,
+    "adamw": adamw_update,
+    "adamw_bgn": adamw_update,  # + blockwise gradient normalization (§4)
+}
+
+
+def make_opt_step(cfg: BertConfig, name: str, hyper: OptHyper = OptHyper()):
+    """Returns step(params, ms, vs, grads, lr, step) -> params' + ms' + vs'
+    (a flat tuple, canonical order)."""
+    if name not in KERNELS:
+        raise KeyError(f"unknown optimizer {name!r}; have {sorted(KERNELS)}")
+    kernel = KERNELS[name]
+    specs = param_specs(cfg)
+
+    def step_fn(params, ms, vs, grads, lr, step):
+        lr_s = lr.reshape(())
+        t_s = step.reshape(())
+        new_p, new_m, new_v = [], [], []
+        for (pname, shape), x, m, v, g in zip(specs, params, ms, vs, grads):
+            wd = hyper.weight_decay if decay_mask(pname) else 0.0
+            kw = dict(lr=lr_s, beta1=hyper.beta1, beta2=hyper.beta2,
+                      eps=hyper.eps, wd=wd, step=t_s)
+            if name in ("lans", "lamb"):
+                kw.update(phi_min=hyper.phi_min, phi_max=hyper.phi_max)
+            if name == "adamw_bgn":
+                kw.update(block_grad_norm=True)
+            xf, mf, vf, gf = (a.reshape(-1) for a in (x, m, v, g))
+            xn, mn, vn = kernel(xf, mf, vf, gf, **kw)
+            new_p.append(xn.reshape(shape))
+            new_m.append(mn.reshape(shape))
+            new_v.append(vn.reshape(shape))
+        return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+    return step_fn

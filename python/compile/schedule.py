@@ -1,0 +1,41 @@
+"""Learning-rate schedules (paper eq. 8 and eq. 9) as traced jax scalars.
+
+These are baked into the optimizer HLO artifacts so the rust hot path only
+feeds the step counter; a bit-identical rust implementation lives in
+``rust/src/optim/schedule.rs`` (it drives scheduling decisions and Fig. 1)
+and parity is asserted in ``python/tests/test_schedule.py`` against the same
+closed forms.
+"""
+
+import jax.numpy as jnp
+
+
+def linear_warmup_decay(t, *, eta, t_warmup, t_total):
+    """eq. (8): linear warmup to ``eta`` over ``t_warmup`` steps, then linear
+    decay to 0 at ``t_total``.  ``t`` is the 1-based step, traced or static."""
+    t = jnp.asarray(t, jnp.float32)
+    warm = eta * t / t_warmup
+    decay = eta * (t_total - t) / (t_total - t_warmup)
+    return jnp.where(t <= t_warmup, warm, jnp.maximum(decay, 0.0))
+
+
+def warmup_const_decay(t, *, eta, t_warmup, t_const, t_total):
+    """eq. (9): warmup, then a constant-LR transient of ``t_const`` steps,
+    then linear decay — the paper's scheduler for batch sizes past the
+    linear-scaling limit."""
+    t = jnp.asarray(t, jnp.float32)
+    warm = eta * t / t_warmup
+    decay = eta * (t_total - t) / (t_total - t_warmup - t_const)
+    out = jnp.where(t <= t_warmup, warm,
+                    jnp.where(t <= t_warmup + t_const, eta,
+                              jnp.maximum(decay, 0.0)))
+    return out
+
+
+def poly_decay(t, *, eta, t_warmup, t_total, power=1.0):
+    """Polynomial-decay generalisation (power=1 reduces to eq. 8); included
+    because the BERT reference implementations use poly decay."""
+    t = jnp.asarray(t, jnp.float32)
+    warm = eta * t / t_warmup
+    frac = jnp.clip((t_total - t) / (t_total - t_warmup), 0.0, 1.0)
+    return jnp.where(t <= t_warmup, warm, eta * frac ** power)

@@ -1,0 +1,135 @@
+"""Pallas optimizer kernels vs pure-jnp oracles — the core L1 correctness
+signal.  Hypothesis sweeps block lengths (including tile-boundary cases) and
+hyper-parameter ranges; every property asserts allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.adamw import adamw_update
+from compile.kernels.common import pad_to_tile, padded_len, sq_norm
+from compile.kernels.lamb import lamb_update
+from compile.kernels.lans import lans_update
+from compile.kernels.ref import adamw_ref, lamb_ref, lans_ref
+
+TILE = 256  # small tile so hypothesis exercises multi-tile grids cheaply
+
+
+def make_block(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    m = (0.1 * rng.standard_normal(n)).astype(np.float32)
+    v = np.abs(0.1 * rng.standard_normal(n)).astype(np.float32)
+    g = rng.standard_normal(n).astype(np.float32)
+    return x, m, v, g
+
+
+def check(kernel, ref, n, seed, hp, kernel_kw=None, ref_kw=None):
+    x, m, v, g = make_block(n, seed)
+    got = kernel(jnp.array(x), jnp.array(m), jnp.array(v), jnp.array(g),
+                 **hp, **(kernel_kw or {}))
+    want = ref(x, m, v, g, **hp, **(ref_kw or {}))
+    for gi, wi, name in zip(got, want, ("x", "m", "v")):
+        np.testing.assert_allclose(
+            np.asarray(gi), np.asarray(wi), rtol=3e-5, atol=3e-6,
+            err_msg=f"{kernel.__name__} {name} mismatch at n={n}")
+
+
+HP = st.fixed_dictionaries({
+    "lr": st.floats(1e-5, 0.1),
+    "beta1": st.floats(0.5, 0.99),
+    "beta2": st.floats(0.9, 0.9999),
+    "eps": st.sampled_from([1e-8, 1e-6]),
+    "wd": st.sampled_from([0.0, 0.01, 0.1]),
+    "step": st.integers(1, 1000).map(float),
+})
+
+# block sizes around tile boundaries plus odd sizes
+NS = st.sampled_from([1, 3, TILE - 1, TILE, TILE + 1, 2 * TILE, 1000, 2500])
+
+
+class TestLans:
+    @settings(max_examples=30, deadline=None)
+    @given(n=NS, seed=st.integers(0, 2**31), hp=HP)
+    def test_matches_ref(self, n, seed, hp):
+        check(lans_update, lans_ref, n, seed, hp, kernel_kw={"tile": TILE})
+
+    def test_zero_gradient_block_is_safe(self):
+        # a freshly-initialised bias block can have g = 0 exactly
+        x = jnp.ones(8)
+        z = jnp.zeros(8)
+        hp = dict(lr=0.01, beta1=0.9, beta2=0.999, eps=1e-6, wd=0.0, step=1.0)
+        xn, mn, vn = lans_update(x, z, z, z, **hp, tile=TILE)
+        assert np.all(np.isfinite(np.asarray(xn)))
+        assert np.all(np.isfinite(np.asarray(mn)))
+
+    def test_gradient_scale_invariance(self):
+        # eq. (4): scaling g by any positive factor leaves the step unchanged
+        x, m, v, g = make_block(500, 0)
+        hp = dict(lr=0.01, beta1=0.9, beta2=0.999, eps=1e-6, wd=0.01, step=1.0)
+        a = lans_update(jnp.array(x), jnp.array(m), jnp.array(v),
+                        jnp.array(g), **hp, tile=TILE)
+        b = lans_update(jnp.array(x), jnp.array(m), jnp.array(v),
+                        jnp.array(1000.0 * g), **hp, tile=TILE)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_update_norm_bounded_by_lr_xnorm(self):
+        # trust-ratio property: ‖Δx‖ ≤ lr·‖x‖ when wd=0
+        x, m, v, g = make_block(1000, 1)
+        hp = dict(lr=0.01, beta1=0.9, beta2=0.999, eps=1e-6, wd=0.0, step=1.0)
+        xn, _, _ = lans_update(jnp.array(x), jnp.array(m), jnp.array(v),
+                               jnp.array(g), **hp, tile=TILE)
+        dx = np.linalg.norm(np.asarray(xn) - x)
+        assert dx <= 0.01 * np.linalg.norm(x) * 1.001
+
+
+class TestLamb:
+    @settings(max_examples=30, deadline=None)
+    @given(n=NS, seed=st.integers(0, 2**31), hp=HP)
+    def test_matches_ref(self, n, seed, hp):
+        check(lamb_update, lamb_ref, n, seed, hp, kernel_kw={"tile": TILE})
+
+    def test_phi_clipping(self):
+        x, m, v, g = make_block(300, 2)
+        x = x * 100.0  # huge ‖x‖ so clipping binds
+        hp = dict(lr=0.01, beta1=0.9, beta2=0.999, eps=1e-6, wd=0.01, step=3.0)
+        clip = dict(phi_min=0.1, phi_max=5.0)
+        got = lamb_update(jnp.array(x), jnp.array(m), jnp.array(v),
+                          jnp.array(g), **hp, **clip, tile=TILE)
+        want = lamb_ref(x, m, v, g, **hp, **clip)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=3e-5, atol=3e-6)
+
+
+class TestAdamW:
+    @settings(max_examples=30, deadline=None)
+    @given(n=NS, seed=st.integers(0, 2**31), hp=HP,
+           bgn=st.booleans())
+    def test_matches_ref(self, n, seed, hp, bgn):
+        check(adamw_update, adamw_ref, n, seed, hp,
+              kernel_kw={"block_grad_norm": bgn, "tile": TILE},
+              ref_kw={"block_grad_norm": bgn})
+
+
+class TestCommon:
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 3000), seed=st.integers(0, 2**31))
+    def test_sq_norm_matches_numpy(self, n, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.standard_normal(n).astype(np.float32)
+        got = float(sq_norm(jnp.array(a), tile=TILE))
+        want = float(np.sum(a.astype(np.float64) ** 2))
+        assert got == pytest.approx(want, rel=2e-5)
+
+    def test_padding(self):
+        assert padded_len(1, 256) == 256
+        assert padded_len(256, 256) == 256
+        assert padded_len(257, 256) == 512
+        a = jnp.arange(5.0)
+        p = pad_to_tile(a, 4)
+        assert p.shape == (8,)
+        assert float(p[7]) == 0.0

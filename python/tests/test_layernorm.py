@@ -1,0 +1,69 @@
+"""Pallas LayerNorm kernel: forward vs oracle, and the custom VJP vs
+jax-autodiff of the oracle, across row/width sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.layernorm import layernorm, ROW_BLOCK
+from compile.kernels.ref import layernorm_ref
+
+
+def make(rows, h, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, h)).astype(np.float32)
+    s = (1.0 + 0.1 * rng.standard_normal(h)).astype(np.float32)
+    b = (0.1 * rng.standard_normal(h)).astype(np.float32)
+    return x, s, b
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.sampled_from([1, ROW_BLOCK - 1, ROW_BLOCK, ROW_BLOCK + 1, 33]),
+       h=st.sampled_from([8, 64, 128]),
+       seed=st.integers(0, 2**31))
+def test_forward_matches_ref(rows, h, seed):
+    x, s, b = make(rows, h, seed)
+    got = layernorm(jnp.array(x), jnp.array(s), jnp.array(b))
+    want = layernorm_ref(x, s, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.sampled_from([3, ROW_BLOCK, 19]),
+       h=st.sampled_from([16, 64]),
+       seed=st.integers(0, 2**31))
+def test_vjp_matches_autodiff_of_ref(rows, h, seed):
+    x, s, b = make(rows, h, seed)
+
+    def f_kernel(x, s, b):
+        return jnp.sum(jnp.cos(layernorm(x, s, b)) * 1.5)
+
+    def f_ref(x, s, b):
+        return jnp.sum(jnp.cos(layernorm_ref(x, s, b)) * 1.5)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(
+        jnp.array(x), jnp.array(s), jnp.array(b))
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(
+        jnp.array(x), jnp.array(s), jnp.array(b))
+    for a, bb, name in zip(g1, g2, ("dx", "dscale", "dbias")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=2e-4, atol=2e-5, err_msg=name)
+
+
+def test_normalizes_rows():
+    x, s, b = make(16, 32, 0)
+    y = np.asarray(layernorm(jnp.array(x), jnp.ones(32), jnp.zeros(32)))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-3)
+
+
+def test_eps_is_respected():
+    # constant rows: variance 0, output must be finite and equal bias
+    x = jnp.ones((4, 16)) * 3.0
+    y = layernorm(x, jnp.ones(16), jnp.full((16,), 0.5))
+    assert np.all(np.isfinite(np.asarray(y)))
+    np.testing.assert_allclose(np.asarray(y), 0.5, atol=1e-3)

@@ -1,0 +1,148 @@
+"""L2 model: shapes, loss sanity, gradient correctness (finite differences
+on a selected parameter), and learnability on a trivial dataset."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import get_config, param_specs, decay_mask, BertConfig
+from compile.model import forward_mlm_loss, init_params, make_fwd_bwd
+from compile.optim import make_opt_step
+
+TINY = BertConfig("unit-tiny", num_layers=2, hidden=32, num_heads=2,
+                  intermediate=64, vocab_size=64, max_seq_len=16)
+
+
+def make_batch(cfg, b, s, p, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(5, cfg.vocab_size, size=(b, s)).astype(np.int32)
+    pos = np.stack([rng.choice(s, size=p, replace=False) for _ in range(b)]
+                   ).astype(np.int32)
+    ids = np.take_along_axis(tokens, pos, axis=1)
+    w = np.ones((b, p), np.float32)
+    return tokens, pos, ids, w
+
+
+class TestParamSpecs:
+    def test_counts_match_known_presets(self):
+        # bert-base ~110M with 30522 vocab
+        base = get_config("bert-base")
+        assert 1.0e8 < base.param_count() < 1.2e8
+        large = get_config("bert-large")
+        assert 3.3e8 < large.param_count() < 3.6e8
+
+    def test_decay_mask_convention(self):
+        assert decay_mask("encoder/layer_0/attn/q_kernel")
+        assert not decay_mask("encoder/layer_0/attn/q_bias")
+        assert not decay_mask("embeddings/ln_scale")
+        assert decay_mask("embeddings/word")
+
+    def test_init_matches_specs(self):
+        params = init_params(TINY, 0)
+        specs = param_specs(TINY)
+        assert len(params) == len(specs)
+        for p, (name, shape) in zip(params, specs):
+            assert p.shape == shape, name
+        # ln scales are ones
+        names = [n for n, _ in specs]
+        ln = params[names.index("embeddings/ln_scale")]
+        assert np.all(ln == 1.0)
+
+
+class TestForward:
+    def test_loss_is_near_uniform_at_init(self):
+        params = init_params(TINY, 0)
+        tokens, pos, ids, w = make_batch(TINY, 4, 16, 3)
+        loss = forward_mlm_loss(tuple(map(jnp.array, params)),
+                                jnp.array(tokens), jnp.array(pos),
+                                jnp.array(ids), jnp.array(w), TINY)
+        # random init => approx log(vocab)
+        assert abs(float(loss) - np.log(TINY.vocab_size)) < 0.5
+
+    def test_weights_mask_loss(self):
+        params = tuple(map(jnp.array, init_params(TINY, 0)))
+        tokens, pos, ids, w = make_batch(TINY, 2, 16, 3)
+        full = forward_mlm_loss(params, jnp.array(tokens), jnp.array(pos),
+                                jnp.array(ids), jnp.array(w), TINY)
+        # corrupt the target at a zero-weight slot: loss must not change
+        w2 = w.copy()
+        w2[0, 1] = 0.0
+        ids2 = ids.copy()
+        base = forward_mlm_loss(params, jnp.array(tokens), jnp.array(pos),
+                                jnp.array(ids2), jnp.array(w2), TINY)
+        ids2[0, 1] = (ids2[0, 1] + 7) % TINY.vocab_size
+        changed = forward_mlm_loss(params, jnp.array(tokens), jnp.array(pos),
+                                   jnp.array(ids2), jnp.array(w2), TINY)
+        assert float(base) == pytest.approx(float(changed), rel=1e-6)
+        assert float(full) != pytest.approx(float(base), rel=1e-6)
+
+    def test_fwd_bwd_outputs(self):
+        fb = make_fwd_bwd(TINY)
+        params = tuple(map(jnp.array, init_params(TINY, 0)))
+        tokens, pos, ids, w = make_batch(TINY, 2, 16, 3)
+        out = fb(params, jnp.array(tokens), jnp.array(pos), jnp.array(ids),
+                 jnp.array(w))
+        assert len(out) == 1 + len(params)
+        for g, p in zip(out[1:], params):
+            assert g.shape == p.shape
+
+
+class TestGradients:
+    def test_finite_difference_on_mlm_bias(self):
+        """Central finite differences on a few coordinates of the MLM output
+        bias (cheap: it enters the loss linearly through the logits)."""
+        specs = param_specs(TINY)
+        names = [n for n, _ in specs]
+        bias_idx = names.index("mlm/output_bias")
+        params = list(map(jnp.array, init_params(TINY, 1)))
+        tokens, pos, ids, w = make_batch(TINY, 2, 16, 3, seed=1)
+        args = (jnp.array(tokens), jnp.array(pos), jnp.array(ids), jnp.array(w))
+
+        def loss_fn(ps):
+            return forward_mlm_loss(tuple(ps), *args, TINY)
+
+        g = jax.grad(lambda ps: loss_fn(ps))(params)[bias_idx]
+        eps = 1e-3
+        for coord in [0, 7, 33]:
+            pp = [p for p in params]
+            delta = np.zeros(TINY.vocab_size, np.float32)
+            delta[coord] = eps
+            pp[bias_idx] = params[bias_idx] + delta
+            up = float(loss_fn(pp))
+            pp[bias_idx] = params[bias_idx] - delta
+            down = float(loss_fn(pp))
+            fd = (up - down) / (2 * eps)
+            assert float(g[coord]) == pytest.approx(fd, rel=0.05, abs=1e-4)
+
+
+class TestTraining:
+    def test_loss_decreases_with_lans(self):
+        """30 LANS steps on a fixed batch must cut the loss (end-to-end L1+L2
+        integration in pure python)."""
+        cfg = TINY
+        fb = jax.jit(make_fwd_bwd(cfg))
+        step = jax.jit(make_opt_step(cfg, "lans"))
+        params = tuple(map(jnp.array, init_params(cfg, 2)))
+        n = len(params)
+        ms = tuple(jnp.zeros_like(p) for p in params)
+        vs = tuple(jnp.zeros_like(p) for p in params)
+        tokens, pos, ids, w = make_batch(cfg, 4, 16, 3, seed=2)
+        args = (jnp.array(tokens), jnp.array(pos), jnp.array(ids), jnp.array(w))
+
+        first = None
+        last = None
+        for t in range(1, 31):
+            out = fb(params, *args)
+            loss, grads = out[0], out[1:]
+            if first is None:
+                first = float(loss)
+            last = float(loss)
+            new = step(params, ms, vs, grads,
+                       jnp.array([0.02], jnp.float32),
+                       jnp.array([float(t)], jnp.float32))
+            params = tuple(new[:n])
+            ms = tuple(new[n:2 * n])
+            vs = tuple(new[2 * n:3 * n])
+        assert last < first * 0.7, f"loss {first} -> {last}"

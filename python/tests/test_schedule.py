@@ -1,0 +1,58 @@
+"""LR schedules: jax closed forms vs the paper's Fig. 1 numbers.
+Rust parity is enforced by the same constants being asserted in
+rust/src/optim/schedule.rs tests."""
+
+import numpy as np
+import pytest
+
+from compile.schedule import linear_warmup_decay, poly_decay, warmup_const_decay
+
+T, TW, TC = 3519, 1500, 963
+
+
+def auc(fn, **kw):
+    t_total = kw["t_total"]
+    return float(sum(float(fn(t, **kw)) for t in range(1, t_total + 1)))
+
+
+class TestShapes:
+    def test_eq8_peak_and_ends(self):
+        assert float(linear_warmup_decay(TW, eta=0.01, t_warmup=TW, t_total=T)) \
+            == pytest.approx(0.01)
+        assert float(linear_warmup_decay(1, eta=0.01, t_warmup=TW, t_total=T)) \
+            == pytest.approx(0.01 / TW)
+        assert float(linear_warmup_decay(T, eta=0.01, t_warmup=TW, t_total=T)) \
+            == pytest.approx(0.0, abs=1e-9)
+
+    def test_eq9_constant_stage(self):
+        kw = dict(eta=0.007, t_warmup=TW, t_const=TC, t_total=T)
+        for t in (TW, TW + 1, TW + TC // 2, TW + TC):
+            assert float(warmup_const_decay(t, **kw)) == pytest.approx(0.007)
+        assert float(warmup_const_decay(TW + TC + 50, **kw)) < 0.007
+        assert float(warmup_const_decay(T, **kw)) == pytest.approx(0.0, abs=1e-9)
+
+    def test_poly_power1_equals_eq8(self):
+        for t in (10, TW, 2000, T):
+            a = float(poly_decay(t, eta=0.01, t_warmup=TW, t_total=T, power=1.0))
+            b = float(linear_warmup_decay(t, eta=0.01, t_warmup=TW, t_total=T))
+            assert a == pytest.approx(b, abs=1e-9)
+
+
+class TestFig1:
+    def test_auc_gaps_match_paper(self):
+        a_ideal = auc(linear_warmup_decay, eta=0.01, t_warmup=TW, t_total=T)
+        a_small = auc(linear_warmup_decay, eta=0.007, t_warmup=TW, t_total=T)
+        a_ours = auc(warmup_const_decay, eta=0.007, t_warmup=TW,
+                     t_const=TC, t_total=T)
+        assert a_ideal - a_small == pytest.approx(5.28, abs=0.05)
+        assert a_ideal - a_ours == pytest.approx(1.91, abs=0.05)
+
+    def test_traced_matches_python(self):
+        # schedules are traced into the opt artifacts — jit parity
+        import jax
+        f = jax.jit(lambda t: warmup_const_decay(
+            t, eta=0.007, t_warmup=TW, t_const=TC, t_total=T))
+        for t in (1.0, 1500.0, 2000.0, 3000.0, 3519.0):
+            assert float(f(t)) == pytest.approx(
+                float(warmup_const_decay(t, eta=0.007, t_warmup=TW,
+                                         t_const=TC, t_total=T)), rel=1e-6)

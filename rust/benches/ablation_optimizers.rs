@@ -1,0 +1,130 @@
+//! Ablation bench (§3.1/§3.2 design choices): isolate the paper's two
+//! modifications on a fast synthetic task —
+//!
+//!   lamb        = trust ratio only                       (Algorithm 1)
+//!   lans        = trust ratio + block grad-norm + Nesterov (Algorithm 2)
+//!   adamw       = neither
+//!   adamw_bgn   = block grad-norm only                   (§4 finetune opt)
+//!   msgd / nag  = §2.2's building blocks
+//!
+//! Task: noisy ill-conditioned least squares with heavy-tailed gradient
+//! noise and occasional 100× gradient spikes — the failure mode blockwise
+//! normalization is built for ("more robust to vanishing and exploding
+//! gradients", §3.1).
+
+use lans::optim::{make_optimizer, from_ratios, BlockTable, Hyper};
+use lans::util::bench::Table;
+use lans::util::rng::Rng;
+
+struct Problem {
+    dim: usize,
+    xs: Vec<Vec<f32>>,
+    ys: Vec<f32>,
+}
+
+impl Problem {
+    fn new(n: usize, dim: usize, seed: u64) -> Problem {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        // ill-conditioned features: coordinate j scaled by 1.05^j
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                (0..dim)
+                    .map(|j| rng.normal_f32() * 1.05f32.powi(j as i32))
+                    .collect()
+            })
+            .collect();
+        let ys = xs
+            .iter()
+            .map(|x| {
+                x.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>()
+                    + 0.05 * rng.normal_f32()
+            })
+            .collect();
+        Problem { dim, xs, ys }
+    }
+
+    fn grad(&self, w: &[f32], idx: &[usize], spike: f32) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.dim];
+        for &i in idx {
+            let e: f32 =
+                self.xs[i].iter().zip(w).map(|(a, b)| a * b).sum::<f32>() - self.ys[i];
+            for (gj, xj) in g.iter_mut().zip(&self.xs[i]) {
+                *gj += e * xj / idx.len() as f32;
+            }
+        }
+        for gj in g.iter_mut() {
+            *gj *= spike;
+        }
+        g
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        self.xs
+            .iter()
+            .zip(&self.ys)
+            .map(|(x, y)| {
+                let e = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() - y;
+                (e as f64).powi(2)
+            })
+            .sum::<f64>()
+            / self.xs.len() as f64
+    }
+}
+
+fn main() {
+    let prob = Problem::new(1024, 48, 1);
+    // two blocks of different scale — exercises the layer-wise machinery
+    let table = BlockTable::new(&[("a".into(), 24, false), ("b".into(), 24, false)]);
+    let steps = 600u64;
+    let sched = from_ratios(0.08, steps, 0.4265, 0.2735); // Table-1 shape
+
+    println!("=== §3.1/3.2 ablation: 600 steps, gradient spikes every 50 ===\n");
+    let mut results: Vec<(&str, f64)> = Vec::new();
+    for name in ["lans", "lamb", "adamw_bgn", "adamw", "nag", "msgd"] {
+        let hp = Hyper { weight_decay: 0.0, ..Default::default() };
+        let mut opt = make_optimizer(name, table.clone(), hp).unwrap();
+        let _rng = Rng::new(7);
+        // nonzero init: trust-ratio methods scale the step by phi(||x||),
+        // so x = 0 is a fixed point (a real LAMB/LANS property)
+        let mut w = vec![0.5f32; prob.dim];
+        let mut shard = lans::data::make_shards(1024, 1, 3).remove(0);
+        for step in 1..=steps {
+            let idx = shard.next_batch(64);
+            // 100x gradient spike every 50 steps (exploding-gradient event)
+            let spike = if step % 50 == 0 { 100.0 } else { 1.0 };
+            let g = prob.grad(&w, &idx, spike);
+            let lr = sched.lr(step) as f32 * if name.ends_with("sgd") || name == "nag" { 0.01 } else { 1.0 };
+            opt.step(&mut w, &g, lr);
+        }
+        results.push((name, prob.loss(&w)));
+    }
+    let lamb = results.iter().find(|(n, _)| *n == "lamb").unwrap().1;
+    let mut t2 = Table::new(&[
+        "optimizer", "grad-norm", "nesterov", "final mse", "ratio vs lamb",
+    ]);
+    for (n, l) in &results {
+        let (gn, nes) = match *n {
+            "lans" => ("yes", "yes"),
+            "adamw_bgn" => ("yes", "no"),
+            "nag" => ("no", "yes"),
+            _ => ("no", "no"),
+        };
+        t2.row(&[
+            n.to_string(),
+            gn.into(),
+            nes.into(),
+            format!("{l:.4e}"),
+            format!("{:.3}", l / lamb),
+        ]);
+    }
+    t2.print();
+
+    let lans = results.iter().find(|(n, _)| *n == "lans").unwrap().1;
+    println!(
+        "\nLANS vs LAMB under gradient spikes: {:.2}x lower final loss \
+         (blockwise normalization absorbs the spikes; LAMB's v_t is polluted)",
+        lamb / lans
+    );
+    assert!(lans <= lamb * 1.05, "LANS should not lose to LAMB here");
+}

@@ -1,0 +1,60 @@
+//! Collective bench: in-process ring-allreduce throughput across worker
+//! counts and message sizes, against the α-β cost model's predictions for
+//! the paper's real testbeds.
+
+use lans::collective::cost::{
+    allreduce_time_s, flat_gpu_ring_time_s, hierarchical_allreduce_time_s, CommSpec,
+};
+use lans::util::bench::{bench, Table};
+use lans::util::rng::Rng;
+
+fn main() {
+    println!("=== in-process ring allreduce (sum) ===\n");
+    let mut t = Table::new(&["workers", "floats", "mean ms", "GB/s (algo)"]);
+    for &w in &[2usize, 4, 8] {
+        for &n in &[1usize << 16, 1 << 20, 1 << 22] {
+            let mut rng = Rng::new((w * n) as u64);
+            let template: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut bufs = template.clone();
+            let r = bench(&format!("ring w={w} n={n}"), 2, 10, || {
+                bufs.clone_from(&template);
+                lans::collective::ring_allreduce(std::hint::black_box(&mut bufs));
+            });
+            // algorithm bandwidth: 2(w-1)/w * n * 4 bytes moved per worker
+            let bytes = 2.0 * (w as f64 - 1.0) / w as f64 * n as f64 * 4.0;
+            t.row(&[
+                w.to_string(),
+                n.to_string(),
+                format!("{:.3}", r.mean_ms()),
+                format!("{:.2}", bytes / (r.mean_ns * 1e-9) / 1e9),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n=== α-β model: BERT-Large gradients (1.34 GB) on paper testbeds ===\n");
+    let bytes = 334e6 * 4.0;
+    let mut t2 = Table::new(&["scheme", "testbed", "modeled"]);
+    t2.row(&[
+        "flat ring (NIC shared by 8 GPUs)".into(),
+        "192 x p3dn".into(),
+        format!("{:.1} ms", flat_gpu_ring_time_s(192, 8, bytes, CommSpec::efa()) * 1e3),
+    ]);
+    t2.row(&[
+        "hierarchical (NVLink + EFA)".into(),
+        "192 x p3dn".into(),
+        format!(
+            "{:.1} ms",
+            hierarchical_allreduce_time_s(192, 8, bytes, CommSpec::nvlink(), CommSpec::efa())
+                * 1e3
+        ),
+    ]);
+    t2.row(&[
+        "flat ring (ICI)".into(),
+        "1024 TPUv3".into(),
+        format!("{:.1} ms", allreduce_time_s(1024, bytes, CommSpec::tpu_ici()) * 1e3),
+    ]);
+    t2.print();
+}

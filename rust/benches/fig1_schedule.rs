@@ -1,0 +1,45 @@
+//! Fig. 1 bench: regenerates the schedule series + AUC-gap numbers and
+//! times the schedule evaluation itself (it sits on the trainer hot loop).
+
+use lans::optim::Schedule;
+use lans::util::bench::{bench, print_result, Table};
+
+fn main() {
+    let (t, tw, tc) = (3519u64, 1500u64, 963u64);
+    let ideal = Schedule::LinearWarmupDecay { eta: 0.01, t_warmup: tw, t_total: t };
+    let small = Schedule::LinearWarmupDecay { eta: 0.007, t_warmup: tw, t_total: t };
+    let ours = Schedule::WarmupConstDecay { eta: 0.007, t_warmup: tw, t_const: tc, t_total: t };
+
+    println!("=== Fig. 1: schedules (T={t}, Tw={tw}, Tc={tc}) ===\n");
+    let a = ideal.area_under_curve(t);
+    let mut table = Table::new(&["schedule", "AUC", "gap vs eq8@0.01", "paper gap"]);
+    table.row(&["eq8 eta=0.010".into(), format!("{a:.2}"), "-".into(), "-".into()]);
+    table.row(&[
+        "eq8 eta=0.007".into(),
+        format!("{:.2}", small.area_under_curve(t)),
+        format!("{:.2}", a - small.area_under_curve(t)),
+        "5.28".into(),
+    ]);
+    table.row(&[
+        "eq9 eta=0.007".into(),
+        format!("{:.2}", ours.area_under_curve(t)),
+        format!("{:.2}", a - ours.area_under_curve(t)),
+        "1.91".into(),
+    ]);
+    table.print();
+
+    // sanity: the reproduced gaps match the paper to the printed precision
+    assert!((a - small.area_under_curve(t) - 5.28).abs() < 0.05);
+    assert!((a - ours.area_under_curve(t) - 1.91).abs() < 0.05);
+    println!("\ngaps match the paper ✔\n");
+
+    println!("=== schedule evaluation cost (trainer hot loop) ===");
+    let mut acc = 0.0f64;
+    let r = bench("eq9 lr(t) x 4301 steps", 3, 50, || {
+        for step in 1..=4301u64 {
+            acc += ours.lr(step);
+        }
+    });
+    print_result(&r);
+    std::hint::black_box(acc);
+}

@@ -1,0 +1,173 @@
+//! Checkpointing: binary save/restore of params + optimizer moments + step.
+//!
+//! Format (little-endian):
+//!   magic "LANSCKPT" | version u32 | step u64 | n_tensors u32 |
+//!   per tensor: name_len u32, name bytes, rank u32, dims u64…, data f32… |
+//!   crc32 of everything after the magic
+//!
+//! The two-phase pretraining flow depends on this: phase 2 (seq 512) resumes
+//! from the phase-1 checkpoint, exactly as the paper's 3519+782-step split.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::TensorF32;
+
+const MAGIC: &[u8; 8] = b"LANSCKPT";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    /// named tensors: params first, then moments ("m:<name>", "v:<name>")
+    pub tensors: Vec<(String, TensorF32)>,
+}
+
+/// crc32 (IEEE) — small in-tree implementation (no external crates).
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, t) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *t = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut body: Vec<u8> = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&self.step.to_le_bytes());
+        body.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            body.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            body.extend_from_slice(name.as_bytes());
+            body.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in &t.data {
+                body.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = crc32(&body);
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&body)?;
+        f.write_all(&crc.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut raw = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut raw)?;
+        if raw.len() < MAGIC.len() + 4 || &raw[..8] != MAGIC {
+            bail!("{}: not a LANS checkpoint", path.display());
+        }
+        let body = &raw[8..raw.len() - 4];
+        let stored_crc = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored_crc {
+            bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+        }
+
+        let mut cur = body;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            if cur.len() < n {
+                return Err(anyhow!("truncated checkpoint"));
+            }
+            let (a, b) = cur.split_at(n);
+            cur = b;
+            Ok(a)
+        };
+        let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let n_tensors = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name_len = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(name_len)?.to_vec())
+                .map_err(|_| anyhow!("bad tensor name"))?;
+            let rank = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let bytes = take(n * 4)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push((name, TensorF32::new(shape, data)));
+        }
+        if !cur.is_empty() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            tensors: vec![
+                ("w".into(), TensorF32::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0])),
+                ("m:w".into(), TensorF32::new(vec![4], vec![0.1; 4])),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = std::env::temp_dir().join("lans_test_ckpt.bin");
+        let c = sample();
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].1, c.tensors[0].1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = std::env::temp_dir().join("lans_test_ckpt_corrupt.bin");
+        sample().save(&p).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(&p, &raw).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let p = std::env::temp_dir().join("lans_test_not_ckpt.bin");
+        std::fs::write(&p, b"hello world, definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,103 @@
+//! BERT FLOP and parameter accounting for the cluster time model.
+//!
+//! Uses the true architecture dimensions (BERT-Large: L=24, H=1024, I=4096,
+//! V=30522) so the Table-2 time reproduction prices the paper's actual
+//! workload, independent of the laptop-scale configs we *train*.
+
+/// Architecture dimensions (mirrors python/compile/configs.py presets).
+#[derive(Debug, Clone, Copy)]
+pub struct BertDims {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+pub const BERT_LARGE: BertDims = BertDims {
+    layers: 24,
+    hidden: 1024,
+    heads: 16,
+    intermediate: 4096,
+    vocab: 30522,
+    max_seq: 512,
+};
+
+pub const BERT_BASE: BertDims = BertDims {
+    layers: 12,
+    hidden: 768,
+    heads: 12,
+    intermediate: 3072,
+    vocab: 30522,
+    max_seq: 512,
+};
+
+impl BertDims {
+    /// Total trainable parameters (matches configs.param_specs: embeddings,
+    /// encoder, MLM head with tied output embedding).
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let i = self.intermediate as u64;
+        let v = self.vocab as u64;
+        let s = self.max_seq as u64;
+        let emb = v * h + s * h + 2 * h;
+        let per_layer = 4 * (h * h + h)      // qkv+out proj
+            + 2 * (2 * h)                    // 2 layernorms
+            + h * i + i + i * h + h; // ffn
+        let mlm = h * h + h + 2 * h + v;
+        emb + self.layers as u64 * per_layer + mlm
+    }
+
+    pub fn param_bytes_f32(&self) -> f64 {
+        self.param_count() as f64 * 4.0
+    }
+
+    /// Forward FLOPs for one sequence of length `seq` with `slots` MLM
+    /// prediction positions (matmul flops = 2mnk; elementwise ignored).
+    pub fn fwd_flops_per_seq(&self, seq: usize, slots: usize) -> f64 {
+        let s = seq as f64;
+        let p = slots as f64;
+        let h = self.hidden as f64;
+        let i = self.intermediate as f64;
+        let v = self.vocab as f64;
+        let per_layer = 4.0 * 2.0 * s * h * h   // q,k,v,out projections
+            + 2.0 * 2.0 * s * s * h             // scores + context
+            + 2.0 * 2.0 * s * h * i; // ffn in+out
+        let mlm = 2.0 * p * h * h + 2.0 * p * h * v;
+        self.layers as f64 * per_layer + mlm
+    }
+
+    /// Training FLOPs ≈ 3× forward (activation + weight gradient matmuls).
+    pub fn train_flops_per_seq(&self, seq: usize, slots: usize) -> f64 {
+        3.0 * self.fwd_flops_per_seq(seq, slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_large_param_count() {
+        // published BERT-Large: ~340M (334M without pooler/NSP head)
+        let p = BERT_LARGE.param_count();
+        assert!((3.3e8..3.6e8).contains(&(p as f64)), "params = {p}");
+    }
+
+    #[test]
+    fn bert_base_param_count() {
+        let p = BERT_BASE.param_count();
+        assert!((1.0e8..1.2e8).contains(&(p as f64)), "params = {p}");
+    }
+
+    #[test]
+    fn flops_scale_superlinearly_with_seq() {
+        // attention is quadratic in seq: 512 ≥ 4x the flops of 128
+        let f128 = BERT_LARGE.fwd_flops_per_seq(128, 20);
+        let f512 = BERT_LARGE.fwd_flops_per_seq(512, 76);
+        assert!(f512 / f128 > 4.0, "ratio {}", f512 / f128);
+        // sanity magnitude: ~100 GFLOP fwd per seq128 for BERT-Large
+        assert!((5e10..5e11).contains(&f128), "f128 = {f128}");
+    }
+}

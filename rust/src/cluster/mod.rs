@@ -1,0 +1,9 @@
+//! Cluster time model: FLOP accounting + testbed specs that regenerate the
+//! wall-clock column of Table 2 (the substitution for the paper's 192-node
+//! GPU cluster — DESIGN.md §5).
+
+pub mod flops;
+pub mod timemodel;
+
+pub use flops::{BertDims, BERT_BASE, BERT_LARGE};
+pub use timemodel::{table2_runs, ClusterSpec, Phase, Run};

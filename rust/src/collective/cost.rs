@@ -1,0 +1,125 @@
+//! α-β cost model for collectives — prices the communication the trainer's
+//! in-process ring actually performs, at the scale of the paper's testbeds
+//! (192 × P3dn.24xlarge with EFA, or a TPUv3 pod).
+//!
+//! Ring allreduce over W endpoints of N bytes:
+//!     T = 2(W−1)·α + 2·(W−1)/W · N / β
+//! (latency term + the classic 2(W−1)/W bandwidth factor).
+//!
+//! Hierarchical (node-level) allreduce, the scheme real NCCL/EFA deployments
+//! use: intra-node reduce over NVLink, inter-node ring over NIC, intra-node
+//! broadcast:
+//!     T = T_ring(gpus_per_node, NVLink) + T_ring(nodes, NIC) +
+//!         T_bcast(gpus_per_node, NVLink)
+
+/// One communication level: link latency (s) and per-endpoint bandwidth (B/s).
+#[derive(Debug, Clone, Copy)]
+pub struct CommSpec {
+    pub alpha_s: f64,
+    pub beta_bytes_per_s: f64,
+}
+
+impl CommSpec {
+    /// NVLink within a P3dn node (~25 GB/s effective per direction per GPU
+    /// for ring traffic on V100 NVLink2).
+    pub fn nvlink() -> CommSpec {
+        CommSpec { alpha_s: 3e-6, beta_bytes_per_s: 25e9 }
+    }
+
+    /// EFA on P3dn.24xlarge: 100 Gb/s per node ≈ 12.5 GB/s, ~15 µs latency.
+    pub fn efa() -> CommSpec {
+        CommSpec { alpha_s: 15e-6, beta_bytes_per_s: 12.5e9 }
+    }
+
+    /// TPUv3 ICI: ~70 GB/s per link, ~1 µs latency.
+    pub fn tpu_ici() -> CommSpec {
+        CommSpec { alpha_s: 1e-6, beta_bytes_per_s: 70e9 }
+    }
+}
+
+/// Flat ring allreduce time (seconds) for `bytes` across `w` endpoints.
+pub fn allreduce_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
+    if w <= 1 {
+        return 0.0;
+    }
+    let wf = w as f64;
+    2.0 * (wf - 1.0) * link.alpha_s
+        + 2.0 * (wf - 1.0) / wf * bytes / link.beta_bytes_per_s
+}
+
+/// Broadcast (ring pipeline) time for `bytes` across `w` endpoints.
+pub fn broadcast_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
+    if w <= 1 {
+        return 0.0;
+    }
+    (w as f64 - 1.0) * link.alpha_s + bytes / link.beta_bytes_per_s
+}
+
+/// Two-level hierarchical allreduce: `nodes` × `gpus_per_node`.
+pub fn hierarchical_allreduce_time_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
+    // intra-node reduce-scatter+gather ≈ one intra allreduce
+    let t_intra = allreduce_time_s(gpus_per_node, bytes, intra);
+    // one endpoint per node participates in the inter-node ring
+    let t_inter = allreduce_time_s(nodes, bytes, inter);
+    let t_bcast = broadcast_time_s(gpus_per_node, bytes, intra);
+    t_intra + t_inter + t_bcast
+}
+
+/// Naive single ring over every GPU: all `gpus_per_node` ranks of a node
+/// share its NIC, so the effective per-endpoint inter-node bandwidth is
+/// `inter.beta / gpus_per_node`.  This is the baseline hierarchical
+/// allreduce improves on.
+pub fn flat_gpu_ring_time_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    bytes: f64,
+    inter: CommSpec,
+) -> f64 {
+    let shared = CommSpec {
+        alpha_s: inter.alpha_s,
+        beta_bytes_per_s: inter.beta_bytes_per_s / gpus_per_node as f64,
+    };
+    allreduce_time_s(nodes * gpus_per_node, bytes, shared)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_free() {
+        assert_eq!(allreduce_time_s(1, 1e9, CommSpec::efa()), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_messages() {
+        // BERT-Large grads: ~340M params * 4B = 1.36 GB over 192 nodes
+        let t = allreduce_time_s(192, 1.36e9, CommSpec::efa());
+        // 2*(191/192)*1.36e9/12.5e9 ≈ 0.217 s; latency adds ~6 ms
+        assert!(t > 0.20 && t < 0.25, "t = {t}");
+    }
+
+    #[test]
+    fn scaling_with_workers_saturates() {
+        let b = 1e9;
+        let t64 = allreduce_time_s(64, b, CommSpec::efa());
+        let t256 = allreduce_time_s(256, b, CommSpec::efa());
+        // bandwidth term saturates at 2N/beta — within 2% between 64 and 256
+        assert!((t256 - t64) / t64 < 0.05);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_at_scale() {
+        let bytes = 1.36e9;
+        let flat = flat_gpu_ring_time_s(192, 8, bytes, CommSpec::efa());
+        let hier = hierarchical_allreduce_time_s(
+            192, 8, bytes, CommSpec::nvlink(), CommSpec::efa());
+        assert!(hier < flat, "hier {hier} vs flat {flat}");
+    }
+}

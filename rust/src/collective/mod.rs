@@ -1,0 +1,8 @@
+//! Collectives: a real (summing) ring allreduce over in-process gradient
+//! buffers, plus the α-β cost model used by the cluster time simulator.
+
+pub mod cost;
+pub mod ring;
+
+pub use cost::{allreduce_time_s, CommSpec};
+pub use ring::{ring_allreduce, ring_allreduce_avg};

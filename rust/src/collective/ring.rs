@@ -1,0 +1,138 @@
+//! Ring allreduce with real summation — the collective the trainer uses to
+//! combine per-worker gradients.
+//!
+//! The implementation follows the classic two-phase schedule (Baidu ring):
+//! `W-1` reduce-scatter steps followed by `W-1` all-gather steps over `W`
+//! equal chunks.  Communication here is memory movement between worker
+//! buffers (the workers are in-process), but the *schedule* is the real
+//! one: each phase moves exactly the chunks a wire implementation would,
+//! which is what the cost model (`collective::cost`) prices and what the
+//! allreduce bench measures.
+//!
+//! Numerical note: chunk c of every worker is reduced in the same ring
+//! order regardless of W, so results are deterministic; f32 accumulation
+//! order differs from a naive sequential sum by design (as on real rings).
+
+/// In-place ring allreduce (sum) across `bufs` (one buffer per worker).
+/// All buffers must be the same length.  After return, every buffer holds
+/// the element-wise sum.
+pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
+    let w = bufs.len();
+    assert!(w > 0, "no workers");
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
+    if w == 1 || n == 0 {
+        return;
+    }
+
+    // chunk boundaries: chunk c covers [starts[c], starts[c+1])
+    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
+
+    // Phase 1 — reduce-scatter: after step s, worker (c + s + 1) mod w holds
+    // the partial sum of chunk c over s+2 workers.  After w-1 steps, worker
+    // (c + w - 1) mod w owns the full sum of chunk c.
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let src = (c + s) % w;
+            let dst = (c + s + 1) % w;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            // sum src's chunk into dst's chunk
+            let (a, b) = split_two(bufs, src, dst);
+            for i in lo..hi {
+                b[i] += a[i];
+            }
+        }
+    }
+
+    // Phase 2 — all-gather: owner of each reduced chunk circulates it.
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let src = (c + w - 1 + s) % w;
+            let dst = (c + w + s) % w;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let (a, b) = split_two(bufs, src, dst);
+            b[lo..hi].copy_from_slice(&a[lo..hi]);
+        }
+    }
+}
+
+/// Allreduce then divide by the worker count (gradient averaging).
+pub fn ring_allreduce_avg(bufs: &mut [Vec<f32>]) {
+    let w = bufs.len() as f32;
+    ring_allreduce(bufs);
+    for b in bufs.iter_mut() {
+        for x in b.iter_mut() {
+            *x /= w;
+        }
+    }
+}
+
+/// Borrow two distinct workers' buffers mutably.
+fn split_two(bufs: &mut [Vec<f32>], src: usize, dst: usize) -> (&[f32], &mut [f32]) {
+    assert_ne!(src, dst);
+    if src < dst {
+        let (l, r) = bufs.split_at_mut(dst);
+        (&l[src], &mut r[0])
+    } else {
+        let (l, r) = bufs.split_at_mut(src);
+        (&r[0], &mut l[dst])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_sum(w: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let expect: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i]).sum())
+            .collect();
+        ring_allreduce(&mut bufs);
+        for b in &bufs {
+            for (got, want) in b.iter().zip(&expect) {
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "{got} vs {want} (w={w} n={n})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sums_match_many_shapes() {
+        for (w, n) in [(1, 8), (2, 10), (3, 7), (4, 64), (8, 1000), (5, 3)] {
+            check_sum(w, n, (w * 1000 + n) as u64);
+        }
+    }
+
+    #[test]
+    fn n_smaller_than_workers() {
+        // degenerate chunking: some chunks are empty
+        check_sum(8, 3, 42);
+    }
+
+    #[test]
+    fn avg_divides() {
+        let mut bufs = vec![vec![2.0f32; 4], vec![4.0f32; 4]];
+        ring_allreduce_avg(&mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![3.0f32; 4]);
+        }
+    }
+
+    #[test]
+    fn all_workers_agree() {
+        let mut rng = Rng::new(9);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..50).map(|_| rng.normal_f32()).collect()).collect();
+        ring_allreduce(&mut bufs);
+        for w in 1..6 {
+            assert_eq!(bufs[0], bufs[w], "worker {w} disagrees");
+        }
+    }
+}

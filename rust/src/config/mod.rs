@@ -1,0 +1,207 @@
+//! Typed experiment configuration: TOML-subset files + presets.
+//!
+//! Everything the launcher (`lans train …`) needs lives here: which
+//! artifact to load, the parallelism/batching geometry, the optimizer and
+//! schedule (Table 1 presets included), and the data source.
+
+pub mod parser;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::schedule::{from_ratios, Schedule};
+use crate::optim::Hyper;
+
+pub use parser::{Document, Value};
+
+/// Which optimizer-update implementation the trainer uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptBackend {
+    /// pure-rust update (fast laptop path; bit-checked against HLO in tests)
+    Native,
+    /// the AOT Pallas kernel artifact via PJRT
+    Hlo,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub meta_path: PathBuf,
+    pub optimizer: String,
+    pub backend: OptBackend,
+    pub workers: usize,
+    /// per-worker microbatch must equal the artifact's static batch dim
+    pub global_batch: usize,
+    pub steps: u64,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub hyper: Hyper,
+    pub schedule: Schedule,
+    pub data: DataConfig,
+    pub checkpoint: Option<PathBuf>,
+    /// warm-start parameters from a checkpoint (optimizer moments restart,
+    /// as in the reference two-phase BERT implementations)
+    pub resume_from: Option<PathBuf>,
+    pub curve_out: Option<PathBuf>,
+    /// stop as soon as the EMA loss exceeds ceiling×initial (divergence)
+    pub stop_on_divergence: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    /// "synthetic" (Markov-Zipf) or "text" (embedded corpus)
+    pub source: String,
+    pub vocab: usize,
+    pub corpus_tokens: usize,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Parse from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Document::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_doc(&doc, path.parent().unwrap_or(Path::new(".")))
+    }
+
+    pub fn from_doc(doc: &Document, base: &Path) -> Result<TrainConfig> {
+        let meta = doc
+            .get("model", "meta")
+            .and_then(Value::as_str)
+            .context("config needs [model] meta = \"<path>\"")?;
+        let meta_path = base.join(meta);
+
+        let backend = match doc.str_or("train", "backend", "native") {
+            "native" => OptBackend::Native,
+            "hlo" => OptBackend::Hlo,
+            other => bail!("unknown backend {other:?} (native|hlo)"),
+        };
+
+        let hyper = Hyper {
+            beta1: doc.f64_or("optimizer", "beta1", 0.9) as f32,
+            beta2: doc.f64_or("optimizer", "beta2", 0.999) as f32,
+            eps: doc.f64_or("optimizer", "eps", 1e-6) as f32,
+            weight_decay: doc.f64_or("optimizer", "weight_decay", 0.01) as f32,
+        };
+
+        let steps = doc.usize_or("train", "steps", 100) as u64;
+        let eta = doc.f64_or("schedule", "eta", 0.00675);
+        let schedule = match doc.str_or("schedule", "kind", "warmup_const_decay") {
+            "constant" => Schedule::Constant { eta },
+            "linear_warmup_decay" => Schedule::LinearWarmupDecay {
+                eta,
+                t_warmup: doc.usize_or("schedule", "warmup", (steps / 10) as usize) as u64,
+                t_total: steps,
+            },
+            "warmup_const_decay" => from_ratios(
+                eta,
+                steps,
+                doc.f64_or("schedule", "ratio_warmup", 0.4265),
+                doc.f64_or("schedule", "ratio_const", 0.2735),
+            ),
+            other => bail!("unknown schedule kind {other:?}"),
+        };
+
+        Ok(TrainConfig {
+            meta_path,
+            optimizer: doc.str_or("train", "optimizer", "lans").to_string(),
+            backend,
+            workers: doc.usize_or("train", "workers", 2),
+            global_batch: doc.usize_or("train", "global_batch", 16),
+            steps,
+            seed: doc.usize_or("train", "seed", 42) as u64,
+            eval_every: doc.usize_or("train", "eval_every", 0) as u64,
+            eval_batches: doc.usize_or("train", "eval_batches", 4),
+            hyper,
+            schedule,
+            data: DataConfig {
+                source: doc.str_or("data", "source", "synthetic").to_string(),
+                vocab: doc.usize_or("data", "vocab", 2048),
+                corpus_tokens: doc.usize_or("data", "corpus_tokens", 262144),
+                seed: doc.usize_or("data", "seed", 7) as u64,
+            },
+            checkpoint: doc
+                .get("train", "checkpoint")
+                .and_then(Value::as_str)
+                .map(|s| base.join(s)),
+            resume_from: doc
+                .get("train", "resume_from")
+                .and_then(Value::as_str)
+                .map(|s| base.join(s)),
+            curve_out: doc
+                .get("train", "curve_out")
+                .and_then(Value::as_str)
+                .map(|s| base.join(s)),
+            stop_on_divergence: doc.bool_or("train", "stop_on_divergence", true),
+        })
+    }
+
+    /// Table 1 stage-1 preset, rescaled to `steps` at laptop scale.
+    pub fn paper_stage1_schedule(eta: f64, steps: u64) -> Schedule {
+        from_ratios(eta, steps, 0.4265, 0.2735)
+    }
+
+    /// Table 1 stage-2 preset (warmup 19.2%, const 10.8%).
+    pub fn paper_stage2_schedule(eta: f64, steps: u64) -> Schedule {
+        from_ratios(eta, steps, 0.192, 0.108)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let doc = Document::parse(
+            r#"
+            [model]
+            meta = "artifacts/bert-tiny_s64_b4.meta.json"
+            [train]
+            optimizer = "lamb"
+            backend = "hlo"
+            workers = 4
+            global_batch = 64
+            steps = 500
+            [schedule]
+            kind = "warmup_const_decay"
+            eta = 0.00675
+            [data]
+            source = "text"
+            "#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new("/base")).unwrap();
+        assert_eq!(c.optimizer, "lamb");
+        assert_eq!(c.backend, OptBackend::Hlo);
+        assert_eq!(c.workers, 4);
+        assert!(c.meta_path.starts_with("/base"));
+        assert_eq!(c.data.source, "text");
+        match c.schedule {
+            Schedule::WarmupConstDecay { t_warmup, t_const, t_total, .. } => {
+                assert_eq!(t_total, 500);
+                // 70% of steps in warmup+const (Table 1 stage-1 constraint)
+                assert!((t_warmup + t_const) as f64 / 500.0 - 0.70 < 0.01);
+            }
+            _ => panic!("wrong schedule"),
+        }
+    }
+
+    #[test]
+    fn missing_meta_is_error() {
+        let doc = Document::parse("[train]\nsteps = 5").unwrap();
+        assert!(TrainConfig::from_doc(&doc, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn bad_backend_is_error() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\nbackend = \"gpu\"",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_doc(&doc, Path::new(".")).is_err());
+    }
+}

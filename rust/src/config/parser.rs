@@ -1,0 +1,227 @@
+//! TOML-subset parser — the config-file substrate (the `toml` crate is
+//! unavailable offline).
+//!
+//! Supported grammar (covers everything the launcher needs):
+//!   [section] headers, `key = value` pairs, `#` comments,
+//!   values: quoted strings, booleans, integers, floats.
+//! Unsupported on purpose: arrays-of-tables, inline tables, multi-line
+//! strings, datetimes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(x) => write!(f, "{x}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    /// section → key → value ("" is the root section)
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ParseError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                let val = line[eq + 1..].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(val).map_err(|m| err(&m))?;
+                doc.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(key.to_string(), value);
+            } else {
+                return Err(err("expected `[section]` or `key = value`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".to_string());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            r#"
+            top = 1
+            [train]           # trailing comment
+            optimizer = "lans"
+            workers = 4
+            eta = 6.75e-3
+            resume = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.str_or("train", "optimizer", "x"), "lans");
+        assert_eq!(doc.usize_or("train", "workers", 0), 4);
+        assert!((doc.f64_or("train", "eta", 0.0) - 0.00675).abs() < 1e-12);
+        assert!(!doc.bool_or("train", "resume", true));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = Document::parse("[a]\n").unwrap();
+        assert_eq!(doc.usize_or("a", "missing", 7), 7);
+        assert_eq!(doc.str_or("nosection", "k", "d"), "d");
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = Document::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Document::parse("[ok]\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(Document::parse("[unterminated").is_err());
+        assert!(Document::parse("k = ").is_err());
+    }
+}

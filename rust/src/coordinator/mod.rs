@@ -1,0 +1,10 @@
+//! L3 coordinator: leader/worker topology, gradient accumulation, the
+//! synchronous data-parallel step loop, and the data-source plumbing.
+
+pub mod source;
+pub mod trainer;
+pub mod worker;
+
+pub use source::DataSource;
+pub use trainer::{TrainReport, TrainStatus, Trainer};
+pub use worker::{WorkerCmd, WorkerHandle, WorkerReply};

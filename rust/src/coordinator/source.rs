@@ -1,0 +1,150 @@
+//! Training data source: corpus + masker + per-worker shards + a held-out
+//! eval shard, built from a [`DataConfig`].
+//!
+//! The last `EVAL_FRACTION` of sequences never enter any training shard —
+//! that slice is the "dev set" the trainer's eval loop scores (the stand-in
+//! for the paper's SQuAD check of pretraining quality, DESIGN.md §5).
+
+use anyhow::{bail, Result};
+
+use crate::config::DataConfig;
+use crate::data::{
+    make_shards, text_corpus, Masker, MlmBatch, SequenceSet, Shard, SyntheticCorpus, Vocab,
+};
+use crate::util::rng::Rng;
+
+const EVAL_FRACTION: f64 = 0.05;
+
+pub struct DataSource {
+    pub seqs: SequenceSet,
+    pub masker: Masker,
+    pub vocab_size: usize,
+    /// number of leading sequences available for training shards
+    train_len: usize,
+    eval_indices: Vec<usize>,
+}
+
+impl DataSource {
+    pub fn build(cfg: &DataConfig, seq_len: usize, slots: usize) -> Result<DataSource> {
+        let (vocab, tokens) = match cfg.source.as_str() {
+            "synthetic" => {
+                // The *language* (Markov transition table) is derived from
+                // the seed's high bits, the document stream from the full
+                // seed: seeds 0x700 and 0x701 generate different documents
+                // of the SAME language.  This is what lets the finetune
+                // example model a downstream task on the pretraining
+                // distribution (fresh text, same statistics).
+                let c = SyntheticCorpus::new(cfg.vocab, cfg.seed >> 8);
+                let toks = c.generate(cfg.corpus_tokens, cfg.seed ^ 0xDA7A);
+                (c.vocab, toks)
+            }
+            "text" => {
+                let (v, t) = text_corpus(cfg.vocab, cfg.corpus_tokens);
+                (v, t)
+            }
+            other => bail!("unknown data source {other:?} (synthetic|text)"),
+        };
+        Self::from_parts(vocab, tokens, seq_len, slots)
+    }
+
+    pub fn from_parts(
+        vocab: Vocab,
+        tokens: Vec<i32>,
+        seq_len: usize,
+        slots: usize,
+    ) -> Result<DataSource> {
+        let masker = Masker::new(slots, &vocab);
+        let seqs = SequenceSet::new(tokens, seq_len);
+        let n = seqs.len();
+        let eval_n = ((n as f64 * EVAL_FRACTION) as usize).max(1).min(n / 2);
+        let train_len = n - eval_n;
+        if train_len == 0 {
+            bail!("corpus too small: {n} sequences");
+        }
+        Ok(DataSource {
+            seqs,
+            masker,
+            vocab_size: vocab.size,
+            train_len,
+            eval_indices: (train_len..n).collect(),
+        })
+    }
+
+    /// Disjoint without-replacement shards over the training slice
+    /// (paper §3.4).
+    pub fn make_worker_shards(&self, workers: usize, seed: u64) -> Vec<Shard> {
+        make_shards(self.train_len, workers, seed)
+    }
+
+    pub fn train_sequences(&self) -> usize {
+        self.train_len
+    }
+
+    pub fn eval_sequences(&self) -> usize {
+        self.eval_indices.len()
+    }
+
+    /// A deterministic eval batch (same masking per (seed, batch_idx) so the
+    /// eval metric is comparable across steps and runs).
+    pub fn eval_batch(&self, batch: usize, batch_idx: usize, seed: u64) -> MlmBatch {
+        let mut rng = Rng::new(seed ^ 0xE7A1).fork(batch_idx as u64);
+        let idx: Vec<usize> = (0..batch)
+            .map(|i| self.eval_indices[(batch_idx * batch + i) % self.eval_indices.len()])
+            .collect();
+        self.masker.make_batch(&self.seqs, &idx, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig { source: "synthetic".into(), vocab: 256, corpus_tokens: 64 * 200, seed: 1 }
+    }
+
+    #[test]
+    fn builds_and_splits() {
+        let ds = DataSource::build(&cfg(), 64, 10).unwrap();
+        assert!(ds.train_sequences() > 0);
+        assert!(ds.eval_sequences() > 0);
+        assert_eq!(ds.train_sequences() + ds.eval_sequences(), ds.seqs.len());
+    }
+
+    #[test]
+    fn eval_never_overlaps_train_shards() {
+        let ds = DataSource::build(&cfg(), 64, 10).unwrap();
+        let mut shards = ds.make_worker_shards(3, 2);
+        let eval_min = ds.train_sequences();
+        for s in shards.iter_mut() {
+            for _ in 0..5 {
+                for i in s.next_batch(4) {
+                    assert!(i < eval_min, "train shard leaked eval index {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_batch_is_deterministic() {
+        let ds = DataSource::build(&cfg(), 64, 10).unwrap();
+        let a = ds.eval_batch(4, 0, 9);
+        let b = ds.eval_batch(4, 0, 9);
+        assert_eq!(a, b);
+        let c = ds.eval_batch(4, 1, 9);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn text_source_works() {
+        let c = DataConfig { source: "text".into(), vocab: 512, corpus_tokens: 20_000, seed: 1 };
+        let ds = DataSource::build(&c, 32, 5).unwrap();
+        assert!(ds.train_sequences() > 10);
+    }
+
+    #[test]
+    fn unknown_source_errors() {
+        let c = DataConfig { source: "s3".into(), vocab: 256, corpus_tokens: 1000, seed: 1 };
+        assert!(DataSource::build(&c, 32, 5).is_err());
+    }
+}

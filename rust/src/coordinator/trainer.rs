@@ -1,0 +1,287 @@
+//! The synchronous data-parallel trainer — the leader side of the paper's
+//! training system.
+//!
+//! Per step: snapshot params → workers run their microbatches on disjoint
+//! shards (§3.4) → ring-allreduce the per-worker gradient sums → mean →
+//! LANS/LAMB/AdamW update (native rust or the AOT Pallas artifact) at the
+//! scheduled learning rate (eq. 8/eq. 9) → metrics, divergence detection,
+//! periodic eval, checkpointing.
+//!
+//! The *effective* mini-batch is `workers × micro_steps × micro_batch`
+//! sequences — gradient accumulation is how the paper reaches 96K on fixed
+//! per-GPU memory, and how we reach "large batch" at laptop scale.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::collective::ring_allreduce;
+use crate::config::{OptBackend, TrainConfig};
+use crate::metrics::Recorder;
+use crate::optim::{make_optimizer, BlockTable, Optimizer};
+use crate::runtime::{Engine, ModelRuntime, TensorF32};
+
+use super::source::DataSource;
+use super::worker::{WorkerCmd, WorkerHandle, WorkerReply};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrainStatus {
+    Completed,
+    Diverged { at_step: u64 },
+}
+
+pub struct TrainReport {
+    pub status: TrainStatus,
+    pub recorder: Recorder,
+    pub final_eval_loss: Option<f64>,
+    pub steps_run: u64,
+    /// final parameters (canonical order) for checkpoint-free callers
+    pub params: Vec<TensorF32>,
+}
+
+pub struct Trainer {
+    cfg: TrainConfig,
+    runtime: ModelRuntime,
+    source: Arc<DataSource>,
+    table: Arc<BlockTable>,
+    micro_steps_per_worker: usize,
+}
+
+impl Trainer {
+    /// Build the full topology: engine, runtime, data source.  Fails fast on
+    /// inconsistent geometry (batch divisibility, vocab overflow).
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let engine = Engine::cpu().context("starting PJRT engine")?;
+        Self::with_engine(cfg, engine)
+    }
+
+    /// Reuse an existing engine (benches share one across trainers).
+    pub fn with_engine(cfg: TrainConfig, engine: Engine) -> Result<Trainer> {
+        let runtime = ModelRuntime::load(engine, &cfg.meta_path)
+            .with_context(|| format!("loading {}", cfg.meta_path.display()))?;
+        let meta = runtime.meta.clone();
+
+        let denom = cfg.workers * meta.batch;
+        if cfg.global_batch % denom != 0 {
+            bail!(
+                "global_batch {} not divisible by workers*micro_batch = {}×{}",
+                cfg.global_batch, cfg.workers, meta.batch
+            );
+        }
+        let micro_steps = cfg.global_batch / denom;
+
+        let source =
+            Arc::new(DataSource::build(&cfg.data, meta.seq, meta.mlm_slots)?);
+        if source.vocab_size > meta.vocab_size {
+            bail!(
+                "data vocab {} exceeds model vocab {}",
+                source.vocab_size, meta.vocab_size
+            );
+        }
+        if source.train_sequences() < cfg.workers {
+            bail!("corpus too small for {} workers", cfg.workers);
+        }
+
+        if cfg.backend == OptBackend::Hlo {
+            runtime.load_optimizer(&cfg.optimizer).with_context(|| {
+                format!("loading opt_{} artifact", cfg.optimizer)
+            })?;
+        }
+
+        let table = Arc::new(BlockTable::from_meta(&runtime.meta));
+        Ok(Trainer { cfg, runtime, source, table, micro_steps_per_worker: micro_steps })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::ModelMeta {
+        &self.runtime.meta
+    }
+
+    pub fn effective_batch(&self) -> usize {
+        self.cfg.workers * self.micro_steps_per_worker * self.runtime.meta.batch
+    }
+
+    /// Run the configured number of steps (or stop early on divergence).
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let meta = self.runtime.meta.clone();
+        let tokens_per_step = (self.effective_batch() * meta.seq) as u64;
+
+        // workers with disjoint shards (paper §3.4)
+        let shards = self.source.make_worker_shards(cfg.workers, cfg.seed);
+        let workers: Vec<WorkerHandle> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                WorkerHandle::spawn(
+                    i,
+                    self.runtime.clone(),
+                    self.source.clone(),
+                    shard,
+                    self.table.clone(),
+                    cfg.seed,
+                )
+            })
+            .collect::<Result<_>>()?;
+
+        // leader state: fresh init, or warm-start from a checkpoint
+        // (moments restart either way — the two-phase convention)
+        let mut params = match &cfg.resume_from {
+            None => self.runtime.init_params(cfg.seed),
+            Some(path) => {
+                let ckpt = Checkpoint::load(path)?;
+                let mut by_name: std::collections::HashMap<String, TensorF32> =
+                    ckpt.tensors.into_iter().collect();
+                meta.params
+                    .iter()
+                    .map(|spec| {
+                        let mut t = by_name.remove(&spec.name).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "checkpoint missing tensor {:?}", spec.name
+                            )
+                        })?;
+                        if t.data.len() != spec.size {
+                            bail!(
+                                "checkpoint tensor {} has {} elements, model \
+                                 wants {}",
+                                spec.name, t.data.len(), spec.size
+                            );
+                        }
+                        // phase-2 reshape: position embeddings etc. keep
+                        // identical sizes in our presets, so shapes must match
+                        t.shape = spec.shape.clone();
+                        Ok(t)
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        let mut opt_state = self.runtime.zero_opt_state();
+        let mut native_opt: Option<Box<dyn Optimizer>> = match cfg.backend {
+            OptBackend::Native => Some(
+                make_optimizer(&cfg.optimizer, (*self.table).clone(), cfg.hyper)
+                    .ok_or_else(|| anyhow::anyhow!("unknown optimizer {}", cfg.optimizer))?,
+            ),
+            OptBackend::Hlo => None,
+        };
+        let mut flat_params = match cfg.backend {
+            OptBackend::Native => self.table.flatten(&params),
+            OptBackend::Hlo => Vec::new(),
+        };
+
+        let mut recorder = Recorder::new(0.9);
+        let mut status = TrainStatus::Completed;
+        let mut steps_run = 0;
+
+        for t in 1..=cfg.steps {
+            let lr = cfg.schedule.lr(t);
+            let snapshot = Arc::new(params.clone());
+            for w in &workers {
+                w.send(WorkerCmd::Step {
+                    params: snapshot.clone(),
+                    micro_steps: self.micro_steps_per_worker,
+                });
+            }
+            let replies: Vec<WorkerReply> =
+                workers.iter().map(|w| w.recv()).collect::<Result<_>>()?;
+            let mut loss_sum = 0.0;
+            let mut total_micros = 0usize;
+            let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(replies.len());
+            for r in replies {
+                if let Some(e) = r.error {
+                    bail!("step {t}: {e}");
+                }
+                loss_sum += r.loss_sum;
+                total_micros += r.micros;
+                bufs.push(r.grad_flat);
+            }
+
+            // combine shard gradients: ring allreduce (sum), then mean
+            ring_allreduce(&mut bufs);
+            let mut grad = std::mem::take(&mut bufs[0]);
+            let inv = 1.0 / total_micros as f32;
+            for g in grad.iter_mut() {
+                *g *= inv;
+            }
+            let loss = loss_sum / total_micros as f64;
+
+            // optimizer update
+            let (grad_norm, trust) = match cfg.backend {
+                OptBackend::Native => {
+                    let opt = native_opt.as_mut().unwrap();
+                    let stats = opt.step(&mut flat_params, &grad, lr as f32);
+                    self.table.unflatten_into(&flat_params, &mut params);
+                    (stats.grad_norm, stats.mean_trust_ratio)
+                }
+                OptBackend::Hlo => {
+                    let gn = grad
+                        .iter()
+                        .map(|&x| (x as f64) * (x as f64))
+                        .sum::<f64>()
+                        .sqrt();
+                    let mut grads_t: Vec<TensorF32> = meta
+                        .params
+                        .iter()
+                        .map(|p| TensorF32::zeros(p.shape.clone()))
+                        .collect();
+                    self.table.unflatten_into(&grad, &mut grads_t);
+                    self.runtime.opt_step(
+                        &cfg.optimizer,
+                        &mut params,
+                        &mut opt_state,
+                        &grads_t,
+                        lr as f32,
+                    )?;
+                    (gn, 1.0)
+                }
+            };
+
+            recorder.push(t, lr, loss, grad_norm, trust, tokens_per_step);
+            steps_run = t;
+
+            if cfg.stop_on_divergence && recorder.diverged() {
+                status = TrainStatus::Diverged { at_step: t };
+                break;
+            }
+
+            if cfg.eval_every > 0 && t % cfg.eval_every == 0 {
+                let ev = self.eval(&params)?;
+                eprintln!(
+                    "step {t:>6}  lr {lr:.3e}  loss {loss:.4}  eval {ev:.4}"
+                );
+            }
+        }
+
+        let final_eval_loss = if matches!(status, TrainStatus::Completed) {
+            Some(self.eval(&params)?)
+        } else {
+            None
+        };
+
+        if let Some(path) = &cfg.checkpoint {
+            let tensors = meta
+                .params
+                .iter()
+                .zip(&params)
+                .map(|(s, t)| (s.name.clone(), t.clone()))
+                .collect();
+            Checkpoint { step: steps_run, tensors }.save(path)?;
+        }
+        if let Some(path) = &cfg.curve_out {
+            recorder.write_tsv(path)?;
+        }
+
+        Ok(TrainReport { status, recorder, final_eval_loss, steps_run, params })
+    }
+
+    /// Mean eval loss over the held-out shard.
+    pub fn eval(&self, params: &[TensorF32]) -> Result<f64> {
+        let mut sum = 0.0;
+        for i in 0..self.cfg.eval_batches {
+            let batch =
+                self.source
+                    .eval_batch(self.runtime.meta.batch, i, self.cfg.seed);
+            sum += self.runtime.eval_loss(params, &batch)? as f64;
+        }
+        Ok(sum / self.cfg.eval_batches as f64)
+    }
+}

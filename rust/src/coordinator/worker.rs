@@ -1,0 +1,134 @@
+//! Data-parallel worker: owns a disjoint data shard, runs fwd/bwd on the
+//! AOT artifact for its microbatches, accumulates a flat local gradient.
+//!
+//! Workers are OS threads (CPU-bound PJRT work; no async runtime needed).
+//! Heavy compute serializes on the engine's device thread; batch building,
+//! masking and gradient flattening run concurrently on the worker threads.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::data::Shard;
+use crate::optim::BlockTable;
+use crate::runtime::{ModelRuntime, TensorF32};
+use crate::util::rng::Rng;
+
+use super::source::DataSource;
+
+pub enum WorkerCmd {
+    /// Run `micro_steps` microbatches against the given parameter snapshot.
+    Step { params: Arc<Vec<TensorF32>>, micro_steps: usize },
+    Shutdown,
+}
+
+pub struct WorkerReply {
+    pub worker: usize,
+    /// sum over this worker's microbatch gradients, flat block layout
+    pub grad_flat: Vec<f32>,
+    pub loss_sum: f64,
+    pub micros: usize,
+    pub error: Option<String>,
+}
+
+pub struct WorkerHandle {
+    pub id: usize,
+    cmd_tx: Sender<WorkerCmd>,
+    reply_rx: Receiver<WorkerReply>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    pub fn spawn(
+        id: usize,
+        runtime: ModelRuntime,
+        source: Arc<DataSource>,
+        shard: Shard,
+        table: Arc<BlockTable>,
+        seed: u64,
+    ) -> Result<WorkerHandle> {
+        let (cmd_tx, cmd_rx) = channel::<WorkerCmd>();
+        let (reply_tx, reply_rx) = channel::<WorkerReply>();
+        let join = std::thread::Builder::new()
+            .name(format!("worker-{id}"))
+            .spawn(move || {
+                worker_loop(id, runtime, source, shard, table, seed, cmd_rx, reply_tx)
+            })?;
+        Ok(WorkerHandle { id, cmd_tx, reply_rx, join: Some(join) })
+    }
+
+    pub fn send(&self, cmd: WorkerCmd) {
+        let _ = self.cmd_tx.send(cmd);
+    }
+
+    pub fn recv(&self) -> Result<WorkerReply> {
+        Ok(self.reply_rx.recv()?)
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.cmd_tx.send(WorkerCmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    id: usize,
+    runtime: ModelRuntime,
+    source: Arc<DataSource>,
+    mut shard: Shard,
+    table: Arc<BlockTable>,
+    seed: u64,
+    cmd_rx: Receiver<WorkerCmd>,
+    reply_tx: Sender<WorkerReply>,
+) {
+    let micro_batch = runtime.meta.batch;
+    let mut rng = Rng::new(seed).fork(id as u64 + 101);
+    let mut grad_flat = vec![0.0f32; table.total];
+
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            WorkerCmd::Shutdown => break,
+            WorkerCmd::Step { params, micro_steps } => {
+                grad_flat.iter_mut().for_each(|x| *x = 0.0);
+                let mut loss_sum = 0.0f64;
+                let mut error = None;
+
+                'micro: for _ in 0..micro_steps {
+                    let idx = shard.next_batch(micro_batch);
+                    let batch = source.masker.make_batch(&source.seqs, &idx, &mut rng);
+                    match runtime.fwd_bwd(&params, &batch) {
+                        Ok((loss, grads)) => {
+                            loss_sum += loss as f64;
+                            // accumulate into the flat layout
+                            for (b, g) in table.blocks.iter().zip(&grads) {
+                                let dst = &mut grad_flat[b.offset..b.offset + b.len];
+                                for (d, s) in dst.iter_mut().zip(&g.data) {
+                                    *d += s;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            error = Some(format!("worker {id}: {e:#}"));
+                            break 'micro;
+                        }
+                    }
+                }
+
+                let _ = reply_tx.send(WorkerReply {
+                    worker: id,
+                    grad_flat: grad_flat.clone(),
+                    loss_sum,
+                    micros: micro_steps,
+                    error,
+                });
+            }
+        }
+    }
+}

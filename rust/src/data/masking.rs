@@ -1,0 +1,201 @@
+//! BERT masked-LM batch construction: 15% dynamic masking with the 80/10/10
+//! mask/random/keep split, padded to a fixed prediction-slot budget so every
+//! batch matches the AOT artifact's static shapes.
+
+use crate::util::rng::Rng;
+
+use super::corpus::SequenceSet;
+use super::vocab::{Vocab, FIRST_REGULAR, MASK};
+
+/// One MLM training batch in artifact layout (row-major [batch, ...]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlmBatch {
+    /// (b*s) input ids after mask substitution
+    pub tokens: Vec<i32>,
+    /// (b*slots) positions of prediction slots within each sequence
+    pub positions: Vec<i32>,
+    /// (b*slots) original ids at those positions
+    pub target_ids: Vec<i32>,
+    /// (b*slots) 1.0 for live slots, 0.0 for padded slots
+    pub weights: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub slots: usize,
+}
+
+/// Masking policy constants (Devlin et al.).
+pub const MASK_FRACTION: f64 = 0.15;
+pub const PROB_MASK_TOKEN: f64 = 0.8;
+pub const PROB_RANDOM_TOKEN: f64 = 0.1; // remainder keeps the original
+
+#[derive(Debug, Clone)]
+pub struct Masker {
+    pub slots: usize,
+    vocab_size: usize,
+}
+
+impl Masker {
+    pub fn new(slots: usize, vocab: &Vocab) -> Masker {
+        Masker { slots, vocab_size: vocab.size }
+    }
+
+    /// Apply dynamic masking to one sequence; returns (masked tokens,
+    /// positions, targets, weights), each padded/truncated to `slots`.
+    pub fn mask_sequence(
+        &self,
+        seq: &[i32],
+        rng: &mut Rng,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<f32>) {
+        let s = seq.len();
+        let budget = ((s as f64 * MASK_FRACTION).ceil() as usize)
+            .min(self.slots)
+            .max(1);
+
+        // choose distinct positions among non-special tokens
+        let candidates: Vec<usize> = (0..s)
+            .filter(|&i| !Vocab::is_special(seq[i]))
+            .collect();
+        let k = budget.min(candidates.len());
+        let mut picks = rng.sample_without_replacement(candidates.len(), k);
+        picks.sort_unstable();
+
+        let mut tokens = seq.to_vec();
+        let mut positions = Vec::with_capacity(self.slots);
+        let mut targets = Vec::with_capacity(self.slots);
+        let mut weights = Vec::with_capacity(self.slots);
+
+        for &pi in &picks {
+            let pos = candidates[pi];
+            let orig = seq[pos];
+            let u = rng.next_f64();
+            tokens[pos] = if u < PROB_MASK_TOKEN {
+                MASK
+            } else if u < PROB_MASK_TOKEN + PROB_RANDOM_TOKEN {
+                FIRST_REGULAR
+                    + rng.below_usize(self.vocab_size - FIRST_REGULAR as usize) as i32
+            } else {
+                orig
+            };
+            positions.push(pos as i32);
+            targets.push(orig);
+            weights.push(1.0);
+        }
+        while positions.len() < self.slots {
+            positions.push(0);
+            targets.push(0);
+            weights.push(0.0);
+        }
+        (tokens, positions, targets, weights)
+    }
+
+    /// Build a full batch from sequence indices into a `SequenceSet`.
+    pub fn make_batch(
+        &self,
+        seqs: &SequenceSet,
+        indices: &[usize],
+        rng: &mut Rng,
+    ) -> MlmBatch {
+        let b = indices.len();
+        let s = seqs.seq_len;
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut positions = Vec::with_capacity(b * self.slots);
+        let mut target_ids = Vec::with_capacity(b * self.slots);
+        let mut weights = Vec::with_capacity(b * self.slots);
+        for &idx in indices {
+            let (t, p, tg, w) = self.mask_sequence(seqs.get(idx), rng);
+            tokens.extend(t);
+            positions.extend(p);
+            target_ids.extend(tg);
+            weights.extend(w);
+        }
+        MlmBatch {
+            tokens,
+            positions,
+            target_ids,
+            weights,
+            batch: b,
+            seq: s,
+            slots: self.slots,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SyntheticCorpus;
+
+    fn setup() -> (SyntheticCorpus, SequenceSet, Masker) {
+        let c = SyntheticCorpus::new(256, 1);
+        let toks = c.generate(64 * 32, 2);
+        let seqs = SequenceSet::new(toks, 64);
+        let masker = Masker::new(10, &c.vocab);
+        (c, seqs, masker)
+    }
+
+    #[test]
+    fn batch_geometry() {
+        let (_c, seqs, masker) = setup();
+        let mut rng = Rng::new(3);
+        let b = masker.make_batch(&seqs, &[0, 1, 2, 3], &mut rng);
+        assert_eq!(b.tokens.len(), 4 * 64);
+        assert_eq!(b.positions.len(), 4 * 10);
+        assert_eq!(b.weights.len(), 4 * 10);
+    }
+
+    #[test]
+    fn mask_budget_respected() {
+        let (_c, seqs, masker) = setup();
+        let mut rng = Rng::new(4);
+        let (_t, _p, _tg, w) = masker.mask_sequence(seqs.get(0), &mut rng);
+        let live = w.iter().filter(|&&x| x > 0.0).count();
+        // ceil(0.15*64) = 10 == slots
+        assert_eq!(live, 10);
+    }
+
+    #[test]
+    fn targets_are_originals() {
+        let (_c, seqs, masker) = setup();
+        let mut rng = Rng::new(5);
+        let seq = seqs.get(0);
+        let (_t, p, tg, w) = masker.mask_sequence(seq, &mut rng);
+        for i in 0..p.len() {
+            if w[i] > 0.0 {
+                assert_eq!(tg[i], seq[p[i] as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn masking_rate_split() {
+        // over many sequences, ~80% of slots become [MASK]
+        let (_c, seqs, masker) = setup();
+        let mut rng = Rng::new(6);
+        let (mut masked, mut total) = (0usize, 0usize);
+        for i in 0..seqs.len() {
+            let seq = seqs.get(i);
+            let (t, p, _tg, w) = masker.mask_sequence(seq, &mut rng);
+            for j in 0..p.len() {
+                if w[j] > 0.0 {
+                    total += 1;
+                    if t[p[j] as usize] == MASK {
+                        masked += 1;
+                    }
+                }
+            }
+        }
+        let frac = masked as f64 / total as f64;
+        assert!((frac - 0.8).abs() < 0.06, "mask fraction {frac}");
+    }
+
+    #[test]
+    fn positions_distinct_within_sequence() {
+        let (_c, seqs, masker) = setup();
+        let mut rng = Rng::new(7);
+        let (_t, p, _tg, w) = masker.mask_sequence(seqs.get(1), &mut rng);
+        let live: Vec<i32> =
+            p.iter().zip(&w).filter(|(_, &w)| w > 0.0).map(|(&p, _)| p).collect();
+        let set: std::collections::HashSet<_> = live.iter().collect();
+        assert_eq!(set.len(), live.len());
+    }
+}

@@ -1,0 +1,12 @@
+//! Data pipeline: corpus synthesis, vocab, MLM masking and distributed
+//! sharding (paper §3.4).
+
+pub mod corpus;
+pub mod masking;
+pub mod sharder;
+pub mod vocab;
+
+pub use corpus::{text_corpus, SequenceSet, SyntheticCorpus, Zipf};
+pub use masking::{Masker, MlmBatch};
+pub use sharder::{make_shards, Shard, WithReplacementSampler};
+pub use vocab::Vocab;

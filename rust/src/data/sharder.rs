@@ -1,0 +1,172 @@
+//! Data sharding (paper §3.4).
+//!
+//! "To make sure that the mini-batch does not have redundant samples, we
+//! only grant each worker access to a shard of the dataset.  Within each
+//! shard, random shuffling is used to construct the mini-batch samples."
+//!
+//! [`Sharder`] implements exactly that: a disjoint contiguous shard per
+//! worker, reshuffled per epoch — global sampling *without replacement*
+//! within an epoch.  [`WithReplacementSampler`] is the baseline scheme the
+//! paper's variance argument compares against (O(σ²/k) vs
+//! O((n−k)/(k(n−1)) σ²)); the `variance` module measures both.
+
+use crate::util::rng::Rng;
+
+/// Per-worker shard: owns its index range, shuffles per epoch, yields
+/// without-replacement batches.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub worker: usize,
+    indices: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    rng: Rng,
+}
+
+impl Shard {
+    fn new(worker: usize, mut indices: Vec<usize>, seed_rng: &Rng) -> Shard {
+        let mut rng = seed_rng.fork(worker as u64 + 1);
+        rng.shuffle(&mut indices);
+        Shard { worker, indices, cursor: 0, epoch: 0, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next `n` sample indices; reshuffles and bumps the epoch at the shard
+    /// boundary (batches never mix epochs for exact without-replacement
+    /// semantics within an epoch).
+    pub fn next_batch(&mut self, n: usize) -> Vec<usize> {
+        assert!(n <= self.indices.len(), "batch larger than shard");
+        if self.cursor + n > self.indices.len() {
+            self.rng.shuffle(&mut self.indices);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let out = self.indices[self.cursor..self.cursor + n].to_vec();
+        self.cursor += n;
+        out
+    }
+}
+
+/// Split `num_samples` across `workers` disjoint contiguous shards
+/// (the paper partitions the preprocessed dataset into 1536 shards the same
+/// way).  Remainder samples go to the leading shards.
+pub fn make_shards(num_samples: usize, workers: usize, seed: u64) -> Vec<Shard> {
+    assert!(workers > 0);
+    assert!(
+        num_samples >= workers,
+        "fewer samples ({num_samples}) than workers ({workers})"
+    );
+    let root = Rng::new(seed);
+    let base = num_samples / workers;
+    let extra = num_samples % workers;
+    let mut start = 0;
+    (0..workers)
+        .map(|w| {
+            let len = base + usize::from(w < extra);
+            let shard = Shard::new(w, (start..start + len).collect(), &root);
+            start += len;
+            shard
+        })
+        .collect()
+}
+
+/// Uniform i.i.d. sampling with replacement over the whole dataset — the
+/// baseline scheme in the paper's variance comparison.
+#[derive(Debug, Clone)]
+pub struct WithReplacementSampler {
+    n: usize,
+    rng: Rng,
+}
+
+impl WithReplacementSampler {
+    pub fn new(num_samples: usize, seed: u64) -> Self {
+        WithReplacementSampler { n: num_samples, rng: Rng::new(seed) }
+    }
+
+    pub fn next_batch(&mut self, k: usize) -> Vec<usize> {
+        self.rng.sample_with_replacement(self.n, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn shards_partition_dataset() {
+        let shards = make_shards(103, 4, 1);
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // size balance within 1
+        let sizes: Vec<usize> = shards.iter().map(Shard::len).collect();
+        assert_eq!(sizes, vec![26, 26, 26, 25]);
+    }
+
+    #[test]
+    fn epoch_has_no_duplicates() {
+        let mut shards = make_shards(64, 2, 2);
+        let s = &mut shards[0];
+        let mut seen = HashSet::new();
+        // one full epoch of batches
+        for _ in 0..(s.len() / 8) {
+            for i in s.next_batch(8) {
+                assert!(seen.insert(i), "duplicate {i} within epoch");
+            }
+        }
+        assert_eq!(seen.len(), s.len());
+        assert_eq!(s.epoch(), 0);
+        // next batch starts epoch 1
+        s.next_batch(8);
+        assert_eq!(s.epoch(), 1);
+    }
+
+    #[test]
+    fn workers_never_share_samples() {
+        let mut shards = make_shards(100, 4, 3);
+        let mut per_worker: Vec<HashSet<usize>> = vec![HashSet::new(); 4];
+        for (w, s) in shards.iter_mut().enumerate() {
+            for _ in 0..3 {
+                per_worker[w].extend(s.next_batch(5));
+            }
+        }
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                assert!(per_worker[a].is_disjoint(&per_worker[b]));
+            }
+        }
+    }
+
+    #[test]
+    fn reshuffle_changes_order() {
+        let mut shards = make_shards(32, 1, 4);
+        let s = &mut shards[0];
+        let e0: Vec<usize> = (0..4).flat_map(|_| s.next_batch(8)).collect();
+        let e1: Vec<usize> = (0..4).flat_map(|_| s.next_batch(8)).collect();
+        assert_ne!(e0, e1, "epoch order should differ");
+        let (mut a, mut b) = (e0, e1);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "same underlying set");
+    }
+
+    #[test]
+    fn with_replacement_repeats_eventually() {
+        let mut s = WithReplacementSampler::new(8, 5);
+        let batch = s.next_batch(64);
+        let uniq: HashSet<_> = batch.iter().collect();
+        assert!(uniq.len() < 64);
+    }
+}

@@ -1,0 +1,135 @@
+//! Vocabulary with BERT-style special tokens.
+//!
+//! The synthetic corpus uses ids directly; the embedded text corpus builds a
+//! word-level vocab by frequency.  Ids 0..5 are reserved specials in both
+//! cases so masking logic is uniform.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const CLS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const MASK: i32 = 4;
+/// First id available for regular tokens.
+pub const FIRST_REGULAR: i32 = 5;
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub size: usize,
+    token_to_id: HashMap<String, i32>,
+    id_to_token: Vec<String>,
+}
+
+impl Vocab {
+    /// A purely-synthetic vocab of `size` ids (no strings beyond specials).
+    pub fn synthetic(size: usize) -> Vocab {
+        assert!(size > FIRST_REGULAR as usize);
+        Vocab { size, token_to_id: HashMap::new(), id_to_token: Vec::new() }
+    }
+
+    /// Build a word-level vocab from text, capped at `max_size` ids
+    /// (most-frequent first; ties broken lexicographically for determinism).
+    pub fn from_text(text: &str, max_size: usize) -> Vocab {
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for w in tokenize(text) {
+            *counts.entry(w).or_default() += 1;
+        }
+        let mut items: Vec<(String, usize)> = counts.into_iter().collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        items.truncate(max_size.saturating_sub(FIRST_REGULAR as usize));
+
+        let mut token_to_id = HashMap::new();
+        let mut id_to_token = Vec::new();
+        for (i, (w, _)) in items.iter().enumerate() {
+            token_to_id.insert(w.clone(), FIRST_REGULAR + i as i32);
+            id_to_token.push(w.clone());
+        }
+        let size = FIRST_REGULAR as usize + id_to_token.len();
+        Vocab { size, token_to_id, id_to_token }
+    }
+
+    pub fn encode(&self, word: &str) -> i32 {
+        *self.token_to_id.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn decode(&self, id: i32) -> &str {
+        match id {
+            PAD => "[PAD]",
+            UNK => "[UNK]",
+            CLS => "[CLS]",
+            SEP => "[SEP]",
+            MASK => "[MASK]",
+            _ => {
+                let idx = (id - FIRST_REGULAR) as usize;
+                self.id_to_token.get(idx).map(String::as_str).unwrap_or("[?]")
+            }
+        }
+    }
+
+    /// Number of regular (non-special) ids.
+    pub fn regular_count(&self) -> usize {
+        self.size - FIRST_REGULAR as usize
+    }
+
+    pub fn is_special(id: i32) -> bool {
+        id < FIRST_REGULAR
+    }
+}
+
+/// Lower-case word tokenizer: alphanumeric runs and single punctuation marks.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_alphanumeric() || c == '\'' {
+            cur.extend(c.to_lowercase());
+        } else {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+            if !c.is_whitespace() {
+                out.push(c.to_string());
+            }
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_splits_punct() {
+        assert_eq!(
+            tokenize("It is a truth, universally!"),
+            vec!["it", "is", "a", "truth", ",", "universally", "!"]
+        );
+    }
+
+    #[test]
+    fn vocab_roundtrip() {
+        let v = Vocab::from_text("a b b c c c", 100);
+        // c most frequent -> first regular id
+        assert_eq!(v.encode("c"), FIRST_REGULAR);
+        assert_eq!(v.decode(v.encode("b")), "b");
+        assert_eq!(v.encode("zzz"), UNK);
+        assert_eq!(v.size, FIRST_REGULAR as usize + 3);
+    }
+
+    #[test]
+    fn vocab_cap_respected() {
+        let v = Vocab::from_text("a b c d e f g h", FIRST_REGULAR as usize + 3);
+        assert_eq!(v.size, FIRST_REGULAR as usize + 3);
+    }
+
+    #[test]
+    fn specials() {
+        assert!(Vocab::is_special(MASK));
+        assert!(!Vocab::is_special(FIRST_REGULAR));
+    }
+}

@@ -1,0 +1,24 @@
+//! # lans — Accelerated Large-Batch BERT Pretraining
+//!
+//! A full-system reproduction of *"Accelerated Large Batch Optimization of
+//! BERT Pretraining in 54 minutes"* (Zheng, Lin, Zha, Li; 2020): the LANS
+//! optimizer, the warmup→constant→decay learning-rate schedule, sharded
+//! without-replacement data sampling, and the distributed data-parallel
+//! training harness they run in — as a three-layer rust + JAX + Pallas
+//! stack (rust coordinator, AOT-lowered jax BERT, Pallas fused-optimizer
+//! kernels), with Python never on the training hot path.
+//!
+//! See DESIGN.md for the architecture and the paper-experiment index, and
+//! `examples/` for runnable entry points.
+
+pub mod checkpoint;
+pub mod cluster;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+pub mod variance;

@@ -1,0 +1,211 @@
+//! `lans` — launcher CLI for the LANS reproduction.
+//!
+//! Subcommands:
+//!   train --config <file.toml> [--steps N] [--optimizer NAME] [--workers N]
+//!   schedule                      reproduce Fig. 1 (series + AUC gaps)
+//!   time-model                    reproduce Table 2's time column
+//!   variance [--n N] [--trials T] reproduce the §3.4 variance comparison
+//!   info --meta <meta.json>       inspect an artifact bundle
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lans::cluster::{table2_runs, BERT_LARGE};
+use lans::config::TrainConfig;
+use lans::coordinator::{TrainStatus, Trainer};
+use lans::optim::Schedule;
+use lans::runtime::ModelMeta;
+use lans::util::bench::Table;
+use lans::variance::{sweep, GradientPopulation};
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .with_context(|| format!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(String::as_str)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    match argv.first().map(String::as_str) {
+        Some("train") => cmd_train(&Args::parse(&argv[1..])?),
+        Some("schedule") => cmd_schedule(),
+        Some("time-model") => cmd_time_model(),
+        Some("variance") => cmd_variance(&Args::parse(&argv[1..])?),
+        Some("info") => cmd_info(&Args::parse(&argv[1..])?),
+        _ => {
+            eprintln!(
+                "usage: lans <train|schedule|time-model|variance|info> [--flags]\n\
+                 see README.md for examples"
+            );
+            bail!("missing or unknown subcommand");
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg_path = args.get("config").context("train needs --config <file>")?;
+    let mut cfg = TrainConfig::from_file(Path::new(cfg_path))?;
+    // flag overrides
+    if let Some(s) = args.get("steps") {
+        cfg.steps = s.parse()?;
+    }
+    if let Some(o) = args.get("optimizer") {
+        cfg.optimizer = o.to_string();
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse()?;
+    }
+    if let Some(g) = args.get("global-batch") {
+        cfg.global_batch = g.parse()?;
+    }
+    if let Some(c) = args.get("curve-out") {
+        cfg.curve_out = Some(PathBuf::from(c));
+    }
+
+    let mut trainer = Trainer::new(cfg.clone())?;
+    println!(
+        "training {} | optimizer={} workers={} effective_batch={} steps={}",
+        trainer.meta().tag,
+        cfg.optimizer,
+        cfg.workers,
+        trainer.effective_batch(),
+        cfg.steps
+    );
+    let report = trainer.run()?;
+    match report.status {
+        TrainStatus::Completed => {
+            println!(
+                "completed {} steps | final loss {:.4} | eval {:.4} | {:.0} tok/s",
+                report.steps_run,
+                report.recorder.last_loss().unwrap_or(f64::NAN),
+                report.final_eval_loss.unwrap_or(f64::NAN),
+                report.recorder.tokens_per_second()
+            );
+        }
+        TrainStatus::Diverged { at_step } => {
+            println!("DIVERGED at step {at_step} (ema loss blew past ceiling)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_schedule() -> Result<()> {
+    // Fig. 1 parameters
+    let (t, tw, tc) = (3519u64, 1500u64, 963u64);
+    let ideal = Schedule::LinearWarmupDecay { eta: 0.01, t_warmup: tw, t_total: t };
+    let small = Schedule::LinearWarmupDecay { eta: 0.007, t_warmup: tw, t_total: t };
+    let ours = Schedule::WarmupConstDecay { eta: 0.007, t_warmup: tw, t_const: tc, t_total: t };
+
+    println!("# Fig. 1 — learning-rate schedules (T={t}, Tw={tw}, Tc={tc})");
+    println!("step\teq8_eta0.01\teq8_eta0.007\teq9_eta0.007");
+    for step in (1..=t).step_by(100) {
+        println!(
+            "{step}\t{:.6}\t{:.6}\t{:.6}",
+            ideal.lr(step),
+            small.lr(step),
+            ours.lr(step)
+        );
+    }
+    let a_ideal = ideal.area_under_curve(t);
+    let gap8 = a_ideal - small.area_under_curve(t);
+    let gap9 = a_ideal - ours.area_under_curve(t);
+    println!("\nAUC gap eq8(0.01)-eq8(0.007) = {gap8:.2}   (paper: 5.28)");
+    println!("AUC gap eq8(0.01)-eq9(0.007) = {gap9:.2}   (paper: 1.91)");
+    Ok(())
+}
+
+fn cmd_time_model() -> Result<()> {
+    println!("# Table 2 — modeled time-to-train (see DESIGN.md §5)");
+    let mut table = Table::new(&["run", "batch", "steps", "testbed", "modeled", "paper"]);
+    let paper = ["76.2m", "53.6m"];
+    for (run, p) in table2_runs().iter().zip(paper) {
+        table.row(&[
+            run.label.to_string(),
+            format!(
+                "{}K/{}K",
+                run.phases[0].batch_seqs / 1024,
+                run.phases[1].batch_seqs / 1024
+            ),
+            run.total_steps().to_string(),
+            run.cluster.name.to_string(),
+            format!("{:.1}m", run.total_minutes(&BERT_LARGE)),
+            p.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_variance(args: &Args) -> Result<()> {
+    let n: usize = args.get("n").unwrap_or("4096").parse()?;
+    let trials: usize = args.get("trials").unwrap_or("2000").parse()?;
+    let pop = GradientPopulation::synthetic(n, 16, 1);
+    let ks: Vec<usize> = [16, 64, 256, 1024, n / 2, n]
+        .into_iter()
+        .filter(|&k| k <= n)
+        .collect();
+    println!("# §3.4 — minibatch-mean gradient variance, n={n} ({trials} trials)");
+    let mut table = Table::new(&[
+        "k", "with-repl (emp)", "sigma^2/k", "without-repl (emp)", "(n-k)/(k(n-1)) sigma^2",
+    ]);
+    for row in sweep(&pop, &ks, trials, 7) {
+        table.row(&[
+            row.k.to_string(),
+            format!("{:.3e}", row.with_repl_empirical),
+            format!("{:.3e}", row.with_repl_theory),
+            format!("{:.3e}", row.without_repl_empirical),
+            format!("{:.3e}", row.without_repl_theory),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let meta_path = args.get("meta").context("info needs --meta <meta.json>")?;
+    let meta = ModelMeta::load(Path::new(meta_path))?;
+    println!("tag          {}", meta.tag);
+    println!("config       {} (L={}, H={}, A={}, I={}, V={})",
+        meta.config_name, meta.num_layers, meta.hidden, meta.num_heads,
+        meta.intermediate, meta.vocab_size);
+    println!("geometry     batch={} seq={} mlm_slots={}", meta.batch, meta.seq, meta.mlm_slots);
+    println!("params       {} tensors, {} total", meta.params.len(), meta.param_count);
+    println!("artifacts:");
+    for (role, file) in &meta.artifacts {
+        println!("  {role:<12} {file}");
+    }
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Training metrics: loss-curve recording, throughput counters, TSV export.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::Ema;
+
+/// One recorded training step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub lr: f64,
+    pub loss: f64,
+    pub loss_ema: f64,
+    pub grad_norm: f64,
+    pub trust_ratio: f64,
+    pub tokens: u64,
+    pub wall_s: f64,
+}
+
+/// Loss-curve recorder with EMA smoothing and divergence detection.
+pub struct Recorder {
+    pub records: Vec<StepRecord>,
+    ema: Ema,
+    start: Instant,
+    tokens_seen: u64,
+    /// loss above this, or non-finite, counts as diverged
+    pub divergence_ceiling: f64,
+    initial_loss: Option<f64>,
+}
+
+impl Recorder {
+    pub fn new(ema_alpha: f64) -> Recorder {
+        Recorder {
+            records: Vec::new(),
+            ema: Ema::new(ema_alpha),
+            start: Instant::now(),
+            tokens_seen: 0,
+            divergence_ceiling: f64::INFINITY,
+            initial_loss: None,
+        }
+    }
+
+    pub fn push(
+        &mut self,
+        step: u64,
+        lr: f64,
+        loss: f64,
+        grad_norm: f64,
+        trust_ratio: f64,
+        tokens: u64,
+    ) -> &StepRecord {
+        self.tokens_seen += tokens;
+        if self.initial_loss.is_none() {
+            self.initial_loss = Some(loss);
+            // default ceiling: 3x the initial loss (a diverged MLM run blows
+            // far past this; a healthy one never revisits it)
+            if self.divergence_ceiling.is_infinite() {
+                self.divergence_ceiling = loss * 3.0;
+            }
+        }
+        let ema = self.ema.push(loss);
+        self.records.push(StepRecord {
+            step,
+            lr,
+            loss,
+            loss_ema: ema,
+            grad_norm,
+            trust_ratio,
+            tokens: self.tokens_seen,
+            wall_s: self.start.elapsed().as_secs_f64(),
+        });
+        self.records.last().unwrap()
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn ema_loss(&self) -> Option<f64> {
+        self.ema.value()
+    }
+
+    /// True once the smoothed loss is non-finite or past the ceiling.
+    pub fn diverged(&self) -> bool {
+        match self.ema.value() {
+            Some(v) => !v.is_finite() || v > self.divergence_ceiling,
+            None => false,
+        }
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        let el = self.start.elapsed().as_secs_f64();
+        if el > 0.0 {
+            self.tokens_seen as f64 / el
+        } else {
+            0.0
+        }
+    }
+
+    /// Write the curve as TSV (step, lr, loss, ema, grad_norm, trust, tokens,
+    /// wall seconds) — consumed by EXPERIMENTS.md plots.
+    pub fn write_tsv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "step\tlr\tloss\tloss_ema\tgrad_norm\ttrust_ratio\ttokens\twall_s")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{}\t{:.6e}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3}",
+                r.step, r.lr, r.loss, r.loss_ema, r.grad_norm, r.trust_ratio,
+                r.tokens, r.wall_s
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_smooths() {
+        let mut r = Recorder::new(0.5);
+        r.push(1, 0.01, 10.0, 1.0, 1.0, 100);
+        r.push(2, 0.01, 8.0, 1.0, 1.0, 100);
+        assert_eq!(r.records.len(), 2);
+        assert!((r.ema_loss().unwrap() - 9.0).abs() < 1e-9);
+        assert_eq!(r.records[1].tokens, 200);
+        assert!(!r.diverged());
+    }
+
+    #[test]
+    fn detects_divergence() {
+        let mut r = Recorder::new(0.9);
+        r.push(1, 0.01, 5.0, 1.0, 1.0, 1);
+        for s in 2..10 {
+            r.push(s, 0.01, 100.0, 1.0, 1.0, 1);
+        }
+        assert!(r.diverged());
+        let mut r2 = Recorder::new(0.9);
+        r2.push(1, 0.01, 5.0, 1.0, 1.0, 1);
+        r2.push(2, 0.01, f64::NAN, 1.0, 1.0, 1);
+        assert!(r2.diverged());
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut r = Recorder::new(0.5);
+        r.push(1, 0.01, 3.0, 0.5, 1.0, 64);
+        let p = std::env::temp_dir().join("lans_test_metrics.tsv");
+        r.write_tsv(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.starts_with("step\t"));
+        assert_eq!(body.lines().count(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+}

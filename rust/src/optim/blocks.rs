@@ -1,0 +1,110 @@
+//! Block table: the flat-vector view of the model parameters.
+//!
+//! The paper's algorithms are defined per *block* (one parameter tensor =
+//! one G_b).  The pure-rust optimizers and the allreduce path work on a
+//! single contiguous `Vec<f32>` holding all parameters; `BlockTable` maps
+//! block index → (offset, len, decay flag) within that vector.
+
+use crate::runtime::meta::ModelMeta;
+use crate::runtime::tensor::TensorF32;
+
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+    /// whether weight decay applies (false for bias / LayerNorm blocks)
+    pub decay: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockTable {
+    pub blocks: Vec<Block>,
+    pub total: usize,
+}
+
+impl BlockTable {
+    pub fn new(specs: &[(String, usize, bool)]) -> BlockTable {
+        let mut blocks = Vec::with_capacity(specs.len());
+        let mut offset = 0;
+        for (name, len, decay) in specs {
+            blocks.push(Block { name: name.clone(), offset, len: *len, decay: *decay });
+            offset += len;
+        }
+        BlockTable { blocks, total: offset }
+    }
+
+    pub fn from_meta(meta: &ModelMeta) -> BlockTable {
+        Self::new(&meta.blocks())
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Flatten per-tensor params into one contiguous vector.
+    pub fn flatten(&self, tensors: &[TensorF32]) -> Vec<f32> {
+        assert_eq!(tensors.len(), self.blocks.len());
+        let mut out = Vec::with_capacity(self.total);
+        for (b, t) in self.blocks.iter().zip(tensors) {
+            assert_eq!(t.data.len(), b.len, "block {} length mismatch", b.name);
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Scatter a flat vector back into per-tensor storage (shapes preserved).
+    pub fn unflatten_into(&self, flat: &[f32], tensors: &mut [TensorF32]) {
+        assert_eq!(flat.len(), self.total);
+        assert_eq!(tensors.len(), self.blocks.len());
+        for (b, t) in self.blocks.iter().zip(tensors.iter_mut()) {
+            t.data.copy_from_slice(&flat[b.offset..b.offset + b.len]);
+        }
+    }
+
+    pub fn slice<'a>(&self, flat: &'a [f32], idx: usize) -> &'a [f32] {
+        let b = &self.blocks[idx];
+        &flat[b.offset..b.offset + b.len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> BlockTable {
+        BlockTable::new(&[
+            ("w".into(), 6, true),
+            ("b".into(), 2, false),
+        ])
+    }
+
+    #[test]
+    fn offsets() {
+        let t = table();
+        assert_eq!(t.total, 8);
+        assert_eq!(t.blocks[1].offset, 6);
+        assert!(!t.blocks[1].decay);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let t = table();
+        let tensors = vec![
+            TensorF32::new(vec![2, 3], (0..6).map(|i| i as f32).collect()),
+            TensorF32::new(vec![2], vec![10.0, 11.0]),
+        ];
+        let flat = t.flatten(&tensors);
+        assert_eq!(flat, vec![0., 1., 2., 3., 4., 5., 10., 11.]);
+        let mut back = vec![
+            TensorF32::zeros(vec![2, 3]),
+            TensorF32::zeros(vec![2]),
+        ];
+        t.unflatten_into(&flat, &mut back);
+        assert_eq!(back, tensors);
+    }
+}

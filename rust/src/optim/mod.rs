@@ -1,0 +1,9 @@
+//! Optimizers and learning-rate schedules — the paper's algorithmic core.
+
+pub mod blocks;
+pub mod native;
+pub mod schedule;
+
+pub use blocks::{Block, BlockTable};
+pub use native::{make_optimizer, AdamW, Hyper, Lamb, Lans, MomentumSgd, Optimizer, StepStats};
+pub use schedule::{from_ratios, sqrt_scaled_lr, Schedule};

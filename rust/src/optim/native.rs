@@ -1,0 +1,592 @@
+//! Pure-rust reference optimizers over the flat-parameter/block-table view.
+//!
+//! These serve three roles:
+//!  1. correctness cross-check against the AOT Pallas kernels (the
+//!     integration test asserts LANS-native == LANS-HLO to float tolerance);
+//!  2. the fast in-process update path for laptop-scale convergence
+//!     experiments (no literal marshalling);
+//!  3. the baselines the paper compares against (LAMB, AdamW, momentum SGD,
+//!     NAG) in the ablation benches.
+//!
+//! Algorithms follow the paper text exactly — see
+//! `python/compile/kernels/ref.py` for the line-by-line correspondence.
+
+use crate::util::stats::Welford;
+
+use super::blocks::BlockTable;
+
+/// Numerical floor for block norms (matches kernels/common.py NORM_EPS).
+pub const NORM_EPS: f32 = 1e-16;
+
+/// Adam-family hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-6, weight_decay: 0.01 }
+    }
+}
+
+/// Per-step diagnostics (divergence detection, trust-ratio telemetry).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    /// mean over blocks of phi(‖x‖)/‖update‖ trust ratios
+    pub mean_trust_ratio: f64,
+    /// max |param| after the step
+    pub max_abs_param: f32,
+    /// global gradient l2 norm (pre-normalization)
+    pub grad_norm: f64,
+}
+
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+
+    /// One update; `t` is maintained internally (1-based).
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats;
+
+    fn blocks(&self) -> &BlockTable;
+}
+
+fn l2(xs: &[f32]) -> f32 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+// ---------------------------------------------------------------- LANS ----
+
+/// Algorithm 2 — the paper's optimizer.
+pub struct Lans {
+    hp: Hyper,
+    table: BlockTable,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+    // cached full directions r̂+wd·x / ĉ+wd·x between the reduce and apply
+    // passes — trades 2n scratch writes for recomputing 2 rsqrt-loops
+    // (§Perf iteration 2: 700 → 389 ms at bert-base scale)
+    r_full: Vec<f32>,
+    c_full: Vec<f32>,
+}
+
+impl Lans {
+    pub fn new(table: BlockTable, hp: Hyper) -> Lans {
+        let n = table.total;
+        Lans {
+            hp,
+            table,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+            r_full: vec![0.0; n],
+            c_full: vec![0.0; n],
+        }
+    }
+}
+
+/// Work item for the within-block parallel pass: disjoint mutable chunk
+/// views over the six arrays (x, g, m, v, r_full, c_full).
+struct LansChunk<'a> {
+    x: &'a mut [f32],
+    g: &'a [f32],
+    m: &'a mut [f32],
+    v: &'a mut [f32],
+    rf: &'a mut [f32],
+    cf: &'a mut [f32],
+}
+
+/// §Perf iteration 4: parallelize the per-block passes across CPU cores
+/// (the rust analogue of apex multi-tensor-apply's thread blocks).  Reduce
+/// pass returns per-chunk partial sums; apply pass is embarrassingly
+/// parallel.  Correctness is untouched: f64 partial sums are combined in
+/// chunk order, and chunking is deterministic.
+fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Optimizer for Lans {
+    fn name(&self) -> &'static str {
+        "lans"
+    }
+
+    fn blocks(&self) -> &BlockTable {
+        &self.table
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
+        self.t += 1;
+        let t = self.t as i32;
+        let hp = self.hp;
+        let bc1 = 1.0 - hp.beta1.powi(t);
+        let bc2 = 1.0 - hp.beta2.powi(t);
+        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
+        let mut trust = Welford::default();
+
+        // §Perf iteration 1: hoist 1/bc out of the loops and fold the
+        // normalized-gradient pass into the moment pass (1605 → 700 ms at
+        // bert-base scale); iteration 3: slice-zip loops so LLVM drops the
+        // bounds checks and vectorizes (389 → 242 ms).
+        let inv_bc1 = 1.0 / bc1;
+        let inv_bc2 = 1.0 / bc2;
+        let nthreads = num_threads();
+        for b in &self.table.blocks {
+            let r = b.offset..b.offset + b.len;
+            let (x, g) = (&mut params[r.clone()], &grads[r.clone()]);
+            let m = &mut self.m[r.clone()];
+            let v = &mut self.v[r.clone()];
+            let rf_s = &mut self.r_full[r.clone()];
+            let cf_s = &mut self.c_full[r.clone()];
+            let wd = if b.decay { hp.weight_decay } else { 0.0 };
+
+            // eq. (4): block gradient normalization (folded into pass 1)
+            let inv_gnorm = 1.0 / l2(g).max(NORM_EPS);
+
+            // chunk the block across threads (≥64K elements per thread so
+            // tiny blocks stay serial)
+            let cs = (b.len / nthreads + 1).max(1 << 16);
+            let chunks: Vec<LansChunk> = x
+                .chunks_mut(cs)
+                .zip(g.chunks(cs))
+                .zip(m.chunks_mut(cs))
+                .zip(v.chunks_mut(cs))
+                .zip(rf_s.chunks_mut(cs).zip(cf_s.chunks_mut(cs)))
+                .map(|((((x, g), m), v), (rf, cf))| LansChunk { x, g, m, v, rf, cf })
+                .collect();
+
+            // pass 1 — moments, full directions, and the three reductions
+            // accumulate in f32 within 4K sub-chunks (vectorizable), combine
+            // in f64 across sub-chunks — same accuracy class as pairwise
+            // summation, lets LLVM keep the lane loop in f32
+            const SUB: usize = 4096;
+            let pass1 = |c: &mut LansChunk| -> (f64, f64, f64) {
+                let (mut sx, mut sr, mut sc) = (0.0f64, 0.0f64, 0.0f64);
+                let n = c.x.len();
+                let mut lo = 0;
+                while lo < n {
+                    let hi = (lo + SUB).min(n);
+                    let (mut fx, mut fr, mut fc) = (0.0f32, 0.0f32, 0.0f32);
+                    for ((((xi, gi), mi), vi), (rfi, cfi)) in c.x[lo..hi]
+                        .iter()
+                        .zip(c.g[lo..hi].iter())
+                        .zip(c.m[lo..hi].iter_mut())
+                        .zip(c.v[lo..hi].iter_mut())
+                        .zip(c.rf[lo..hi].iter_mut().zip(c.cf[lo..hi].iter_mut()))
+                    {
+                        let gt = gi * inv_gnorm;
+                        let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gt;
+                        let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gt * gt;
+                        *mi = mn;
+                        *vi = vn;
+                        let inv_denom = 1.0 / ((vn * inv_bc2).sqrt() + hp.eps);
+                        let rf = mn * inv_bc1 * inv_denom + wd * xi;
+                        let cf = gt * inv_denom + wd * xi;
+                        *rfi = rf;
+                        *cfi = cf;
+                        fx += xi * xi;
+                        fr += rf * rf;
+                        fc += cf * cf;
+                    }
+                    sx += fx as f64;
+                    sr += fr as f64;
+                    sc += fc as f64;
+                    lo = hi;
+                }
+                (sx, sr, sc)
+            };
+            let mut chunks = chunks;
+            let partials: Vec<(f64, f64, f64)> = if chunks.len() == 1 {
+                vec![pass1(&mut chunks[0])]
+            } else {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = chunks
+                        .iter_mut()
+                        .map(|c| s.spawn(|| pass1(c)))
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                })
+            };
+            let (mut sum_x2, mut sum_r2, mut sum_c2) = (0.0f64, 0.0f64, 0.0f64);
+            for (sx, sr, sc) in partials {
+                sum_x2 += sx;
+                sum_r2 += sr;
+                sum_c2 += sc;
+            }
+
+            let x_norm = sum_x2.sqrt() as f32;
+            let r_norm = (sum_r2.sqrt() as f32).max(NORM_EPS);
+            let c_norm = (sum_c2.sqrt() as f32).max(NORM_EPS);
+            let coef_r = lr * x_norm * hp.beta1 / r_norm;
+            let coef_c = lr * x_norm * (1.0 - hp.beta1) / c_norm;
+            trust.push((x_norm / r_norm) as f64);
+
+            // pass 2 — apply from the cached directions (parallel)
+            let pass2 = |c: &mut LansChunk| -> f32 {
+                let mut max_abs = 0.0f32;
+                for (xi, (rfi, cfi)) in
+                    c.x.iter_mut().zip(c.rf.iter().zip(c.cf.iter()))
+                {
+                    *xi -= coef_r * rfi + coef_c * cfi;
+                    max_abs = max_abs.max(xi.abs());
+                }
+                max_abs
+            };
+            let maxes: Vec<f32> = if chunks.len() == 1 {
+                vec![pass2(&mut chunks[0])]
+            } else {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = chunks
+                        .iter_mut()
+                        .map(|c| s.spawn(|| pass2(c)))
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                })
+            };
+            for ma in maxes {
+                stats.max_abs_param = stats.max_abs_param.max(ma);
+            }
+        }
+        stats.mean_trust_ratio = trust.mean();
+        stats
+    }
+}
+
+// ---------------------------------------------------------------- LAMB ----
+
+/// Algorithm 1 — You et al.'s baseline.
+pub struct Lamb {
+    hp: Hyper,
+    table: BlockTable,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+    /// cached update direction between the reduce and apply passes (§Perf)
+    u_full: Vec<f32>,
+}
+
+impl Lamb {
+    pub fn new(table: BlockTable, hp: Hyper) -> Lamb {
+        let n = table.total;
+        Lamb { hp, table, m: vec![0.0; n], v: vec![0.0; n], t: 0, u_full: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn name(&self) -> &'static str {
+        "lamb"
+    }
+
+    fn blocks(&self) -> &BlockTable {
+        &self.table
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
+        self.t += 1;
+        let t = self.t as i32;
+        let hp = self.hp;
+        let bc1 = 1.0 - hp.beta1.powi(t);
+        let bc2 = 1.0 - hp.beta2.powi(t);
+        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
+        let mut trust = Welford::default();
+
+        let inv_bc1 = 1.0 / bc1;
+        let inv_bc2 = 1.0 / bc2;
+        for b in &self.table.blocks {
+            let r = b.offset..b.offset + b.len;
+            let (x, g) = (&mut params[r.clone()], &grads[r.clone()]);
+            let m = &mut self.m[r.clone()];
+            let v = &mut self.v[r.clone()];
+            let u_s = &mut self.u_full[r.clone()];
+            let wd = if b.decay { hp.weight_decay } else { 0.0 };
+
+            let mut sum_x2 = 0.0f64;
+            let mut sum_u2 = 0.0f64;
+            for ((((xi, gi), mi), vi), ui) in x
+                .iter()
+                .zip(g.iter())
+                .zip(m.iter_mut())
+                .zip(v.iter_mut())
+                .zip(u_s.iter_mut())
+            {
+                let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+                let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+                *mi = mn;
+                *vi = vn;
+                let u = mn * inv_bc1 / ((vn * inv_bc2).sqrt() + hp.eps) + wd * xi;
+                *ui = u;
+                sum_x2 += (*xi as f64) * (*xi as f64);
+                sum_u2 += (u as f64) * (u as f64);
+            }
+            let x_norm = sum_x2.sqrt() as f32;
+            let u_norm = (sum_u2.sqrt() as f32).max(NORM_EPS);
+            let coef = lr * x_norm / u_norm;
+            trust.push((x_norm / u_norm) as f64);
+
+            let mut max_abs = 0.0f32;
+            for (xi, ui) in x.iter_mut().zip(u_s.iter()) {
+                *xi -= coef * ui;
+                max_abs = max_abs.max(xi.abs());
+            }
+            stats.max_abs_param = stats.max_abs_param.max(max_abs);
+        }
+        stats.mean_trust_ratio = trust.mean();
+        stats
+    }
+}
+
+// --------------------------------------------------------------- AdamW ----
+
+/// AdamW, optionally with the paper's blockwise gradient normalization.
+pub struct AdamW {
+    hp: Hyper,
+    table: BlockTable,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+    pub block_grad_norm: bool,
+}
+
+impl AdamW {
+    pub fn new(table: BlockTable, hp: Hyper, block_grad_norm: bool) -> AdamW {
+        let n = table.total;
+        AdamW { hp, table, m: vec![0.0; n], v: vec![0.0; n], t: 0, block_grad_norm }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn name(&self) -> &'static str {
+        if self.block_grad_norm {
+            "adamw_bgn"
+        } else {
+            "adamw"
+        }
+    }
+
+    fn blocks(&self) -> &BlockTable {
+        &self.table
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
+        self.t += 1;
+        let t = self.t as i32;
+        let hp = self.hp;
+        let bc1 = 1.0 - hp.beta1.powi(t);
+        let bc2 = 1.0 - hp.beta2.powi(t);
+        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
+
+        for b in &self.table.blocks {
+            let r = b.offset..b.offset + b.len;
+            let (x, g) = (&mut params[r.clone()], &grads[r.clone()]);
+            let m = &mut self.m[r.clone()];
+            let v = &mut self.v[r.clone()];
+            let wd = if b.decay { hp.weight_decay } else { 0.0 };
+            let inv_gnorm = if self.block_grad_norm {
+                1.0 / l2(g).max(NORM_EPS)
+            } else {
+                1.0
+            };
+
+            let inv_bc1 = 1.0 / bc1;
+            let inv_bc2 = 1.0 / bc2;
+            let mut max_abs = 0.0f32;
+            for (((xi, gi), mi), vi) in
+                x.iter_mut().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut())
+            {
+                let gn = gi * inv_gnorm;
+                let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gn;
+                let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gn * gn;
+                *mi = mn;
+                *vi = vn;
+                let upd = mn * inv_bc1 / ((vn * inv_bc2).sqrt() + hp.eps) + wd * *xi;
+                *xi -= lr * upd;
+                max_abs = max_abs.max(xi.abs());
+            }
+            stats.max_abs_param = stats.max_abs_param.max(max_abs);
+        }
+        stats.mean_trust_ratio = 1.0;
+        stats
+    }
+}
+
+// ------------------------------------------------------- momentum SGD -----
+
+/// Classic momentum (eq. 2–3) and Nesterov (NAG) — §2.2's building blocks,
+/// used by the ablation benches.
+pub struct MomentumSgd {
+    table: BlockTable,
+    m: Vec<f32>,
+    pub mu: f32,
+    pub nesterov: bool,
+}
+
+impl MomentumSgd {
+    pub fn new(table: BlockTable, mu: f32, nesterov: bool) -> MomentumSgd {
+        let n = table.total;
+        MomentumSgd { table, m: vec![0.0; n], mu, nesterov }
+    }
+}
+
+impl Optimizer for MomentumSgd {
+    fn name(&self) -> &'static str {
+        if self.nesterov {
+            "nag"
+        } else {
+            "msgd"
+        }
+    }
+
+    fn blocks(&self) -> &BlockTable {
+        &self.table
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
+        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
+        let mut max_abs = 0.0f32;
+        for i in 0..params.len() {
+            // m_t = mu m_{t-1} + g_t
+            self.m[i] = self.mu * self.m[i] + grads[i];
+            let d = if self.nesterov {
+                // x_{t+1} = x_t - lr (mu m_t + g_t)
+                self.mu * self.m[i] + grads[i]
+            } else {
+                self.m[i]
+            };
+            params[i] -= lr * d;
+            max_abs = max_abs.max(params[i].abs());
+        }
+        stats.max_abs_param = max_abs;
+        stats.mean_trust_ratio = 1.0;
+        stats
+    }
+}
+
+/// Factory by name (CLI / config entry point).
+pub fn make_optimizer(name: &str, table: BlockTable, hp: Hyper) -> Option<Box<dyn Optimizer>> {
+    match name {
+        "lans" => Some(Box::new(Lans::new(table, hp))),
+        "lamb" => Some(Box::new(Lamb::new(table, hp))),
+        "adamw" => Some(Box::new(AdamW::new(table, hp, false))),
+        "adamw_bgn" => Some(Box::new(AdamW::new(table, hp, true))),
+        "msgd" => Some(Box::new(MomentumSgd::new(table, 0.9, false))),
+        "nag" => Some(Box::new(MomentumSgd::new(table, 0.9, true))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn table() -> BlockTable {
+        BlockTable::new(&[("w".into(), 64, true), ("b".into(), 8, false)])
+    }
+
+    fn randvec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn lans_update_is_scale_invariant_in_gradient() {
+        // blockwise normalization ⇒ multiplying g by any positive scalar per
+        // block must not change the update at t=1
+        let t = table();
+        let mut rng = Rng::new(1);
+        let x0 = randvec(t.total, &mut rng);
+        let g = randvec(t.total, &mut rng);
+        let g_scaled: Vec<f32> = g.iter().map(|&v| v * 1000.0).collect();
+
+        let mut o1 = Lans::new(t.clone(), Hyper::default());
+        let mut o2 = Lans::new(t.clone(), Hyper::default());
+        let mut x1 = x0.clone();
+        let mut x2 = x0.clone();
+        o1.step(&mut x1, &g, 0.01);
+        o2.step(&mut x2, &g_scaled, 0.01);
+        for (a, b) in x1.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lamb_is_not_gradient_scale_invariant() {
+        let t = table();
+        let mut rng = Rng::new(2);
+        let x0 = randvec(t.total, &mut rng);
+        let g = randvec(t.total, &mut rng);
+        let g_scaled: Vec<f32> = g.iter().map(|&v| v * 1000.0).collect();
+        let mut o1 = Lamb::new(t.clone(), Hyper::default());
+        let mut o2 = Lamb::new(t.clone(), Hyper::default());
+        let mut x1 = x0.clone();
+        let mut x2 = x0.clone();
+        o1.step(&mut x1, &g, 0.01);
+        o2.step(&mut x2, &g_scaled, 0.01);
+        let diff: f32 = x1.iter().zip(&x2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-6, "LAMB should depend on gradient scale via v_t");
+    }
+
+    #[test]
+    fn update_norm_bounded_by_lr_times_xnorm() {
+        // ‖Δx‖ per block ≤ lr·φ(‖x‖)·(β1 + (1-β1)) · (1+wd·...) ≈ lr·‖x‖:
+        // the trust-ratio property the paper relies on for stability
+        let t = table();
+        let mut rng = Rng::new(3);
+        let x0 = randvec(t.total, &mut rng);
+        let g = randvec(t.total, &mut rng);
+        let mut o = Lans::new(t.clone(), Hyper { weight_decay: 0.0, ..Default::default() });
+        let mut x = x0.clone();
+        o.step(&mut x, &g, 0.01);
+        for b in &t.blocks {
+            let r = b.offset..b.offset + b.len;
+            let dx: f32 = x[r.clone()]
+                .iter()
+                .zip(&x0[r.clone()])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let xn: f32 = x0[r].iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!(dx <= 0.01 * xn * 1.001 + 1e-7, "block {}: {dx} vs {}", b.name, 0.01 * xn);
+        }
+    }
+
+    #[test]
+    fn adamw_plain_reduces_simple_quadratic() {
+        // minimize 0.5*x^2 — loss must drop monotonically-ish
+        let t = BlockTable::new(&[("x".into(), 4, false)]);
+        let mut o = AdamW::new(t, Hyper { weight_decay: 0.0, ..Default::default() }, false);
+        let mut x = vec![1.0f32, -2.0, 3.0, -4.0];
+        let f = |x: &[f32]| x.iter().map(|v| 0.5 * v * v).sum::<f32>();
+        let f0 = f(&x);
+        for _ in 0..200 {
+            let g: Vec<f32> = x.to_vec();
+            o.step(&mut x, &g, 0.05);
+        }
+        assert!(f(&x) < 0.05 * f0, "f went {f0} -> {}", f(&x));
+    }
+
+    #[test]
+    fn nag_differs_from_classic() {
+        let t = table();
+        let mut rng = Rng::new(4);
+        let x0 = randvec(t.total, &mut rng);
+        let g = randvec(t.total, &mut rng);
+        let mut o1 = MomentumSgd::new(t.clone(), 0.9, false);
+        let mut o2 = MomentumSgd::new(t.clone(), 0.9, true);
+        let mut x1 = x0.clone();
+        let mut x2 = x0;
+        o1.step(&mut x1, &g, 0.01);
+        o2.step(&mut x2, &g, 0.01);
+        assert_ne!(x1, x2);
+    }
+
+    #[test]
+    fn factory_names() {
+        let t = table();
+        for n in ["lans", "lamb", "adamw", "adamw_bgn", "msgd", "nag"] {
+            assert!(make_optimizer(n, t.clone(), Hyper::default()).is_some());
+        }
+        assert!(make_optimizer("sgdx", t, Hyper::default()).is_none());
+    }
+}

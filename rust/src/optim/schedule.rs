@@ -1,0 +1,210 @@
+//! Learning-rate schedules — the paper's second contribution.
+//!
+//! * [`Schedule::LinearWarmupDecay`] — eq. (8), the LAMB schedule.
+//! * [`Schedule::WarmupConstDecay`]  — eq. (9): warmup → *constant
+//!   transient* → decay.  The constant stage is what lets batch sizes past
+//!   the linear-scaling limit keep making progress once η has hit the
+//!   1/L ceiling (paper §3.3).
+//! * [`Schedule::PolyDecay`] — the poly-decay generalisation used by BERT
+//!   reference code (power=1 ⇒ eq. 8).
+//!
+//! `area_under_curve` reproduces Fig. 1's quantitative claim: with
+//! T=3519, Tw=1500, Tc=963 the AUC gap between eq. 8 @ η=0.01 and
+//! eq. 8 @ η=0.007 is 5.28, and eq. 9 @ η=0.007 shrinks it to 1.91.
+//! Bit-parity with the jax closed forms is asserted in
+//! `python/tests/test_schedule.py`.
+
+/// Step-indexed learning-rate schedule (t is 1-based, as in the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Constant {
+        eta: f64,
+    },
+    /// eq. (8)
+    LinearWarmupDecay {
+        eta: f64,
+        t_warmup: u64,
+        t_total: u64,
+    },
+    /// eq. (9)
+    WarmupConstDecay {
+        eta: f64,
+        t_warmup: u64,
+        t_const: u64,
+        t_total: u64,
+    },
+    PolyDecay {
+        eta: f64,
+        t_warmup: u64,
+        t_total: u64,
+        power: f64,
+    },
+}
+
+impl Schedule {
+    /// Learning rate at 1-based step `t`.
+    pub fn lr(&self, t: u64) -> f64 {
+        let tf = t as f64;
+        match *self {
+            Schedule::Constant { eta } => eta,
+            Schedule::LinearWarmupDecay { eta, t_warmup, t_total } => {
+                if t <= t_warmup {
+                    eta * tf / t_warmup as f64
+                } else {
+                    (eta * (t_total as f64 - tf)
+                        / (t_total - t_warmup) as f64)
+                        .max(0.0)
+                }
+            }
+            Schedule::WarmupConstDecay { eta, t_warmup, t_const, t_total } => {
+                if t <= t_warmup {
+                    eta * tf / t_warmup as f64
+                } else if t <= t_warmup + t_const {
+                    eta
+                } else {
+                    (eta * (t_total as f64 - tf)
+                        / (t_total - t_warmup - t_const) as f64)
+                        .max(0.0)
+                }
+            }
+            Schedule::PolyDecay { eta, t_warmup, t_total, power } => {
+                if t <= t_warmup {
+                    eta * tf / t_warmup as f64
+                } else {
+                    let frac = ((t_total as f64 - tf)
+                        / (t_total - t_warmup) as f64)
+                        .clamp(0.0, 1.0);
+                    eta * frac.powf(power)
+                }
+            }
+        }
+    }
+
+    /// Peak learning rate.
+    pub fn eta(&self) -> f64 {
+        match *self {
+            Schedule::Constant { eta }
+            | Schedule::LinearWarmupDecay { eta, .. }
+            | Schedule::WarmupConstDecay { eta, .. }
+            | Schedule::PolyDecay { eta, .. } => eta,
+        }
+    }
+
+    /// The full LR curve over steps 1..=t_total.
+    pub fn curve(&self, t_total: u64) -> Vec<f64> {
+        (1..=t_total).map(|t| self.lr(t)).collect()
+    }
+
+    /// Exact area under the schedule over t ∈ [1, t_total] (sum of per-step
+    /// rates — the discrete analogue Fig. 1's numbers are computed with).
+    pub fn area_under_curve(&self, t_total: u64) -> f64 {
+        (1..=t_total).map(|t| self.lr(t)).sum()
+    }
+}
+
+/// The paper's ratio-based parameterisation (§4, Table 1):
+/// `ratio_warmup = T_warmup / T_stage`, `ratio_const = T_const / T_stage`.
+pub fn from_ratios(
+    eta: f64,
+    t_total: u64,
+    ratio_warmup: f64,
+    ratio_const: f64,
+) -> Schedule {
+    assert!(ratio_warmup >= 0.0 && ratio_const >= 0.0);
+    assert!(ratio_warmup + ratio_const <= 1.0 + 1e-9);
+    let t_warmup = (t_total as f64 * ratio_warmup).round() as u64;
+    let t_const = (t_total as f64 * ratio_const).round() as u64;
+    if t_const == 0 {
+        Schedule::LinearWarmupDecay { eta, t_warmup, t_total }
+    } else {
+        Schedule::WarmupConstDecay { eta, t_warmup, t_const, t_total }
+    }
+}
+
+/// Square-root LR scaling rule (paper §3.3, from You et al.):
+/// η = sqrt(k) · η̃ for mini-batch size k and reference rate η̃.
+pub fn sqrt_scaled_lr(reference_lr: f64, reference_batch: usize, batch: usize) -> f64 {
+    reference_lr * ((batch as f64) / (reference_batch as f64)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fig. 1 parameters
+    const T: u64 = 3519;
+    const TW: u64 = 1500;
+    const TC: u64 = 963;
+
+    #[test]
+    fn eq8_shape() {
+        let s = Schedule::LinearWarmupDecay { eta: 0.01, t_warmup: TW, t_total: T };
+        assert!((s.lr(TW) - 0.01).abs() < 1e-12);
+        assert!(s.lr(1) < 1e-4);
+        assert!((s.lr(T)).abs() < 1e-9);
+        // monotone up then down
+        assert!(s.lr(700) < s.lr(1400));
+        assert!(s.lr(2000) > s.lr(3000));
+    }
+
+    #[test]
+    fn eq9_constant_stage() {
+        let s = Schedule::WarmupConstDecay {
+            eta: 0.007,
+            t_warmup: TW,
+            t_const: TC,
+            t_total: T,
+        };
+        for t in [TW, TW + 1, TW + TC / 2, TW + TC] {
+            assert!((s.lr(t) - 0.007).abs() < 1e-12, "t={t}");
+        }
+        assert!(s.lr(TW + TC + 100) < 0.007);
+        assert!((s.lr(T)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig1_auc_gaps() {
+        // the paper: gap(eq8@0.01, eq8@0.007) = 5.28; gap(eq8@0.01, eq9@0.007) = 1.91
+        let ideal = Schedule::LinearWarmupDecay { eta: 0.01, t_warmup: TW, t_total: T };
+        let small = Schedule::LinearWarmupDecay { eta: 0.007, t_warmup: TW, t_total: T };
+        let ours = Schedule::WarmupConstDecay {
+            eta: 0.007,
+            t_warmup: TW,
+            t_const: TC,
+            t_total: T,
+        };
+        let gap8 = ideal.area_under_curve(T) - small.area_under_curve(T);
+        let gap9 = ideal.area_under_curve(T) - ours.area_under_curve(T);
+        assert!((gap8 - 5.28).abs() < 0.05, "gap8 = {gap8}");
+        assert!((gap9 - 1.91).abs() < 0.05, "gap9 = {gap9}");
+    }
+
+    #[test]
+    fn ratios_table1_stage1() {
+        // Table 1 stage 1: eta=0.00675, warmup 42.65%, const 27.35% of 3519
+        let s = from_ratios(0.00675, 3519, 0.4265, 0.2735);
+        match s {
+            Schedule::WarmupConstDecay { t_warmup, t_const, .. } => {
+                assert_eq!(t_warmup, 1501); // 3519*0.4265 = 1500.8
+                assert_eq!(t_const, 962);
+                // warmup+const = 70% of stage (paper's constraint)
+                let frac = (t_warmup + t_const) as f64 / 3519.0;
+                assert!((frac - 0.70).abs() < 0.001);
+            }
+            _ => panic!("expected WarmupConstDecay"),
+        }
+    }
+
+    #[test]
+    fn sqrt_scaling() {
+        // 32K -> 128K is 4x batch => 2x lr
+        let lr = sqrt_scaled_lr(0.005, 32768, 131072);
+        assert!((lr - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_const_falls_back_to_eq8() {
+        let s = from_ratios(0.01, 1000, 0.1, 0.0);
+        assert!(matches!(s, Schedule::LinearWarmupDecay { .. }));
+    }
+}

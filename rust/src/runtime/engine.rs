@@ -1,0 +1,151 @@
+//! PJRT execution engine: a dedicated device thread owning all XLA state.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and must not cross threads,
+//! while the coordinator is multi-threaded (data-pipeline workers, leader).
+//! So the engine spawns one *device thread* that owns the client and every
+//! compiled executable; coordinator threads talk to it through a channel
+//! with `HostTensor` payloads.  This mirrors how real trainers serialize
+//! access to an accelerator stream.
+//!
+//! Executables are loaded from HLO *text* (`HloModuleProto::from_text_file`)
+//! — see DESIGN.md for why text, not serialized protos.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::HostTensor;
+
+enum Req {
+    Load {
+        key: String,
+        path: PathBuf,
+        reply: SyncSender<Result<()>>,
+    },
+    Run {
+        key: String,
+        inputs: Vec<HostTensor>,
+        reply: SyncSender<Result<Vec<HostTensor>>>,
+    },
+    /// Number of executables currently loaded (health/introspection).
+    Stats { reply: SyncSender<usize> },
+}
+
+/// Clonable, Send handle to the device thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Req>,
+}
+
+impl Engine {
+    /// Spawn the device thread with a PJRT CPU client.
+    pub fn cpu() -> Result<Engine> {
+        let (tx, rx) = std::sync::mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = sync_channel::<Result<String>>(1);
+        thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || device_thread(rx, ready_tx))
+            .context("spawning device thread")?;
+        match ready_rx.recv().context("device thread died during init")? {
+            Ok(_platform) => Ok(Engine { tx }),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Compile the HLO-text artifact at `path` and register it under `key`.
+    pub fn load(&self, key: &str, path: PathBuf) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Req::Load { key: key.to_string(), path, reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))?
+    }
+
+    /// Execute the executable registered under `key`.
+    ///
+    /// The artifact was lowered with `return_tuple=True`, so the device
+    /// thread unpacks the single tuple result into one `HostTensor` per
+    /// output.
+    pub fn run(&self, key: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Req::Run { key: key.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))?
+    }
+
+    pub fn loaded_count(&self) -> Result<usize> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Req::Stats { reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))
+    }
+}
+
+fn device_thread(rx: Receiver<Req>, ready: SyncSender<Result<String>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(c.platform_name()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+
+    let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Load { key, path, reply } => {
+                let r = (|| -> Result<()> {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )
+                    .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+                    exes.insert(key, exe);
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Run { key, inputs, reply } => {
+                let r = (|| -> Result<Vec<HostTensor>> {
+                    let exe = exes
+                        .get(&key)
+                        .ok_or_else(|| anyhow!("no executable {key:?} loaded"))?;
+                    let lits = inputs
+                        .iter()
+                        .map(|t| t.to_literal())
+                        .collect::<Result<Vec<_>>>()?;
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow!("executing {key:?}: {e}"))?;
+                    let out = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetching result of {key:?}: {e}"))?;
+                    let parts = out
+                        .to_tuple()
+                        .map_err(|e| anyhow!("untupling result of {key:?}: {e}"))?;
+                    parts
+                        .iter()
+                        .map(HostTensor::from_literal)
+                        .collect::<Result<Vec<_>>>()
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Stats { reply } => {
+                let _ = reply.send(exes.len());
+            }
+        }
+    }
+    // channel closed: drop executables, then the client
+}

@@ -1,0 +1,201 @@
+//! Parser for the `<tag>.meta.json` files written by `python/compile/aot.py`.
+//!
+//! The meta file is the contract between the compile path and the runtime:
+//! canonical parameter order (names, shapes, weight-decay flags), batch
+//! geometry, and the artifact-file names for each executable.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// Whether weight decay applies (false for biases / LayerNorm params).
+    pub decay: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub tag: String,
+    pub config_name: String,
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub num_heads: usize,
+    pub intermediate: usize,
+    pub vocab_size: usize,
+    pub max_seq_len: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub mlm_slots: usize,
+    pub params: Vec<ParamSpec>,
+    pub param_count: usize,
+    /// artifact role ("fwd_bwd", "eval", "opt_lans", …) → file name
+    pub artifacts: BTreeMap<String, String>,
+    /// directory the meta file was loaded from (artifact paths are relative)
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&j, path.parent().unwrap_or(Path::new(".")))
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<ModelMeta> {
+        let need_str = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("meta missing string {k:?}"))?
+                .to_string())
+        };
+        let need_usize = |v: &Json, k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta missing number {k:?}"))
+        };
+
+        let cfg = j.get("config").ok_or_else(|| anyhow!("meta missing config"))?;
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("meta missing params"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?;
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    size: need_usize(p, "size")?,
+                    decay: p
+                        .get("decay")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| anyhow!("param missing decay"))?,
+                    shape,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = match j.get("artifacts") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        v.as_str()
+                            .ok_or_else(|| anyhow!("artifact path not a string"))?
+                            .to_string(),
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => BTreeMap::new(),
+        };
+
+        // sanity: declared sizes match shapes
+        for p in &params {
+            let n: usize = p.shape.iter().product();
+            if n != p.size {
+                return Err(anyhow!("param {}: size {} != shape product {n}",
+                                   p.name, p.size));
+            }
+        }
+
+        Ok(ModelMeta {
+            tag: need_str("tag")?,
+            config_name: cfg
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("config missing name"))?
+                .to_string(),
+            num_layers: need_usize(cfg, "num_layers")?,
+            hidden: need_usize(cfg, "hidden")?,
+            num_heads: need_usize(cfg, "num_heads")?,
+            intermediate: need_usize(cfg, "intermediate")?,
+            vocab_size: need_usize(cfg, "vocab_size")?,
+            max_seq_len: need_usize(cfg, "max_seq_len")?,
+            batch: need_usize(j, "batch")?,
+            seq: need_usize(j, "seq")?,
+            mlm_slots: need_usize(j, "mlm_slots")?,
+            param_count: need_usize(j, "param_count")?,
+            params,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact_path(&self, role: &str) -> Result<PathBuf> {
+        let name = self
+            .artifacts
+            .get(role)
+            .ok_or_else(|| anyhow!("meta {} has no artifact {role:?}; have {:?}",
+                                   self.tag, self.artifacts.keys()))?;
+        Ok(self.dir.join(name))
+    }
+
+    /// Block table for the pure-rust optimizers: (name, size, decay).
+    pub fn blocks(&self) -> Vec<(String, usize, bool)> {
+        self.params
+            .iter()
+            .map(|p| (p.name.clone(), p.size, p.decay))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "tag": "bert-x_s8_b2",
+          "config": {"name": "bert-x", "num_layers": 1, "hidden": 8,
+                     "num_heads": 2, "intermediate": 16, "vocab_size": 32,
+                     "max_seq_len": 16, "type_vocab": 2,
+                     "layernorm_eps": 1e-12},
+          "batch": 2, "seq": 8, "mlm_slots": 2,
+          "params": [{"name": "w", "shape": [4, 2], "size": 8, "decay": true},
+                     {"name": "b", "shape": [2], "size": 2, "decay": false}],
+          "param_count": 10,
+          "hyper": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-6,
+                    "weight_decay": 0.01},
+          "artifacts": {"fwd_bwd": "fwd_bwd_x.hlo.txt"}
+        }"#
+    }
+
+    #[test]
+    fn parses_meta() {
+        let j = Json::parse(sample()).unwrap();
+        let m = ModelMeta::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.config_name, "bert-x");
+        assert_eq!(m.params.len(), 2);
+        assert!(m.params[0].decay);
+        assert!(!m.params[1].decay);
+        assert_eq!(m.artifact_path("fwd_bwd").unwrap(),
+                   PathBuf::from("/tmp/a/fwd_bwd_x.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let bad = sample().replace("\"size\": 8", "\"size\": 9");
+        let j = Json::parse(&bad).unwrap();
+        assert!(ModelMeta::from_json(&j, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `*.meta.json`) and executes them on a PJRT CPU client from a dedicated
+//! device thread.  Adapted from /opt/xla-example/load_hlo.
+
+pub mod engine;
+pub mod meta;
+pub mod model;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use meta::{ModelMeta, ParamSpec};
+pub use model::ModelRuntime;
+pub use tensor::{HostTensor, TensorF32, TensorI32};

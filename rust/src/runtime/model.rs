@@ -1,0 +1,208 @@
+//! High-level model runtime: couples a `ModelMeta` with the engine and
+//! exposes typed train/eval/optimizer-step entry points over the canonical
+//! parameter order.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::MlmBatch;
+use crate::util::rng::Rng;
+
+use super::engine::Engine;
+use super::meta::ModelMeta;
+use super::tensor::{HostTensor, TensorF32, TensorI32};
+
+/// Optimizer state (first/second moments), canonical order.
+#[derive(Debug, Clone)]
+pub struct OptState {
+    pub m: Vec<TensorF32>,
+    pub v: Vec<TensorF32>,
+    /// 1-based step counter fed to the bias corrections.
+    pub step: u64,
+}
+
+/// Cheap to clone: workers hold clones (the meta is shared, the engine is a
+/// channel handle to the single device thread).
+#[derive(Clone)]
+pub struct ModelRuntime {
+    pub meta: std::sync::Arc<ModelMeta>,
+    engine: Engine,
+}
+
+impl ModelRuntime {
+    /// Load meta + the fwd_bwd/eval artifacts; optimizer artifacts are
+    /// loaded on demand via [`ModelRuntime::load_optimizer`].
+    pub fn load(engine: Engine, meta_path: &Path) -> Result<ModelRuntime> {
+        let meta = std::sync::Arc::new(ModelMeta::load(meta_path)?);
+        let rt = ModelRuntime { meta, engine };
+        rt.engine
+            .load(&rt.key("fwd_bwd"), rt.meta.artifact_path("fwd_bwd")?)?;
+        if rt.meta.artifacts.contains_key("eval") {
+            rt.engine
+                .load(&rt.key("eval"), rt.meta.artifact_path("eval")?)?;
+        }
+        Ok(rt)
+    }
+
+    fn key(&self, role: &str) -> String {
+        format!("{}::{}", self.meta.tag, role)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Compile the `opt_<name>` artifact (idempotent per engine key).
+    pub fn load_optimizer(&self, name: &str) -> Result<()> {
+        let role = format!("opt_{name}");
+        self.engine
+            .load(&self.key(&role), self.meta.artifact_path(&role)?)
+    }
+
+    /// BERT-style initialisation: truncated-normal(0.02) for kernels and
+    /// embeddings, zeros for biases, ones for LayerNorm scales.
+    pub fn init_params(&self, seed: u64) -> Vec<TensorF32> {
+        let mut rng = Rng::new(seed);
+        self.meta
+            .params
+            .iter()
+            .map(|p| {
+                let data: Vec<f32> = if p.name.ends_with("ln_scale") {
+                    vec![1.0; p.size]
+                } else if p.name.ends_with("_bias") || p.name.ends_with("ln_bias") {
+                    vec![0.0; p.size]
+                } else {
+                    (0..p.size)
+                        .map(|_| {
+                            let z = rng.normal_f32().clamp(-2.0, 2.0);
+                            z * 0.02
+                        })
+                        .collect()
+                };
+                TensorF32::new(p.shape.clone(), data)
+            })
+            .collect()
+    }
+
+    pub fn zero_opt_state(&self) -> OptState {
+        let zeros: Vec<TensorF32> = self
+            .meta
+            .params
+            .iter()
+            .map(|p| TensorF32::zeros(p.shape.clone()))
+            .collect();
+        OptState { m: zeros.clone(), v: zeros, step: 0 }
+    }
+
+    fn batch_tensors(&self, batch: &MlmBatch) -> Result<Vec<HostTensor>> {
+        let (b, s, p) = (self.meta.batch, self.meta.seq, self.meta.mlm_slots);
+        if batch.tokens.len() != b * s || batch.positions.len() != b * p {
+            bail!(
+                "batch geometry mismatch: artifact wants b={b} s={s} slots={p}, \
+                 got tokens={} positions={}",
+                batch.tokens.len(),
+                batch.positions.len()
+            );
+        }
+        Ok(vec![
+            TensorI32::new(vec![b, s], batch.tokens.clone()).into(),
+            TensorI32::new(vec![b, p], batch.positions.clone()).into(),
+            TensorI32::new(vec![b, p], batch.target_ids.clone()).into(),
+            TensorF32::new(vec![b, p], batch.weights.clone()).into(),
+        ])
+    }
+
+    fn check_params(&self, params: &[TensorF32]) -> Result<()> {
+        if params.len() != self.meta.params.len() {
+            bail!(
+                "expected {} param tensors, got {}",
+                self.meta.params.len(),
+                params.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// One microbatch forward+backward: returns (loss, grads).
+    pub fn fwd_bwd(
+        &self,
+        params: &[TensorF32],
+        batch: &MlmBatch,
+    ) -> Result<(f32, Vec<TensorF32>)> {
+        self.check_params(params)?;
+        let mut inputs: Vec<HostTensor> =
+            params.iter().cloned().map(HostTensor::from).collect();
+        inputs.extend(self.batch_tensors(batch)?);
+        let mut out = self.engine.run(&self.key("fwd_bwd"), inputs)?;
+        if out.len() != 1 + self.meta.params.len() {
+            bail!(
+                "fwd_bwd returned {} outputs, expected {}",
+                out.len(),
+                1 + self.meta.params.len()
+            );
+        }
+        let grads = out
+            .split_off(1)
+            .into_iter()
+            .map(HostTensor::into_f32)
+            .collect::<Result<Vec<_>>>()?;
+        let loss = out[0].as_f32()?.data[0];
+        Ok((loss, grads))
+    }
+
+    /// Forward-only loss on a held-out batch.
+    pub fn eval_loss(&self, params: &[TensorF32], batch: &MlmBatch) -> Result<f32> {
+        self.check_params(params)?;
+        let mut inputs: Vec<HostTensor> =
+            params.iter().cloned().map(HostTensor::from).collect();
+        inputs.extend(self.batch_tensors(batch)?);
+        let out = self.engine.run(&self.key("eval"), inputs)?;
+        Ok(out
+            .first()
+            .ok_or_else(|| anyhow!("eval returned no outputs"))?
+            .as_f32()?
+            .data[0])
+    }
+
+    /// One optimizer step through the AOT `opt_<name>` artifact.
+    /// Mutates `params` and `state` in place; `state.step` is incremented
+    /// *before* the update (the kernels expect the 1-based t).
+    pub fn opt_step(
+        &self,
+        name: &str,
+        params: &mut Vec<TensorF32>,
+        state: &mut OptState,
+        grads: &[TensorF32],
+        lr: f32,
+    ) -> Result<()> {
+        self.check_params(params)?;
+        state.step += 1;
+        let n = params.len();
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(4 * n + 2);
+        inputs.extend(params.iter().cloned().map(HostTensor::from));
+        inputs.extend(state.m.iter().cloned().map(HostTensor::from));
+        inputs.extend(state.v.iter().cloned().map(HostTensor::from));
+        inputs.extend(grads.iter().cloned().map(HostTensor::from));
+        inputs.push(TensorF32::scalar1(lr).into());
+        inputs.push(TensorF32::scalar1(state.step as f32).into());
+
+        let out = self
+            .engine
+            .run(&self.key(&format!("opt_{name}")), inputs)?;
+        if out.len() != 3 * n {
+            bail!("opt step returned {} outputs, expected {}", out.len(), 3 * n);
+        }
+        let mut it = out.into_iter();
+        for i in 0..n {
+            params[i] = it.next().unwrap().into_f32()?;
+        }
+        for i in 0..n {
+            state.m[i] = it.next().unwrap().into_f32()?;
+        }
+        for i in 0..n {
+            state.v[i] = it.next().unwrap().into_f32()?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,158 @@
+//! Host-side tensors: the Send-able currency between coordinator threads
+//! and the PJRT device thread.
+//!
+//! PJRT objects (`PjRtClient` is `Rc`-based) are confined to the device
+//! thread (`runtime::engine`); everything that crosses a channel is a
+//! `HostTensor`.  Only f32 and i32 appear in the BERT artifacts.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, Shape};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        TensorF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = numel(&shape);
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar1(x: f32) -> Self {
+        TensorF32 { shape: vec![1], data: vec![x] }
+    }
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        TensorI32 { shape, data }
+    }
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(t) => &t.shape,
+            HostTensor::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(self.shape())
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF32> {
+        match self {
+            HostTensor::F32(t) => Ok(t),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<TensorF32> {
+        match self {
+            HostTensor::F32(t) => Ok(t),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Convert to an XLA literal (device-thread side).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(t) => Literal::vec1(&t.data),
+            HostTensor::I32(t) => Literal::vec1(&t.data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert back from an XLA literal (device-thread side).
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.shape().context("literal shape")?;
+        let ashape = match shape {
+            Shape::Array(a) => a,
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let dims: Vec<usize> = ashape.dims().iter().map(|&d| d as usize).collect();
+        match ashape.element_type() {
+            ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(HostTensor::F32(TensorF32::new(dims, data)))
+            }
+            ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(HostTensor::I32(TensorI32::new(dims, data)))
+            }
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+impl From<TensorF32> for HostTensor {
+    fn from(t: TensorF32) -> Self {
+        HostTensor::F32(t)
+    }
+}
+
+impl From<TensorI32> for HostTensor {
+    fn from(t: TensorI32) -> Self {
+        HostTensor::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = TensorF32::zeros(vec![2, 3]);
+        assert_eq!(HostTensor::from(t).numel(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        TensorF32::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = TensorF32::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let ht = HostTensor::from(t.clone());
+        let lit = ht.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, ht);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = TensorI32::new(vec![4], vec![1, -2, 3, -4]);
+        let ht = HostTensor::from(t);
+        let back = HostTensor::from_literal(&ht.to_literal().unwrap()).unwrap();
+        assert_eq!(back, ht);
+    }
+}

@@ -1,0 +1,121 @@
+//! Bench harness — criterion is unavailable offline, so benches run with
+//! `harness = false` and use this module: warmup, repeated timed runs,
+//! mean / p50 / p99, and aligned table printing so every `rust/benches/*.rs`
+//! regenerates its paper table with the same look.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: percentile(&samples, 50.0),
+        p99_ns: percentile(&samples, 99.0),
+    }
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.3} ms mean   {:>10.3} ms p50   {:>10.3} ms p99   ({} iters)",
+        r.name,
+        r.mean_ns / 1e6,
+        r.p50_ns / 1e6,
+        r.p99_ns / 1e6,
+        r.iters
+    );
+}
+
+/// Markdown-style table printer used by the paper-table benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        println!("{sep}");
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree substrates for crates unavailable offline (serde_json, rand,
+//! criterion): a JSON parser, a deterministic PRNG, statistics helpers and
+//! a bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,188 @@
+//! §3.4 reproduction: mini-batch gradient variance under sampling with vs
+//! without replacement.
+//!
+//! The paper's argument: with replacement the variance of the mini-batch
+//! mean is bounded by O(σ²/k); without replacement it is
+//! O((n−k)/(k(n−1)) · σ²) — which *vanishes* at k = n, while the
+//! with-replacement bound only vanishes as k → ∞.  This module measures
+//! both empirically on a synthetic per-sample gradient population and
+//! compares against the closed forms (exact for the mean estimator, not
+//! just bounds, when σ² is the population variance).
+
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// A synthetic population of per-sample "gradients" (d-dimensional), with a
+/// known population mean and variance.
+pub struct GradientPopulation {
+    pub dim: usize,
+    samples: Vec<Vec<f32>>, // n × d
+    mean: Vec<f64>,
+    /// population variance averaged over coordinates: (1/d)·Σ_j σ²_j
+    pub sigma2: f64,
+}
+
+impl GradientPopulation {
+    pub fn synthetic(n: usize, dim: usize, seed: u64) -> GradientPopulation {
+        let mut rng = Rng::new(seed);
+        // heavy-ish tails: mixture of two normals, like gradient noise
+        let samples: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let scale = if rng.next_f64() < 0.1 { 4.0 } else { 1.0 };
+                (0..dim).map(|_| (rng.normal() * scale) as f32).collect()
+            })
+            .collect();
+        let mut mean = vec![0.0f64; dim];
+        for s in &samples {
+            for (m, &x) in mean.iter_mut().zip(s) {
+                *m += x as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut sigma2 = 0.0;
+        for s in &samples {
+            for (j, &x) in s.iter().enumerate() {
+                let d = x as f64 - mean[j];
+                sigma2 += d * d;
+            }
+        }
+        sigma2 /= (n * dim) as f64;
+        GradientPopulation { dim, samples, mean, sigma2 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Squared error of the mini-batch mean vs the population mean,
+    /// averaged over coordinates.
+    fn batch_mse(&self, idx: &[usize]) -> f64 {
+        let k = idx.len() as f64;
+        let mut mse = 0.0;
+        for j in 0..self.dim {
+            let mut s = 0.0;
+            for &i in idx {
+                s += self.samples[i][j] as f64;
+            }
+            let d = s / k - self.mean[j];
+            mse += d * d;
+        }
+        mse / self.dim as f64
+    }
+
+    /// Monte-Carlo estimate of E‖mean_batch − mean_pop‖²/d for batch size k.
+    pub fn empirical_variance(
+        &self,
+        k: usize,
+        trials: usize,
+        with_replacement: bool,
+        seed: u64,
+    ) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut w = Welford::default();
+        for _ in 0..trials {
+            let idx = if with_replacement {
+                rng.sample_with_replacement(self.len(), k)
+            } else {
+                rng.sample_without_replacement(self.len(), k)
+            };
+            w.push(self.batch_mse(&idx));
+        }
+        w.mean()
+    }
+
+    /// Closed form, with replacement: σ²/k.
+    pub fn theory_with_replacement(&self, k: usize) -> f64 {
+        self.sigma2 / k as f64
+    }
+
+    /// Closed form, without replacement: (n−k)/(k(n−1)) · σ².
+    pub fn theory_without_replacement(&self, k: usize) -> f64 {
+        let n = self.len() as f64;
+        let kf = k as f64;
+        (n - kf) / (kf * (n - 1.0)) * self.sigma2
+    }
+}
+
+/// One row of the variance-sweep table (the §3.4 bench output).
+#[derive(Debug, Clone)]
+pub struct VarianceRow {
+    pub k: usize,
+    pub with_repl_empirical: f64,
+    pub with_repl_theory: f64,
+    pub without_repl_empirical: f64,
+    pub without_repl_theory: f64,
+}
+
+pub fn sweep(
+    pop: &GradientPopulation,
+    ks: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Vec<VarianceRow> {
+    ks.iter()
+        .map(|&k| VarianceRow {
+            k,
+            with_repl_empirical: pop.empirical_variance(k, trials, true, seed ^ k as u64),
+            with_repl_theory: pop.theory_with_replacement(k),
+            without_repl_empirical: pop.empirical_variance(
+                k,
+                trials,
+                false,
+                seed ^ (k as u64) << 1,
+            ),
+            without_repl_theory: pop.theory_without_replacement(k),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_matches_theory() {
+        let pop = GradientPopulation::synthetic(512, 8, 1);
+        for k in [8, 64, 256] {
+            let e_wr = pop.empirical_variance(k, 3000, true, 2);
+            let t_wr = pop.theory_with_replacement(k);
+            assert!(
+                (e_wr - t_wr).abs() / t_wr < 0.15,
+                "with repl k={k}: {e_wr} vs {t_wr}"
+            );
+            let e_wo = pop.empirical_variance(k, 3000, false, 3);
+            let t_wo = pop.theory_without_replacement(k);
+            assert!(
+                (e_wo - t_wo).abs() / t_wo.max(1e-12) < 0.15,
+                "without repl k={k}: {e_wo} vs {t_wo}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_batch_without_replacement_is_exact() {
+        let pop = GradientPopulation::synthetic(128, 4, 5);
+        let v = pop.empirical_variance(128, 50, false, 6);
+        assert!(v < 1e-12, "k=n must be exact, got {v}");
+        // with replacement at k=n stays strictly positive
+        let v_wr = pop.empirical_variance(128, 200, true, 7);
+        assert!(v_wr > pop.sigma2 / 128.0 * 0.5);
+    }
+
+    #[test]
+    fn without_beats_with_everywhere() {
+        let pop = GradientPopulation::synthetic(256, 4, 9);
+        for k in [16, 64, 192, 256] {
+            assert!(
+                pop.theory_without_replacement(k) <= pop.theory_with_replacement(k) + 1e-15,
+                "k={k}"
+            );
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Property-based tests over coordinator/optimizer/data invariants.
+//!
+//! proptest is unavailable offline; `for_cases` drives each property over
+//! many seeded random cases (shrinking is traded for a printed failing seed,
+//! which reproduces deterministically).
+
+use lans::collective::ring_allreduce;
+use lans::data::{make_shards, WithReplacementSampler};
+use lans::optim::schedule::{from_ratios, sqrt_scaled_lr, Schedule};
+use lans::optim::{make_optimizer, BlockTable, Hyper};
+use lans::util::json::Json;
+use lans::util::rng::Rng;
+
+/// Run `f` for `cases` seeded cases; panics carry the failing seed.
+fn for_cases(cases: u64, f: impl Fn(u64, &mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBA5E ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(seed, &mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!(">>> property failed at case seed = {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// schedule properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_schedule_bounds_and_peak() {
+    for_cases(200, |_, rng| {
+        let t_total = 50 + rng.below(5000);
+        let rw = rng.next_f64() * 0.5;
+        let rc = rng.next_f64() * (0.99 - rw);
+        let eta = 1e-4 + rng.next_f64() * 0.1;
+        let s = from_ratios(eta, t_total, rw, rc);
+        let mut peak: f64 = 0.0;
+        for t in 1..=t_total {
+            let lr = s.lr(t);
+            assert!(lr >= -1e-15 && lr <= eta * (1.0 + 1e-9),
+                    "lr {lr} outside [0, {eta}] at t={t}");
+            peak = peak.max(lr);
+        }
+        // the peak is achieved (warmup ends somewhere inside the run)
+        assert!(peak > eta * 0.9, "peak {peak} never approaches eta {eta}");
+    });
+}
+
+#[test]
+fn prop_eq9_auc_dominates_eq8_at_same_eta() {
+    // the whole point of eq. 9: more area under the curve at the same peak
+    for_cases(100, |_, rng| {
+        let t_total = 100 + rng.below(3000);
+        let tw = 1 + rng.below(t_total / 2);
+        let tc = rng.below(t_total - tw);
+        let eta = 0.01;
+        let eq8 = Schedule::LinearWarmupDecay { eta, t_warmup: tw, t_total };
+        let eq9 = Schedule::WarmupConstDecay { eta, t_warmup: tw, t_const: tc, t_total };
+        assert!(
+            eq9.area_under_curve(t_total) >= eq8.area_under_curve(t_total) - 1e-9
+        );
+    });
+}
+
+#[test]
+fn prop_sqrt_scaling_monotone() {
+    for_cases(100, |_, rng| {
+        let base = 1 + rng.below_usize(1 << 14);
+        let k1 = base * (1 + rng.below_usize(8));
+        let k2 = k1 * (1 + rng.below_usize(8));
+        let lr0 = 0.001;
+        let l1 = sqrt_scaled_lr(lr0, base, k1);
+        let l2 = sqrt_scaled_lr(lr0, base, k2);
+        assert!(l2 >= l1 - 1e-12);
+        // exact law
+        assert!((l1 / lr0 - ((k1 as f64) / (base as f64)).sqrt()).abs() < 1e-12);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sharding properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shards_are_disjoint_partition() {
+    for_cases(100, |seed, rng| {
+        let workers = 1 + rng.below_usize(12);
+        let n = workers + rng.below_usize(2000);
+        let shards = make_shards(n, workers, seed);
+        let mut seen = vec![false; n];
+        let mut total = 0;
+        for mut s in shards {
+            let len = s.len();
+            total += len;
+            // draw a full epoch and check coverage of the shard
+            let mut got = std::collections::HashSet::new();
+            let bs = 1 + rng.below_usize(len);
+            while s.epoch() == 0 {
+                for i in s.next_batch(bs.min(len)) {
+                    assert!(i < n);
+                    got.insert(i);
+                }
+                if got.len() == len {
+                    break;
+                }
+            }
+            for i in got {
+                assert!(!seen[i], "sample {i} in two shards");
+                seen[i] = true;
+            }
+        }
+        assert_eq!(total, n);
+    });
+}
+
+#[test]
+fn prop_epoch_coverage_without_replacement() {
+    // within one epoch every shard element appears exactly once
+    for_cases(60, |seed, rng| {
+        let n = 8 + rng.below_usize(256);
+        let mut shard = make_shards(n, 1, seed).remove(0);
+        let bs = 1 + rng.below_usize(n.min(16));
+        let full_batches = n / bs;
+        let mut counts = vec![0usize; n];
+        for _ in 0..full_batches {
+            for i in shard.next_batch(bs) {
+                counts[i] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c <= 1));
+        assert_eq!(counts.iter().sum::<usize>(), full_batches * bs);
+    });
+}
+
+#[test]
+fn prop_with_replacement_has_collisions_wo_has_none() {
+    for_cases(40, |seed, rng| {
+        let n = 32 + rng.below_usize(128);
+        let mut wr = WithReplacementSampler::new(n, seed);
+        // birthday bound: k = n samples with replacement collide w.h.p.
+        let batch = wr.next_batch(n);
+        let uniq: std::collections::HashSet<_> = batch.iter().collect();
+        // not a hard guarantee per-case, but overwhelmingly likely for n≥32:
+        // P(no collision) = n!/n^n < e^{-n/3}
+        assert!(uniq.len() < n, "n={n}: with-replacement drew a permutation");
+        let _ = rng;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// allreduce properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allreduce_matches_reference_sum() {
+    for_cases(100, |_, rng| {
+        let w = 1 + rng.below_usize(9);
+        let n = rng.below_usize(300);
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let reference: Vec<f64> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum())
+            .collect();
+        ring_allreduce(&mut bufs);
+        for b in &bufs {
+            for (got, want) in b.iter().zip(&reference) {
+                assert!(
+                    ((*got as f64) - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "{got} vs {want} (w={w}, n={n})"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// optimizer properties
+// ---------------------------------------------------------------------------
+
+fn random_table(rng: &mut Rng) -> BlockTable {
+    let nblocks = 1 + rng.below_usize(5);
+    let specs: Vec<(String, usize, bool)> = (0..nblocks)
+        .map(|i| (format!("b{i}"), 1 + rng.below_usize(64), rng.next_f64() < 0.5))
+        .collect();
+    BlockTable::new(&specs)
+}
+
+#[test]
+fn prop_lans_step_norm_bounded() {
+    // ‖Δx‖ per block ≤ lr·‖x‖ (+ tiny slack), the trust-ratio guarantee
+    for_cases(120, |_, rng| {
+        let table = random_table(rng);
+        let hp = Hyper { weight_decay: 0.0, ..Default::default() };
+        let mut opt = make_optimizer("lans", table.clone(), hp).unwrap();
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let lr = 0.001 + rng.next_f32() * 0.3;
+        let mut x = x0.clone();
+        opt.step(&mut x, &g, lr);
+        for b in &table.blocks {
+            let r = b.offset..b.offset + b.len;
+            let dx: f64 = x[r.clone()]
+                .iter()
+                .zip(&x0[r.clone()])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let xn: f64 =
+                x0[r].iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(
+                dx <= (lr as f64) * xn * 1.01 + 1e-9,
+                "block {}: ‖Δx‖={dx} > lr·‖x‖={}",
+                b.name,
+                lr as f64 * xn
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lans_gradient_scale_invariance() {
+    for_cases(80, |_, rng| {
+        let table = random_table(rng);
+        let hp = Hyper::default();
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let scale = 10f32.powi(rng.below(6) as i32 - 2);
+        let gs: Vec<f32> = g.iter().map(|&v| v * scale).collect();
+        let mut o1 = make_optimizer("lans", table.clone(), hp).unwrap();
+        let mut o2 = make_optimizer("lans", table.clone(), hp).unwrap();
+        let mut x1 = x0.clone();
+        let mut x2 = x0;
+        o1.step(&mut x1, &g, 0.01);
+        o2.step(&mut x2, &gs, 0.01);
+        for (a, b) in x1.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b} (scale {scale})");
+        }
+    });
+}
+
+#[test]
+fn prop_zero_gradient_keeps_params_finite() {
+    for_cases(40, |_, rng| {
+        let table = random_table(rng);
+        for name in ["lans", "lamb", "adamw", "adamw_bgn", "msgd", "nag"] {
+            let mut opt =
+                make_optimizer(name, table.clone(), Hyper::default()).unwrap();
+            let mut x: Vec<f32> =
+                (0..table.total).map(|_| rng.normal_f32()).collect();
+            let g = vec![0.0f32; table.total];
+            for _ in 0..3 {
+                opt.step(&mut x, &g, 0.01);
+            }
+            assert!(
+                x.iter().all(|v| v.is_finite()),
+                "{name} produced non-finite params on zero gradient"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json parser properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_numbers() {
+    for_cases(200, |_, rng| {
+        let x = (rng.normal() * 1e3 * 10f64.powi(rng.below(6) as i32 - 3)) as f64;
+        let s = format!("{x:?}");
+        let v = Json::parse(&s).unwrap();
+        let back = v.as_f64().unwrap();
+        let rel = (back - x).abs() / x.abs().max(1e-300);
+        assert!(rel < 1e-12, "{x} -> {back}");
+    });
+}
+
+#[test]
+fn prop_json_never_panics_on_garbage() {
+    for_cases(300, |_, rng| {
+        let len = rng.below_usize(64);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" {}[]\",:0123456789truefalsenul\\"[rng.below_usize(31)])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = Json::parse(&s); // must return, not panic
+    });
+}

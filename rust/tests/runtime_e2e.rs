@@ -1,0 +1,196 @@
+//! End-to-end runtime integration: load the bert-tiny AOT artifacts, run
+//! fwd/bwd and optimizer steps through PJRT, and cross-check the Pallas
+//! LANS kernel against the pure-rust implementation.
+//!
+//! Requires `make artifacts` (skips with a notice if artifacts are absent,
+//! so unit-test runs stay hermetic).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::coordinator::{DataSource, TrainStatus, Trainer};
+use lans::optim::{make_optimizer, BlockTable, Hyper, Schedule};
+use lans::runtime::{Engine, ModelRuntime};
+use lans::util::rng::Rng;
+
+fn meta_path() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/bert-tiny_s64_b4.meta.json");
+    p.exists().then_some(p)
+}
+
+fn skip() {
+    eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+}
+
+fn data_cfg() -> DataConfig {
+    DataConfig { source: "synthetic".into(), vocab: 2048, corpus_tokens: 64 * 400, seed: 7 }
+}
+
+#[test]
+fn fwd_bwd_produces_finite_loss_and_grads() {
+    let Some(meta) = meta_path() else { return skip() };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(engine, &meta).unwrap();
+    let params = rt.init_params(1);
+
+    let ds = DataSource::build(&data_cfg(), rt.meta.seq, rt.meta.mlm_slots).unwrap();
+    let mut rng = Rng::new(3);
+    let idx: Vec<usize> = (0..rt.meta.batch).collect();
+    let batch = ds.masker.make_batch(&ds.seqs, &idx, &mut rng);
+
+    let (loss, grads) = rt.fwd_bwd(&params, &batch).unwrap();
+    // random init ⇒ loss ≈ ln(vocab) = ln(2048) ≈ 7.62
+    assert!(loss.is_finite());
+    assert!((6.5..9.0).contains(&loss), "loss {loss}");
+    assert_eq!(grads.len(), rt.meta.params.len());
+    let gsum: f64 = grads
+        .iter()
+        .flat_map(|g| g.data.iter())
+        .map(|&x| (x as f64).abs())
+        .sum();
+    assert!(gsum.is_finite() && gsum > 0.0, "gradients all zero?");
+    for (g, p) in grads.iter().zip(&rt.meta.params) {
+        assert_eq!(g.shape, p.shape, "grad shape mismatch for {}", p.name);
+    }
+}
+
+#[test]
+fn hlo_lans_matches_native_lans() {
+    // The decisive L1↔L3 consistency check: the AOT Pallas LANS artifact and
+    // the pure-rust LANS produce the same trajectory over several steps.
+    let Some(meta) = meta_path() else { return skip() };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(engine, &meta).unwrap();
+    rt.load_optimizer("lans").unwrap();
+
+    let table = BlockTable::from_meta(&rt.meta);
+    let mut rng = Rng::new(9);
+
+    // HLO path state
+    let mut params_hlo = rt.init_params(5);
+    let mut state = rt.zero_opt_state();
+    // native path state
+    let mut flat = table.flatten(&params_hlo);
+    let mut native = make_optimizer("lans", table.clone(), Hyper::default()).unwrap();
+
+    for step in 0..3 {
+        // synthetic gradient, same for both paths
+        let grads: Vec<_> = rt
+            .meta
+            .params
+            .iter()
+            .map(|p| {
+                let data: Vec<f32> = (0..p.size).map(|_| rng.normal_f32()).collect();
+                lans::runtime::TensorF32::new(p.shape.clone(), data)
+            })
+            .collect();
+        let gflat = table.flatten(&grads);
+
+        rt.opt_step("lans", &mut params_hlo, &mut state, &grads, 0.01).unwrap();
+        native.step(&mut flat, &gflat, 0.01);
+
+        let hlo_flat = table.flatten(&params_hlo);
+        let mut max_err = 0.0f32;
+        for (a, b) in hlo_flat.iter().zip(&flat) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 5e-5,
+            "step {step}: HLO vs native diverged, max |Δ| = {max_err}"
+        );
+    }
+}
+
+#[test]
+fn hlo_lamb_and_adamw_match_native() {
+    let Some(meta) = meta_path() else { return skip() };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(engine, &meta).unwrap();
+    let table = BlockTable::from_meta(&rt.meta);
+
+    for opt_name in ["lamb", "adamw", "adamw_bgn"] {
+        rt.load_optimizer(opt_name).unwrap();
+        let mut rng = Rng::new(11);
+        let mut params = rt.init_params(6);
+        let mut state = rt.zero_opt_state();
+        let mut flat = table.flatten(&params);
+        let mut native =
+            make_optimizer(opt_name, table.clone(), Hyper::default()).unwrap();
+
+        let grads: Vec<_> = rt
+            .meta
+            .params
+            .iter()
+            .map(|p| {
+                let data: Vec<f32> = (0..p.size).map(|_| rng.normal_f32()).collect();
+                lans::runtime::TensorF32::new(p.shape.clone(), data)
+            })
+            .collect();
+        let gflat = table.flatten(&grads);
+
+        rt.opt_step(opt_name, &mut params, &mut state, &grads, 0.005).unwrap();
+        native.step(&mut flat, &gflat, 0.005);
+
+        let hlo_flat = table.flatten(&params);
+        let max_err = hlo_flat
+            .iter()
+            .zip(&flat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 5e-5, "{opt_name}: max |Δ| = {max_err}");
+    }
+}
+
+#[test]
+fn trainer_loss_decreases_small_run() {
+    // 30 steps of real training (2 workers × accumulation) must cut the
+    // MLM loss on the synthetic Markov corpus.
+    let Some(meta) = meta_path() else { return skip() };
+    let cfg = TrainConfig {
+        meta_path: meta,
+        optimizer: "lans".into(),
+        backend: OptBackend::Native,
+        workers: 2,
+        global_batch: 16,
+        steps: 30,
+        seed: 1,
+        eval_every: 0,
+        eval_batches: 2,
+        hyper: Hyper::default(),
+        schedule: Schedule::Constant { eta: 0.02 },
+        data: data_cfg(),
+        checkpoint: None,
+        resume_from: None,
+        curve_out: None,
+        stop_on_divergence: true,
+    };
+    let mut tr = Trainer::new(cfg).unwrap();
+    assert_eq!(tr.effective_batch(), 16);
+    let report = tr.run().unwrap();
+    assert_eq!(report.status, TrainStatus::Completed);
+    let first = report.recorder.records.first().unwrap().loss;
+    let last = report.recorder.ema_loss().unwrap();
+    assert!(
+        last < first - 0.5,
+        "loss did not improve: {first:.3} -> {last:.3}"
+    );
+    assert!(report.final_eval_loss.unwrap().is_finite());
+}
+
+#[test]
+fn eval_loss_runs() {
+    let Some(meta) = meta_path() else { return skip() };
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(engine.clone(), &meta).unwrap();
+    let params = rt.init_params(2);
+    let ds = Arc::new(
+        DataSource::build(&data_cfg(), rt.meta.seq, rt.meta.mlm_slots).unwrap(),
+    );
+    let batch = ds.eval_batch(rt.meta.batch, 0, 3);
+    let l = rt.eval_loss(&params, &batch).unwrap();
+    assert!((6.0..9.5).contains(&(l as f64)), "eval loss {l}");
+    // engine can host several executables at once
+    assert!(engine.loaded_count().unwrap() >= 2);
+}
