@@ -1,0 +1,67 @@
+"""Dependency-free checks of the config/preset layer (runs without jax).
+
+These pin the contract the rust side relies on: the canonical parameter
+order, the size bookkeeping, and the weight-decay mask convention — and they
+keep the CI python job meaningful even on runners without jax installed.
+"""
+
+from compile.configs import (
+    PRESETS,
+    decay_mask,
+    get_config,
+    int_prod,
+    param_specs,
+)
+
+
+def test_presets_cover_the_family():
+    for name in ["bert-tiny", "bert-mini", "bert-small", "bert-base", "bert-large"]:
+        cfg = get_config(name)
+        assert cfg.name == name
+        assert cfg.hidden % cfg.num_heads == 0
+
+
+def test_unknown_preset_raises():
+    try:
+        get_config("bert-colossal")
+    except KeyError as e:
+        assert "bert-colossal" in str(e)
+    else:
+        raise AssertionError("expected KeyError")
+
+
+def test_param_count_matches_specs():
+    for cfg in PRESETS.values():
+        total = sum(int_prod(shape) for _, shape in param_specs(cfg))
+        assert cfg.param_count() == total
+
+
+def test_bert_large_param_count_magnitude():
+    # published BERT-Large: ~334M trainable params without pooler/NSP head
+    p = get_config("bert-large").param_count()
+    assert 3.3e8 < p < 3.6e8, p
+
+
+def test_canonical_order_starts_with_embeddings_ends_with_mlm():
+    specs = param_specs(get_config("bert-tiny"))
+    names = [n for n, _ in specs]
+    assert names[0] == "embeddings/word"
+    assert names[-1] == "mlm/output_bias"
+    # one q_kernel per layer, in layer order
+    q = [n for n in names if n.endswith("attn/q_kernel")]
+    assert q == [f"encoder/layer_{i}/attn/q_kernel" for i in range(2)]
+
+
+def test_decay_mask_convention():
+    # kernels and embeddings decay; biases and LayerNorm params do not
+    assert decay_mask("encoder/layer_0/attn/q_kernel")
+    assert decay_mask("embeddings/word")
+    assert not decay_mask("encoder/layer_0/attn/q_bias")
+    assert not decay_mask("embeddings/ln_scale")
+    assert not decay_mask("mlm/ln_bias")
+
+
+def test_every_spec_shape_is_positive():
+    for cfg in PRESETS.values():
+        for name, shape in param_specs(cfg):
+            assert all(int(d) > 0 for d in shape), (cfg.name, name, shape)

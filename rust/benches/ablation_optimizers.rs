@@ -12,7 +12,7 @@
 //! normalization is built for ("more robust to vanishing and exploding
 //! gradients", §3.1).
 
-use lans::optim::{make_optimizer, from_ratios, BlockTable, Hyper};
+use lans::optim::{from_ratios, make_optimizer, BlockTable, Hyper, Optimizer};
 use lans::util::bench::Table;
 use lans::util::rng::Rng;
 

@@ -63,6 +63,7 @@ fn main() {
             optimizer: opt.to_string(),
             backend: OptBackend::Native,
             workers: 4,
+            threads: 0, // auto: block-parallel update path
             global_batch: batch,
             steps,
             seed: 1,

@@ -44,8 +44,14 @@ fn crc32(data: &[u8]) -> u32 {
 
 impl Checkpoint {
     pub fn save(&self, path: &Path) -> Result<()> {
+        // create missing parent directories, and fail with the offending
+        // directory in the message (not a bare io error) if that's impossible
         if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).ok();
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(|| {
+                    format!("creating checkpoint directory {}", dir.display())
+                })?;
+            }
         }
         let mut body: Vec<u8> = Vec::new();
         body.extend_from_slice(&VERSION.to_le_bytes());
@@ -64,18 +70,20 @@ impl Checkpoint {
         }
         let crc = crc32(&body);
         let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&body)?;
-        f.write_all(&crc.to_le_bytes())?;
+            .with_context(|| format!("creating checkpoint {}", path.display()))?;
+        f.write_all(MAGIC)
+            .and_then(|()| f.write_all(&body))
+            .and_then(|()| f.write_all(&crc.to_le_bytes()))
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut raw = Vec::new();
         std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?
-            .read_to_end(&mut raw)?;
+            .with_context(|| format!("opening checkpoint {}", path.display()))?
+            .read_to_end(&mut raw)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
         if raw.len() < MAGIC.len() + 4 || &raw[..8] != MAGIC {
             bail!("{}: not a LANS checkpoint", path.display());
         }
@@ -149,6 +157,39 @@ mod tests {
         assert_eq!(back.tensors.len(), 2);
         assert_eq!(back.tensors[0].1, c.tensors[0].1);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn save_creates_missing_parent_dirs() {
+        let root = std::env::temp_dir().join("lans_test_ckpt_nested");
+        let _ = std::fs::remove_dir_all(&root);
+        let p = root.join("a/b/c").join("ckpt.bin");
+        sample().save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 42);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn load_missing_file_names_the_path() {
+        let err = format!(
+            "{:#}",
+            Checkpoint::load(Path::new("/nonexistent/dir/x.ckpt")).unwrap_err()
+        );
+        assert!(err.contains("x.ckpt"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn save_behind_a_file_names_the_directory() {
+        let base = std::env::temp_dir().join("lans_test_ckpt_parent_is_file");
+        std::fs::write(&base, b"not a directory").unwrap();
+        let p = base.join("ckpt.bin");
+        let err = format!("{:#}", sample().save(&p).unwrap_err());
+        assert!(
+            err.contains("lans_test_ckpt_parent_is_file"),
+            "unhelpful: {err}"
+        );
+        std::fs::remove_file(&base).ok();
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod cost;
 pub mod ring;
 
 pub use cost::{allreduce_time_s, CommSpec};
-pub use ring::{ring_allreduce, ring_allreduce_avg};
+pub use ring::{ring_allreduce, ring_allreduce_avg, ring_allreduce_pooled};

@@ -12,6 +12,14 @@
 //! Numerical note: chunk c of every worker is reduced in the same ring
 //! order regardless of W, so results are deterministic; f32 accumulation
 //! order differs from a naive sequential sum by design (as on real rings).
+//!
+//! [`ring_allreduce_pooled`] is the chunk-parallel variant: within each ring
+//! step the W per-chunk copies/sums touch disjoint buffer regions, so they
+//! run concurrently on a [`ThreadPool`].  Element order within every chunk
+//! is unchanged, so the pooled result is bit-identical to the serial one
+//! (asserted by tests here and in `tests/proptests.rs`).
+
+use crate::util::pool::ThreadPool;
 
 /// In-place ring allreduce (sum) across `bufs` (one buffer per worker).
 /// All buffers must be the same length.  After return, every buffer holds
@@ -53,6 +61,114 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
             let (a, b) = split_two(bufs, src, dst);
             b[lo..hi].copy_from_slice(&a[lo..hi]);
         }
+    }
+}
+
+/// Below this buffer length the pool's per-step spawn cost exceeds the
+/// chunk work; [`ring_allreduce_pooled`] falls back to the serial ring
+/// (identical results either way).
+pub const POOLED_MIN_ELEMS: usize = 1 << 12;
+
+/// Chunk-parallel ring allreduce: the same two-phase schedule as
+/// [`ring_allreduce`], with the `W` per-chunk operations of every ring step
+/// executed concurrently on `pool`.  Falls back to the serial path for a
+/// width-1 pool, small buffers or degenerate inputs; results are
+/// bit-identical either way.
+pub fn ring_allreduce_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
+    let w = bufs.len();
+    assert!(w > 0, "no workers");
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        ring_allreduce(bufs);
+        return;
+    }
+    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
+
+    // Phase 1 — reduce-scatter, chunk-parallel within each ring step.
+    for s in 0..w - 1 {
+        let mut tasks = ring_step_tasks(bufs, &starts, s, true);
+        pool.map_mut(&mut tasks, |t| {
+            for (d, x) in t.dst.iter_mut().zip(t.src.iter()) {
+                *d += *x;
+            }
+        });
+    }
+
+    // Phase 2 — all-gather, chunk-parallel within each ring step.
+    for s in 0..w - 1 {
+        let mut tasks = ring_step_tasks(bufs, &starts, s, false);
+        pool.map_mut(&mut tasks, |t| t.dst.copy_from_slice(t.src));
+    }
+}
+
+/// One parallel unit of a ring step: move/accumulate `src` into `dst`.
+/// The slices of different tasks never overlap (distinct chunks of distinct
+/// buffers), which is what makes the step safely chunk-parallel.
+struct ChunkTask<'a> {
+    src: &'a [f32],
+    dst: &'a mut [f32],
+}
+
+/// Carve the per-chunk (src, dst) slice pairs for ring step `s`.
+///
+/// In the reduce-scatter phase buffer `b` sends (is read at) chunk
+/// `(b - s) mod w` and receives (is written at) chunk `(b - s - 1) mod w`;
+/// in the all-gather phase it sends chunk `(b + 1 - s) mod w` and receives
+/// chunk `(b - s) mod w` — the chunk↔buffer mapping of the classic
+/// schedule, reindexed per buffer so each buffer is borrowed exactly once.
+fn ring_step_tasks<'a>(
+    bufs: &'a mut [Vec<f32>],
+    starts: &[usize],
+    s: usize,
+    reduce: bool,
+) -> Vec<ChunkTask<'a>> {
+    let w = bufs.len();
+    let mut srcs: Vec<Option<&[f32]>> = (0..w).map(|_| None).collect();
+    let mut dsts: Vec<Option<&mut [f32]>> = (0..w).map(|_| None).collect();
+    for (b, buf) in bufs.iter_mut().enumerate() {
+        let (c_read, c_write) = if reduce {
+            ((b + w - s) % w, (b + w - s - 1) % w)
+        } else {
+            ((b + w + 1 - s) % w, (b + w - s) % w)
+        };
+        let (rd, wr) = carve(
+            buf,
+            starts[c_read]..starts[c_read + 1],
+            starts[c_write]..starts[c_write + 1],
+        );
+        srcs[c_read] = Some(rd);
+        dsts[c_write] = Some(wr);
+    }
+    srcs.into_iter()
+        .zip(dsts)
+        .map(|(src, dst)| ChunkTask {
+            src: src.expect("ring chunk without a source"),
+            dst: dst.expect("ring chunk without a destination"),
+        })
+        .collect()
+}
+
+/// Split one buffer into a shared slice over `read` and a mutable slice
+/// over `write`.  The ranges are distinct chunks, so non-empty ranges never
+/// overlap; empty ranges may sit anywhere.
+fn carve<'a>(
+    buf: &'a mut [f32],
+    read: std::ops::Range<usize>,
+    write: std::ops::Range<usize>,
+) -> (&'a [f32], &'a mut [f32]) {
+    if write.is_empty() {
+        return (&buf[read], &mut []);
+    }
+    if read.is_empty() {
+        return (&[], &mut buf[write]);
+    }
+    if read.start < write.start {
+        let (lo, hi) = buf.split_at_mut(write.start);
+        (&lo[read], &mut hi[..write.end - write.start])
+    } else {
+        let (lo, hi) = buf.split_at_mut(read.start);
+        (&hi[..read.end - read.start], &mut lo[write])
     }
 }
 
@@ -123,6 +239,40 @@ mod tests {
         for b in &bufs {
             assert_eq!(b, &vec![3.0f32; 4]);
         }
+    }
+
+    #[test]
+    fn pooled_matches_serial_bit_for_bit() {
+        for (w, n, threads) in [
+            // below POOLED_MIN_ELEMS: exercises the serial fallback
+            (1, 8, 4),
+            (2, 10, 4),
+            (8, 3, 4), // empty chunks: n < w
+            // above: exercises the chunk-parallel path proper
+            (2, 5000, 4),
+            (3, 4099, 2), // chunk boundaries straddle odd offsets
+            (4, 65536, 8),
+            (8, 30011, 4),
+        ] {
+            let mut rng = Rng::new((w * 1009 + n * 31 + threads) as u64);
+            let template: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut serial = template.clone();
+            let mut pooled = template;
+            ring_allreduce(&mut serial);
+            ring_allreduce_pooled(&mut pooled, &ThreadPool::new(threads));
+            assert_eq!(serial, pooled, "w={w} n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_width1_takes_serial_path() {
+        let mut a = vec![vec![1.0f32; 6], vec![2.0f32; 6]];
+        let mut b = a.clone();
+        ring_allreduce(&mut a);
+        ring_allreduce_pooled(&mut b, &ThreadPool::new(1));
+        assert_eq!(a, b);
     }
 
     #[test]

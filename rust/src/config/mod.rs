@@ -30,6 +30,9 @@ pub struct TrainConfig {
     pub optimizer: String,
     pub backend: OptBackend,
     pub workers: usize,
+    /// width of the optimizer/allreduce thread pool: `0` = auto (the
+    /// machine's available parallelism), `1` = the exact serial legacy path
+    pub threads: usize,
     /// per-worker microbatch must equal the artifact's static batch dim
     pub global_batch: usize,
     pub steps: u64,
@@ -110,6 +113,7 @@ impl TrainConfig {
             optimizer: doc.str_or("train", "optimizer", "lans").to_string(),
             backend,
             workers: doc.usize_or("train", "workers", 2),
+            threads: doc.usize_or("train", "threads", 0),
             global_batch: doc.usize_or("train", "global_batch", 16),
             steps,
             seed: doc.usize_or("train", "seed", 42) as u64,
@@ -164,6 +168,7 @@ mod tests {
             optimizer = "lamb"
             backend = "hlo"
             workers = 4
+            threads = 8
             global_batch = 64
             steps = 500
             [schedule]
@@ -178,6 +183,7 @@ mod tests {
         assert_eq!(c.optimizer, "lamb");
         assert_eq!(c.backend, OptBackend::Hlo);
         assert_eq!(c.workers, 4);
+        assert_eq!(c.threads, 8);
         assert!(c.meta_path.starts_with("/base"));
         assert_eq!(c.data.source, "text");
         match c.schedule {

@@ -16,10 +16,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::collective::ring_allreduce;
+use crate::collective::ring_allreduce_pooled;
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::Recorder;
-use crate::optim::{make_optimizer, BlockTable, Optimizer};
+use crate::optim::{make_optimizer, BlockTable, Optimizer, ParallelExecutor};
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
 
 use super::source::DataSource;
@@ -168,6 +168,11 @@ impl Trainer {
             OptBackend::Hlo => Vec::new(),
         };
 
+        // one pool for the whole run: block-parallel optimizer updates and
+        // chunk-parallel allreduce (cfg.threads = 0 → available parallelism,
+        // 1 → the exact serial path)
+        let exec = ParallelExecutor::new(cfg.threads);
+
         let mut recorder = Recorder::new(0.9);
         let mut status = TrainStatus::Completed;
         let mut steps_run = 0;
@@ -196,7 +201,7 @@ impl Trainer {
             }
 
             // combine shard gradients: ring allreduce (sum), then mean
-            ring_allreduce(&mut bufs);
+            ring_allreduce_pooled(&mut bufs, exec.pool());
             let mut grad = std::mem::take(&mut bufs[0]);
             let inv = 1.0 / total_micros as f32;
             for g in grad.iter_mut() {
@@ -208,7 +213,7 @@ impl Trainer {
             let (grad_norm, trust) = match cfg.backend {
                 OptBackend::Native => {
                     let opt = native_opt.as_mut().unwrap();
-                    let stats = opt.step(&mut flat_params, &grad, lr as f32);
+                    let stats = exec.step(opt.as_mut(), &mut flat_params, &grad, lr as f32);
                     self.table.unflatten_into(&flat_params, &mut params);
                     (stats.grad_norm, stats.mean_trust_ratio)
                 }

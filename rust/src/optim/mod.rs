@@ -1,9 +1,12 @@
-//! Optimizers and learning-rate schedules — the paper's algorithmic core.
+//! Optimizers and learning-rate schedules — the paper's algorithmic core,
+//! plus the block-sharded [`ParallelExecutor`] that runs them on all cores.
 
 pub mod blocks;
 pub mod native;
+pub mod parallel;
 pub mod schedule;
 
 pub use blocks::{Block, BlockTable};
 pub use native::{make_optimizer, AdamW, Hyper, Lamb, Lans, MomentumSgd, Optimizer, StepStats};
+pub use parallel::ParallelExecutor;
 pub use schedule::{from_ratios, sqrt_scaled_lr, Schedule};

@@ -10,7 +10,15 @@
 //!
 //! Algorithms follow the paper text exactly — see
 //! `python/compile/kernels/ref.py` for the line-by-line correspondence.
+//!
+//! Structure: each optimizer's update is factored into *per-block kernels*
+//! (`lans_pass1_block`/`lans_pass2_block`, `lamb_pass1_block`/
+//! `lamb_apply_block`, `adamw_block`).  The serial `Optimizer::step` loops
+//! over blocks calling those kernels; `optim::parallel` runs the very same
+//! kernels block-concurrently on a [`ThreadPool`], so the two paths are
+//! arithmetically identical by construction (the property tests assert it).
 
+use crate::util::pool::ThreadPool;
 use crate::util::stats::Welford;
 
 use super::blocks::BlockTable;
@@ -50,6 +58,21 @@ pub trait Optimizer: Send {
     /// One update; `t` is maintained internally (1-based).
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats;
 
+    /// Block-sharded parallel update on `pool`.  The default falls back to
+    /// the serial [`Optimizer::step`]; LANS/LAMB/AdamW override it with a
+    /// block-concurrent path that produces identical arithmetic (same
+    /// per-block kernels, same reduction order).
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> StepStats {
+        let _ = pool;
+        self.step(params, grads, lr)
+    }
+
     fn blocks(&self) -> &BlockTable;
 }
 
@@ -57,20 +80,41 @@ fn l2(xs: &[f32]) -> f32 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
 }
 
+/// Per-step constants shared by every Adam-family block kernel: the bias
+/// corrections are hoisted out of the element loops (§Perf iteration 1).
+#[derive(Clone, Copy)]
+pub(crate) struct AdamCtx {
+    pub hp: Hyper,
+    pub inv_bc1: f32,
+    pub inv_bc2: f32,
+    pub lr: f32,
+}
+
+impl AdamCtx {
+    pub(crate) fn new(hp: Hyper, t: i32, lr: f32) -> AdamCtx {
+        AdamCtx {
+            hp,
+            inv_bc1: 1.0 / (1.0 - hp.beta1.powi(t)),
+            inv_bc2: 1.0 / (1.0 - hp.beta2.powi(t)),
+            lr,
+        }
+    }
+}
+
 // ---------------------------------------------------------------- LANS ----
 
 /// Algorithm 2 — the paper's optimizer.
 pub struct Lans {
-    hp: Hyper,
-    table: BlockTable,
-    m: Vec<f32>,
-    v: Vec<f32>,
-    t: u64,
+    pub(crate) hp: Hyper,
+    pub(crate) table: BlockTable,
+    pub(crate) m: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) t: u64,
     // cached full directions r̂+wd·x / ĉ+wd·x between the reduce and apply
     // passes — trades 2n scratch writes for recomputing 2 rsqrt-loops
     // (§Perf iteration 2: 700 → 389 ms at bert-base scale)
-    r_full: Vec<f32>,
-    c_full: Vec<f32>,
+    pub(crate) r_full: Vec<f32>,
+    pub(crate) c_full: Vec<f32>,
 }
 
 impl Lans {
@@ -88,24 +132,99 @@ impl Lans {
     }
 }
 
-/// Work item for the within-block parallel pass: disjoint mutable chunk
-/// views over the six arrays (x, g, m, v, r_full, c_full).
-struct LansChunk<'a> {
-    x: &'a mut [f32],
-    g: &'a [f32],
-    m: &'a mut [f32],
-    v: &'a mut [f32],
-    rf: &'a mut [f32],
-    cf: &'a mut [f32],
+/// One block's mutable state for the LANS two-pass update: gradient view,
+/// moments, cached directions, and the block's weight-decay factor.  The
+/// slices are disjoint per block, which is what makes the parallel path
+/// safe.
+pub(crate) struct LansBlockMut<'a> {
+    pub g: &'a [f32],
+    pub m: &'a mut [f32],
+    pub v: &'a mut [f32],
+    pub rf: &'a mut [f32],
+    pub cf: &'a mut [f32],
+    pub wd: f32,
 }
 
-/// §Perf iteration 4: parallelize the per-block passes across CPU cores
-/// (the rust analogue of apex multi-tensor-apply's thread blocks).  Reduce
-/// pass returns per-chunk partial sums; apply pass is embarrassingly
-/// parallel.  Correctness is untouched: f64 partial sums are combined in
-/// chunk order, and chunking is deterministic.
-fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+/// Pass-1 outputs for one block: the two apply coefficients, the trust
+/// ratio, and the block's contribution to the global gradient norm.
+pub(crate) struct LansCoef {
+    pub coef_r: f32,
+    pub coef_c: f32,
+    pub trust: f64,
+    pub grad_sq: f64,
+}
+
+/// LANS pass 1 for one block: eq. (4) gradient normalization, moment
+/// updates, cached full directions, and the three norm reductions.
+///
+/// Reductions accumulate in f32 within 4K sub-chunks (vectorizable) and
+/// combine in f64 across sub-chunks — same accuracy class as pairwise
+/// summation, lets LLVM keep the lane loop in f32 (§Perf iteration 3).
+pub(crate) fn lans_pass1_block(cx: &AdamCtx, x: &[f32], b: &mut LansBlockMut<'_>) -> LansCoef {
+    let hp = cx.hp;
+    // eq. (4): block gradient normalization
+    let grad_sq: f64 = b.g.iter().map(|&g| (g as f64) * (g as f64)).sum();
+    let inv_gnorm = 1.0 / (grad_sq.sqrt() as f32).max(NORM_EPS);
+
+    const SUB: usize = 4096;
+    let n = x.len();
+    let (mut sx, mut sr, mut sc) = (0.0f64, 0.0f64, 0.0f64);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + SUB).min(n);
+        let (mut fx, mut fr, mut fc) = (0.0f32, 0.0f32, 0.0f32);
+        for ((((xi, gi), mi), vi), (rfi, cfi)) in x[lo..hi]
+            .iter()
+            .zip(b.g[lo..hi].iter())
+            .zip(b.m[lo..hi].iter_mut())
+            .zip(b.v[lo..hi].iter_mut())
+            .zip(b.rf[lo..hi].iter_mut().zip(b.cf[lo..hi].iter_mut()))
+        {
+            let gt = gi * inv_gnorm;
+            let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gt;
+            let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gt * gt;
+            *mi = mn;
+            *vi = vn;
+            let inv_denom = 1.0 / ((vn * cx.inv_bc2).sqrt() + hp.eps);
+            let r = mn * cx.inv_bc1 * inv_denom + b.wd * xi;
+            let c = gt * inv_denom + b.wd * xi;
+            *rfi = r;
+            *cfi = c;
+            fx += xi * xi;
+            fr += r * r;
+            fc += c * c;
+        }
+        sx += fx as f64;
+        sr += fr as f64;
+        sc += fc as f64;
+        lo = hi;
+    }
+    let x_norm = sx.sqrt() as f32;
+    let r_norm = (sr.sqrt() as f32).max(NORM_EPS);
+    let c_norm = (sc.sqrt() as f32).max(NORM_EPS);
+    LansCoef {
+        coef_r: cx.lr * x_norm * hp.beta1 / r_norm,
+        coef_c: cx.lr * x_norm * (1.0 - hp.beta1) / c_norm,
+        trust: (x_norm / r_norm) as f64,
+        grad_sq,
+    }
+}
+
+/// LANS pass 2 for one block: apply from the cached directions.  Returns
+/// the block's max |param| after the step.
+pub(crate) fn lans_pass2_block(
+    coef_r: f32,
+    coef_c: f32,
+    x: &mut [f32],
+    rf: &[f32],
+    cf: &[f32],
+) -> f32 {
+    let mut max_abs = 0.0f32;
+    for (xi, (rfi, cfi)) in x.iter_mut().zip(rf.iter().zip(cf.iter())) {
+        *xi -= coef_r * rfi + coef_c * cfi;
+        max_abs = max_abs.max(xi.abs());
+    }
+    max_abs
 }
 
 impl Optimizer for Lans {
@@ -119,138 +238,39 @@ impl Optimizer for Lans {
 
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
         self.t += 1;
-        let t = self.t as i32;
-        let hp = self.hp;
-        let bc1 = 1.0 - hp.beta1.powi(t);
-        let bc2 = 1.0 - hp.beta2.powi(t);
-        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
+        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
+        let mut stats = StepStats::default();
         let mut trust = Welford::default();
-
-        // §Perf iteration 1: hoist 1/bc out of the loops and fold the
-        // normalized-gradient pass into the moment pass (1605 → 700 ms at
-        // bert-base scale); iteration 3: slice-zip loops so LLVM drops the
-        // bounds checks and vectorizes (389 → 242 ms).
-        let inv_bc1 = 1.0 / bc1;
-        let inv_bc2 = 1.0 / bc2;
-        let nthreads = num_threads();
-        for b in &self.table.blocks {
-            let r = b.offset..b.offset + b.len;
-            let (x, g) = (&mut params[r.clone()], &grads[r.clone()]);
-            let m = &mut self.m[r.clone()];
-            let v = &mut self.v[r.clone()];
-            let rf_s = &mut self.r_full[r.clone()];
-            let cf_s = &mut self.c_full[r.clone()];
-            let wd = if b.decay { hp.weight_decay } else { 0.0 };
-
-            // eq. (4): block gradient normalization (folded into pass 1)
-            let inv_gnorm = 1.0 / l2(g).max(NORM_EPS);
-
-            // chunk the block across threads (≥64K elements per thread so
-            // tiny blocks stay serial)
-            let cs = (b.len / nthreads + 1).max(1 << 16);
-            let chunks: Vec<LansChunk> = x
-                .chunks_mut(cs)
-                .zip(g.chunks(cs))
-                .zip(m.chunks_mut(cs))
-                .zip(v.chunks_mut(cs))
-                .zip(rf_s.chunks_mut(cs).zip(cf_s.chunks_mut(cs)))
-                .map(|((((x, g), m), v), (rf, cf))| LansChunk { x, g, m, v, rf, cf })
-                .collect();
-
-            // pass 1 — moments, full directions, and the three reductions
-            // accumulate in f32 within 4K sub-chunks (vectorizable), combine
-            // in f64 across sub-chunks — same accuracy class as pairwise
-            // summation, lets LLVM keep the lane loop in f32
-            const SUB: usize = 4096;
-            let pass1 = |c: &mut LansChunk| -> (f64, f64, f64) {
-                let (mut sx, mut sr, mut sc) = (0.0f64, 0.0f64, 0.0f64);
-                let n = c.x.len();
-                let mut lo = 0;
-                while lo < n {
-                    let hi = (lo + SUB).min(n);
-                    let (mut fx, mut fr, mut fc) = (0.0f32, 0.0f32, 0.0f32);
-                    for ((((xi, gi), mi), vi), (rfi, cfi)) in c.x[lo..hi]
-                        .iter()
-                        .zip(c.g[lo..hi].iter())
-                        .zip(c.m[lo..hi].iter_mut())
-                        .zip(c.v[lo..hi].iter_mut())
-                        .zip(c.rf[lo..hi].iter_mut().zip(c.cf[lo..hi].iter_mut()))
-                    {
-                        let gt = gi * inv_gnorm;
-                        let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gt;
-                        let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gt * gt;
-                        *mi = mn;
-                        *vi = vn;
-                        let inv_denom = 1.0 / ((vn * inv_bc2).sqrt() + hp.eps);
-                        let rf = mn * inv_bc1 * inv_denom + wd * xi;
-                        let cf = gt * inv_denom + wd * xi;
-                        *rfi = rf;
-                        *cfi = cf;
-                        fx += xi * xi;
-                        fr += rf * rf;
-                        fc += cf * cf;
-                    }
-                    sx += fx as f64;
-                    sr += fr as f64;
-                    sc += fc as f64;
-                    lo = hi;
-                }
-                (sx, sr, sc)
+        let mut grad_sq = 0.0f64;
+        for blk in &self.table.blocks {
+            let r = blk.offset..blk.offset + blk.len;
+            let mut b = LansBlockMut {
+                g: &grads[r.clone()],
+                m: &mut self.m[r.clone()],
+                v: &mut self.v[r.clone()],
+                rf: &mut self.r_full[r.clone()],
+                cf: &mut self.c_full[r.clone()],
+                wd: if blk.decay { self.hp.weight_decay } else { 0.0 },
             };
-            let mut chunks = chunks;
-            let partials: Vec<(f64, f64, f64)> = if chunks.len() == 1 {
-                vec![pass1(&mut chunks[0])]
-            } else {
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = chunks
-                        .iter_mut()
-                        .map(|c| s.spawn(|| pass1(c)))
-                        .collect();
-                    handles.into_iter().map(|h| h.join().unwrap()).collect()
-                })
-            };
-            let (mut sum_x2, mut sum_r2, mut sum_c2) = (0.0f64, 0.0f64, 0.0f64);
-            for (sx, sr, sc) in partials {
-                sum_x2 += sx;
-                sum_r2 += sr;
-                sum_c2 += sc;
-            }
-
-            let x_norm = sum_x2.sqrt() as f32;
-            let r_norm = (sum_r2.sqrt() as f32).max(NORM_EPS);
-            let c_norm = (sum_c2.sqrt() as f32).max(NORM_EPS);
-            let coef_r = lr * x_norm * hp.beta1 / r_norm;
-            let coef_c = lr * x_norm * (1.0 - hp.beta1) / c_norm;
-            trust.push((x_norm / r_norm) as f64);
-
-            // pass 2 — apply from the cached directions (parallel)
-            let pass2 = |c: &mut LansChunk| -> f32 {
-                let mut max_abs = 0.0f32;
-                for (xi, (rfi, cfi)) in
-                    c.x.iter_mut().zip(c.rf.iter().zip(c.cf.iter()))
-                {
-                    *xi -= coef_r * rfi + coef_c * cfi;
-                    max_abs = max_abs.max(xi.abs());
-                }
-                max_abs
-            };
-            let maxes: Vec<f32> = if chunks.len() == 1 {
-                vec![pass2(&mut chunks[0])]
-            } else {
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = chunks
-                        .iter_mut()
-                        .map(|c| s.spawn(|| pass2(c)))
-                        .collect();
-                    handles.into_iter().map(|h| h.join().unwrap()).collect()
-                })
-            };
-            for ma in maxes {
-                stats.max_abs_param = stats.max_abs_param.max(ma);
-            }
+            let c = lans_pass1_block(&cx, &params[r.clone()], &mut b);
+            grad_sq += c.grad_sq;
+            trust.push(c.trust);
+            let ma = lans_pass2_block(c.coef_r, c.coef_c, &mut params[r], b.rf, b.cf);
+            stats.max_abs_param = stats.max_abs_param.max(ma);
         }
+        stats.grad_norm = grad_sq.sqrt();
         stats.mean_trust_ratio = trust.mean();
         stats
+    }
+
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> StepStats {
+        super::parallel::lans_step_parallel(self, pool, params, grads, lr)
     }
 }
 
@@ -258,13 +278,13 @@ impl Optimizer for Lans {
 
 /// Algorithm 1 — You et al.'s baseline.
 pub struct Lamb {
-    hp: Hyper,
-    table: BlockTable,
-    m: Vec<f32>,
-    v: Vec<f32>,
-    t: u64,
+    pub(crate) hp: Hyper,
+    pub(crate) table: BlockTable,
+    pub(crate) m: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) t: u64,
     /// cached update direction between the reduce and apply passes (§Perf)
-    u_full: Vec<f32>,
+    pub(crate) u_full: Vec<f32>,
 }
 
 impl Lamb {
@@ -272,6 +292,59 @@ impl Lamb {
         let n = table.total;
         Lamb { hp, table, m: vec![0.0; n], v: vec![0.0; n], t: 0, u_full: vec![0.0; n] }
     }
+}
+
+/// Pass-1 outputs for one LAMB block.
+pub(crate) struct LambCoef {
+    pub coef: f32,
+    pub trust: f64,
+    pub grad_sq: f64,
+}
+
+/// LAMB pass 1 for one block: moments, cached update direction, norms.
+pub(crate) fn lamb_pass1_block(
+    cx: &AdamCtx,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    u: &mut [f32],
+    wd: f32,
+) -> LambCoef {
+    let hp = cx.hp;
+    let mut grad_sq = 0.0f64;
+    let mut sum_x2 = 0.0f64;
+    let mut sum_u2 = 0.0f64;
+    for ((((xi, gi), mi), vi), ui) in
+        x.iter().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut()).zip(u.iter_mut())
+    {
+        let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+        let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+        *mi = mn;
+        *vi = vn;
+        let un = mn * cx.inv_bc1 / ((vn * cx.inv_bc2).sqrt() + hp.eps) + wd * xi;
+        *ui = un;
+        grad_sq += (*gi as f64) * (*gi as f64);
+        sum_x2 += (*xi as f64) * (*xi as f64);
+        sum_u2 += (un as f64) * (un as f64);
+    }
+    let x_norm = sum_x2.sqrt() as f32;
+    let u_norm = (sum_u2.sqrt() as f32).max(NORM_EPS);
+    LambCoef {
+        coef: cx.lr * x_norm / u_norm,
+        trust: (x_norm / u_norm) as f64,
+        grad_sq,
+    }
+}
+
+/// LAMB apply for one block; returns the block's max |param|.
+pub(crate) fn lamb_apply_block(coef: f32, x: &mut [f32], u: &[f32]) -> f32 {
+    let mut max_abs = 0.0f32;
+    for (xi, ui) in x.iter_mut().zip(u.iter()) {
+        *xi -= coef * ui;
+        max_abs = max_abs.max(xi.abs());
+    }
+    max_abs
 }
 
 impl Optimizer for Lamb {
@@ -285,55 +358,40 @@ impl Optimizer for Lamb {
 
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
         self.t += 1;
-        let t = self.t as i32;
-        let hp = self.hp;
-        let bc1 = 1.0 - hp.beta1.powi(t);
-        let bc2 = 1.0 - hp.beta2.powi(t);
-        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
+        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
+        let mut stats = StepStats::default();
         let mut trust = Welford::default();
-
-        let inv_bc1 = 1.0 / bc1;
-        let inv_bc2 = 1.0 / bc2;
-        for b in &self.table.blocks {
-            let r = b.offset..b.offset + b.len;
-            let (x, g) = (&mut params[r.clone()], &grads[r.clone()]);
-            let m = &mut self.m[r.clone()];
-            let v = &mut self.v[r.clone()];
-            let u_s = &mut self.u_full[r.clone()];
-            let wd = if b.decay { hp.weight_decay } else { 0.0 };
-
-            let mut sum_x2 = 0.0f64;
-            let mut sum_u2 = 0.0f64;
-            for ((((xi, gi), mi), vi), ui) in x
-                .iter()
-                .zip(g.iter())
-                .zip(m.iter_mut())
-                .zip(v.iter_mut())
-                .zip(u_s.iter_mut())
-            {
-                let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
-                let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-                *mi = mn;
-                *vi = vn;
-                let u = mn * inv_bc1 / ((vn * inv_bc2).sqrt() + hp.eps) + wd * xi;
-                *ui = u;
-                sum_x2 += (*xi as f64) * (*xi as f64);
-                sum_u2 += (u as f64) * (u as f64);
-            }
-            let x_norm = sum_x2.sqrt() as f32;
-            let u_norm = (sum_u2.sqrt() as f32).max(NORM_EPS);
-            let coef = lr * x_norm / u_norm;
-            trust.push((x_norm / u_norm) as f64);
-
-            let mut max_abs = 0.0f32;
-            for (xi, ui) in x.iter_mut().zip(u_s.iter()) {
-                *xi -= coef * ui;
-                max_abs = max_abs.max(xi.abs());
-            }
-            stats.max_abs_param = stats.max_abs_param.max(max_abs);
+        let mut grad_sq = 0.0f64;
+        for blk in &self.table.blocks {
+            let r = blk.offset..blk.offset + blk.len;
+            let wd = if blk.decay { self.hp.weight_decay } else { 0.0 };
+            let c = lamb_pass1_block(
+                &cx,
+                &params[r.clone()],
+                &grads[r.clone()],
+                &mut self.m[r.clone()],
+                &mut self.v[r.clone()],
+                &mut self.u_full[r.clone()],
+                wd,
+            );
+            grad_sq += c.grad_sq;
+            trust.push(c.trust);
+            let ma = lamb_apply_block(c.coef, &mut params[r.clone()], &self.u_full[r]);
+            stats.max_abs_param = stats.max_abs_param.max(ma);
         }
+        stats.grad_norm = grad_sq.sqrt();
         stats.mean_trust_ratio = trust.mean();
         stats
+    }
+
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> StepStats {
+        super::parallel::lamb_step_parallel(self, pool, params, grads, lr)
     }
 }
 
@@ -341,11 +399,11 @@ impl Optimizer for Lamb {
 
 /// AdamW, optionally with the paper's blockwise gradient normalization.
 pub struct AdamW {
-    hp: Hyper,
-    table: BlockTable,
-    m: Vec<f32>,
-    v: Vec<f32>,
-    t: u64,
+    pub(crate) hp: Hyper,
+    pub(crate) table: BlockTable,
+    pub(crate) m: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) t: u64,
     pub block_grad_norm: bool,
 }
 
@@ -354,6 +412,39 @@ impl AdamW {
         let n = table.total;
         AdamW { hp, table, m: vec![0.0; n], v: vec![0.0; n], t: 0, block_grad_norm }
     }
+}
+
+/// AdamW single-pass block update; returns (max |param|, block grad²).
+pub(crate) fn adamw_block(
+    cx: &AdamCtx,
+    block_grad_norm: bool,
+    x: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    wd: f32,
+) -> (f32, f64) {
+    let hp = cx.hp;
+    let grad_sq: f64 = g.iter().map(|&gi| (gi as f64) * (gi as f64)).sum();
+    let inv_gnorm = if block_grad_norm {
+        1.0 / (grad_sq.sqrt() as f32).max(NORM_EPS)
+    } else {
+        1.0
+    };
+    let mut max_abs = 0.0f32;
+    for (((xi, gi), mi), vi) in
+        x.iter_mut().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut())
+    {
+        let gn = gi * inv_gnorm;
+        let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gn;
+        let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gn * gn;
+        *mi = mn;
+        *vi = vn;
+        let upd = mn * cx.inv_bc1 / ((vn * cx.inv_bc2).sqrt() + hp.eps) + wd * *xi;
+        *xi -= cx.lr * upd;
+        max_abs = max_abs.max(xi.abs());
+    }
+    (max_abs, grad_sq)
 }
 
 impl Optimizer for AdamW {
@@ -371,50 +462,45 @@ impl Optimizer for AdamW {
 
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
         self.t += 1;
-        let t = self.t as i32;
-        let hp = self.hp;
-        let bc1 = 1.0 - hp.beta1.powi(t);
-        let bc2 = 1.0 - hp.beta2.powi(t);
-        let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
-
-        for b in &self.table.blocks {
-            let r = b.offset..b.offset + b.len;
-            let (x, g) = (&mut params[r.clone()], &grads[r.clone()]);
-            let m = &mut self.m[r.clone()];
-            let v = &mut self.v[r.clone()];
-            let wd = if b.decay { hp.weight_decay } else { 0.0 };
-            let inv_gnorm = if self.block_grad_norm {
-                1.0 / l2(g).max(NORM_EPS)
-            } else {
-                1.0
-            };
-
-            let inv_bc1 = 1.0 / bc1;
-            let inv_bc2 = 1.0 / bc2;
-            let mut max_abs = 0.0f32;
-            for (((xi, gi), mi), vi) in
-                x.iter_mut().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut())
-            {
-                let gn = gi * inv_gnorm;
-                let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gn;
-                let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gn * gn;
-                *mi = mn;
-                *vi = vn;
-                let upd = mn * inv_bc1 / ((vn * inv_bc2).sqrt() + hp.eps) + wd * *xi;
-                *xi -= lr * upd;
-                max_abs = max_abs.max(xi.abs());
-            }
-            stats.max_abs_param = stats.max_abs_param.max(max_abs);
+        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
+        let mut stats = StepStats::default();
+        let mut grad_sq = 0.0f64;
+        for blk in &self.table.blocks {
+            let r = blk.offset..blk.offset + blk.len;
+            let wd = if blk.decay { self.hp.weight_decay } else { 0.0 };
+            let (ma, gs) = adamw_block(
+                &cx,
+                self.block_grad_norm,
+                &mut params[r.clone()],
+                &grads[r.clone()],
+                &mut self.m[r.clone()],
+                &mut self.v[r],
+                wd,
+            );
+            stats.max_abs_param = stats.max_abs_param.max(ma);
+            grad_sq += gs;
         }
+        stats.grad_norm = grad_sq.sqrt();
         stats.mean_trust_ratio = 1.0;
         stats
+    }
+
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> StepStats {
+        super::parallel::adamw_step_parallel(self, pool, params, grads, lr)
     }
 }
 
 // ------------------------------------------------------- momentum SGD -----
 
 /// Classic momentum (eq. 2–3) and Nesterov (NAG) — §2.2's building blocks,
-/// used by the ablation benches.
+/// used by the ablation benches.  Stays serial: its update is a single
+/// bandwidth-bound pass with no per-block reductions to shard.
 pub struct MomentumSgd {
     table: BlockTable,
     m: Vec<f32>,
@@ -445,17 +531,17 @@ impl Optimizer for MomentumSgd {
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats {
         let mut stats = StepStats { grad_norm: l2(grads) as f64, ..Default::default() };
         let mut max_abs = 0.0f32;
-        for i in 0..params.len() {
+        for ((xi, gi), mi) in params.iter_mut().zip(grads.iter()).zip(self.m.iter_mut()) {
             // m_t = mu m_{t-1} + g_t
-            self.m[i] = self.mu * self.m[i] + grads[i];
+            *mi = self.mu * *mi + gi;
             let d = if self.nesterov {
                 // x_{t+1} = x_t - lr (mu m_t + g_t)
-                self.mu * self.m[i] + grads[i]
+                self.mu * *mi + gi
             } else {
-                self.m[i]
+                *mi
             };
-            params[i] -= lr * d;
-            max_abs = max_abs.max(params[i].abs());
+            *xi -= lr * d;
+            max_abs = max_abs.max(xi.abs());
         }
         stats.max_abs_param = max_abs;
         stats.mean_trust_ratio = 1.0;

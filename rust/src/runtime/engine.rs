@@ -86,6 +86,9 @@ impl Engine {
     }
 }
 
+// the immediately-invoked closures are deliberate try-blocks: every error
+// must be replied over the channel, never unwound through the device thread
+#[allow(clippy::redundant_closure_call)]
 fn device_thread(rx: Receiver<Req>, ready: SyncSender<Result<String>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {

@@ -171,7 +171,7 @@ impl ModelRuntime {
     pub fn opt_step(
         &self,
         name: &str,
-        params: &mut Vec<TensorF32>,
+        params: &mut [TensorF32],
         state: &mut OptState,
         grads: &[TensorF32],
         lr: f32,

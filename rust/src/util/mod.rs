@@ -1,8 +1,9 @@
 //! In-tree substrates for crates unavailable offline (serde_json, rand,
-//! criterion): a JSON parser, a deterministic PRNG, statistics helpers and
-//! a bench harness.
+//! criterion, rayon): a JSON parser, a deterministic PRNG, statistics
+//! helpers, a bench harness, and a scoped thread pool.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -24,6 +24,7 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         optimizer: "lans".into(),
         backend: OptBackend::Native,
         workers: 2,
+        threads: 1,
         global_batch: 16,
         steps: 2,
         seed: 1,
@@ -189,6 +190,44 @@ fn resume_from_mismatched_checkpoint_errors() {
     let Err(e) = Trainer::new(cfg).unwrap().run() else { panic!("expected error") };
     let err = format!("{e:#}");
     assert!(err.contains("missing tensor"), "unhelpful: {err}");
+}
+
+#[test]
+fn checkpoint_save_creates_missing_parent_dirs() {
+    let root = std::env::temp_dir().join("lans_fi_ckpt_dirs");
+    let _ = std::fs::remove_dir_all(&root);
+    let p = root.join("phase1/seed42/step.ckpt");
+    Checkpoint {
+        step: 7,
+        tensors: vec![("w".into(), TensorF32::new(vec![2], vec![0.5, -0.5]))],
+    }
+    .save(&p)
+    .unwrap();
+    assert_eq!(Checkpoint::load(&p).unwrap().step, 7);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn checkpoint_load_missing_file_is_contextual() {
+    let Err(e) = Checkpoint::load(Path::new("/nonexistent/run/final.ckpt")) else {
+        panic!("expected error")
+    };
+    let err = format!("{e:#}");
+    assert!(err.contains("final.ckpt"), "unhelpful: {err}");
+    assert!(err.to_lowercase().contains("checkpoint"), "unhelpful: {err}");
+}
+
+#[test]
+fn checkpoint_save_behind_file_is_contextual() {
+    let base = std::env::temp_dir().join("lans_fi_ckpt_parent_file");
+    std::fs::write(&base, b"i am a file").unwrap();
+    let Err(e) = Checkpoint { step: 0, tensors: vec![] }.save(&base.join("x.ckpt"))
+    else {
+        panic!("expected error")
+    };
+    let err = format!("{e:#}");
+    assert!(err.contains("lans_fi_ckpt_parent_file"), "unhelpful: {err}");
+    std::fs::remove_file(&base).ok();
 }
 
 #[test]

@@ -6,7 +6,7 @@
 use lans::collective::{ring_allreduce, ring_allreduce_avg};
 use lans::config::{Document, TrainConfig};
 use lans::data::{make_shards, Masker, SequenceSet, SyntheticCorpus};
-use lans::optim::{from_ratios, make_optimizer, BlockTable, Hyper, Schedule};
+use lans::optim::{from_ratios, make_optimizer, BlockTable, Hyper, Optimizer, Schedule};
 use lans::util::rng::Rng;
 use std::path::Path;
 

@@ -4,11 +4,12 @@
 //! many seeded random cases (shrinking is traded for a printed failing seed,
 //! which reproduces deterministically).
 
-use lans::collective::ring_allreduce;
+use lans::collective::{ring_allreduce, ring_allreduce_pooled};
 use lans::data::{make_shards, WithReplacementSampler};
 use lans::optim::schedule::{from_ratios, sqrt_scaled_lr, Schedule};
-use lans::optim::{make_optimizer, BlockTable, Hyper};
+use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer};
 use lans::util::json::Json;
+use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
 
 /// Run `f` for `cases` seeded cases; panics carry the failing seed.
@@ -177,6 +178,25 @@ fn prop_allreduce_matches_reference_sum() {
     });
 }
 
+#[test]
+fn prop_pooled_allreduce_bit_identical_to_serial() {
+    // n straddles POOLED_MIN_ELEMS (4096): below it the serial fallback is
+    // exercised, above it the chunk-parallel path proper
+    for_cases(60, |_, rng| {
+        let w = 1 + rng.below_usize(9);
+        let n = rng.below_usize(12_000);
+        let threads = 1 + rng.below_usize(8);
+        let template: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut serial = template.clone();
+        let mut pooled = template;
+        ring_allreduce(&mut serial);
+        ring_allreduce_pooled(&mut pooled, &ThreadPool::new(threads));
+        assert_eq!(serial, pooled, "w={w} n={n} threads={threads}");
+    });
+}
+
 // ---------------------------------------------------------------------------
 // optimizer properties
 // ---------------------------------------------------------------------------
@@ -238,6 +258,69 @@ fn prop_lans_gradient_scale_invariance() {
         o2.step(&mut x2, &gs, 0.01);
         for (a, b) in x1.iter().zip(&x2) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b} (scale {scale})");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_block_sharded_step_matches_serial() {
+    // the ParallelExecutor contract: across random block tables (including
+    // blocks that straddle the 4K reduction sub-chunk), thread counts and
+    // step counts, the block-sharded parallel LANS/LAMB/AdamW step matches
+    // the serial step within 1e-6 (in practice: bit-identical, since both
+    // paths run the same per-block kernels in the same reduction order).
+    for_cases(40, |_, rng| {
+        let nblocks = 1 + rng.below_usize(5);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| {
+                (format!("b{i}"), 1 + rng.below_usize(6000), rng.next_f64() < 0.5)
+            })
+            .collect();
+        let table = BlockTable::new(&specs);
+        let threads = 2 + rng.below_usize(7);
+        let steps = 1 + rng.below_usize(4);
+        // drive step_parallel directly: these tables sit below the
+        // executor's PARALLEL_MIN_ELEMS auto-fallback, and the property is
+        // about the parallel kernels themselves
+        let pool = ThreadPool::new(threads);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb", "adamw", "adamw_bgn"] {
+            let hp = Hyper::default();
+            let mut o_ser = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut o_par = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut xs = x0.clone();
+            let mut xp = x0.clone();
+            for k in 0..steps {
+                let g: Vec<f32> =
+                    (0..table.total).map(|_| rng.normal_f32()).collect();
+                let lr = 0.001 + 0.01 * k as f32;
+                let s_ser = o_ser.step(&mut xs, &g, lr);
+                let s_par = o_par.step_parallel(&pool, &mut xp, &g, lr);
+                assert!(
+                    (s_ser.mean_trust_ratio - s_par.mean_trust_ratio).abs() <= 1e-9,
+                    "{name}: trust {} vs {}",
+                    s_ser.mean_trust_ratio,
+                    s_par.mean_trust_ratio
+                );
+                assert!(
+                    (s_ser.grad_norm - s_par.grad_norm).abs() <= 1e-9,
+                    "{name}: grad norm {} vs {}",
+                    s_ser.grad_norm,
+                    s_par.grad_norm
+                );
+                assert!(
+                    (s_ser.max_abs_param - s_par.max_abs_param).abs() <= 1e-6,
+                    "{name}: max abs param"
+                );
+            }
+            for (i, (a, b)) in xs.iter().zip(&xp).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "{name} (threads={threads}, steps={steps}): \
+                     param {i} diverged: {a} vs {b}"
+                );
+            }
         }
     });
 }

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{DataSource, TrainStatus, Trainer};
-use lans::optim::{make_optimizer, BlockTable, Hyper, Schedule};
+use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer, Schedule};
 use lans::runtime::{Engine, ModelRuntime};
 use lans::util::rng::Rng;
 
@@ -153,6 +153,7 @@ fn trainer_loss_decreases_small_run() {
         optimizer: "lans".into(),
         backend: OptBackend::Native,
         workers: 2,
+        threads: 1,
         global_batch: 16,
         steps: 30,
         seed: 1,

@@ -1,0 +1,321 @@
+//! Minimal in-tree stand-in for the `xla` crate (PJRT / HLO bindings).
+//!
+//! The real crate links the XLA C++ runtime, which cannot be vendored into
+//! this repository, so the workspace ships this stub with the exact API
+//! surface `lans::runtime` uses:
+//!
+//! * [`Literal`] is fully functional (host tensors, reshape, typed
+//!   readback, tuples) — the tensor round-trip tests exercise it for real.
+//! * [`HloModuleProto::from_text_file`] reads and shallow-validates HLO
+//!   text, so malformed artifacts fail at load time with a clear message.
+//! * [`PjRtLoadedExecutable::execute`] returns an error: the stub cannot
+//!   run HLO.  Artifact-gated tests and benches skip when artifacts are
+//!   absent; swapping this path dependency for the real `xla` crate
+//!   restores execution (see DESIGN.md §Runtime).
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (Display + std::error::Error so it
+/// converts into `anyhow::Error` via `?`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Error {
+        Error(s.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (only F32/S32 are storable in the stub; the rest exist
+/// so shape-matching code has realistic non-exhaustive matches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    Bf16,
+    F16,
+    F32,
+    F64,
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: the currency between the coordinator and PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+/// Host element types the stub stores natively.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn store(data: Vec<Self>) -> Storage;
+    fn read(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn store(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.storage {
+            Storage::F32(v) => Ok(v.clone()),
+            _ => Err(Error::msg("literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn store(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.storage {
+            Storage::I32(v) => Ok(v.clone()),
+            _ => Err(Error::msg("literal is not i32")),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host vector.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::store(data.to_vec()) }
+    }
+
+    /// A tuple literal (what executables with `return_tuple=True` produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), storage: Storage::Tuple(parts) }
+    }
+
+    fn numel(&self) -> i64 {
+        self.dims.iter().product()
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.numel().max(0) as usize
+    }
+
+    /// Same data, new dimensions (element counts must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.numel() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.numel()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        let ty = match &self.storage {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+            Storage::Tuple(parts) => {
+                return Ok(Shape::Tuple(
+                    parts.iter().map(Literal::shape).collect::<Result<_>>()?,
+                ))
+            }
+        };
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty }))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error::msg("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module text.  The stub validates just enough structure (an
+/// `HloModule` header and an `ENTRY` computation) to distinguish real HLO
+/// text from garbage at artifact-load time.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Self::from_text(&text)
+    }
+
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        if !text.trim_start().starts_with("HloModule") {
+            return Err(Error::msg("not HLO text: missing HloModule header"));
+        }
+        if !text.contains("ENTRY") {
+            return Err(Error::msg("not HLO text: missing ENTRY computation"));
+        }
+        Ok(HloModuleProto { text: text.to_string() })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An HLO computation ready to compile.
+pub struct XlaComputation {
+    _hlo_bytes: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _hlo_bytes: proto.text.len() }
+    }
+}
+
+/// PJRT client handle.  The stub's "device" accepts compilations (so
+/// artifact loading and registry logic is exercised) but refuses execution.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "stub-cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {})
+    }
+}
+
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// The stub cannot execute HLO — callers get a clear, contextual error
+    /// instead of wrong numbers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg(
+            "the in-tree xla stub cannot execute HLO; link the real xla \
+             crate to run AOT artifacts (see DESIGN.md §Runtime)",
+        ))
+    }
+}
+
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_readback() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        match r.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[2, 3]);
+                assert_eq!(a.element_type(), ElementType::F32);
+            }
+            other => panic!("expected array shape, got {other:?}"),
+        }
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_i32_and_tuple() {
+        let a = Literal::vec1(&[1i32, -2, 3]);
+        assert_eq!(a.to_vec::<i32>().unwrap(), vec![1, -2, 3]);
+        let t = Literal::tuple(vec![a.clone(), Literal::vec1(&[0.5f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], a);
+        assert!(a.to_tuple().is_err());
+        assert!(matches!(t.shape().unwrap(), Shape::Tuple(ref s) if s.len() == 2));
+    }
+
+    #[test]
+    fn hlo_text_validation() {
+        assert!(HloModuleProto::from_text("HloModule m\n\nENTRY main { }").is_ok());
+        assert!(HloModuleProto::from_text("HloModule definitely not valid !!!").is_err());
+        assert!(HloModuleProto::from_text("not hlo at all").is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn client_compiles_but_refuses_to_execute() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let proto = HloModuleProto::from_text("HloModule m\nENTRY e {}").unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("stub"), "unhelpful: {err}");
+    }
+}
