@@ -22,6 +22,9 @@ fn main() -> Result<()> {
                 optimizer: opt.into(),
                 backend: OptBackend::Native,
                 workers: 4,
+                threads: 0,
+                shard_optimizer: false,
+                resume_opt_state: false,
                 global_batch: batch,
                 steps,
                 seed: 1,

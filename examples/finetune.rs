@@ -32,6 +32,11 @@ fn main() -> Result<()> {
             optimizer: "lans".into(),
             backend: OptBackend::Native,
             workers: 4,
+            threads: 0,
+            // exercise the ZeRO-1 path: bit-identical to replicated, with
+            // per-worker moments cut 4x
+            shard_optimizer: true,
+            resume_opt_state: false,
             global_batch: 32,
             steps: 60,
             seed: 42,
@@ -63,6 +68,9 @@ fn main() -> Result<()> {
         optimizer: "adamw_bgn".into(),
         backend: OptBackend::Native,
         workers: 2,
+        threads: 0,
+        shard_optimizer: false, // adamw_bgn is element-wise; nothing to shard
+        resume_opt_state: false,
         global_batch: 8,
         steps: 40,
         seed: 9,

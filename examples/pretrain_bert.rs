@@ -49,6 +49,12 @@ fn main() -> Result<()> {
         optimizer: "lans".into(),
         backend: OptBackend::Native,
         workers: 4,
+        threads: 0,
+        // phase 1 runs the sharded-optimizer path (ZeRO-1): reduce-scatter,
+        // owned-shard LANS update, parameter all-gather — bit-identical to
+        // the replicated update it replaces
+        shard_optimizer: true,
+        resume_opt_state: false,
         global_batch: 32,
         steps: phase1_steps,
         seed: 42,
@@ -92,6 +98,11 @@ fn main() -> Result<()> {
         optimizer: "lans".into(),
         backend: OptBackend::Native,
         workers: 4,
+        threads: 0,
+        // phase 2 warm-starts params only (the two-phase convention: the
+        // seq-128 moments do not transfer to the seq-512 geometry)
+        shard_optimizer: true,
+        resume_opt_state: false,
         // paper: phase-2 batch ≈ phase-1/3 (96K -> 33K)
         global_batch: 12,
         steps: phase2_steps.max(5),

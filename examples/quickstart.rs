@@ -22,6 +22,9 @@ fn main() -> Result<()> {
         optimizer: "lans".into(),
         backend: OptBackend::Native,
         workers: 2,
+        threads: 0, // auto: block-parallel update + chunk-parallel allreduce
+        shard_optimizer: false,
+        resume_opt_state: false,
         global_batch: 16,
         steps: 40,
         seed: 42,

@@ -11,34 +11,9 @@ use lans::util::bench::{bench, Table};
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
 
-/// bert-base-shaped block table (≈110M params) without needing artifacts.
-fn bert_base_table() -> BlockTable {
-    let (h, i, v, s) = (768usize, 3072usize, 30522usize, 512usize);
-    let mut specs: Vec<(String, usize, bool)> = vec![
-        ("emb/word".into(), v * h, true),
-        ("emb/pos".into(), s * h, true),
-        ("emb/ln_s".into(), h, false),
-        ("emb/ln_b".into(), h, false),
-    ];
-    for l in 0..12 {
-        for (name, len, decay) in [
-            ("q_k", h * h, true), ("q_b", h, false),
-            ("k_k", h * h, true), ("k_b", h, false),
-            ("v_k", h * h, true), ("v_b", h, false),
-            ("o_k", h * h, true), ("o_b", h, false),
-            ("ln1s", h, false), ("ln1b", h, false),
-            ("f_in", h * i, true), ("f_inb", i, false),
-            ("f_out", i * h, true), ("f_outb", h, false),
-            ("ln2s", h, false), ("ln2b", h, false),
-        ] {
-            specs.push((format!("l{l}/{name}"), len, decay));
-        }
-    }
-    BlockTable::new(&specs)
-}
-
 fn main() {
-    let table = bert_base_table();
+    // bert-base-shaped block table (≈110M params) without needing artifacts
+    let table = BlockTable::bert_base();
     let n = table.total;
     println!(
         "=== native optimizer step, bert-base scale ({:.1}M params) ===\n",

@@ -64,6 +64,8 @@ fn main() {
             backend: OptBackend::Native,
             workers: 4,
             threads: 0, // auto: block-parallel update path
+            shard_optimizer: false,
+            resume_opt_state: false,
             global_batch: batch,
             steps,
             seed: 1,

@@ -1,8 +1,10 @@
 //! Table 2 (time column) bench: the modeled wall-clock for both published
 //! rows, plus sensitivity sweeps over node count that show where the
-//! 54-minute number comes from.
+//! 54-minute number comes from, and the allreduce-vs-sharded collective
+//! comparison (what `shard_optimizer = true` buys on the wire).
 
 use lans::cluster::{table2_runs, ClusterSpec, Phase, Run, BERT_LARGE};
+use lans::collective::Collective;
 use lans::util::bench::Table;
 
 fn main() {
@@ -47,6 +49,38 @@ fn main() {
         ]);
     }
     t2.print();
+
+    println!("\n=== collective: allreduce vs reduce-scatter+gather (sharded optimizer) ===\n");
+    // the wire-side view of `shard_optimizer = true`.  Caveat: the
+    // allreduce column prices a naive full-message inter-node ring (the
+    // calibrated baseline), while the sharded column's inter-node phases
+    // move only per-node shards — a shard-aware hierarchical allreduce
+    // lands between the two, so read "saved" as an upper bound on the wire
+    // side; the schedule-independent win is the per-device update row below
+    let mut t3 = Table::new(&["cluster", "phase", "allreduce step", "sharded step", "saved"]);
+    for run in table2_runs() {
+        for (i, p) in run.phases.iter().enumerate() {
+            let ar = run.cluster.step_time_with(
+                &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::AllReduce);
+            let sh = run.cluster.step_time_with(
+                &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::ReduceScatterGather);
+            t3.row(&[
+                run.label.to_string(),
+                format!("{}", i + 1),
+                format!("{ar:.3}s"),
+                format!("{sh:.3}s"),
+                format!("{:.1}%", (1.0 - sh / ar) * 100.0),
+            ]);
+        }
+    }
+    t3.print();
+    let c = ClusterSpec::p3dn(192);
+    println!(
+        "\nper-device update: {:.1} ms replicated -> {:.3} ms sharded over {} GPUs",
+        c.optimizer_update_time_s(&BERT_LARGE, false) * 1e3,
+        c.optimizer_update_time_s(&BERT_LARGE, true) * 1e3,
+        c.devices(),
+    );
 
     println!("\n=== sensitivity: what if LAMB could use LANS's hardware? ===\n");
     // isolate algorithm speedup (fewer steps) from hardware differences

@@ -6,4 +6,4 @@ pub mod flops;
 pub mod timemodel;
 
 pub use flops::{BertDims, BERT_BASE, BERT_LARGE};
-pub use timemodel::{table2_runs, ClusterSpec, Phase, Run};
+pub use timemodel::{table2_runs, ClusterSpec, Phase, Run, UPDATE_WORDS_PER_PARAM};

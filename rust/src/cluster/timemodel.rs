@@ -1,18 +1,31 @@
 //! Cluster time model: regenerates Table 2's time column.
 //!
 //! Per training step:
-//!     T_step = T_compute + (1 − overlap) · T_allreduce
+//!     T_step = T_compute + (1 − overlap) · T_comm + T_update
 //!     T_compute = batch_seqs · train_flops_per_seq / (devices · peak · eff)
-//!     T_allreduce = hierarchical ring over the gradient bytes
+//!     T_comm   = the chosen collective over the gradient/parameter bytes
+//!                (hierarchical allreduce, or reduce-scatter + all-gather
+//!                for the sharded-optimizer path)
+//!     T_update = optimizer HBM traffic (~12 words/param for the fused
+//!                3-pass LANS) / HBM bandwidth — over all params when
+//!                replicated, over params/devices when sharded (ZeRO-1)
 //!
 //! `overlap` models backward/communication overlap (NCCL/EFA pipelines hide
 //! most of the allreduce behind the backward pass; the paper enables EFA for
 //! exactly this reason).  Constants are documented per testbed; DESIGN.md §5
 //! explains the substitution and EXPERIMENTS.md compares model vs paper.
 
-use crate::collective::cost::{hierarchical_allreduce_time_s, CommSpec};
+use crate::collective::cost::{
+    hierarchical_all_gather_time_s, hierarchical_allreduce_time_s,
+    hierarchical_reduce_scatter_time_s, Collective, CommSpec,
+};
 
 use super::flops::BertDims;
+
+/// Words of HBM traffic per parameter per optimizer step for the fused
+/// 3-pass LANS/LAMB update (9 reads + 3 writes — see the traffic model in
+/// `benches/optimizer_step.rs`).
+pub const UPDATE_WORDS_PER_PARAM: f64 = 12.0;
 
 /// A modeled testbed.
 #[derive(Debug, Clone)]
@@ -28,6 +41,9 @@ pub struct ClusterSpec {
     pub inter: CommSpec,
     /// fraction of allreduce hidden behind backward
     pub overlap: f64,
+    /// per-device HBM bandwidth (B/s) — prices the memory-bound optimizer
+    /// update, the term the sharded path divides by the device count
+    pub hbm_bytes_per_s: f64,
 }
 
 impl ClusterSpec {
@@ -46,6 +62,7 @@ impl ClusterSpec {
             intra: CommSpec::nvlink(),
             inter: CommSpec::efa(),
             overlap: 0.7,
+            hbm_bytes_per_s: 900e9, // V100 HBM2
         }
     }
 
@@ -61,6 +78,7 @@ impl ClusterSpec {
             intra: CommSpec::tpu_ici(),
             inter: CommSpec::tpu_ici(),
             overlap: 0.7,
+            hbm_bytes_per_s: 900e9, // TPUv3 HBM
         }
     }
 
@@ -68,7 +86,70 @@ impl ClusterSpec {
         self.nodes * self.devices_per_node
     }
 
-    /// Seconds for one synchronous data-parallel step.
+    /// Seconds the memory-bound optimizer update takes on one device:
+    /// [`UPDATE_WORDS_PER_PARAM`] words over all params when replicated,
+    /// over `params / devices` when the optimizer is sharded (ZeRO-1).
+    pub fn optimizer_update_time_s(&self, dims: &BertDims, sharded: bool) -> f64 {
+        let t = UPDATE_WORDS_PER_PARAM * dims.param_bytes_f32() / self.hbm_bytes_per_s;
+        if sharded {
+            t / self.devices() as f64
+        } else {
+            t
+        }
+    }
+
+    /// Seconds for one synchronous data-parallel step under the chosen
+    /// collective schedule.
+    pub fn step_time_with(
+        &self,
+        dims: &BertDims,
+        batch_seqs: usize,
+        seq: usize,
+        slots: usize,
+        collective: Collective,
+    ) -> f64 {
+        let flops = dims.train_flops_per_seq(seq, slots) * batch_seqs as f64;
+        let t_compute =
+            flops / (self.devices() as f64 * self.peak_flops * self.efficiency);
+        let bytes = dims.param_bytes_f32();
+        let (t_comm, sharded) = match collective {
+            Collective::AllReduce => (
+                hierarchical_allreduce_time_s(
+                    self.nodes,
+                    self.devices_per_node,
+                    bytes,
+                    self.intra,
+                    self.inter,
+                ),
+                false,
+            ),
+            // sharded: reduce-scatter the gradient bytes, all-gather the
+            // updated parameter bytes (same total volume, but each
+            // inter-node phase moves only the per-node shard)
+            Collective::ReduceScatterGather => (
+                hierarchical_reduce_scatter_time_s(
+                    self.nodes,
+                    self.devices_per_node,
+                    bytes,
+                    self.intra,
+                    self.inter,
+                ) + hierarchical_all_gather_time_s(
+                    self.nodes,
+                    self.devices_per_node,
+                    bytes,
+                    self.intra,
+                    self.inter,
+                ),
+                true,
+            ),
+        };
+        t_compute
+            + (1.0 - self.overlap) * t_comm
+            + self.optimizer_update_time_s(dims, sharded)
+    }
+
+    /// Seconds for one step on the classic allreduce + replicated-update
+    /// path (the historical default).
     pub fn step_time_s(
         &self,
         dims: &BertDims,
@@ -76,17 +157,7 @@ impl ClusterSpec {
         seq: usize,
         slots: usize,
     ) -> f64 {
-        let flops = dims.train_flops_per_seq(seq, slots) * batch_seqs as f64;
-        let t_compute =
-            flops / (self.devices() as f64 * self.peak_flops * self.efficiency);
-        let t_comm = hierarchical_allreduce_time_s(
-            self.nodes,
-            self.devices_per_node,
-            dims.param_bytes_f32(),
-            self.intra,
-            self.inter,
-        );
-        t_compute + (1.0 - self.overlap) * t_comm
+        self.step_time_with(dims, batch_seqs, seq, slots, Collective::AllReduce)
     }
 }
 
@@ -174,6 +245,28 @@ mod tests {
         assert!((30.0..80.0).contains(&lans), "LANS modeled {lans:.1}m vs 53.6m");
         let ratio = lans / lamb;
         assert!((0.5..0.9).contains(&ratio), "ratio {ratio:.2} vs paper 0.70");
+    }
+
+    #[test]
+    fn sharded_collective_is_never_slower() {
+        // reduce-scatter+gather moves less inter-node data and divides the
+        // update by the device count — the modeled step must not regress
+        for (c, batch, seq, slots) in
+            [(ClusterSpec::p3dn(192), 98304, 128, 20), (ClusterSpec::tpu_v3(1024), 65536, 128, 20)]
+        {
+            let ar = c.step_time_with(&BERT_LARGE, batch, seq, slots, Collective::AllReduce);
+            let rsg = c.step_time_with(
+                &BERT_LARGE, batch, seq, slots, Collective::ReduceScatterGather);
+            assert!(rsg < ar, "{}: sharded {rsg} vs allreduce {ar}", c.name);
+        }
+    }
+
+    #[test]
+    fn sharded_update_term_divides_by_devices() {
+        let c = ClusterSpec::p3dn(192);
+        let rep = c.optimizer_update_time_s(&BERT_LARGE, false);
+        let sh = c.optimizer_update_time_s(&BERT_LARGE, true);
+        assert!((rep / sh - c.devices() as f64).abs() < 1e-6);
     }
 
     #[test]

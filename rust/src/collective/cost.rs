@@ -37,6 +37,18 @@ impl CommSpec {
     }
 }
 
+/// Which collective schedule a modeled training step uses to combine
+/// gradients and distribute the update (see `cluster::timemodel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// Classic data parallelism: allreduce the full gradient, every worker
+    /// runs the full (replicated) optimizer update.
+    AllReduce,
+    /// ZeRO-1 style: reduce-scatter gradients, each worker updates only its
+    /// owned shard, all-gather the updated parameters.
+    ReduceScatterGather,
+}
+
 /// Flat ring allreduce time (seconds) for `bytes` across `w` endpoints.
 pub fn allreduce_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
     if w <= 1 {
@@ -45,6 +57,62 @@ pub fn allreduce_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
     let wf = w as f64;
     2.0 * (wf - 1.0) * link.alpha_s
         + 2.0 * (wf - 1.0) / wf * bytes / link.beta_bytes_per_s
+}
+
+/// Ring reduce-scatter time for `bytes` across `w` endpoints:
+///     T = (W−1)·α + (W−1)/W · N / β
+/// — exactly half the allreduce, which is its reduce-scatter + all-gather
+/// composition.
+pub fn reduce_scatter_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
+    if w <= 1 {
+        return 0.0;
+    }
+    let wf = w as f64;
+    (wf - 1.0) * link.alpha_s + (wf - 1.0) / wf * bytes / link.beta_bytes_per_s
+}
+
+/// Ring all-gather time; the same α-β shape as [`reduce_scatter_time_s`]
+/// (each endpoint contributes its `N/W` shard and receives the rest).
+pub fn all_gather_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
+    reduce_scatter_time_s(w, bytes, link)
+}
+
+/// Two-level reduce-scatter (`nodes` × `gpus_per_node`): intra-node
+/// reduce-scatter over the full message, then an inter-node reduce-scatter
+/// over each rank's `1/gpus_per_node` shard.
+///
+/// Baseline caveat: [`hierarchical_allreduce_time_s`] deliberately prices
+/// its inter-node ring over the *full* message (a conservative, naive
+/// schedule — the form it was calibrated against).  These shard-aware
+/// halves move only the per-node shard inter-node, so part of the gap
+/// between `ReduceScatterGather` and `AllReduce` in the time model
+/// reflects that baseline pessimism: a shard-aware NCCL hierarchical
+/// allreduce lands between the two.  The robust, schedule-independent win
+/// of the sharded optimizer is the update term
+/// (`ClusterSpec::optimizer_update_time_s`), not the wire time.
+pub fn hierarchical_reduce_scatter_time_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
+    reduce_scatter_time_s(gpus_per_node, bytes, intra)
+        + reduce_scatter_time_s(nodes, bytes / gpus_per_node as f64, inter)
+}
+
+/// Two-level all-gather: the mirror of
+/// [`hierarchical_reduce_scatter_time_s`] — inter-node gather of the
+/// per-node shards, then intra-node gather of the full message.
+pub fn hierarchical_all_gather_time_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
+    all_gather_time_s(nodes, bytes / gpus_per_node as f64, inter)
+        + all_gather_time_s(gpus_per_node, bytes, intra)
 }
 
 /// Broadcast (ring pipeline) time for `bytes` across `w` endpoints.
@@ -121,5 +189,39 @@ mod tests {
         let hier = hierarchical_allreduce_time_s(
             192, 8, bytes, CommSpec::nvlink(), CommSpec::efa());
         assert!(hier < flat, "hier {hier} vs flat {flat}");
+    }
+
+    #[test]
+    fn reduce_scatter_plus_all_gather_is_allreduce() {
+        for w in [1, 2, 7, 192] {
+            for bytes in [0.0, 4096.0, 1.36e9] {
+                let rs = reduce_scatter_time_s(w, bytes, CommSpec::efa());
+                let ag = all_gather_time_s(w, bytes, CommSpec::efa());
+                let ar = allreduce_time_s(w, bytes, CommSpec::efa());
+                assert!(
+                    (rs + ag - ar).abs() <= 1e-12 * ar.max(1e-12),
+                    "w={w} bytes={bytes}: {rs} + {ag} vs {ar}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_endpoint_halves_are_free() {
+        assert_eq!(reduce_scatter_time_s(1, 1e9, CommSpec::efa()), 0.0);
+        assert_eq!(all_gather_time_s(1, 1e9, CommSpec::efa()), 0.0);
+    }
+
+    #[test]
+    fn hierarchical_halves_cheaper_than_hierarchical_allreduce() {
+        // the inter-node phases move 1/gpus_per_node of the bytes, so the
+        // two halves together undercut the full-message hierarchical
+        // allreduce at P3dn scale
+        let bytes = 1.36e9;
+        let (intra, inter) = (CommSpec::nvlink(), CommSpec::efa());
+        let rs = hierarchical_reduce_scatter_time_s(192, 8, bytes, intra, inter);
+        let ag = hierarchical_all_gather_time_s(192, 8, bytes, intra, inter);
+        let ar = hierarchical_allreduce_time_s(192, 8, bytes, intra, inter);
+        assert!(rs + ag < ar, "{rs} + {ag} vs {ar}");
     }
 }

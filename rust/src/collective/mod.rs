@@ -1,8 +1,15 @@
 //! Collectives: a real (summing) ring allreduce over in-process gradient
-//! buffers, plus the α-β cost model used by the cluster time simulator.
+//! buffers, the reduce-scatter / all-gather halves it is composed from
+//! (the sharded-optimizer path uses them directly), plus the α-β cost
+//! model used by the cluster time simulator.
 
 pub mod cost;
+pub mod reduce_scatter;
 pub mod ring;
 
-pub use cost::{allreduce_time_s, CommSpec};
+pub use cost::{allreduce_time_s, Collective, CommSpec};
+pub use reduce_scatter::{
+    chunk_owner, ring_all_gather, ring_all_gather_pooled, ring_chunk_starts,
+    ring_reduce_scatter, ring_reduce_scatter_pooled,
+};
 pub use ring::{ring_allreduce, ring_allreduce_avg, ring_allreduce_pooled};

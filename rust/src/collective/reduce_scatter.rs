@@ -1,0 +1,332 @@
+//! Reduce-scatter / all-gather primitives — the two halves of the classic
+//! ring schedule, exposed separately so the sharded-optimizer path (ZeRO-1
+//! style, `optim::sharded`) can stop after the reduce-scatter, update only
+//! the owned shard, and gather parameters instead of gradients.
+//!
+//! [`ring_allreduce`](super::ring::ring_allreduce) is *composed* from these
+//! primitives over the same chunk grid ([`ring_chunk_starts`]), so
+//! `reduce_scatter ∘ all_gather ≡ ring_allreduce` holds bit-for-bit by
+//! construction (and is still property-tested in `tests/proptests.rs`
+//! to guard refactors).
+//!
+//! Ownership convention: after [`ring_reduce_scatter`], chunk `c` holds its
+//! full sum in the buffer of worker [`chunk_owner`]`(c, w) = (c + w - 1) % w`
+//! — exactly the worker the classic schedule parks the reduced chunk on
+//! before the gather phase starts.
+//!
+//! The `*_at` variants take an explicit chunk partition (`starts`, length
+//! `w + 1`): the sharded trainer gathers *parameters* on `ShardPlan`
+//! boundaries (a pure copy phase — boundaries never change bits) while
+//! gradients are always reduced on the default ring grid, keeping the
+//! summation order identical to the replicated path's allreduce.
+
+use crate::util::pool::ThreadPool;
+
+/// Below this buffer length the pool's per-step spawn cost exceeds the
+/// chunk work; the pooled variants fall back to the serial schedule
+/// (identical results either way).
+pub const POOLED_MIN_ELEMS: usize = 1 << 12;
+
+/// The ring's default chunk grid: chunk `c` covers
+/// `[c * n / w, (c + 1) * n / w)`.
+pub fn ring_chunk_starts(w: usize, n: usize) -> Vec<usize> {
+    assert!(w > 0, "no workers");
+    (0..=w).map(|c| c * n / w).collect()
+}
+
+/// Which worker owns chunk `c`'s full sum after the reduce-scatter phase.
+pub fn chunk_owner(c: usize, w: usize) -> usize {
+    (c + w - 1) % w
+}
+
+fn check_bufs(bufs: &[Vec<f32>]) -> (usize, usize) {
+    let w = bufs.len();
+    assert!(w > 0, "no workers");
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
+    (w, n)
+}
+
+fn check_starts(starts: &[usize], w: usize, n: usize) {
+    assert_eq!(starts.len(), w + 1, "starts must have w + 1 entries");
+    assert_eq!(starts[0], 0, "starts must begin at 0");
+    assert_eq!(starts[w], n, "starts must end at the buffer length");
+    assert!(starts.windows(2).all(|p| p[0] <= p[1]), "starts must be sorted");
+}
+
+/// Reduce-scatter on the default ring grid: `w - 1` ring steps after which
+/// chunk `c`'s element-wise sum lives in worker [`chunk_owner`]`(c, w)`'s
+/// buffer (other workers hold partial sums there — do not read them).
+pub fn ring_reduce_scatter(bufs: &mut [Vec<f32>]) {
+    let (w, n) = check_bufs(bufs);
+    let starts = ring_chunk_starts(w, n);
+    ring_reduce_scatter_at(bufs, &starts);
+}
+
+/// Reduce-scatter over an explicit chunk partition.
+pub fn ring_reduce_scatter_at(bufs: &mut [Vec<f32>], starts: &[usize]) {
+    let (w, n) = check_bufs(bufs);
+    check_starts(starts, w, n);
+    if w == 1 || n == 0 {
+        return;
+    }
+    // After step s, worker (c + s + 1) mod w holds the partial sum of chunk
+    // c over s + 2 workers; after w - 1 steps the full sum sits at the
+    // chunk's owner.  Chunk c is reduced in worker order c, c+1, … (mod w)
+    // regardless of w — deterministic, like a real wire ring.
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let src = (c + s) % w;
+            let dst = (c + s + 1) % w;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let (a, b) = split_two(bufs, src, dst);
+            for i in lo..hi {
+                b[i] += a[i];
+            }
+        }
+    }
+}
+
+/// All-gather on the default ring grid: assumes each chunk's final value
+/// sits at its [`chunk_owner`] (the reduce-scatter postcondition) and
+/// circulates it until every buffer holds every chunk.
+pub fn ring_all_gather(bufs: &mut [Vec<f32>]) {
+    let (w, n) = check_bufs(bufs);
+    let starts = ring_chunk_starts(w, n);
+    ring_all_gather_at(bufs, &starts);
+}
+
+/// All-gather over an explicit chunk partition.  Pure copies — the
+/// partition affects scheduling only, never bits.
+pub fn ring_all_gather_at(bufs: &mut [Vec<f32>], starts: &[usize]) {
+    let (w, n) = check_bufs(bufs);
+    check_starts(starts, w, n);
+    if w == 1 || n == 0 {
+        return;
+    }
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let src = (c + w - 1 + s) % w;
+            let dst = (c + w + s) % w;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let (a, b) = split_two(bufs, src, dst);
+            b[lo..hi].copy_from_slice(&a[lo..hi]);
+        }
+    }
+}
+
+/// Chunk-parallel reduce-scatter: the same schedule as
+/// [`ring_reduce_scatter`] with the `w` per-chunk sums of every ring step
+/// run concurrently on `pool` (they touch disjoint buffer regions).
+/// Bit-identical to the serial path; falls back to it for width-1 pools,
+/// small buffers or degenerate inputs.
+pub fn ring_reduce_scatter_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
+    let (w, n) = check_bufs(bufs);
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        ring_reduce_scatter(bufs);
+        return;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        let mut tasks = ring_step_tasks(bufs, &starts, s, true);
+        pool.map_mut(&mut tasks, |t| {
+            for (d, x) in t.dst.iter_mut().zip(t.src.iter()) {
+                *d += *x;
+            }
+        });
+    }
+}
+
+/// Chunk-parallel all-gather; see [`ring_reduce_scatter_pooled`].
+pub fn ring_all_gather_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
+    let (w, n) = check_bufs(bufs);
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        ring_all_gather(bufs);
+        return;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        let mut tasks = ring_step_tasks(bufs, &starts, s, false);
+        pool.map_mut(&mut tasks, |t| t.dst.copy_from_slice(t.src));
+    }
+}
+
+/// One parallel unit of a ring step: move/accumulate `src` into `dst`.
+/// The slices of different tasks never overlap (distinct chunks of distinct
+/// buffers), which is what makes the step safely chunk-parallel.
+pub(crate) struct ChunkTask<'a> {
+    pub(crate) src: &'a [f32],
+    pub(crate) dst: &'a mut [f32],
+}
+
+/// Carve the per-chunk (src, dst) slice pairs for ring step `s`.
+///
+/// In the reduce-scatter phase buffer `b` sends (is read at) chunk
+/// `(b - s) mod w` and receives (is written at) chunk `(b - s - 1) mod w`;
+/// in the all-gather phase it sends chunk `(b + 1 - s) mod w` and receives
+/// chunk `(b - s) mod w` — the chunk↔buffer mapping of the classic
+/// schedule, reindexed per buffer so each buffer is borrowed exactly once.
+pub(crate) fn ring_step_tasks<'a>(
+    bufs: &'a mut [Vec<f32>],
+    starts: &[usize],
+    s: usize,
+    reduce: bool,
+) -> Vec<ChunkTask<'a>> {
+    let w = bufs.len();
+    let mut srcs: Vec<Option<&[f32]>> = (0..w).map(|_| None).collect();
+    let mut dsts: Vec<Option<&mut [f32]>> = (0..w).map(|_| None).collect();
+    for (b, buf) in bufs.iter_mut().enumerate() {
+        let (c_read, c_write) = if reduce {
+            ((b + w - s) % w, (b + w - s - 1) % w)
+        } else {
+            ((b + w + 1 - s) % w, (b + w - s) % w)
+        };
+        let (rd, wr) = carve(
+            buf,
+            starts[c_read]..starts[c_read + 1],
+            starts[c_write]..starts[c_write + 1],
+        );
+        srcs[c_read] = Some(rd);
+        dsts[c_write] = Some(wr);
+    }
+    srcs.into_iter()
+        .zip(dsts)
+        .map(|(src, dst)| ChunkTask {
+            src: src.expect("ring chunk without a source"),
+            dst: dst.expect("ring chunk without a destination"),
+        })
+        .collect()
+}
+
+/// Split one buffer into a shared slice over `read` and a mutable slice
+/// over `write`.  The ranges are distinct chunks, so non-empty ranges never
+/// overlap; empty ranges may sit anywhere.
+fn carve<'a>(
+    buf: &'a mut [f32],
+    read: std::ops::Range<usize>,
+    write: std::ops::Range<usize>,
+) -> (&'a [f32], &'a mut [f32]) {
+    if write.is_empty() {
+        return (&buf[read], &mut []);
+    }
+    if read.is_empty() {
+        return (&[], &mut buf[write]);
+    }
+    if read.start < write.start {
+        let (lo, hi) = buf.split_at_mut(write.start);
+        (&lo[read], &mut hi[..write.end - write.start])
+    } else {
+        let (lo, hi) = buf.split_at_mut(read.start);
+        (&hi[..read.end - read.start], &mut lo[write])
+    }
+}
+
+/// Borrow two distinct workers' buffers mutably.
+pub(crate) fn split_two(
+    bufs: &mut [Vec<f32>],
+    src: usize,
+    dst: usize,
+) -> (&[f32], &mut [f32]) {
+    assert_ne!(src, dst);
+    if src < dst {
+        let (l, r) = bufs.split_at_mut(dst);
+        (&l[src], &mut r[0])
+    } else {
+        let (l, r) = bufs.split_at_mut(src);
+        (&r[0], &mut l[dst])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::ring::ring_allreduce;
+    use crate::util::rng::Rng;
+
+    fn random_bufs(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..w).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn owner_chunks_hold_full_sums() {
+        for (w, n) in [(2, 10), (3, 7), (4, 64), (8, 1000), (8, 3), (1, 5)] {
+            let mut bufs = random_bufs(w, n, (w * 31 + n) as u64);
+            let mut reference = bufs.clone();
+            ring_allreduce(&mut reference);
+            ring_reduce_scatter(&mut bufs);
+            let starts = ring_chunk_starts(w, n);
+            for c in 0..w {
+                let o = chunk_owner(c, w);
+                assert_eq!(
+                    &bufs[o][starts[c]..starts[c + 1]],
+                    &reference[0][starts[c]..starts[c + 1]],
+                    "chunk {c} at owner {o} (w={w} n={n})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_all_gather_is_allreduce() {
+        for (w, n) in [(1, 8), (2, 10), (3, 7), (5, 3), (4, 4096), (8, 30011)] {
+            let template = random_bufs(w, n, (w * 1009 + n) as u64);
+            let mut composed = template.clone();
+            let mut reference = template;
+            ring_reduce_scatter(&mut composed);
+            ring_all_gather(&mut composed);
+            ring_allreduce(&mut reference);
+            assert_eq!(composed, reference, "w={w} n={n}");
+        }
+    }
+
+    #[test]
+    fn pooled_halves_match_serial_bit_for_bit() {
+        for (w, n, threads) in
+            [(2, 10, 4), (8, 3, 4), (2, 5000, 4), (3, 4099, 2), (4, 65536, 8)]
+        {
+            let pool = ThreadPool::new(threads);
+            let template = random_bufs(w, n, (w * 7 + n + threads) as u64);
+
+            let mut serial = template.clone();
+            let mut pooled = template.clone();
+            ring_reduce_scatter(&mut serial);
+            ring_reduce_scatter_pooled(&mut pooled, &pool);
+            assert_eq!(serial, pooled, "reduce-scatter w={w} n={n}");
+
+            ring_all_gather(&mut serial);
+            ring_all_gather_pooled(&mut pooled, &pool);
+            assert_eq!(serial, pooled, "all-gather w={w} n={n}");
+        }
+    }
+
+    #[test]
+    fn all_gather_on_custom_partition_moves_owner_chunks() {
+        // gather on an uneven partition: seed each owner's chunk with a
+        // sentinel and check every worker ends up with all sentinels
+        let (w, n) = (4, 100);
+        let starts = vec![0, 10, 15, 80, 100];
+        let mut bufs = vec![vec![0.0f32; n]; w];
+        for c in 0..w {
+            let o = chunk_owner(c, w);
+            for i in starts[c]..starts[c + 1] {
+                bufs[o][i] = (c + 1) as f32;
+            }
+        }
+        ring_all_gather_at(&mut bufs, &starts);
+        for (wk, b) in bufs.iter().enumerate() {
+            for c in 0..w {
+                for i in starts[c]..starts[c + 1] {
+                    assert_eq!(b[i], (c + 1) as f32, "worker {wk} chunk {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "starts")]
+    fn bad_partition_rejected() {
+        let mut bufs = vec![vec![0.0f32; 8]; 2];
+        ring_reduce_scatter_at(&mut bufs, &[0, 9, 8]);
+    }
+}

@@ -1,13 +1,14 @@
 //! Ring allreduce with real summation — the collective the trainer uses to
 //! combine per-worker gradients.
 //!
-//! The implementation follows the classic two-phase schedule (Baidu ring):
-//! `W-1` reduce-scatter steps followed by `W-1` all-gather steps over `W`
-//! equal chunks.  Communication here is memory movement between worker
-//! buffers (the workers are in-process), but the *schedule* is the real
-//! one: each phase moves exactly the chunks a wire implementation would,
-//! which is what the cost model (`collective::cost`) prices and what the
-//! allreduce bench measures.
+//! The implementation is the composition of the two ring phases from
+//! [`super::reduce_scatter`]: `W-1` reduce-scatter steps followed by `W-1`
+//! all-gather steps over `W` equal chunks (the classic Baidu schedule).
+//! Communication here is memory movement between worker buffers (the
+//! workers are in-process), but the *schedule* is the real one: each phase
+//! moves exactly the chunks a wire implementation would, which is what the
+//! cost model (`collective::cost`) prices and what the allreduce bench
+//! measures.
 //!
 //! Numerical note: chunk c of every worker is reduced in the same ring
 //! order regardless of W, so results are deterministic; f32 accumulation
@@ -21,6 +22,13 @@
 
 use crate::util::pool::ThreadPool;
 
+use super::reduce_scatter::{
+    ring_all_gather_at, ring_all_gather_pooled, ring_chunk_starts,
+    ring_reduce_scatter_at, ring_reduce_scatter_pooled,
+};
+
+pub use super::reduce_scatter::POOLED_MIN_ELEMS;
+
 /// In-place ring allreduce (sum) across `bufs` (one buffer per worker).
 /// All buffers must be the same length.  After return, every buffer holds
 /// the element-wise sum.
@@ -32,42 +40,10 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
     if w == 1 || n == 0 {
         return;
     }
-
-    // chunk boundaries: chunk c covers [starts[c], starts[c+1])
-    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
-
-    // Phase 1 — reduce-scatter: after step s, worker (c + s + 1) mod w holds
-    // the partial sum of chunk c over s+2 workers.  After w-1 steps, worker
-    // (c + w - 1) mod w owns the full sum of chunk c.
-    for s in 0..w - 1 {
-        for c in 0..w {
-            let src = (c + s) % w;
-            let dst = (c + s + 1) % w;
-            let (lo, hi) = (starts[c], starts[c + 1]);
-            // sum src's chunk into dst's chunk
-            let (a, b) = split_two(bufs, src, dst);
-            for i in lo..hi {
-                b[i] += a[i];
-            }
-        }
-    }
-
-    // Phase 2 — all-gather: owner of each reduced chunk circulates it.
-    for s in 0..w - 1 {
-        for c in 0..w {
-            let src = (c + w - 1 + s) % w;
-            let dst = (c + w + s) % w;
-            let (lo, hi) = (starts[c], starts[c + 1]);
-            let (a, b) = split_two(bufs, src, dst);
-            b[lo..hi].copy_from_slice(&a[lo..hi]);
-        }
-    }
+    let starts = ring_chunk_starts(w, n);
+    ring_reduce_scatter_at(bufs, &starts);
+    ring_all_gather_at(bufs, &starts);
 }
-
-/// Below this buffer length the pool's per-step spawn cost exceeds the
-/// chunk work; [`ring_allreduce_pooled`] falls back to the serial ring
-/// (identical results either way).
-pub const POOLED_MIN_ELEMS: usize = 1 << 12;
 
 /// Chunk-parallel ring allreduce: the same two-phase schedule as
 /// [`ring_allreduce`], with the `W` per-chunk operations of every ring step
@@ -75,101 +51,8 @@ pub const POOLED_MIN_ELEMS: usize = 1 << 12;
 /// width-1 pool, small buffers or degenerate inputs; results are
 /// bit-identical either way.
 pub fn ring_allreduce_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
-    let w = bufs.len();
-    assert!(w > 0, "no workers");
-    let n = bufs[0].len();
-    assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
-    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
-        ring_allreduce(bufs);
-        return;
-    }
-    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
-
-    // Phase 1 — reduce-scatter, chunk-parallel within each ring step.
-    for s in 0..w - 1 {
-        let mut tasks = ring_step_tasks(bufs, &starts, s, true);
-        pool.map_mut(&mut tasks, |t| {
-            for (d, x) in t.dst.iter_mut().zip(t.src.iter()) {
-                *d += *x;
-            }
-        });
-    }
-
-    // Phase 2 — all-gather, chunk-parallel within each ring step.
-    for s in 0..w - 1 {
-        let mut tasks = ring_step_tasks(bufs, &starts, s, false);
-        pool.map_mut(&mut tasks, |t| t.dst.copy_from_slice(t.src));
-    }
-}
-
-/// One parallel unit of a ring step: move/accumulate `src` into `dst`.
-/// The slices of different tasks never overlap (distinct chunks of distinct
-/// buffers), which is what makes the step safely chunk-parallel.
-struct ChunkTask<'a> {
-    src: &'a [f32],
-    dst: &'a mut [f32],
-}
-
-/// Carve the per-chunk (src, dst) slice pairs for ring step `s`.
-///
-/// In the reduce-scatter phase buffer `b` sends (is read at) chunk
-/// `(b - s) mod w` and receives (is written at) chunk `(b - s - 1) mod w`;
-/// in the all-gather phase it sends chunk `(b + 1 - s) mod w` and receives
-/// chunk `(b - s) mod w` — the chunk↔buffer mapping of the classic
-/// schedule, reindexed per buffer so each buffer is borrowed exactly once.
-fn ring_step_tasks<'a>(
-    bufs: &'a mut [Vec<f32>],
-    starts: &[usize],
-    s: usize,
-    reduce: bool,
-) -> Vec<ChunkTask<'a>> {
-    let w = bufs.len();
-    let mut srcs: Vec<Option<&[f32]>> = (0..w).map(|_| None).collect();
-    let mut dsts: Vec<Option<&mut [f32]>> = (0..w).map(|_| None).collect();
-    for (b, buf) in bufs.iter_mut().enumerate() {
-        let (c_read, c_write) = if reduce {
-            ((b + w - s) % w, (b + w - s - 1) % w)
-        } else {
-            ((b + w + 1 - s) % w, (b + w - s) % w)
-        };
-        let (rd, wr) = carve(
-            buf,
-            starts[c_read]..starts[c_read + 1],
-            starts[c_write]..starts[c_write + 1],
-        );
-        srcs[c_read] = Some(rd);
-        dsts[c_write] = Some(wr);
-    }
-    srcs.into_iter()
-        .zip(dsts)
-        .map(|(src, dst)| ChunkTask {
-            src: src.expect("ring chunk without a source"),
-            dst: dst.expect("ring chunk without a destination"),
-        })
-        .collect()
-}
-
-/// Split one buffer into a shared slice over `read` and a mutable slice
-/// over `write`.  The ranges are distinct chunks, so non-empty ranges never
-/// overlap; empty ranges may sit anywhere.
-fn carve<'a>(
-    buf: &'a mut [f32],
-    read: std::ops::Range<usize>,
-    write: std::ops::Range<usize>,
-) -> (&'a [f32], &'a mut [f32]) {
-    if write.is_empty() {
-        return (&buf[read], &mut []);
-    }
-    if read.is_empty() {
-        return (&[], &mut buf[write]);
-    }
-    if read.start < write.start {
-        let (lo, hi) = buf.split_at_mut(write.start);
-        (&lo[read], &mut hi[..write.end - write.start])
-    } else {
-        let (lo, hi) = buf.split_at_mut(read.start);
-        (&hi[..read.end - read.start], &mut lo[write])
-    }
+    ring_reduce_scatter_pooled(bufs, pool);
+    ring_all_gather_pooled(bufs, pool);
 }
 
 /// Allreduce then divide by the worker count (gradient averaging).
@@ -180,18 +63,6 @@ pub fn ring_allreduce_avg(bufs: &mut [Vec<f32>]) {
         for x in b.iter_mut() {
             *x /= w;
         }
-    }
-}
-
-/// Borrow two distinct workers' buffers mutably.
-fn split_two(bufs: &mut [Vec<f32>], src: usize, dst: usize) -> (&[f32], &mut [f32]) {
-    assert_ne!(src, dst);
-    if src < dst {
-        let (l, r) = bufs.split_at_mut(dst);
-        (&l[src], &mut r[0])
-    } else {
-        let (l, r) = bufs.split_at_mut(src);
-        (&r[0], &mut l[dst])
     }
 }
 

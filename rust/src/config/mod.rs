@@ -33,6 +33,17 @@ pub struct TrainConfig {
     /// width of the optimizer/allreduce thread pool: `0` = auto (the
     /// machine's available parallelism), `1` = the exact serial legacy path
     pub threads: usize,
+    /// ZeRO-1-style sharded optimizer (native backend, lans|lamb only):
+    /// reduce-scatter gradients, update only the owned shard with
+    /// partitioned moments, all-gather parameters.  Bit-identical to the
+    /// replicated path; cuts per-worker update compute and moment memory
+    /// by the worker count.
+    pub shard_optimizer: bool,
+    /// with `shard_optimizer` + `resume_from`: also restore the per-shard
+    /// optimizer moments embedded in the checkpoint (resharded to the
+    /// current worker count) instead of the default moment restart — the
+    /// exact-continuation path, as opposed to the two-phase warm start
+    pub resume_opt_state: bool,
     /// per-worker microbatch must equal the artifact's static batch dim
     pub global_batch: usize,
     pub steps: u64,
@@ -114,6 +125,8 @@ impl TrainConfig {
             backend,
             workers: doc.usize_or("train", "workers", 2),
             threads: doc.usize_or("train", "threads", 0),
+            shard_optimizer: doc.bool_or("train", "shard_optimizer", false),
+            resume_opt_state: doc.bool_or("train", "resume_opt_state", false),
             global_batch: doc.usize_or("train", "global_batch", 16),
             steps,
             seed: doc.usize_or("train", "seed", 42) as u64,
@@ -169,6 +182,7 @@ mod tests {
             backend = "hlo"
             workers = 4
             threads = 8
+            shard_optimizer = true
             global_batch = 64
             steps = 500
             [schedule]
@@ -184,6 +198,8 @@ mod tests {
         assert_eq!(c.backend, OptBackend::Hlo);
         assert_eq!(c.workers, 4);
         assert_eq!(c.threads, 8);
+        assert!(c.shard_optimizer);
+        assert!(!c.resume_opt_state);
         assert!(c.meta_path.starts_with("/base"));
         assert_eq!(c.data.source, "text");
         match c.schedule {

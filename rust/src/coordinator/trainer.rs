@@ -16,10 +16,12 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::collective::ring_allreduce_pooled;
+use crate::collective::{ring_allreduce_pooled, ring_reduce_scatter_pooled};
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::Recorder;
-use crate::optim::{make_optimizer, BlockTable, Optimizer, ParallelExecutor};
+use crate::optim::{
+    make_optimizer, scatter_to_plan, BlockTable, Optimizer, ParallelExecutor, ShardedOptimizer,
+};
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
 
 use super::source::DataSource;
@@ -89,6 +91,25 @@ impl Trainer {
             })?;
         }
 
+        if cfg.shard_optimizer {
+            if cfg.backend != OptBackend::Native {
+                bail!("shard_optimizer requires the native backend");
+            }
+            if !matches!(cfg.optimizer.as_str(), "lans" | "lamb") {
+                bail!(
+                    "optimizer {:?} has no sharded update \
+                     (shard_optimizer supports lans|lamb)",
+                    cfg.optimizer
+                );
+            }
+        }
+        if cfg.resume_opt_state && (!cfg.shard_optimizer || cfg.resume_from.is_none()) {
+            bail!(
+                "resume_opt_state requires shard_optimizer = true and a \
+                 resume_from checkpoint"
+            );
+        }
+
         let table = Arc::new(BlockTable::from_meta(&runtime.meta));
         Ok(Trainer { cfg, runtime, source, table, micro_steps_per_worker: micro_steps })
     }
@@ -125,14 +146,19 @@ impl Trainer {
             .collect::<Result<_>>()?;
 
         // leader state: fresh init, or warm-start from a checkpoint
-        // (moments restart either way — the two-phase convention)
+        // (moments restart unless resume_opt_state re-imports them below).
+        // The non-param tensors (per-shard optimizer moments) are kept
+        // aside from the same single load instead of re-reading the file.
+        let mut resume_state: Option<(u64, Vec<(String, TensorF32)>)> = None;
         let mut params = match &cfg.resume_from {
             None => self.runtime.init_params(cfg.seed),
             Some(path) => {
                 let ckpt = Checkpoint::load(path)?;
+                let step = ckpt.step;
                 let mut by_name: std::collections::HashMap<String, TensorF32> =
                     ckpt.tensors.into_iter().collect();
-                meta.params
+                let params = meta
+                    .params
                     .iter()
                     .map(|spec| {
                         let mut t = by_name.remove(&spec.name).ok_or_else(|| {
@@ -152,16 +178,46 @@ impl Trainer {
                         t.shape = spec.shape.clone();
                         Ok(t)
                     })
-                    .collect::<Result<Vec<_>>>()?
+                    .collect::<Result<Vec<_>>>()?;
+                if cfg.resume_opt_state {
+                    resume_state = Some((step, by_name.into_iter().collect()));
+                }
+                params
             }
         };
         let mut opt_state = self.runtime.zero_opt_state();
+        // ZeRO-1 path: partitioned moments + reduce-scatter/all-gather step
+        let mut sharded_opt: Option<ShardedOptimizer> = if cfg.shard_optimizer {
+            Some(
+                ShardedOptimizer::from_name(
+                    &cfg.optimizer,
+                    (*self.table).clone(),
+                    cfg.hyper,
+                    cfg.workers,
+                )
+                .expect("optimizer validated lans|lamb in Trainer::with_engine"),
+            )
+        } else {
+            None
+        };
+        if cfg.resume_opt_state {
+            // validated at construction: sharded + resume_from are present
+            let so = sharded_opt.as_mut().expect("resume_opt_state implies shard_optimizer");
+            let (step, tensors) =
+                resume_state.as_ref().expect("resume_opt_state implies resume_from");
+            so.import_state(*step, tensors).with_context(|| {
+                format!(
+                    "restoring sharded optimizer state from {}",
+                    cfg.resume_from.as_ref().unwrap().display()
+                )
+            })?;
+        }
         let mut native_opt: Option<Box<dyn Optimizer>> = match cfg.backend {
-            OptBackend::Native => Some(
+            OptBackend::Native if !cfg.shard_optimizer => Some(
                 make_optimizer(&cfg.optimizer, (*self.table).clone(), cfg.hyper)
                     .ok_or_else(|| anyhow::anyhow!("unknown optimizer {}", cfg.optimizer))?,
             ),
-            OptBackend::Hlo => None,
+            _ => None,
         };
         let mut flat_params = match cfg.backend {
             OptBackend::Native => self.table.flatten(&params),
@@ -200,43 +256,62 @@ impl Trainer {
                 bufs.push(r.grad_flat);
             }
 
-            // combine shard gradients: ring allreduce (sum), then mean
-            ring_allreduce_pooled(&mut bufs, exec.pool());
-            let mut grad = std::mem::take(&mut bufs[0]);
             let inv = 1.0 / total_micros as f32;
-            for g in grad.iter_mut() {
-                *g *= inv;
-            }
             let loss = loss_sum / total_micros as f64;
 
-            // optimizer update
-            let (grad_norm, trust) = match cfg.backend {
-                OptBackend::Native => {
-                    let opt = native_opt.as_mut().unwrap();
-                    let stats = exec.step(opt.as_mut(), &mut flat_params, &grad, lr as f32);
-                    self.table.unflatten_into(&flat_params, &mut params);
-                    (stats.grad_norm, stats.mean_trust_ratio)
+            // combine worker gradients and update
+            let (grad_norm, trust) = if let Some(so) = sharded_opt.as_mut() {
+                // ZeRO-1 step: reduce-scatter on the ring's own chunk grid
+                // (summation order identical to the allreduce), stitch each
+                // worker's owned mean-gradient range, update only the owned
+                // shards, then all-gather the updated parameters — a no-op
+                // in-process, since every worker reads the same flat vector
+                // (the time model prices the wire version).
+                ring_reduce_scatter_pooled(&mut bufs, exec.pool());
+                let shard_grads = scatter_to_plan(&bufs, so.plan(), inv);
+                // step_pooled self-falls-back to the serial path for
+                // width-1 pools / small per-shard work, like the pooled
+                // collectives; results are identical either way
+                let stats =
+                    so.step_pooled(exec.pool(), &mut flat_params, &shard_grads, lr as f32);
+                self.table.unflatten_into(&flat_params, &mut params);
+                (stats.grad_norm, stats.mean_trust_ratio)
+            } else {
+                // replicated path: ring allreduce (sum), then mean
+                ring_allreduce_pooled(&mut bufs, exec.pool());
+                let mut grad = std::mem::take(&mut bufs[0]);
+                for g in grad.iter_mut() {
+                    *g *= inv;
                 }
-                OptBackend::Hlo => {
-                    let gn = grad
-                        .iter()
-                        .map(|&x| (x as f64) * (x as f64))
-                        .sum::<f64>()
-                        .sqrt();
-                    let mut grads_t: Vec<TensorF32> = meta
-                        .params
-                        .iter()
-                        .map(|p| TensorF32::zeros(p.shape.clone()))
-                        .collect();
-                    self.table.unflatten_into(&grad, &mut grads_t);
-                    self.runtime.opt_step(
-                        &cfg.optimizer,
-                        &mut params,
-                        &mut opt_state,
-                        &grads_t,
-                        lr as f32,
-                    )?;
-                    (gn, 1.0)
+                match cfg.backend {
+                    OptBackend::Native => {
+                        let opt = native_opt.as_mut().unwrap();
+                        let stats =
+                            exec.step(opt.as_mut(), &mut flat_params, &grad, lr as f32);
+                        self.table.unflatten_into(&flat_params, &mut params);
+                        (stats.grad_norm, stats.mean_trust_ratio)
+                    }
+                    OptBackend::Hlo => {
+                        let gn = grad
+                            .iter()
+                            .map(|&x| (x as f64) * (x as f64))
+                            .sum::<f64>()
+                            .sqrt();
+                        let mut grads_t: Vec<TensorF32> = meta
+                            .params
+                            .iter()
+                            .map(|p| TensorF32::zeros(p.shape.clone()))
+                            .collect();
+                        self.table.unflatten_into(&grad, &mut grads_t);
+                        self.runtime.opt_step(
+                            &cfg.optimizer,
+                            &mut params,
+                            &mut opt_state,
+                            &grads_t,
+                            lr as f32,
+                        )?;
+                        (gn, 1.0)
+                    }
                 }
             };
 
@@ -263,12 +338,18 @@ impl Trainer {
         };
 
         if let Some(path) = &cfg.checkpoint {
-            let tensors = meta
+            let mut tensors: Vec<(String, TensorF32)> = meta
                 .params
                 .iter()
                 .zip(&params)
                 .map(|(s, t)| (s.name.clone(), t.clone()))
                 .collect();
+            // the sharded path also persists its partitioned moments so a
+            // later run can continue exactly (resume_opt_state), under any
+            // worker count — resharding happens on import
+            if let Some(so) = &sharded_opt {
+                tensors.extend(so.export_state());
+            }
             Checkpoint { step: steps_run, tensors }.save(path)?;
         }
         if let Some(path) = &cfg.curve_out {

@@ -38,6 +38,42 @@ impl BlockTable {
         Self::new(&meta.blocks())
     }
 
+    /// A bert-base-shaped table (≈110M params, 196 blocks) without needing
+    /// artifacts — the standard subject of the optimizer micro-benchmarks
+    /// (`optimizer_step`, `sharded_step`).
+    pub fn bert_base() -> BlockTable {
+        let (h, i, v, s) = (768usize, 3072usize, 30522usize, 512usize);
+        let mut specs: Vec<(String, usize, bool)> = vec![
+            ("emb/word".into(), v * h, true),
+            ("emb/pos".into(), s * h, true),
+            ("emb/ln_s".into(), h, false),
+            ("emb/ln_b".into(), h, false),
+        ];
+        for l in 0..12 {
+            for (name, len, decay) in [
+                ("q_k", h * h, true),
+                ("q_b", h, false),
+                ("k_k", h * h, true),
+                ("k_b", h, false),
+                ("v_k", h * h, true),
+                ("v_b", h, false),
+                ("o_k", h * h, true),
+                ("o_b", h, false),
+                ("ln1s", h, false),
+                ("ln1b", h, false),
+                ("f_in", h * i, true),
+                ("f_inb", i, false),
+                ("f_out", i * h, true),
+                ("f_outb", h, false),
+                ("ln2s", h, false),
+                ("ln2b", h, false),
+            ] {
+                specs.push((format!("l{l}/{name}"), len, decay));
+            }
+        }
+        Self::new(&specs)
+    }
+
     pub fn len(&self) -> usize {
         self.blocks.len()
     }

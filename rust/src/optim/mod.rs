@@ -1,12 +1,19 @@
 //! Optimizers and learning-rate schedules — the paper's algorithmic core,
-//! plus the block-sharded [`ParallelExecutor`] that runs them on all cores.
+//! plus the block-sharded [`ParallelExecutor`] that runs them on all cores
+//! and the ZeRO-1-style [`ShardedOptimizer`] that partitions state across
+//! data-parallel workers.
 
 pub mod blocks;
 pub mod native;
 pub mod parallel;
 pub mod schedule;
+pub mod sharded;
 
 pub use blocks::{Block, BlockTable};
-pub use native::{make_optimizer, AdamW, Hyper, Lamb, Lans, MomentumSgd, Optimizer, StepStats};
+pub use native::{
+    make_optimizer, AdamW, Hyper, Lamb, Lans, MomentumSgd, Optimizer, StepStats, NORM_EPS,
+    NORM_SEG,
+};
 pub use parallel::ParallelExecutor;
 pub use schedule::{from_ratios, sqrt_scaled_lr, Schedule};
+pub use sharded::{scatter_to_plan, Fragment, ShardPlan, ShardedOptimizer};

@@ -17,6 +17,15 @@
 //! over blocks calling those kernels; `optim::parallel` runs the very same
 //! kernels block-concurrently on a [`ThreadPool`], so the two paths are
 //! arithmetically identical by construction (the property tests assert it).
+//!
+//! Canonical reduction order: every cross-element LANS/LAMB reduction
+//! (block gradient norm, ‖x‖/‖r‖/‖c‖/‖u‖) accumulates within
+//! [`NORM_SEG`]-element sub-chunks of a *block-local* grid and combines the
+//! sub-chunk partials in f64, in order.  The segment loops live in
+//! `grad_sq_segments` / `lans_update_segments` / `lamb_update_segments` and
+//! are shared verbatim by the serial path, the block-parallel path and the
+//! sharded path (`optim::sharded`, whose `ShardPlan` cuts only on the
+//! segment grid) — which is what makes all three bit-identical.
 
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Welford;
@@ -25,6 +34,30 @@ use super::blocks::BlockTable;
 
 /// Numerical floor for block norms (matches kernels/common.py NORM_EPS).
 pub const NORM_EPS: f32 = 1e-16;
+
+/// Width of the canonical norm-reduction segment.  Reductions accumulate
+/// within `NORM_SEG`-element sub-chunks (f32 for the x/r/c norms — keeps
+/// the lane loop vectorizable — and f64 for gradient norms) and combine
+/// across sub-chunks in f64, in order, on a grid that restarts at every
+/// block offset.  `optim::sharded::ShardPlan` aligns its shard boundaries
+/// to this grid.
+pub const NORM_SEG: usize = 4096;
+
+/// Per-segment f64 partials of Σ g² over the block-local segment grid,
+/// emitted in order via `sink`.  `g` must start on a segment boundary
+/// (offset a multiple of [`NORM_SEG`] within its block).
+pub(crate) fn grad_sq_segments(g: &[f32], mut sink: impl FnMut(f64)) {
+    let mut lo = 0;
+    while lo < g.len() {
+        let hi = (lo + NORM_SEG).min(g.len());
+        let mut s = 0.0f64;
+        for &gi in &g[lo..hi] {
+            s += (gi as f64) * (gi as f64);
+        }
+        sink(s);
+        lo = hi;
+    }
+}
 
 /// Adam-family hyper-parameters.
 #[derive(Debug, Clone, Copy)]
@@ -154,24 +187,29 @@ pub(crate) struct LansCoef {
     pub grad_sq: f64,
 }
 
-/// LANS pass 1 for one block: eq. (4) gradient normalization, moment
-/// updates, cached full directions, and the three norm reductions.
+/// LANS moment/direction update over a segment-aligned range of one block:
+/// eq. (4) gradient normalization (via the precomputed `inv_gnorm`), moment
+/// updates, cached full directions, and the (Σx², Σr², Σc²) partial of every
+/// segment emitted in order via `sink`.
 ///
-/// Reductions accumulate in f32 within 4K sub-chunks (vectorizable) and
-/// combine in f64 across sub-chunks — same accuracy class as pairwise
-/// summation, lets LLVM keep the lane loop in f32 (§Perf iteration 3).
-pub(crate) fn lans_pass1_block(cx: &AdamCtx, x: &[f32], b: &mut LansBlockMut<'_>) -> LansCoef {
+/// Reductions accumulate in f32 within [`NORM_SEG`] sub-chunks
+/// (vectorizable) and the caller combines the partials in f64 — same
+/// accuracy class as pairwise summation, lets LLVM keep the lane loop in
+/// f32 (§Perf iteration 3).  The serial path folds the partials directly;
+/// the sharded path collects them per shard and folds after the exchange —
+/// same values, same order, so the two are bit-identical.
+pub(crate) fn lans_update_segments(
+    cx: &AdamCtx,
+    x: &[f32],
+    b: &mut LansBlockMut<'_>,
+    inv_gnorm: f32,
+    mut sink: impl FnMut(f64, f64, f64),
+) {
     let hp = cx.hp;
-    // eq. (4): block gradient normalization
-    let grad_sq: f64 = b.g.iter().map(|&g| (g as f64) * (g as f64)).sum();
-    let inv_gnorm = 1.0 / (grad_sq.sqrt() as f32).max(NORM_EPS);
-
-    const SUB: usize = 4096;
     let n = x.len();
-    let (mut sx, mut sr, mut sc) = (0.0f64, 0.0f64, 0.0f64);
     let mut lo = 0;
     while lo < n {
-        let hi = (lo + SUB).min(n);
+        let hi = (lo + NORM_SEG).min(n);
         let (mut fx, mut fr, mut fc) = (0.0f32, 0.0f32, 0.0f32);
         for ((((xi, gi), mi), vi), (rfi, cfi)) in x[lo..hi]
             .iter()
@@ -194,11 +232,20 @@ pub(crate) fn lans_pass1_block(cx: &AdamCtx, x: &[f32], b: &mut LansBlockMut<'_>
             fr += r * r;
             fc += c * c;
         }
-        sx += fx as f64;
-        sr += fr as f64;
-        sc += fc as f64;
+        sink(fx as f64, fr as f64, fc as f64);
         lo = hi;
     }
+}
+
+/// Block gradient norm → eq. (4) normalization factor.
+pub(crate) fn lans_inv_gnorm(grad_sq: f64) -> f32 {
+    1.0 / (grad_sq.sqrt() as f32).max(NORM_EPS)
+}
+
+/// Apply coefficients from the combined block norms — shared by every path
+/// so the trust-ratio arithmetic has exactly one home.
+pub(crate) fn lans_coef(cx: &AdamCtx, sx: f64, sr: f64, sc: f64, grad_sq: f64) -> LansCoef {
+    let hp = cx.hp;
     let x_norm = sx.sqrt() as f32;
     let r_norm = (sr.sqrt() as f32).max(NORM_EPS);
     let c_norm = (sc.sqrt() as f32).max(NORM_EPS);
@@ -208,6 +255,21 @@ pub(crate) fn lans_pass1_block(cx: &AdamCtx, x: &[f32], b: &mut LansBlockMut<'_>
         trust: (x_norm / r_norm) as f64,
         grad_sq,
     }
+}
+
+/// LANS pass 1 for one whole block: the composition of the canonical
+/// segment reductions above.
+pub(crate) fn lans_pass1_block(cx: &AdamCtx, x: &[f32], b: &mut LansBlockMut<'_>) -> LansCoef {
+    let mut grad_sq = 0.0f64;
+    grad_sq_segments(b.g, |p| grad_sq += p);
+    let inv_gnorm = lans_inv_gnorm(grad_sq);
+    let (mut sx, mut sr, mut sc) = (0.0f64, 0.0f64, 0.0f64);
+    lans_update_segments(cx, x, b, inv_gnorm, |px, pr, pc| {
+        sx += px;
+        sr += pr;
+        sc += pc;
+    });
+    lans_coef(cx, sx, sr, sc, grad_sq)
 }
 
 /// LANS pass 2 for one block: apply from the cached directions.  Returns
@@ -301,7 +363,64 @@ pub(crate) struct LambCoef {
     pub grad_sq: f64,
 }
 
-/// LAMB pass 1 for one block: moments, cached update direction, norms.
+/// LAMB moment/direction update over a segment-aligned range of one block,
+/// emitting the (Σx², Σu², Σg²) partial of every [`NORM_SEG`] segment in
+/// order via `sink`.  Accumulation is per-element f64 within a segment
+/// (LAMB's norms are not pre-normalized, so the f64 lanes stay) and the
+/// caller combines partials in f64 — the canonical order shared by the
+/// serial, block-parallel and sharded paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lamb_update_segments(
+    cx: &AdamCtx,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    u: &mut [f32],
+    wd: f32,
+    mut sink: impl FnMut(f64, f64, f64),
+) {
+    let hp = cx.hp;
+    let n = x.len();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + NORM_SEG).min(n);
+        let (mut sx2, mut su2, mut sg2) = (0.0f64, 0.0f64, 0.0f64);
+        for ((((xi, gi), mi), vi), ui) in x[lo..hi]
+            .iter()
+            .zip(g[lo..hi].iter())
+            .zip(m[lo..hi].iter_mut())
+            .zip(v[lo..hi].iter_mut())
+            .zip(u[lo..hi].iter_mut())
+        {
+            let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
+            let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
+            *mi = mn;
+            *vi = vn;
+            let un = mn * cx.inv_bc1 / ((vn * cx.inv_bc2).sqrt() + hp.eps) + wd * xi;
+            *ui = un;
+            sg2 += (*gi as f64) * (*gi as f64);
+            sx2 += (*xi as f64) * (*xi as f64);
+            su2 += (un as f64) * (un as f64);
+        }
+        sink(sx2, su2, sg2);
+        lo = hi;
+    }
+}
+
+/// Apply coefficient from the combined block norms.
+pub(crate) fn lamb_coef(cx: &AdamCtx, sx2: f64, su2: f64, grad_sq: f64) -> LambCoef {
+    let x_norm = sx2.sqrt() as f32;
+    let u_norm = (su2.sqrt() as f32).max(NORM_EPS);
+    LambCoef {
+        coef: cx.lr * x_norm / u_norm,
+        trust: (x_norm / u_norm) as f64,
+        grad_sq,
+    }
+}
+
+/// LAMB pass 1 for one whole block: moments, cached update direction,
+/// norms — the composition of the canonical segment reduction.
 pub(crate) fn lamb_pass1_block(
     cx: &AdamCtx,
     x: &[f32],
@@ -311,30 +430,13 @@ pub(crate) fn lamb_pass1_block(
     u: &mut [f32],
     wd: f32,
 ) -> LambCoef {
-    let hp = cx.hp;
-    let mut grad_sq = 0.0f64;
-    let mut sum_x2 = 0.0f64;
-    let mut sum_u2 = 0.0f64;
-    for ((((xi, gi), mi), vi), ui) in
-        x.iter().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut()).zip(u.iter_mut())
-    {
-        let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
-        let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-        *mi = mn;
-        *vi = vn;
-        let un = mn * cx.inv_bc1 / ((vn * cx.inv_bc2).sqrt() + hp.eps) + wd * xi;
-        *ui = un;
-        grad_sq += (*gi as f64) * (*gi as f64);
-        sum_x2 += (*xi as f64) * (*xi as f64);
-        sum_u2 += (un as f64) * (un as f64);
-    }
-    let x_norm = sum_x2.sqrt() as f32;
-    let u_norm = (sum_u2.sqrt() as f32).max(NORM_EPS);
-    LambCoef {
-        coef: cx.lr * x_norm / u_norm,
-        trust: (x_norm / u_norm) as f64,
-        grad_sq,
-    }
+    let (mut sx2, mut su2, mut sg2) = (0.0f64, 0.0f64, 0.0f64);
+    lamb_update_segments(cx, x, g, m, v, u, wd, |px, pu, pg| {
+        sx2 += px;
+        su2 += pu;
+        sg2 += pg;
+    });
+    lamb_coef(cx, sx2, su2, sg2)
 }
 
 /// LAMB apply for one block; returns the block's max |param|.

@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 use lans::checkpoint::Checkpoint;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
-use lans::optim::{Hyper, Schedule};
+use lans::optim::{BlockTable, Hyper, Schedule, ShardedOptimizer};
 use lans::runtime::{Engine, ModelMeta, ModelRuntime, TensorF32};
 
 fn artifacts_dir() -> PathBuf {
@@ -25,6 +25,8 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         backend: OptBackend::Native,
         workers: 2,
         threads: 1,
+        shard_optimizer: false,
+        resume_opt_state: false,
         global_batch: 16,
         steps: 2,
         seed: 1,
@@ -228,6 +230,122 @@ fn checkpoint_save_behind_file_is_contextual() {
     let err = format!("{e:#}");
     assert!(err.contains("lans_fi_ckpt_parent_file"), "unhelpful: {err}");
     std::fs::remove_file(&base).ok();
+}
+
+// --------------------------------------------------------------------------
+// sharded-optimizer shard-mismatch coverage
+// --------------------------------------------------------------------------
+
+fn toy_table() -> BlockTable {
+    BlockTable::new(&[("w".into(), 6000, true), ("b".into(), 40, false)])
+}
+
+#[test]
+fn sharded_state_with_wrong_total_names_both_counts() {
+    let hp = Hyper::default();
+    let donor =
+        ShardedOptimizer::from_name("lans", BlockTable::new(&[("w".into(), 128, true)]), hp, 2)
+            .unwrap();
+    let mut target = ShardedOptimizer::from_name("lans", toy_table(), hp, 4).unwrap();
+    let err = format!("{:#}", target.import_state(3, &donor.export_state()).unwrap_err());
+    assert!(err.contains("128") && err.contains("6040"), "unhelpful: {err}");
+}
+
+#[test]
+fn sharded_state_with_missing_shard_tensor_is_contextual() {
+    let hp = Hyper::default();
+    let donor = ShardedOptimizer::from_name("lans", toy_table(), hp, 3).unwrap();
+    let mut state = donor.export_state();
+    // drop shard 1's v tensor
+    state.retain(|(name, _)| name != "optshard:v:1");
+    let mut target = ShardedOptimizer::from_name("lans", toy_table(), hp, 3).unwrap();
+    let err = format!("{:#}", target.import_state(1, &state).unwrap_err());
+    assert!(
+        err.contains("shard 1") && err.contains("missing"),
+        "unhelpful: {err}"
+    );
+}
+
+#[test]
+fn sharded_state_absent_from_checkpoint_is_contextual() {
+    let mut target = ShardedOptimizer::from_name("lans", toy_table(), Hyper::default(), 2).unwrap();
+    let params_only = vec![("w".to_string(), TensorF32::new(vec![2], vec![0.0, 1.0]))];
+    let err = format!("{:#}", target.import_state(1, &params_only).unwrap_err());
+    assert!(err.contains("no sharded optimizer state"), "unhelpful: {err}");
+}
+
+#[test]
+fn sharded_restore_from_missing_file_names_the_path() {
+    let mut so = ShardedOptimizer::from_name("lamb", toy_table(), Hyper::default(), 2).unwrap();
+    let err = format!(
+        "{:#}",
+        so.restore_state(Path::new("/nonexistent/run/opt.ckpt")).unwrap_err()
+    );
+    assert!(err.contains("opt.ckpt"), "unhelpful: {err}");
+}
+
+#[test]
+fn shard_optimizer_on_hlo_backend_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.backend = OptBackend::Hlo;
+    cfg.shard_optimizer = true;
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("native"), "unhelpful: {err}");
+}
+
+#[test]
+fn shard_optimizer_with_elementwise_optimizer_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.optimizer = "adamw".into();
+    cfg.shard_optimizer = true;
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("lans|lamb"), "unhelpful: {err}");
+}
+
+#[test]
+fn resume_opt_state_without_shard_optimizer_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.resume_opt_state = true;
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("shard_optimizer"), "unhelpful: {err}");
+}
+
+#[test]
+fn resume_opt_state_from_params_only_checkpoint_errors() {
+    let Some(meta) = meta_path() else { return };
+    // a valid params-only checkpoint (no optshard:* tensors)
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(engine, &meta).unwrap();
+    let params = rt.init_params(5);
+    let dir = std::env::temp_dir().join("lans_fi_shard_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("params_only.ckpt");
+    Checkpoint {
+        step: 1,
+        tensors: rt
+            .meta
+            .params
+            .iter()
+            .zip(&params)
+            .map(|(s, t)| (s.name.clone(), t.clone()))
+            .collect(),
+    }
+    .save(&p)
+    .unwrap();
+
+    let mut cfg = base_cfg(meta);
+    cfg.shard_optimizer = true;
+    cfg.resume_opt_state = true;
+    cfg.resume_from = Some(p);
+    let Err(e) = Trainer::new(cfg).unwrap().run() else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("no sharded optimizer state"), "unhelpful: {err}");
 }
 
 #[test]

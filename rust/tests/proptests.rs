@@ -4,10 +4,15 @@
 //! many seeded random cases (shrinking is traded for a printed failing seed,
 //! which reproduces deterministically).
 
-use lans::collective::{ring_allreduce, ring_allreduce_pooled};
+use lans::collective::{
+    ring_all_gather, ring_all_gather_pooled, ring_allreduce, ring_allreduce_pooled,
+    ring_reduce_scatter, ring_reduce_scatter_pooled,
+};
 use lans::data::{make_shards, WithReplacementSampler};
 use lans::optim::schedule::{from_ratios, sqrt_scaled_lr, Schedule};
-use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer};
+use lans::optim::{
+    make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ShardPlan, ShardedOptimizer,
+};
 use lans::util::json::Json;
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
@@ -197,6 +202,34 @@ fn prop_pooled_allreduce_bit_identical_to_serial() {
     });
 }
 
+#[test]
+fn prop_reduce_scatter_then_all_gather_is_allreduce_bit_for_bit() {
+    // the identity the sharded-optimizer path rests on, for both the
+    // serial and the pooled halves, across worker counts and sizes that
+    // straddle POOLED_MIN_ELEMS
+    for_cases(60, |_, rng| {
+        let w = 1 + rng.below_usize(9);
+        let n = rng.below_usize(12_000);
+        let threads = 1 + rng.below_usize(8);
+        let template: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut reference = template.clone();
+        ring_allreduce(&mut reference);
+
+        let mut serial = template.clone();
+        ring_reduce_scatter(&mut serial);
+        ring_all_gather(&mut serial);
+        assert_eq!(serial, reference, "serial halves (w={w} n={n})");
+
+        let pool = ThreadPool::new(threads);
+        let mut pooled = template;
+        ring_reduce_scatter_pooled(&mut pooled, &pool);
+        ring_all_gather_pooled(&mut pooled, &pool);
+        assert_eq!(pooled, reference, "pooled halves (w={w} n={n} threads={threads})");
+    });
+}
+
 // ---------------------------------------------------------------------------
 // optimizer properties
 // ---------------------------------------------------------------------------
@@ -322,6 +355,145 @@ fn prop_parallel_block_sharded_step_matches_serial() {
                 );
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sharded-optimizer properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shard_plan_is_aligned_partition() {
+    // boundaries are monotone, cover [0, n), and cut only on the
+    // block-local NORM_SEG grid; fragments tile every shard range
+    for_cases(80, |_, rng| {
+        let nblocks = 1 + rng.below_usize(6);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(12_000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let w = 1 + rng.below_usize(12);
+        let plan = ShardPlan::build(&table, w);
+        assert_eq!(plan.workers(), w);
+        assert_eq!(plan.total(), table.total);
+        assert!(plan.starts.windows(2).all(|p| p[0] <= p[1]));
+        let mut cursor = 0;
+        for s in 0..w {
+            for f in plan.fragments(s) {
+                let b = &table.blocks[f.block];
+                assert_eq!((f.start - b.offset) % ShardPlan::ALIGN, 0, "misaligned cut");
+                assert_eq!(f.start, cursor, "fragments must tile in order");
+                cursor += f.len;
+            }
+        }
+        assert_eq!(cursor, table.total);
+    });
+}
+
+#[test]
+fn prop_sharded_pipeline_matches_replicated_bit_for_bit() {
+    // the full ZeRO-1 step — reduce-scatter, scatter_to_plan, sharded
+    // update — against allreduce + replicated serial update, from the same
+    // per-worker gradient buffers: identical trajectories and stats,
+    // across random block tables (straddling NORM_SEG), worker counts,
+    // steps, and both sharded execution modes (serial/pooled)
+    for_cases(30, |seed, rng| {
+        let nblocks = 1 + rng.below_usize(5);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(9000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let w = 1 + rng.below_usize(6);
+        let steps = 1 + rng.below_usize(3);
+        let pool = ThreadPool::new(2 + rng.below_usize(6));
+        let use_pool = seed % 2 == 0;
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb"] {
+            let hp = Hyper::default();
+            let mut rep = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut sh = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut xr = x0.clone();
+            let mut xs = x0.clone();
+            for k in 0..steps {
+                // per-worker gradient buffers, as the trainer's workers
+                // would produce them
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                let scale = 1.0 / (w as f32 * 3.0); // arbitrary mean factor
+                let lr = 0.005 + 0.004 * k as f32;
+
+                // replicated: allreduce, scale, serial step
+                let mut r = bufs.clone();
+                ring_allreduce(&mut r);
+                let mut grad = std::mem::take(&mut r[0]);
+                for g in grad.iter_mut() {
+                    *g *= scale;
+                }
+                let s_rep = rep.step(&mut xr, &grad, lr);
+
+                // sharded: reduce-scatter, stitch owned ranges, shard update
+                let mut b = bufs;
+                ring_reduce_scatter(&mut b);
+                let shard_grads = scatter_to_plan(&b, sh.plan(), scale);
+                let s_sh = if use_pool {
+                    sh.step_pooled(&pool, &mut xs, &shard_grads, lr)
+                } else {
+                    sh.step(&mut xs, &shard_grads, lr)
+                };
+
+                assert_eq!(s_rep.grad_norm, s_sh.grad_norm, "{name} w={w}");
+                assert_eq!(
+                    s_rep.mean_trust_ratio, s_sh.mean_trust_ratio,
+                    "{name} w={w}"
+                );
+                assert_eq!(s_rep.max_abs_param, s_sh.max_abs_param, "{name} w={w}");
+            }
+            assert_eq!(xr, xs, "{name} (w={w}, steps={steps}): trajectory diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_state_reshards_to_any_worker_count() {
+    // save at W=w0, restore at W=w1, continue: identical to the replicated
+    // serial run over the same gradient stream
+    for_cases(20, |_, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(9000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let (w0, w1) = (1 + rng.below_usize(8), 1 + rng.below_usize(8));
+        let hp = Hyper::default();
+        let gs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+
+        // replicated reference over all 4 steps
+        let mut rep = make_optimizer("lans", table.clone(), hp).unwrap();
+        let mut xr = x0.clone();
+        for g in &gs {
+            rep.step(&mut xr, g, 0.01);
+        }
+
+        // sharded: 2 steps at w0, state roundtrip, 2 more at w1
+        let mut a = ShardedOptimizer::from_name("lans", table.clone(), hp, w0).unwrap();
+        let mut xs = x0;
+        for g in &gs[..2] {
+            let sg = a.plan().split(g);
+            a.step(&mut xs, &sg, 0.01);
+        }
+        let (state, step) = (a.export_state(), a.steps_taken());
+        let mut b = ShardedOptimizer::from_name("lans", table.clone(), hp, w1).unwrap();
+        b.import_state(step, &state).unwrap();
+        for g in &gs[2..] {
+            let sg = b.plan().split(g);
+            b.step(&mut xs, &sg, 0.01);
+        }
+        assert_eq!(xr, xs, "w0={w0} -> w1={w1}: resharded trajectory diverged");
     });
 }
 

@@ -154,6 +154,8 @@ fn trainer_loss_decreases_small_run() {
         backend: OptBackend::Native,
         workers: 2,
         threads: 1,
+        shard_optimizer: false,
+        resume_opt_state: false,
         global_batch: 16,
         steps: 30,
         seed: 1,
