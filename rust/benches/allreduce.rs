@@ -1,60 +1,146 @@
 //! Collective bench: in-process ring-allreduce throughput across worker
-//! counts and message sizes, against the α-β cost model's predictions for
+//! counts and message sizes — serial, chunk-parallel on the persistent
+//! pool, and chunk-parallel on the per-call-spawn baseline (every ring
+//! step used to pay a spawn+join per worker; a W-worker allreduce issues
+//! `2(W-1)` such regions) — against the α-β cost model's predictions for
 //! the paper's real testbeds.
+//!
+//! `--quick` (CI smoke): fewer iterations and a trimmed sweep.  Numbers
+//! land in `BENCH_allreduce.json`.
 
 use lans::collective::cost::{
     allreduce_time_s, flat_gpu_ring_time_s, hierarchical_allreduce_time_s, CommSpec,
 };
-use lans::util::bench::{bench, Table};
+use lans::collective::{ring_allreduce, ring_allreduce_pooled};
+use lans::util::bench::{bench, quick_mode, Reporter, Table};
+use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
 
 fn main() {
-    println!("=== in-process ring allreduce (sum) ===\n");
-    let mut t = Table::new(&["workers", "floats", "mean ms", "GB/s (algo)"]);
-    for &w in &[2usize, 4, 8] {
-        for &n in &[1usize << 16, 1 << 20, 1 << 22] {
+    let quick = quick_mode();
+    let mut rep = Reporter::new("allreduce");
+    let iters = if quick { 3 } else { 10 };
+    let avail = ThreadPool::available();
+    let pool = ThreadPool::new(avail);
+    let spawn_pool = ThreadPool::new_spawning(avail);
+
+    println!(
+        "=== in-process ring allreduce (sum), pool width {avail}{} ===\n",
+        if quick { ", --quick" } else { "" }
+    );
+    let mut t = Table::new(&[
+        "workers",
+        "floats",
+        "serial ms",
+        "pooled ms",
+        "pooled (spawn) ms",
+        "pool speedup",
+        "GB/s (algo, pooled)",
+    ]);
+    let workers: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
+    let sizes: &[usize] = if quick {
+        &[1 << 16, 1 << 20]
+    } else {
+        &[1 << 16, 1 << 20, 1 << 22]
+    };
+    let mut pairs: Vec<(usize, usize, f64, f64)> = Vec::new();
+    for &w in workers {
+        for &n in sizes {
             let mut rng = Rng::new((w * n) as u64);
             let template: Vec<Vec<f32>> = (0..w)
                 .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
                 .collect();
             let mut bufs = template.clone();
-            let r = bench(&format!("ring w={w} n={n}"), 2, 10, || {
+            let r_serial = bench(&format!("serial/w{w}/n{n}"), 2, iters, || {
                 bufs.clone_from(&template);
-                lans::collective::ring_allreduce(std::hint::black_box(&mut bufs));
+                ring_allreduce(std::hint::black_box(&mut bufs));
+            });
+            let r_pooled = bench(&format!("pooled/w{w}/n{n}"), 2, iters, || {
+                bufs.clone_from(&template);
+                ring_allreduce_pooled(std::hint::black_box(&mut bufs), &pool);
+            });
+            let r_spawn = bench(&format!("pooled_spawn/w{w}/n{n}"), 2, iters, || {
+                bufs.clone_from(&template);
+                ring_allreduce_pooled(std::hint::black_box(&mut bufs), &spawn_pool);
             });
             // algorithm bandwidth: 2(w-1)/w * n * 4 bytes moved per worker
             let bytes = 2.0 * (w as f64 - 1.0) / w as f64 * n as f64 * 4.0;
             t.row(&[
                 w.to_string(),
                 n.to_string(),
-                format!("{:.3}", r.mean_ms()),
-                format!("{:.2}", bytes / (r.mean_ns * 1e-9) / 1e9),
+                format!("{:.3}", r_serial.mean_ms()),
+                format!("{:.3}", r_pooled.mean_ms()),
+                format!("{:.3}", r_spawn.mean_ms()),
+                format!("{:.2}x", r_spawn.mean_ns / r_pooled.mean_ns),
+                format!("{:.2}", bytes / (r_pooled.mean_ns * 1e-9) / 1e9),
             ]);
+            rep.result(&r_serial);
+            rep.result(&r_pooled);
+            rep.result(&r_spawn);
+            pairs.push((w, n, r_pooled.mean_ns, r_spawn.mean_ns));
         }
     }
     t.print();
+    println!(
+        "\n(pooled runs the same two-phase ring schedule with each step's \
+         W chunk ops as one persistent-pool region; the spawn column pays \
+         the legacy per-region thread spawn+join — 2(W-1) of them per \
+         allreduce — which the persistent pool exists to remove.)"
+    );
 
-    println!("\n=== α-β model: BERT-Large gradients (1.34 GB) on paper testbeds ===\n");
-    let bytes = 334e6 * 4.0;
-    let mut t2 = Table::new(&["scheme", "testbed", "modeled"]);
-    t2.row(&[
-        "flat ring (NIC shared by 8 GPUs)".into(),
-        "192 x p3dn".into(),
-        format!("{:.1} ms", flat_gpu_ring_time_s(192, 8, bytes, CommSpec::efa()) * 1e3),
-    ]);
-    t2.row(&[
-        "hierarchical (NVLink + EFA)".into(),
-        "192 x p3dn".into(),
-        format!(
-            "{:.1} ms",
-            hierarchical_allreduce_time_s(192, 8, bytes, CommSpec::nvlink(), CommSpec::efa())
-                * 1e3
-        ),
-    ]);
-    t2.row(&[
-        "flat ring (ICI)".into(),
-        "1024 TPUv3".into(),
-        format!("{:.1} ms", allreduce_time_s(1024, bytes, CommSpec::tpu_ici()) * 1e3),
-    ]);
-    t2.print();
+    if !quick {
+        println!("\n=== α-β model: BERT-Large gradients (1.34 GB) on paper testbeds ===\n");
+        let bytes = 334e6 * 4.0;
+        let mut t2 = Table::new(&["scheme", "testbed", "modeled"]);
+        t2.row(&[
+            "flat ring (NIC shared by 8 GPUs)".into(),
+            "192 x p3dn".into(),
+            format!("{:.1} ms", flat_gpu_ring_time_s(192, 8, bytes, CommSpec::efa()) * 1e3),
+        ]);
+        t2.row(&[
+            "hierarchical (NVLink + EFA)".into(),
+            "192 x p3dn".into(),
+            format!(
+                "{:.1} ms",
+                hierarchical_allreduce_time_s(
+                    192,
+                    8,
+                    bytes,
+                    CommSpec::nvlink(),
+                    CommSpec::efa()
+                ) * 1e3
+            ),
+        ]);
+        t2.row(&[
+            "flat ring (ICI)".into(),
+            "1024 TPUv3".into(),
+            format!("{:.1} ms", allreduce_time_s(1024, bytes, CommSpec::tpu_ici()) * 1e3),
+        ]);
+        t2.print();
+    }
+
+    rep.write().expect("writing BENCH_allreduce.json");
+
+    // acceptance: on the largest swept message the persistent pool must
+    // beat the per-call-spawn baseline (the 2(W-1) spawn+joins per
+    // allreduce are pure overhead); small messages are allowed to tie —
+    // they fall back to the serial schedule below POOLED_MIN_ELEMS.
+    if avail >= 2 {
+        let &(w, n, pooled_ns, spawn_ns) = pairs.last().unwrap();
+        assert!(
+            pooled_ns < spawn_ns,
+            "persistent-pool allreduce ({:.3} ms) must beat the spawn baseline \
+             ({:.3} ms) at w={w}, n={n}",
+            pooled_ns / 1e6,
+            spawn_ns / 1e6
+        );
+        println!(
+            "\npersistent pool beats per-call spawn on the w={w}, n={n} allreduce: \
+             {:.3} vs {:.3} ms",
+            pooled_ns / 1e6,
+            spawn_ns / 1e6
+        );
+    } else {
+        println!("\n[pool-vs-spawn assertion skipped: single core]");
+    }
 }

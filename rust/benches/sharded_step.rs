@@ -1,19 +1,30 @@
 //! Sharded-optimizer bench: per-worker LANS update time vs worker count at
 //! bert-base scale (≈110M params), next to the replicated serial baseline,
-//! plus the modeled reduce-scatter/all-gather communication cost on the
-//! paper's EFA testbed.
+//! the modeled reduce-scatter/all-gather communication cost on the paper's
+//! EFA testbed, and the pipelined step (reduce-scatter buffers handed
+//! straight to the optimizer, stitch fused with the grad² phase) against
+//! the two-stage scatter-then-step path it replaces.
 //!
 //! The point of the subsystem (ZeRO-1, Lin et al. 2020): per-worker update
 //! compute and moment memory both shrink by W× at *identical arithmetic* —
 //! the sharded trajectory is bit-identical to the replicated one
 //! (property-tested; spot-checked again here).
+//!
+//! `--quick` (CI smoke): fewer reps, trimmed W sweep, same assertions.
+//! Numbers land in `BENCH_sharded_step.json`.
 
 use lans::collective::cost::{all_gather_time_s, reduce_scatter_time_s, CommSpec};
-use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer, ShardedOptimizer};
-use lans::util::bench::{bench, Table};
+use lans::collective::ring_reduce_scatter;
+use lans::optim::{
+    make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ShardedOptimizer,
+};
+use lans::util::bench::{bench, quick_mode, Reporter, Table};
+use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
 
 fn main() {
+    let quick = quick_mode();
+    let mut rep = Reporter::new("sharded_step");
     let table = BlockTable::bert_base();
     let n = table.total;
     let mut rng = Rng::new(1);
@@ -22,17 +33,22 @@ fn main() {
     let bytes = n as f64 * 4.0;
 
     println!(
-        "=== sharded LANS step, bert-base scale ({:.1}M params) ===\n",
-        n as f64 / 1e6
+        "=== sharded LANS step, bert-base scale ({:.1}M params{}) ===\n",
+        n as f64 / 1e6,
+        if quick { ", --quick" } else { "" }
     );
 
-    // replicated serial baseline
-    let mut rep = make_optimizer("lans", table.clone(), Hyper::default()).unwrap();
-    let mut xr = x0.clone();
-    let r_rep = bench("replicated serial", 1, 5, || {
-        rep.step(std::hint::black_box(&mut xr), &g, 0.001);
-    });
+    // replicated serial baseline (scoped so its 4n of state frees early)
+    let (warmup, reps) = if quick { (1, 2) } else { (1, 5) };
+    let r_rep = {
+        let mut rep_opt = make_optimizer("lans", table.clone(), Hyper::default()).unwrap();
+        let mut xr = x0.clone();
+        bench("replicated serial", warmup, reps, || {
+            rep_opt.step(std::hint::black_box(&mut xr), &g, 0.001);
+        })
+    };
     println!("replicated serial LANS step: {:.2} ms\n", r_rep.mean_ms());
+    rep.result(&r_rep);
 
     // correctness spot-check: one sharded step must reproduce the
     // replicated bits exactly
@@ -55,8 +71,9 @@ fn main() {
         "moments MB/worker",
         "modeled RS+AG (EFA)",
     ]);
+    let w_sweep: &[usize] = if quick { &[1, 2, 4, 8] } else { &[1, 2, 4, 8, 16] };
     let mut per_worker = Vec::new();
-    for w in [1usize, 2, 4, 8, 16] {
+    for &w in w_sweep {
         let mut so =
             ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), w).unwrap();
         let shard_grads = so.plan().split(&g);
@@ -64,7 +81,6 @@ fn main() {
         // warm-up, then average the slowest shard's wall time over reps —
         // what one worker of a W-wide deployment would spend updating
         so.step_timed(&mut x, &shard_grads, 0.001);
-        let reps = 5;
         let mut worst_sum = 0.0f64;
         for _ in 0..reps {
             let (_, secs) = so.step_timed(std::hint::black_box(&mut x), &shard_grads, 0.001);
@@ -83,6 +99,7 @@ fn main() {
             format!("{:.1}", 2.0 * max_shard as f64 * 4.0 / 1e6),
             format!("{comm_ms:.1} ms"),
         ]);
+        rep.metric(&format!("per_worker_ms_w{w}"), ms);
     }
     t.print();
     println!(
@@ -91,6 +108,63 @@ fn main() {
          of the gradient reduce-scatter + parameter all-gather on 100 Gb/s \
          EFA — what replaces the allreduce on the wire.)"
     );
+
+    // ---- pipelined step: fused stitch + phase A vs scatter-then-step ----
+    // both paths start from the same reduce-scattered buffers; the fused
+    // path parallelizes the owned-range stitch across the pool and folds
+    // the grad² partials while the stitched chunks are cache-hot, instead
+    // of a serial full-vector scatter_to_plan on the caller followed by a
+    // separate phase-A region.
+    let avail = ThreadPool::available();
+    let w = 4usize;
+    let pool = ThreadPool::new(avail);
+    println!(
+        "\n=== pipelined sharded step (W={w}, pool={avail} threads): \
+         scatter-then-step vs fused step_scattered ===\n"
+    );
+    let bufs: Vec<Vec<f32>> = {
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        ring_reduce_scatter(&mut bufs);
+        bufs
+    };
+    let scale = 1.0 / w as f32;
+
+    let (r_old, x_old) = {
+        let mut so_old =
+            ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), w).unwrap();
+        let mut x_old = x0.clone();
+        let r = bench("scatter_to_plan + step_pooled", warmup, reps, || {
+            let sg = scatter_to_plan(&bufs, so_old.plan(), scale);
+            so_old.step_pooled(&pool, std::hint::black_box(&mut x_old), &sg, 0.001);
+        });
+        (r, x_old)
+    };
+    let (r_new, x_new) = {
+        let mut so_new =
+            ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), w).unwrap();
+        let mut x_new = x0.clone();
+        let r = bench("fused step_scattered", warmup, reps, || {
+            so_new.step_scattered(&pool, std::hint::black_box(&mut x_new), &bufs, scale, 0.001);
+        });
+        (r, x_new)
+    };
+    rep.result(&r_old);
+    rep.result(&r_new);
+    rep.metric("pipelined_old_ms", r_old.mean_ms());
+    rep.metric("pipelined_new_ms", r_new.mean_ms());
+    println!(
+        "scatter-then-step: {:.2} ms   fused step_scattered: {:.2} ms   ({:.2}x)",
+        r_old.mean_ms(),
+        r_new.mean_ms(),
+        r_old.mean_ns / r_new.mean_ns
+    );
+    // and the bits must agree — the two paths drove identical updates
+    assert_eq!(x_old, x_new, "pipelined step diverged from scatter-then-step");
+
+    // persist numbers before the acceptance assertions
+    rep.write().expect("writing BENCH_sharded_step.json");
 
     // acceptance: per-worker update time decreases monotonically in W
     for pair in per_worker.windows(2) {
@@ -103,11 +177,24 @@ fn main() {
     let (first, last) = (per_worker[0].1, per_worker.last().unwrap().1);
     assert!(
         last < first * 0.5,
-        "W=16 per-worker time ({last:.2} ms) should be well under half of W=1 ({first:.2} ms)"
+        "W={} per-worker time ({last:.2} ms) should be well under half of W=1 ({first:.2} ms)",
+        per_worker.last().unwrap().0
     );
     println!(
-        "\nper-worker update time W=1 -> W=16: {first:.2} ms -> {last:.2} ms \
+        "\nper-worker update time W=1 -> W={}: {first:.2} ms -> {last:.2} ms \
          ({:.1}x) — the W-fold optimizer-compute cut the sharded subsystem buys",
+        per_worker.last().unwrap().0,
         first / last
     );
+
+    // acceptance: the fused path must not lose to the two-stage path it
+    // replaces (it strictly removes a serial stitch pass and a region)
+    if avail >= 2 {
+        assert!(
+            r_new.mean_ns < r_old.mean_ns * 1.05,
+            "fused step_scattered ({:.2} ms) must not lose to scatter-then-step ({:.2} ms)",
+            r_new.mean_ms(),
+            r_old.mean_ms()
+        );
+    }
 }

@@ -22,10 +22,10 @@
 
 use crate::util::pool::ThreadPool;
 
-/// Below this buffer length the pool's per-step spawn cost exceeds the
-/// chunk work; the pooled variants fall back to the serial schedule
-/// (identical results either way).
-pub const POOLED_MIN_ELEMS: usize = 1 << 12;
+// The serial-fallback floor lives in the shared `util::pool::policy`
+// module (one home for every such threshold); re-exported here so the
+// collective API keeps its historical path.
+pub use crate::util::pool::policy::POOLED_MIN_ELEMS;
 
 /// The ring's default chunk grid: chunk `c` covers
 /// `[c * n / w, (c + 1) * n / w)`.

@@ -16,9 +16,12 @@
 //!
 //! [`ring_allreduce_pooled`] is the chunk-parallel variant: within each ring
 //! step the W per-chunk copies/sums touch disjoint buffer regions, so they
-//! run concurrently on a [`ThreadPool`].  Element order within every chunk
-//! is unchanged, so the pooled result is bit-identical to the serial one
-//! (asserted by tests here and in `tests/proptests.rs`).
+//! run concurrently as one [`ThreadPool`] region per step — `2(W-1)` cheap
+//! regions per allreduce on the persistent pool's parked workers (the
+//! per-call-spawn cost this schedule used to pay per step is what the
+//! `allreduce` bench's spawn column measures).  Element order within every
+//! chunk is unchanged, so the pooled result is bit-identical to the serial
+//! one (asserted by tests here and in `tests/proptests.rs`).
 
 use crate::util::pool::ThreadPool;
 

@@ -20,7 +20,7 @@ use crate::collective::{ring_allreduce_pooled, ring_reduce_scatter_pooled};
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::Recorder;
 use crate::optim::{
-    make_optimizer, scatter_to_plan, BlockTable, Optimizer, ParallelExecutor, ShardedOptimizer,
+    make_optimizer, BlockTable, Optimizer, ParallelExecutor, ShardedOptimizer,
 };
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
 
@@ -224,9 +224,10 @@ impl Trainer {
             OptBackend::Hlo => Vec::new(),
         };
 
-        // one pool for the whole run: block-parallel optimizer updates and
-        // chunk-parallel allreduce (cfg.threads = 0 → available parallelism,
-        // 1 → the exact serial path)
+        // one persistent pool for the whole run: plan-parallel optimizer
+        // updates and chunk-parallel collectives share its parked workers
+        // across every step (cfg.threads = 0 → available parallelism,
+        // 1 → the exact serial path, nothing spawned)
         let exec = ParallelExecutor::new(cfg.threads);
 
         let mut recorder = Recorder::new(0.9);
@@ -261,19 +262,20 @@ impl Trainer {
 
             // combine worker gradients and update
             let (grad_norm, trust) = if let Some(so) = sharded_opt.as_mut() {
-                // ZeRO-1 step: reduce-scatter on the ring's own chunk grid
-                // (summation order identical to the allreduce), stitch each
-                // worker's owned mean-gradient range, update only the owned
-                // shards, then all-gather the updated parameters — a no-op
-                // in-process, since every worker reads the same flat vector
-                // (the time model prices the wire version).
+                // pipelined ZeRO-1 step: reduce-scatter on the ring's own
+                // chunk grid (summation order identical to the allreduce),
+                // then hand the scattered buffers straight to the
+                // optimizer — each shard's stitch of its owned
+                // mean-gradient range is fused with the grad² phase in
+                // one pool region instead of barriering on a full-vector
+                // scatter.  The parameter all-gather stays a no-op
+                // in-process (every worker reads the same flat vector;
+                // the time model prices the wire version).  step_scattered
+                // self-falls-back to the serial path for width-1 pools /
+                // small per-shard work; results are identical either way.
                 ring_reduce_scatter_pooled(&mut bufs, exec.pool());
-                let shard_grads = scatter_to_plan(&bufs, so.plan(), inv);
-                // step_pooled self-falls-back to the serial path for
-                // width-1 pools / small per-shard work, like the pooled
-                // collectives; results are identical either way
                 let stats =
-                    so.step_pooled(exec.pool(), &mut flat_params, &shard_grads, lr as f32);
+                    so.step_scattered(exec.pool(), &mut flat_params, &bufs, inv, lr as f32);
                 self.table.unflatten_into(&flat_params, &mut params);
                 (stats.grad_norm, stats.mean_trust_ratio)
             } else {

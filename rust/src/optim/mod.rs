@@ -14,6 +14,6 @@ pub use native::{
     make_optimizer, AdamW, Hyper, Lamb, Lans, MomentumSgd, Optimizer, StepStats, NORM_EPS,
     NORM_SEG,
 };
-pub use parallel::ParallelExecutor;
+pub use parallel::{lans_step_on_plan, lamb_step_on_plan, ParallelExecutor};
 pub use schedule::{from_ratios, sqrt_scaled_lr, Schedule};
 pub use sharded::{scatter_to_plan, Fragment, ShardPlan, ShardedOptimizer};

@@ -14,18 +14,20 @@
 //! Structure: each optimizer's update is factored into *per-block kernels*
 //! (`lans_pass1_block`/`lans_pass2_block`, `lamb_pass1_block`/
 //! `lamb_apply_block`, `adamw_block`).  The serial `Optimizer::step` loops
-//! over blocks calling those kernels; `optim::parallel` runs the very same
-//! kernels block-concurrently on a [`ThreadPool`], so the two paths are
-//! arithmetically identical by construction (the property tests assert it).
+//! over blocks calling those kernels; `optim::parallel` runs the same
+//! segment loops plan-concurrently on a [`ThreadPool`], so the two paths
+//! are arithmetically identical by construction (the property tests
+//! assert it).
 //!
 //! Canonical reduction order: every cross-element LANS/LAMB reduction
-//! (block gradient norm, ‖x‖/‖r‖/‖c‖/‖u‖) accumulates within
-//! [`NORM_SEG`]-element sub-chunks of a *block-local* grid and combines the
-//! sub-chunk partials in f64, in order.  The segment loops live in
-//! `grad_sq_segments` / `lans_update_segments` / `lamb_update_segments` and
-//! are shared verbatim by the serial path, the block-parallel path and the
-//! sharded path (`optim::sharded`, whose `ShardPlan` cuts only on the
-//! segment grid) — which is what makes all three bit-identical.
+//! (block gradient norm, ‖x‖/‖r‖/‖c‖/‖u‖ — and AdamW's block grad²)
+//! accumulates within [`NORM_SEG`]-element sub-chunks of a *block-local*
+//! grid and combines the sub-chunk partials in f64, in order.  The segment
+//! loops live in `grad_sq_segments` / `lans_update_segments` /
+//! `lamb_update_segments` and are shared verbatim by the serial path, the
+//! plan-granularity replicated path (`optim::parallel`) and the sharded
+//! path (`optim::sharded`) — both of which cut the flat vector only on the
+//! segment grid, which is what makes all three bit-identical.
 
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Welford;
@@ -91,10 +93,11 @@ pub trait Optimizer: Send {
     /// One update; `t` is maintained internally (1-based).
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) -> StepStats;
 
-    /// Block-sharded parallel update on `pool`.  The default falls back to
+    /// Plan-sharded parallel update on `pool`.  The default falls back to
     /// the serial [`Optimizer::step`]; LANS/LAMB/AdamW override it with a
-    /// block-concurrent path that produces identical arithmetic (same
-    /// per-block kernels, same reduction order).
+    /// plan-granularity concurrent path (the flat vector cut on the
+    /// block-local [`NORM_SEG`] grid) that produces identical arithmetic
+    /// (same segment kernels, same reduction order).
     fn step_parallel(
         &mut self,
         pool: &ThreadPool,
@@ -516,23 +519,22 @@ impl AdamW {
     }
 }
 
-/// AdamW single-pass block update; returns (max |param|, block grad²).
-pub(crate) fn adamw_block(
+/// AdamW element-wise update over any range of one block, given the
+/// block's precomputed eq. 4 normalization factor (`1.0` when blockwise
+/// gradient normalization is off).  Returns the range's max |param|.
+/// There is no cross-element reduction here, so any cut of a block —
+/// including the plan-granularity executor's mid-block chunks — produces
+/// identical bits.
+pub(crate) fn adamw_apply(
     cx: &AdamCtx,
-    block_grad_norm: bool,
+    inv_gnorm: f32,
+    wd: f32,
     x: &mut [f32],
     g: &[f32],
     m: &mut [f32],
     v: &mut [f32],
-    wd: f32,
-) -> (f32, f64) {
+) -> f32 {
     let hp = cx.hp;
-    let grad_sq: f64 = g.iter().map(|&gi| (gi as f64) * (gi as f64)).sum();
-    let inv_gnorm = if block_grad_norm {
-        1.0 / (grad_sq.sqrt() as f32).max(NORM_EPS)
-    } else {
-        1.0
-    };
     let mut max_abs = 0.0f32;
     for (((xi, gi), mi), vi) in
         x.iter_mut().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut())
@@ -546,7 +548,26 @@ pub(crate) fn adamw_block(
         *xi -= cx.lr * upd;
         max_abs = max_abs.max(xi.abs());
     }
-    (max_abs, grad_sq)
+    max_abs
+}
+
+/// AdamW single-pass block update; returns (max |param|, block grad²).
+/// The block grad² uses the canonical segmented fold ([`grad_sq_segments`])
+/// so the serial path and the plan-granularity parallel path are
+/// bit-identical.
+pub(crate) fn adamw_block(
+    cx: &AdamCtx,
+    block_grad_norm: bool,
+    x: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    wd: f32,
+) -> (f32, f64) {
+    let mut grad_sq = 0.0f64;
+    grad_sq_segments(g, |p| grad_sq += p);
+    let inv_gnorm = if block_grad_norm { lans_inv_gnorm(grad_sq) } else { 1.0 };
+    (adamw_apply(cx, inv_gnorm, wd, x, g, m, v), grad_sq)
 }
 
 impl Optimizer for AdamW {

@@ -1,50 +1,53 @@
-//! Block-sharded parallel optimizer stepping — the `ParallelExecutor`
-//! subsystem.
+//! Plan-granularity parallel optimizer stepping — the replicated-path
+//! executor.
 //!
-//! LAMB/LANS are defined per *block* (one parameter tensor = one G_b), and
-//! every per-block quantity — gradient norm, moments, trust ratio, apply —
-//! is independent across blocks.  The executor exploits exactly that: it
-//! shards the flat parameter/gradient/moment vectors on [`BlockTable`]
-//! boundaries into disjoint mutable slices and runs the per-block kernels
-//! from [`super::native`] concurrently on a [`ThreadPool`], in two parallel
-//! phases per step:
+//! The first executor sharded work on [`BlockTable`] boundaries (one task
+//! per parameter tensor, the rust analogue of apex `multi_tensor_apply`).
+//! That ceiling is the largest block: BERT's word embedding is ~20% of all
+//! parameters, so block granularity cannot speed the step up more than
+//! ~5× no matter the thread count.  This executor instead cuts the flat
+//! vector on the balanced [`ShardPlan`] grid from `optim::sharded` —
+//! boundaries snapped to the block-local
+//! [`NORM_SEG`](super::native::NORM_SEG) segment grid, oversubscribed
+//! [`policy::PLAN_CHUNKS_PER_THREAD`]× per pool thread so dynamic
+//! scheduling stays load-balanced — and runs the *same* three-phase
+//! segmented engine ([`segmented_step`]) as the sharded optimizer:
 //!
-//!   1. **norms/moments** — `*_pass1_block` per block (moment updates, the
-//!      ‖x‖/‖r‖/‖c‖ reductions, the block's apply coefficients);
-//!   2. **apply** — `*_pass2/apply_block` per block from the cached
-//!      directions.
+//!   1. **grad² partials** (LANS/AdamW) — per-segment block gradient
+//!      norms;
+//!   2. **moments/directions + norm partials** — combined per block in
+//!      global segment order;
+//!   3. **apply** — from the per-block coefficients.
 //!
-//! Because the parallel path runs the *same* kernels in the same per-block
-//! order for every reduction that crosses blocks (grad-norm sum, trust-mean
-//! push), its results are arithmetically identical to the serial path —
-//! `tests/proptests.rs` asserts serial == parallel across random block
-//! tables, thread counts and step counts.  This is the rust analogue of
-//! apex `multi_tensor_apply`: one launch over many tensors, work split by
-//! block, with dynamic scheduling so BERT's ~20%-of-parameters embedding
-//! block does not serialize the sweep.
+//! Because every cut sits on the segment grid and partials combine in
+//! segment order — the serial kernels' own hierarchical fold — the
+//! parallel path is *bit-identical* to the serial `Optimizer::step` (and
+//! to the sharded path, which runs the same engine): `tests/proptests.rs`
+//! asserts exact equality across random block tables, thread counts and
+//! step counts.  [`ShardPlan::per_block`] preserves the old block
+//! granularity purely as the baseline the `optimizer_step` bench measures
+//! the ceiling against.
 
-use crate::util::pool::ThreadPool;
-use crate::util::stats::Welford;
+use crate::util::pool::{policy, ThreadPool};
+
+pub use crate::util::pool::policy::PARALLEL_MIN_ELEMS;
 
 use super::blocks::BlockTable;
 use super::native::{
-    adamw_block, lamb_apply_block, lamb_pass1_block, lans_pass1_block, lans_pass2_block,
-    AdamCtx, AdamW, Lamb, Lans, LansBlockMut, Optimizer, StepStats,
+    adamw_apply, lans_inv_gnorm, AdamCtx, AdamW, Lamb, Lans, Optimizer, StepStats,
+};
+use super::sharded::{
+    combine_block_g2, frag_grad_sq_parts, segmented_step, split_at_plan, Algo, Fragment,
+    SegTask, ShardPlan,
 };
 
-/// Below this many total parameters a step is cheaper serial than the
-/// pool's per-call spawn cost (same floor the pre-executor within-block
-/// chunking used).  [`ParallelExecutor::step`] falls back automatically;
-/// results are identical either way.
-pub const PARALLEL_MIN_ELEMS: usize = 1 << 16;
-
-/// Executes optimizer steps block-parallel on an owned [`ThreadPool`].
+/// Executes optimizer steps plan-parallel on an owned [`ThreadPool`].
 ///
 /// Width 1 (or [`ParallelExecutor::serial`]) dispatches to the plain serial
 /// [`Optimizer::step`], preserving the legacy path exactly; width 0 at
 /// construction selects the machine's available parallelism.  Small models
 /// (fewer than [`PARALLEL_MIN_ELEMS`] parameters) also take the serial
-/// path: scoped-thread spawn cost would dominate the sharded compute.
+/// path: region overhead would dominate the sharded compute.
 pub struct ParallelExecutor {
     pool: ThreadPool,
 }
@@ -85,30 +88,49 @@ impl ParallelExecutor {
     }
 }
 
-/// Split `data` into one mutable slice per block (blocks tile the flat
-/// vector contiguously and in order, so this is a chain of `split_at_mut`).
-fn split_blocks<'a>(table: &BlockTable, mut data: &'a mut [f32]) -> Vec<&'a mut [f32]> {
-    assert_eq!(data.len(), table.total, "flat vector does not match block table");
-    let mut out = Vec::with_capacity(table.blocks.len());
-    for b in &table.blocks {
-        let (head, tail) = data.split_at_mut(b.len);
-        out.push(head);
-        data = tail;
-    }
-    out
+/// The balanced work grid for a `threads`-wide pool (see
+/// [`policy::plan_chunks`]).
+fn balanced_plan(table: &BlockTable, threads: usize) -> ShardPlan {
+    ShardPlan::build(table, policy::plan_chunks(threads))
 }
 
-/// Fold per-block pass-1 outputs into [`StepStats`] fields in block order —
-/// the same order the serial loop uses, so the cross-block reductions are
-/// bit-identical.
-fn fold_coefs(trusts: impl Iterator<Item = (f64, f64)>) -> (f64, f64) {
-    let mut welford = Welford::default();
-    let mut grad_sq = 0.0f64;
-    for (trust, gs) in trusts {
-        welford.push(trust);
-        grad_sq += gs;
+/// Carve one [`SegTask`] per plan chunk out of the full flat vectors.
+/// `dir_b` is `None` for LAMB (no second cached direction).
+fn build_seg_tasks<'a>(
+    plan: &'a ShardPlan,
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    m: &'a mut [f32],
+    v: &'a mut [f32],
+    dir_a: &'a mut [f32],
+    dir_b: Option<&'a mut [f32]>,
+) -> Vec<SegTask<'a>> {
+    let w = plan.workers();
+    let xs = split_at_plan(plan, params);
+    let ms = split_at_plan(plan, m);
+    let vs = split_at_plan(plan, v);
+    let das = split_at_plan(plan, dir_a);
+    let dbs: Vec<&'a mut [f32]> = match dir_b {
+        Some(db) => split_at_plan(plan, db),
+        None => (0..w).map(|_| <&mut [f32]>::default()).collect(),
+    };
+    let mut tasks = Vec::with_capacity(w);
+    for (((((s, x), m), v), da), db) in
+        (0..w).zip(xs).zip(ms).zip(vs).zip(das).zip(dbs)
+    {
+        tasks.push(SegTask {
+            x,
+            g: &grads[plan.range(s)],
+            m,
+            v,
+            dir_a: da,
+            dir_b: db,
+            frags: plan.fragments(s),
+            base: plan.starts[s],
+            secs: 0.0,
+        });
     }
-    (welford.mean(), grad_sq)
+    tasks
 }
 
 pub(crate) fn lans_step_parallel(
@@ -118,60 +140,34 @@ pub(crate) fn lans_step_parallel(
     grads: &[f32],
     lr: f32,
 ) -> StepStats {
+    let plan = balanced_plan(&o.table, pool.threads());
+    lans_step_on_plan(o, pool, &plan, params, grads, lr)
+}
+
+/// One LANS step on an explicit work grid.  `step_parallel` uses the
+/// balanced grid; the `optimizer_step` bench also drives the degenerate
+/// [`ShardPlan::per_block`] grid through here to measure the old
+/// largest-block ceiling.  Bit-identical to the serial step for any plan.
+pub fn lans_step_on_plan(
+    o: &mut Lans,
+    pool: &ThreadPool,
+    plan: &ShardPlan,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+) -> StepStats {
     o.t += 1;
     let cx = AdamCtx::new(o.hp, o.t as i32, lr);
-    let hp = o.hp;
-    let table = &o.table;
-
-    struct Task<'a> {
-        x: &'a mut [f32],
-        blk: LansBlockMut<'a>,
-        coef_r: f32,
-        coef_c: f32,
-    }
-
-    let xs = split_blocks(table, params);
-    let ms = split_blocks(table, &mut o.m);
-    let vs = split_blocks(table, &mut o.v);
-    let rfs = split_blocks(table, &mut o.r_full);
-    let cfs = split_blocks(table, &mut o.c_full);
-    let mut tasks: Vec<Task> = Vec::with_capacity(table.blocks.len());
-    for (((((b, x), m), v), rf), cf) in
-        table.blocks.iter().zip(xs).zip(ms).zip(vs).zip(rfs).zip(cfs)
-    {
-        tasks.push(Task {
-            x,
-            blk: LansBlockMut {
-                g: &grads[b.offset..b.offset + b.len],
-                m,
-                v,
-                rf,
-                cf,
-                wd: if b.decay { hp.weight_decay } else { 0.0 },
-            },
-            coef_r: 0.0,
-            coef_c: 0.0,
-        });
-    }
-
-    // phase 1 — per-block moments, norms and coefficients, block-parallel
-    let coefs = pool.map_mut(&mut tasks, |t| lans_pass1_block(&cx, t.x, &mut t.blk));
-    for (t, c) in tasks.iter_mut().zip(&coefs) {
-        t.coef_r = c.coef_r;
-        t.coef_c = c.coef_c;
-    }
-
-    // phase 2 — apply from the cached directions, block-parallel
-    let maxes = pool.map_mut(&mut tasks, |t| {
-        lans_pass2_block(t.coef_r, t.coef_c, t.x, t.blk.rf, t.blk.cf)
-    });
-
-    let (mean_trust, grad_sq) = fold_coefs(coefs.iter().map(|c| (c.trust, c.grad_sq)));
-    StepStats {
-        mean_trust_ratio: mean_trust,
-        max_abs_param: maxes.into_iter().fold(0.0f32, f32::max),
-        grad_norm: grad_sq.sqrt(),
-    }
+    let mut tasks = build_seg_tasks(
+        plan,
+        params,
+        grads,
+        &mut o.m,
+        &mut o.v,
+        &mut o.r_full,
+        Some(&mut o.c_full),
+    );
+    segmented_step(Algo::Lans, &cx, o.hp, &o.table, pool, &mut tasks, None)
 }
 
 pub(crate) fn lamb_step_parallel(
@@ -181,52 +177,24 @@ pub(crate) fn lamb_step_parallel(
     grads: &[f32],
     lr: f32,
 ) -> StepStats {
+    let plan = balanced_plan(&o.table, pool.threads());
+    lamb_step_on_plan(o, pool, &plan, params, grads, lr)
+}
+
+/// One LAMB step on an explicit work grid (see [`lans_step_on_plan`]).
+pub fn lamb_step_on_plan(
+    o: &mut Lamb,
+    pool: &ThreadPool,
+    plan: &ShardPlan,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+) -> StepStats {
     o.t += 1;
     let cx = AdamCtx::new(o.hp, o.t as i32, lr);
-    let hp = o.hp;
-    let table = &o.table;
-
-    struct Task<'a> {
-        x: &'a mut [f32],
-        g: &'a [f32],
-        m: &'a mut [f32],
-        v: &'a mut [f32],
-        u: &'a mut [f32],
-        wd: f32,
-        coef: f32,
-    }
-
-    let xs = split_blocks(table, params);
-    let ms = split_blocks(table, &mut o.m);
-    let vs = split_blocks(table, &mut o.v);
-    let us = split_blocks(table, &mut o.u_full);
-    let mut tasks: Vec<Task> = Vec::with_capacity(table.blocks.len());
-    for ((((b, x), m), v), u) in table.blocks.iter().zip(xs).zip(ms).zip(vs).zip(us) {
-        tasks.push(Task {
-            x,
-            g: &grads[b.offset..b.offset + b.len],
-            m,
-            v,
-            u,
-            wd: if b.decay { hp.weight_decay } else { 0.0 },
-            coef: 0.0,
-        });
-    }
-
-    let coefs = pool.map_mut(&mut tasks, |t| {
-        lamb_pass1_block(&cx, t.x, t.g, t.m, t.v, t.u, t.wd)
-    });
-    for (t, c) in tasks.iter_mut().zip(&coefs) {
-        t.coef = c.coef;
-    }
-    let maxes = pool.map_mut(&mut tasks, |t| lamb_apply_block(t.coef, t.x, t.u));
-
-    let (mean_trust, grad_sq) = fold_coefs(coefs.iter().map(|c| (c.trust, c.grad_sq)));
-    StepStats {
-        mean_trust_ratio: mean_trust,
-        max_abs_param: maxes.into_iter().fold(0.0f32, f32::max),
-        grad_norm: grad_sq.sqrt(),
-    }
+    let mut tasks =
+        build_seg_tasks(plan, params, grads, &mut o.m, &mut o.v, &mut o.u_full, None);
+    segmented_step(Algo::Lamb, &cx, o.hp, &o.table, pool, &mut tasks, None)
 }
 
 pub(crate) fn adamw_step_parallel(
@@ -241,43 +209,92 @@ pub(crate) fn adamw_step_parallel(
     let hp = o.hp;
     let bgn = o.block_grad_norm;
     let table = &o.table;
+    let plan = balanced_plan(table, pool.threads());
 
     struct Task<'a> {
         x: &'a mut [f32],
         g: &'a [f32],
         m: &'a mut [f32],
         v: &'a mut [f32],
-        wd: f32,
+        frags: &'a [Fragment],
+        base: usize,
     }
-
-    let xs = split_blocks(table, params);
-    let ms = split_blocks(table, &mut o.m);
-    let vs = split_blocks(table, &mut o.v);
-    let mut tasks: Vec<Task> = Vec::with_capacity(table.blocks.len());
-    for (((b, x), m), v) in table.blocks.iter().zip(xs).zip(ms).zip(vs) {
+    let w = plan.workers();
+    let xs = split_at_plan(&plan, params);
+    let ms = split_at_plan(&plan, &mut o.m);
+    let vs = split_at_plan(&plan, &mut o.v);
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(w);
+    for (((s, x), m), v) in (0..w).zip(xs).zip(ms).zip(vs) {
         tasks.push(Task {
             x,
-            g: &grads[b.offset..b.offset + b.len],
+            g: &grads[plan.range(s)],
             m,
             v,
-            wd: if b.decay { hp.weight_decay } else { 0.0 },
+            frags: plan.fragments(s),
+            base: plan.starts[s],
         });
     }
 
-    // AdamW has no cross-element reduction feeding the apply, so the whole
-    // block update is one parallel phase.
-    let outs = pool.map_mut(&mut tasks, |t| adamw_block(&cx, bgn, t.x, t.g, t.m, t.v, t.wd));
+    let nb = table.blocks.len();
+    let (block_g2, maxes) = if bgn {
+        // blockwise normalization needs every block's grad² before any
+        // element updates: two regions — grad² partials, then apply
+        let parts = pool.map_mut(&mut tasks, |t| frag_grad_sq_parts(t.g, t.base, t.frags));
+        let block_g2 = combine_block_g2(nb, &parts);
+        let inv: Vec<f32> = block_g2.iter().map(|&g2| lans_inv_gnorm(g2)).collect();
+        let maxes = pool.map_mut(&mut tasks, |t| {
+            let mut mx = 0.0f32;
+            for f in t.frags {
+                let lo = f.start - t.base;
+                let hi = lo + f.len;
+                let wd = if table.blocks[f.block].decay { hp.weight_decay } else { 0.0 };
+                let ma = adamw_apply(
+                    &cx,
+                    inv[f.block],
+                    wd,
+                    &mut t.x[lo..hi],
+                    &t.g[lo..hi],
+                    &mut t.m[lo..hi],
+                    &mut t.v[lo..hi],
+                );
+                mx = mx.max(ma);
+            }
+            mx
+        });
+        (block_g2, maxes)
+    } else {
+        // plain AdamW: nothing feeds forward, so one fused region does
+        // the element-wise update and emits the grad² stat partials from
+        // the same sweep of `g` (no second full-gradient read)
+        let outs = pool.map_mut(&mut tasks, |t| {
+            let out = frag_grad_sq_parts(t.g, t.base, t.frags);
+            let mut mx = 0.0f32;
+            for f in t.frags {
+                let lo = f.start - t.base;
+                let hi = lo + f.len;
+                let wd = if table.blocks[f.block].decay { hp.weight_decay } else { 0.0 };
+                let ma = adamw_apply(
+                    &cx,
+                    1.0,
+                    wd,
+                    &mut t.x[lo..hi],
+                    &t.g[lo..hi],
+                    &mut t.m[lo..hi],
+                    &mut t.v[lo..hi],
+                );
+                mx = mx.max(ma);
+            }
+            (mx, out)
+        });
+        let (maxes, parts): (Vec<f32>, Vec<Vec<(usize, Vec<f64>)>>) =
+            outs.into_iter().unzip();
+        (combine_block_g2(nb, &parts), maxes)
+    };
 
-    let mut max_abs = 0.0f32;
-    let mut grad_sq = 0.0f64;
-    for (ma, gs) in outs {
-        max_abs = max_abs.max(ma);
-        grad_sq += gs;
-    }
     StepStats {
         mean_trust_ratio: 1.0,
-        max_abs_param: max_abs,
-        grad_norm: grad_sq.sqrt(),
+        max_abs_param: maxes.into_iter().fold(0.0f32, f32::max),
+        grad_norm: block_g2.iter().sum::<f64>().sqrt(),
     }
 }
 
@@ -288,7 +305,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn bumpy_table() -> BlockTable {
-        // sizes straddle the pass-1 sub-chunk boundary (4096) and include a
+        // sizes straddle the segment boundary (4096) and include a
         // dominant block, like BERT's word embedding
         BlockTable::new(&[
             ("emb".into(), 9000, true),
@@ -320,19 +337,41 @@ mod tests {
                 let lr = 0.01 + 0.002 * step as f32;
                 let s_ser = o_serial.step(&mut xs, &g, lr);
                 let s_par = o_par.step_parallel(&pool, &mut xp, &g, lr);
-                assert!(
-                    (s_ser.mean_trust_ratio - s_par.mean_trust_ratio).abs() < 1e-12,
+                // same segment kernels, same fold order ⇒ exact equality
+                assert_eq!(
+                    s_ser.mean_trust_ratio, s_par.mean_trust_ratio,
                     "{name}: trust mismatch"
                 );
-                assert!(
-                    (s_ser.grad_norm - s_par.grad_norm).abs() < 1e-9,
-                    "{name}: grad norm mismatch"
+                assert_eq!(s_ser.grad_norm, s_par.grad_norm, "{name}: grad norm mismatch");
+                assert_eq!(
+                    s_ser.max_abs_param, s_par.max_abs_param,
+                    "{name}: max abs mismatch"
                 );
             }
-            for (a, b) in xs.iter().zip(&xp) {
-                assert!((a - b).abs() < 1e-6, "{name}: {a} vs {b}");
-            }
+            assert_eq!(xs, xp, "{name}: params diverged");
         }
+    }
+
+    #[test]
+    fn per_block_grid_matches_balanced_grid() {
+        // the bench baseline must still be *correct* — only slower
+        let table = bumpy_table();
+        let mut rng = Rng::new(7);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let pool = ThreadPool::new(4);
+        let hp = Hyper::default();
+        let mut a = Lans::new(table.clone(), hp);
+        let mut b = Lans::new(table.clone(), hp);
+        let mut xa = x0.clone();
+        let mut xb = x0;
+        let block_plan = ShardPlan::per_block(&table);
+        let balanced = ShardPlan::build(&table, 13);
+        let sa = lans_step_on_plan(&mut a, &pool, &block_plan, &mut xa, &g, 0.01);
+        let sb = lans_step_on_plan(&mut b, &pool, &balanced, &mut xb, &g, 0.01);
+        assert_eq!(xa, xb);
+        assert_eq!(sa.grad_norm, sb.grad_norm);
+        assert_eq!(sa.mean_trust_ratio, sb.mean_trust_ratio);
     }
 
     #[test]
@@ -345,17 +384,5 @@ mod tests {
         let g = vec![0.01f32; table.total];
         let stats = exec.step(opt.as_mut(), &mut x, &g, 0.01);
         assert!(stats.grad_norm > 0.0);
-    }
-
-    #[test]
-    fn split_blocks_is_a_partition() {
-        let table = bumpy_table();
-        let mut data: Vec<f32> = (0..table.total).map(|i| i as f32).collect();
-        let parts = split_blocks(&table, &mut data);
-        assert_eq!(parts.len(), table.blocks.len());
-        for (b, p) in table.blocks.iter().zip(&parts) {
-            assert_eq!(p.len(), b.len);
-            assert_eq!(p.first().copied(), Some(b.offset as f32));
-        }
     }
 }

@@ -38,7 +38,7 @@ use anyhow::{bail, Context, Result};
 use crate::checkpoint::Checkpoint;
 use crate::collective::reduce_scatter::{chunk_owner, ring_chunk_starts};
 use crate::runtime::tensor::TensorF32;
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{policy, ThreadPool};
 use crate::util::stats::Welford;
 
 use super::blocks::BlockTable;
@@ -123,6 +123,23 @@ impl ShardPlan {
         ShardPlan { starts, frags }
     }
 
+    /// The degenerate block-granularity plan: one shard per block — the
+    /// work grid the pre-plan `ParallelExecutor` used.  Its speedup is
+    /// capped by the largest block (BERT's word embedding is ~20% of all
+    /// parameters); kept only so the `optimizer_step` bench can measure
+    /// what the balanced grid removes.
+    pub fn per_block(table: &BlockTable) -> ShardPlan {
+        let mut starts = Vec::with_capacity(table.blocks.len() + 1);
+        starts.push(0usize);
+        for b in &table.blocks {
+            starts.push(b.offset + b.len);
+        }
+        let frags = (0..table.blocks.len())
+            .map(|s| Self::fragments_for(table, starts[s], starts[s + 1]))
+            .collect();
+        ShardPlan { starts, frags }
+    }
+
     fn fragments_for(table: &BlockTable, lo: usize, hi: usize) -> Vec<Fragment> {
         let mut out = Vec::new();
         for (bi, b) in table.blocks.iter().enumerate() {
@@ -163,6 +180,22 @@ impl ShardPlan {
     }
 }
 
+/// Split a flat vector into per-shard disjoint mutable slices on `plan`
+/// boundaries (a chain of `split_at_mut` — shards tile the vector in
+/// order).  The plan-granularity replicated executor builds its task
+/// slices with this.
+pub(crate) fn split_at_plan<'a>(plan: &ShardPlan, mut data: &'a mut [f32]) -> Vec<&'a mut [f32]> {
+    assert_eq!(data.len(), plan.total(), "flat vector does not match plan");
+    let w = plan.workers();
+    let mut out = Vec::with_capacity(w);
+    for s in 0..w {
+        let (head, tail) = data.split_at_mut(plan.len_of(s));
+        out.push(head);
+        data = tail;
+    }
+    out
+}
+
 /// Assemble each shard's owned slice of the *mean* gradient from
 /// reduce-scattered per-worker buffers: chunk `c` of the default ring grid
 /// holds its full sum at worker [`chunk_owner`]`(c, w)`; every plan range
@@ -178,24 +211,49 @@ pub fn scatter_to_plan(bufs: &[Vec<f32>], plan: &ShardPlan, scale: f32) -> Vec<V
     (0..w)
         .map(|s| {
             let (lo, hi) = (plan.starts[s], plan.starts[s + 1]);
-            let mut out = Vec::with_capacity(hi - lo);
-            for c in 0..w {
-                let (clo, chi) = (ring[c].max(lo), ring[c + 1].min(hi));
-                if clo < chi {
-                    let owner = chunk_owner(c, w);
-                    out.extend(bufs[owner][clo..chi].iter().map(|&x| x * scale));
-                }
-            }
+            let mut out = vec![0.0f32; hi - lo];
+            stitch_range(bufs, &ring, lo, hi, scale, &mut out);
             out
         })
         .collect()
 }
 
-/// Which update rule a [`ShardedOptimizer`] runs.  AdamW/SGD are
-/// element-wise and gain nothing from norm sharding — the replicated
-/// `ParallelExecutor` path already covers them.
+/// Stitch `[lo, hi)` of the mean gradient from reduce-scattered buffers
+/// into `out`: each ring chunk's piece is copied from its [`chunk_owner`]
+/// and scaled.  The one home for the stitch arithmetic — [`scatter_to_plan`]
+/// and the pipelined [`ShardedOptimizer::step_scattered`] both use it, so
+/// the two paths cannot drift.
+pub(crate) fn stitch_range(
+    bufs: &[Vec<f32>],
+    ring: &[usize],
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), hi - lo);
+    let w = bufs.len();
+    let mut cursor = 0usize;
+    for c in 0..w {
+        let (clo, chi) = (ring[c].max(lo), ring[c + 1].min(hi));
+        if clo < chi {
+            let owner = chunk_owner(c, w);
+            for (o, &x) in
+                out[cursor..cursor + (chi - clo)].iter_mut().zip(&bufs[owner][clo..chi])
+            {
+                *o = x * scale;
+            }
+            cursor += chi - clo;
+        }
+    }
+    debug_assert_eq!(cursor, hi - lo, "ring chunks must cover the stitched range");
+}
+
+/// Which update rule a segmented step runs.  AdamW/SGD are element-wise
+/// and gain nothing from norm sharding — the plan-granularity replicated
+/// executor covers AdamW with a simpler two-phase path of its own.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Algo {
+pub(crate) enum Algo {
     Lans,
     Lamb,
 }
@@ -210,6 +268,10 @@ struct ShardState {
     dir_a: Vec<f32>,
     /// cached ĉ+wd·x (LANS; unused by LAMB)
     dir_b: Vec<f32>,
+    /// stitched mean-gradient scratch for the pipelined
+    /// [`ShardedOptimizer::step_scattered`] path (empty until first use;
+    /// never persisted)
+    grad: Vec<f32>,
 }
 
 /// Per-block apply coefficients after the norm combine.
@@ -218,6 +280,250 @@ struct BlockCoef {
     b: f32,
     trust: f64,
     grad_sq: f64,
+}
+
+/// One executor task: a contiguous, segment-aligned chunk of the flat
+/// vector with every per-element array the update needs, plus the
+/// fragments mapping it back onto blocks.  Two callers build these:
+/// the sharded step (one task per worker shard, state owned per shard)
+/// and the plan-granularity replicated executor in `optim::parallel`
+/// (one task per plan chunk, state sliced from the full vectors) — both
+/// then run the same [`segmented_step`] engine, which is what makes
+/// replicated == parallel == sharded bit-identical by construction.
+pub(crate) struct SegTask<'a> {
+    pub x: &'a mut [f32],
+    pub g: &'a [f32],
+    pub m: &'a mut [f32],
+    pub v: &'a mut [f32],
+    /// cached r̂+wd·x (LANS) / update direction u (LAMB)
+    pub dir_a: &'a mut [f32],
+    /// cached ĉ+wd·x (LANS; unused and may be empty for LAMB)
+    pub dir_b: &'a mut [f32],
+    pub frags: &'a [Fragment],
+    /// global offset of the task's first element
+    pub base: usize,
+    /// accumulated wall time across phases (the `sharded_step` bench
+    /// reads the per-shard values)
+    pub secs: f64,
+}
+
+/// One [`SegTask`] per worker shard, splitting `params` on the plan and
+/// borrowing each shard's state fields.  `shard_grads` selects the
+/// gradient source: `Some` for externally stitched per-shard slices (the
+/// two-stage path), `None` for each shard's own `grad` scratch (the
+/// pipelined path) — the only difference between the two call sites.
+fn build_shard_tasks<'a>(
+    plan: &'a ShardPlan,
+    shards: &'a mut [ShardState],
+    params: &'a mut [f32],
+    shard_grads: Option<&'a [Vec<f32>]>,
+) -> Vec<SegTask<'a>> {
+    let mut tasks = Vec::with_capacity(shards.len());
+    let mut rest = params;
+    for (s, st) in shards.iter_mut().enumerate() {
+        let (x, tail) = rest.split_at_mut(plan.len_of(s));
+        rest = tail;
+        let ShardState { m, v, dir_a, dir_b, grad } = st;
+        let g: &[f32] = match shard_grads {
+            Some(gs) => &gs[s],
+            None => grad.as_slice(),
+        };
+        tasks.push(SegTask {
+            x,
+            g,
+            m: m.as_mut_slice(),
+            v: v.as_mut_slice(),
+            dir_a: dir_a.as_mut_slice(),
+            dir_b: dir_b.as_mut_slice(),
+            frags: plan.fragments(s),
+            base: plan.starts[s],
+            secs: 0.0,
+        });
+    }
+    tasks
+}
+
+/// Per-fragment grad² segment partials for one chunk, emitted in fragment
+/// then segment order.  `g` is the chunk's gradient slice, `base` its
+/// global offset.  The one home for this sweep — phase A, the pipelined
+/// stitch, and both AdamW branches all call it, so the fold the
+/// bit-identity contract depends on cannot fork.
+pub(crate) fn frag_grad_sq_parts(
+    g: &[f32],
+    base: usize,
+    frags: &[Fragment],
+) -> Vec<(usize, Vec<f64>)> {
+    let mut out = Vec::with_capacity(frags.len());
+    for f in frags {
+        let lo = f.start - base;
+        let mut ps = Vec::new();
+        grad_sq_segments(&g[lo..lo + f.len], |p| ps.push(p));
+        out.push((f.block, ps));
+    }
+    out
+}
+
+/// Combine per-chunk partial lists into per-block grad² sums, in task
+/// order = global segment order — the serial kernels' own f64 fold.
+pub(crate) fn combine_block_g2(nb: usize, parts: &[Vec<(usize, Vec<f64>)>]) -> Vec<f64> {
+    let mut g2 = vec![0.0f64; nb];
+    for chunk_out in parts {
+        for (b, ps) in chunk_out {
+            for p in ps {
+                g2[*b] += p;
+            }
+        }
+    }
+    g2
+}
+
+/// The three-phase segmented LANS/LAMB step over disjoint plan chunks:
+/// (A) grad² segment partials → block gradient norms (skipped when the
+/// caller pre-folded them, or for LAMB, whose grad² falls out of phase
+/// B); (B) moments + cached directions + ‖x‖/‖r‖/‖c‖ segment partials →
+/// per-block coefficients; (C) apply.  Each phase is one pool region;
+/// partials combine in task order = global segment order — the serial
+/// kernels' own hierarchical fold — so the result is bit-identical to
+/// the serial `Optimizer::step` for any chunk grid cut on the
+/// block-local [`NORM_SEG`](super::native::NORM_SEG) boundaries.
+pub(crate) fn segmented_step(
+    algo: Algo,
+    cx: &AdamCtx,
+    hp: Hyper,
+    table: &BlockTable,
+    pool: &ThreadPool,
+    tasks: &mut [SegTask<'_>],
+    precomputed_g2: Option<Vec<f64>>,
+) -> StepStats {
+    let nb = table.blocks.len();
+
+    // --- phase A (LANS): per-chunk grad² segment partials → block
+    //     gradient norms (eq. 4 needs them before the moment pass) ---
+    let block_g2: Vec<f64> = match (algo, precomputed_g2) {
+        (_, Some(g2)) => {
+            debug_assert_eq!(g2.len(), nb);
+            g2
+        }
+        (Algo::Lamb, None) => vec![0.0f64; nb],
+        (Algo::Lans, None) => {
+            let parts = pool.map_mut(&mut *tasks, |t| {
+                let t0 = Instant::now();
+                let out = frag_grad_sq_parts(t.g, t.base, t.frags);
+                t.secs += t0.elapsed().as_secs_f64();
+                out
+            });
+            combine_block_g2(nb, &parts)
+        }
+    };
+    let inv_gnorm: Vec<f32> = block_g2.iter().map(|&g2| lans_inv_gnorm(g2)).collect();
+
+    // --- phase B: moments + cached directions + norm partials ---
+    let parts = pool.map_mut(&mut *tasks, |t| {
+        let t0 = Instant::now();
+        let mut out: Vec<(usize, Vec<(f64, f64, f64)>)> = Vec::with_capacity(t.frags.len());
+        for f in t.frags {
+            let lo = f.start - t.base;
+            let hi = lo + f.len;
+            let wd = if table.blocks[f.block].decay { hp.weight_decay } else { 0.0 };
+            let mut ps = Vec::new();
+            match algo {
+                Algo::Lans => {
+                    let mut blk = LansBlockMut {
+                        g: &t.g[lo..hi],
+                        m: &mut t.m[lo..hi],
+                        v: &mut t.v[lo..hi],
+                        rf: &mut t.dir_a[lo..hi],
+                        cf: &mut t.dir_b[lo..hi],
+                        wd,
+                    };
+                    lans_update_segments(
+                        cx,
+                        &t.x[lo..hi],
+                        &mut blk,
+                        inv_gnorm[f.block],
+                        |px, pr, pc| ps.push((px, pr, pc)),
+                    );
+                }
+                Algo::Lamb => lamb_update_segments(
+                    cx,
+                    &t.x[lo..hi],
+                    &t.g[lo..hi],
+                    &mut t.m[lo..hi],
+                    &mut t.v[lo..hi],
+                    &mut t.dir_a[lo..hi],
+                    wd,
+                    |px, pu, pg| ps.push((px, pu, pg)),
+                ),
+            }
+            out.push((f.block, ps));
+        }
+        t.secs += t0.elapsed().as_secs_f64();
+        out
+    });
+
+    // combine the three norm partials per block, in segment order
+    let mut sums = vec![(0.0f64, 0.0f64, 0.0f64); nb];
+    for chunk_out in &parts {
+        for (b, ps) in chunk_out {
+            let acc = &mut sums[*b];
+            for (p0, p1, p2) in ps {
+                acc.0 += p0;
+                acc.1 += p1;
+                acc.2 += p2;
+            }
+        }
+    }
+    let coefs: Vec<BlockCoef> = sums
+        .iter()
+        .enumerate()
+        .map(|(b, &(s0, s1, s2))| match algo {
+            Algo::Lans => {
+                let c = lans_coef(cx, s0, s1, s2, block_g2[b]);
+                BlockCoef { a: c.coef_r, b: c.coef_c, trust: c.trust, grad_sq: c.grad_sq }
+            }
+            Algo::Lamb => {
+                let c = lamb_coef(cx, s0, s1, s2);
+                BlockCoef { a: c.coef, b: 0.0, trust: c.trust, grad_sq: c.grad_sq }
+            }
+        })
+        .collect();
+
+    // --- phase C: apply from the cached directions ---
+    let maxes = pool.map_mut(&mut *tasks, |t| {
+        let t0 = Instant::now();
+        let mut mx = 0.0f32;
+        for f in t.frags {
+            let lo = f.start - t.base;
+            let hi = lo + f.len;
+            let c = &coefs[f.block];
+            let ma = match algo {
+                Algo::Lans => lans_pass2_block(
+                    c.a,
+                    c.b,
+                    &mut t.x[lo..hi],
+                    &t.dir_a[lo..hi],
+                    &t.dir_b[lo..hi],
+                ),
+                Algo::Lamb => lamb_apply_block(c.a, &mut t.x[lo..hi], &t.dir_a[lo..hi]),
+            };
+            mx = mx.max(ma);
+        }
+        t.secs += t0.elapsed().as_secs_f64();
+        mx
+    });
+
+    // stats fold in block order — the serial loop's order
+    let mut trust = Welford::default();
+    let mut grad_sq = 0.0f64;
+    for c in &coefs {
+        trust.push(c.trust);
+        grad_sq += c.grad_sq;
+    }
+    StepStats {
+        mean_trust_ratio: trust.mean(),
+        max_abs_param: maxes.iter().copied().fold(0.0f32, f32::max),
+        grad_norm: grad_sq.sqrt(),
+    }
 }
 
 /// Partitioned LANS/LAMB over all `W` in-process shards.  [`step`] runs the
@@ -258,6 +564,7 @@ impl ShardedOptimizer {
                     v: vec![0.0; n],
                     dir_a: vec![0.0; n],
                     dir_b: if algo == Algo::Lans { vec![0.0; n] } else { Vec::new() },
+                    grad: Vec::new(),
                 }
             })
             .collect();
@@ -300,8 +607,8 @@ impl ShardedOptimizer {
     /// `pool` (shards touch disjoint state by construction; the norm
     /// combines are the barriers).  Falls back to the serial path for
     /// width-1 pools or when per-shard work is below
-    /// [`POOLED_MIN_ELEMS`](crate::collective::reduce_scatter::POOLED_MIN_ELEMS)
-    /// (scoped-thread spawn cost would dominate), mirroring the pooled
+    /// [`POOLED_MIN_ELEMS`](crate::util::pool::policy::POOLED_MIN_ELEMS)
+    /// (region overhead would dominate), mirroring the pooled
     /// collectives.  Bit-identical either way.
     pub fn step_pooled(
         &mut self,
@@ -312,10 +619,7 @@ impl ShardedOptimizer {
     ) -> StepStats {
         let w = self.plan.workers().max(1);
         let per_shard = self.table.total / w;
-        if pool.threads() <= 1
-            || w < 2
-            || per_shard < crate::collective::reduce_scatter::POOLED_MIN_ELEMS
-        {
+        if pool.threads() <= 1 || w < 2 || per_shard < policy::POOLED_MIN_ELEMS {
             return self.step(params, shard_grads, lr);
         }
         self.step_impl(pool, params, shard_grads, lr).0
@@ -348,177 +652,93 @@ impl ShardedOptimizer {
         }
         self.t += 1;
         let cx = AdamCtx::new(self.hp, self.t as i32, lr);
-        let algo = self.algo;
-        let hp = self.hp;
-        let table = &self.table;
-        let plan = &self.plan;
-        let nb = table.blocks.len();
-
-        struct ShardTask<'a> {
-            x: &'a mut [f32],
-            g: &'a [f32],
-            st: &'a mut ShardState,
-            frags: &'a [Fragment],
-            base: usize,
-            secs: f64,
-        }
-
-        let mut tasks: Vec<ShardTask<'_>> = Vec::with_capacity(w);
-        {
-            let mut rest = params;
-            for (s, st) in self.shards.iter_mut().enumerate() {
-                let (x, tail) = rest.split_at_mut(plan.len_of(s));
-                rest = tail;
-                tasks.push(ShardTask {
-                    x,
-                    g: &shard_grads[s],
-                    st,
-                    frags: plan.fragments(s),
-                    base: plan.starts[s],
-                    secs: 0.0,
-                });
-            }
-        }
-
-        // --- phase A (LANS): per-shard grad² segment partials → block
-        //     gradient norms.  LAMB has no pre-normalization; its grad² is
-        //     a by-product of phase B.
-        let mut block_g2 = vec![0.0f64; nb];
-        if algo == Algo::Lans {
-            let parts = pool.map_mut(&mut tasks, |t| {
-                let t0 = Instant::now();
-                let mut out: Vec<(usize, Vec<f64>)> = Vec::with_capacity(t.frags.len());
-                for f in t.frags {
-                    let lo = f.start - t.base;
-                    let mut ps = Vec::new();
-                    grad_sq_segments(&t.g[lo..lo + f.len], |p| ps.push(p));
-                    out.push((f.block, ps));
-                }
-                t.secs += t0.elapsed().as_secs_f64();
-                out
-            });
-            // combine in shard order = global segment order: a block's
-            // fragments sit on ascending shards, one per shard — the same
-            // f64 fold the serial kernel performs
-            for shard_out in &parts {
-                for (b, ps) in shard_out {
-                    for p in ps {
-                        block_g2[*b] += p;
-                    }
-                }
-            }
-        }
-        let inv_gnorm: Vec<f32> = block_g2.iter().map(|&g2| lans_inv_gnorm(g2)).collect();
-
-        // --- phase B: moments + cached directions + norm partials ---
-        let parts = pool.map_mut(&mut tasks, |t| {
-            let t0 = Instant::now();
-            let mut out: Vec<(usize, Vec<(f64, f64, f64)>)> = Vec::with_capacity(t.frags.len());
-            for f in t.frags {
-                let lo = f.start - t.base;
-                let hi = lo + f.len;
-                let wd = if table.blocks[f.block].decay { hp.weight_decay } else { 0.0 };
-                let mut ps = Vec::new();
-                match algo {
-                    Algo::Lans => {
-                        let mut blk = LansBlockMut {
-                            g: &t.g[lo..hi],
-                            m: &mut t.st.m[lo..hi],
-                            v: &mut t.st.v[lo..hi],
-                            rf: &mut t.st.dir_a[lo..hi],
-                            cf: &mut t.st.dir_b[lo..hi],
-                            wd,
-                        };
-                        lans_update_segments(
-                            &cx,
-                            &t.x[lo..hi],
-                            &mut blk,
-                            inv_gnorm[f.block],
-                            |px, pr, pc| ps.push((px, pr, pc)),
-                        );
-                    }
-                    Algo::Lamb => lamb_update_segments(
-                        &cx,
-                        &t.x[lo..hi],
-                        &t.g[lo..hi],
-                        &mut t.st.m[lo..hi],
-                        &mut t.st.v[lo..hi],
-                        &mut t.st.dir_a[lo..hi],
-                        wd,
-                        |px, pu, pg| ps.push((px, pu, pg)),
-                    ),
-                }
-                out.push((f.block, ps));
-            }
-            t.secs += t0.elapsed().as_secs_f64();
-            out
-        });
-
-        // combine the three norm partials per block, in segment order
-        let mut sums = vec![(0.0f64, 0.0f64, 0.0f64); nb];
-        for shard_out in &parts {
-            for (b, ps) in shard_out {
-                let acc = &mut sums[*b];
-                for (p0, p1, p2) in ps {
-                    acc.0 += p0;
-                    acc.1 += p1;
-                    acc.2 += p2;
-                }
-            }
-        }
-        let coefs: Vec<BlockCoef> = sums
-            .iter()
-            .enumerate()
-            .map(|(b, &(s0, s1, s2))| match algo {
-                Algo::Lans => {
-                    let c = lans_coef(&cx, s0, s1, s2, block_g2[b]);
-                    BlockCoef { a: c.coef_r, b: c.coef_c, trust: c.trust, grad_sq: c.grad_sq }
-                }
-                Algo::Lamb => {
-                    let c = lamb_coef(&cx, s0, s1, s2);
-                    BlockCoef { a: c.coef, b: 0.0, trust: c.trust, grad_sq: c.grad_sq }
-                }
-            })
-            .collect();
-
-        // --- phase C: apply from the cached directions ---
-        let maxes = pool.map_mut(&mut tasks, |t| {
-            let t0 = Instant::now();
-            let mut mx = 0.0f32;
-            for f in t.frags {
-                let lo = f.start - t.base;
-                let hi = lo + f.len;
-                let c = &coefs[f.block];
-                let ma = match algo {
-                    Algo::Lans => lans_pass2_block(
-                        c.a,
-                        c.b,
-                        &mut t.x[lo..hi],
-                        &t.st.dir_a[lo..hi],
-                        &t.st.dir_b[lo..hi],
-                    ),
-                    Algo::Lamb => lamb_apply_block(c.a, &mut t.x[lo..hi], &t.st.dir_a[lo..hi]),
-                };
-                mx = mx.max(ma);
-            }
-            t.secs += t0.elapsed().as_secs_f64();
-            mx
-        });
-
-        // stats fold in block order — the serial loop's order
-        let mut trust = Welford::default();
-        let mut grad_sq = 0.0f64;
-        for c in &coefs {
-            trust.push(c.trust);
-            grad_sq += c.grad_sq;
-        }
-        let stats = StepStats {
-            mean_trust_ratio: trust.mean(),
-            max_abs_param: maxes.iter().copied().fold(0.0f32, f32::max),
-            grad_norm: grad_sq.sqrt(),
-        };
+        let mut tasks =
+            build_shard_tasks(&self.plan, &mut self.shards, params, Some(shard_grads));
+        let stats =
+            segmented_step(self.algo, &cx, self.hp, &self.table, pool, &mut tasks, None);
         let timings = tasks.iter().map(|t| t.secs).collect();
         (stats, timings)
+    }
+
+    /// The pipelined ZeRO-1 step the trainer runs: takes the
+    /// *reduce-scattered* per-worker buffers directly (chunk `c`'s
+    /// gradient sum sitting at its [`chunk_owner`]) and fuses the
+    /// [`scatter_to_plan`] stitch with phase A into one pool region —
+    /// each shard's task stitches its owned mean-gradient range into a
+    /// per-shard scratch buffer and folds the grad² segment partials
+    /// while the data is cache-hot, instead of a serial full-vector
+    /// stitch on the caller followed by a separate phase-A region
+    /// barriered on the full scatter.  Bit-identical to
+    /// `scatter_to_plan` + [`step_pooled`](Self::step_pooled): the
+    /// stitch shares its arithmetic via `stitch_range` and the partial
+    /// folds are unchanged (property-tested in `tests/proptests.rs`).
+    pub fn step_scattered(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        bufs: &[Vec<f32>],
+        scale: f32,
+        lr: f32,
+    ) -> StepStats {
+        let w = self.plan.workers();
+        assert_eq!(bufs.len(), w, "need one reduce-scattered buffer per shard");
+        let n = self.table.total;
+        assert_eq!(params.len(), n, "params do not match block table");
+        assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
+        self.t += 1;
+        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
+        let algo = self.algo;
+        let table = &self.table;
+        let plan = &self.plan;
+        let ring = ring_chunk_starts(w, n);
+
+        // below the policy floor (or width-1 pools) regions degrade to
+        // serial caller loops; route through a width-1 pool so small work
+        // never pays region wakeups — results identical either way
+        let serial = ThreadPool::new(1);
+        let eff = if pool.threads() <= 1 || w < 2 || n / w < policy::POOLED_MIN_ELEMS {
+            &serial
+        } else {
+            pool
+        };
+
+        // --- fused stitch + phase A: one region over shards ---
+        struct StitchTask<'a> {
+            grad: &'a mut Vec<f32>,
+            frags: &'a [Fragment],
+            lo: usize,
+            hi: usize,
+        }
+        let needs_g2 = algo == Algo::Lans;
+        let mut stitch: Vec<StitchTask<'_>> = self
+            .shards
+            .iter_mut()
+            .enumerate()
+            .map(|(s, st)| StitchTask {
+                grad: &mut st.grad,
+                frags: plan.fragments(s),
+                lo: plan.starts[s],
+                hi: plan.starts[s + 1],
+            })
+            .collect();
+        let parts = eff.map_mut(&mut stitch, |t| {
+            t.grad.resize(t.hi - t.lo, 0.0);
+            stitch_range(bufs, &ring, t.lo, t.hi, scale, t.grad);
+            if !needs_g2 {
+                return Vec::new();
+            }
+            frag_grad_sq_parts(t.grad, t.lo, t.frags)
+        });
+        drop(stitch);
+        let precomputed = if needs_g2 {
+            Some(combine_block_g2(table.blocks.len(), &parts))
+        } else {
+            None
+        };
+
+        // --- phases B/C on the stitched scratch gradients ---
+        let mut tasks = build_shard_tasks(&self.plan, &mut self.shards, params, None);
+        segmented_step(algo, &cx, self.hp, table, eff, &mut tasks, precomputed)
     }
 
     /// Serialize per-shard moments as named tensors (`optshard:m:<s>` /
@@ -717,6 +937,54 @@ mod tests {
                 }
                 assert_eq!(xr, xs, "{name} w={w}: params diverged");
             }
+        }
+    }
+
+    #[test]
+    fn per_block_plan_is_one_shard_per_block() {
+        let t = big_table();
+        let plan = ShardPlan::per_block(&t);
+        assert_eq!(plan.workers(), t.blocks.len());
+        assert_eq!(plan.total(), t.total);
+        for (s, b) in t.blocks.iter().enumerate() {
+            assert_eq!(plan.range(s), b.offset..b.offset + b.len);
+            assert_eq!(plan.fragments(s).len(), 1);
+            assert_eq!(plan.fragments(s)[0].block, s);
+        }
+    }
+
+    #[test]
+    fn scattered_step_matches_scatter_then_step() {
+        // the pipelined path (fused stitch + phase A) against the
+        // two-stage reference, from identical reduce-scattered buffers
+        use crate::collective::reduce_scatter::ring_reduce_scatter;
+        let table = big_table();
+        let mut rng = Rng::new(21);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let pool = ThreadPool::new(4);
+        for name in ["lans", "lamb"] {
+            let w = 4;
+            let hp = Hyper::default();
+            let mut a = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut b = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut xa = x0.clone();
+            let mut xb = x0.clone();
+            for k in 0..2 {
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                let mut rs = bufs;
+                ring_reduce_scatter(&mut rs);
+                let scale = 1.0 / w as f32;
+                let lr = 0.01 + 0.001 * k as f32;
+                let sg = scatter_to_plan(&rs, a.plan(), scale);
+                let sa = a.step(&mut xa, &sg, lr);
+                let sb = b.step_scattered(&pool, &mut xb, &rs, scale, lr);
+                assert_eq!(sa.grad_norm, sb.grad_norm, "{name}");
+                assert_eq!(sa.mean_trust_ratio, sb.mean_trust_ratio, "{name}");
+                assert_eq!(sa.max_abs_param, sb.max_abs_param, "{name}");
+            }
+            assert_eq!(xa, xb, "{name}: pipelined trajectory diverged");
         }
     }
 

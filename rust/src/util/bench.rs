@@ -1,11 +1,28 @@
 //! Bench harness — criterion is unavailable offline, so benches run with
 //! `harness = false` and use this module: warmup, repeated timed runs,
-//! mean / p50 / p99, and aligned table printing so every `rust/benches/*.rs`
-//! regenerates its paper table with the same look.
+//! mean / p50 / p99, aligned table printing so every `rust/benches/*.rs`
+//! regenerates its paper table with the same look, and a shared
+//! [`Reporter`] that persists every hot-path bench's numbers to
+//! `BENCH_<name>.json` so the perf trajectory survives across PRs instead
+//! of scrolling away in CI logs.
+//!
+//! The hot-path benches also honour a `--quick` flag (or `BENCH_QUICK=1`)
+//! — fewer iterations, smaller sweeps, *same assertions* — so CI can
+//! execute the speedup checks instead of only compiling them.
 
+use std::io::Write as _;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::util::stats::percentile;
+
+/// True when the bench binary was invoked with `--quick` (e.g.
+/// `cargo bench --bench optimizer_step -- --quick`) or with
+/// `BENCH_QUICK` set to anything but `0`/empty — the CI smoke mode.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -99,6 +116,123 @@ impl Table {
     }
 }
 
+/// Machine-readable bench reporter.  Collects timed results and free-form
+/// scalar metrics, then writes one `BENCH_<name>.json` file (into
+/// `$BENCH_OUT_DIR`, or the working directory) with a flat, stable schema:
+///
+/// ```json
+/// {
+///   "bench": "optimizer_step",
+///   "quick": false,
+///   "threads_available": 8,
+///   "results": [{"name": "...", "iters": 10,
+///                "mean_ms": 1.2, "p50_ms": 1.1, "p99_ms": 1.9}],
+///   "metrics": {"pool_speedup_t4": 3.7}
+/// }
+/// ```
+///
+/// The writer is the *only* JSON producer in the repo (the in-tree
+/// `util::json` is a parser), so escaping lives here: names are
+/// code-controlled ASCII, non-finite floats serialize as `null`.
+pub struct Reporter {
+    bench: String,
+    results: Vec<(String, usize, f64, f64, f64)>,
+    metrics: Vec<(String, f64)>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl Reporter {
+    pub fn new(bench: &str) -> Reporter {
+        Reporter { bench: bench.to_string(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record a timed result under its own name.
+    pub fn result(&mut self, r: &BenchResult) {
+        self.results.push((
+            r.name.clone(),
+            r.iters,
+            r.mean_ns / 1e6,
+            r.p50_ns / 1e6,
+            r.p99_ns / 1e6,
+        ));
+    }
+
+    /// Record a free-form scalar (speedup ratios, thread counts, sizes).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        s.push_str(&format!("  \"quick\": {},\n", quick_mode()));
+        s.push_str(&format!(
+            "  \"threads_available\": {},\n",
+            crate::util::pool::ThreadPool::available()
+        ));
+        s.push_str("  \"results\": [\n");
+        for (i, (name, iters, mean, p50, p99)) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ms\": {}, \
+                 \"p50_ms\": {}, \"p99_ms\": {}}}{}\n",
+                json_escape(name),
+                iters,
+                json_num(*mean),
+                json_num(*p50),
+                json_num(*p99),
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"metrics\": {\n");
+        for (i, (name, value)) in self.metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                json_escape(name),
+                json_num(*value),
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<bench>.json` and return its path.  Benches call this
+    /// *before* their acceptance assertions so a failing run still leaves
+    /// its numbers behind.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var_os("BENCH_OUT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.render().as_bytes())?;
+        eprintln!("[bench json -> {}]", path.display());
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +251,36 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row(&["1".into(), "2".into()]);
         t.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn reporter_renders_parseable_json() {
+        let mut rep = Reporter::new("unit_test");
+        rep.result(&BenchResult {
+            name: "case \"a\"".into(),
+            iters: 3,
+            mean_ns: 1.5e6,
+            p50_ns: 1.4e6,
+            p99_ns: 2.0e6,
+        });
+        rep.metric("speedup", 2.5);
+        rep.metric("bad", f64::NAN); // must serialize as null, not NaN
+        let s = rep.render();
+        let v = crate::util::json::Json::parse(&s).expect("reporter output must parse");
+        assert_eq!(v.expect("bench").as_str(), Some("unit_test"));
+        let results = v.expect("results").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].expect("name").as_str(), Some("case \"a\""));
+        assert_eq!(results[0].expect("iters").as_usize(), Some(3));
+        assert!((results[0].expect("mean_ms").as_f64().unwrap() - 1.5).abs() < 1e-12);
+        let metrics = v.expect("metrics");
+        assert_eq!(metrics.expect("speedup").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn reporter_handles_empty_sections() {
+        let rep = Reporter::new("empty");
+        let s = rep.render();
+        assert!(crate::util::json::Json::parse(&s).is_ok(), "bad json: {s}");
     }
 }

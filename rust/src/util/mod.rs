@@ -1,6 +1,7 @@
 //! In-tree substrates for crates unavailable offline (serde_json, rand,
 //! criterion, rayon): a JSON parser, a deterministic PRNG, statistics
-//! helpers, a bench harness, and a scoped thread pool.
+//! helpers, a bench harness (with a machine-readable reporter), and a
+//! persistent worker pool.
 
 pub mod bench;
 pub mod json;

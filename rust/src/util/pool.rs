@@ -1,38 +1,313 @@
-//! A reusable scoped thread pool for the training hot path.
+//! A persistent worker pool for the training hot path.
 //!
 //! The pool hands out *borrowed* work items — each worker receives
-//! `&mut I` for a disjoint item — which is exactly what block-sharded
+//! `&mut I` for a disjoint item — which is exactly what plan-sharded
 //! optimizer updates and chunk-parallel collectives need: disjoint mutable
 //! slices over the flat parameter/gradient vectors, no `Arc`, no copies.
 //!
-//! Implementation notes:
+//! One training step issues many small parallel regions (two to three for
+//! the optimizer phases plus `2(W-1)` for the ring collective), so region
+//! overhead *is* the hot path.  Workers are therefore long-lived threads
+//! parked on a condvar, not per-call `std::thread::scope` spawns:
 //!
-//! * Workers are `std::thread::scope` threads, so items may borrow from the
-//!   caller's stack (the flat parameter vector lives in the trainer).
-//! * Scheduling is dynamic: workers pull the next item from a shared
-//!   iterator, so a skewed block table (BERT's word-embedding block is ~20%
-//!   of all parameters) does not serialize on a bad static partition.
-//! * Results come back in item order regardless of which worker ran what —
-//!   reductions that combine them stay deterministic.
-//! * `threads == 1` (or fewer than two items) never spawns: that path is
-//!   a plain serial loop, bit-identical to the pre-pool code.
+//! * **Region = two synchronization points.**  [`ThreadPool::map_mut`]
+//!   publishes a region under the pool mutex (one lock + wakeups) and
+//!   closes it under the same mutex (one lock + a generation-counted
+//!   barrier that waits only for the workers that actually engaged).  The
+//!   per-call-spawn baseline pays N `clone`+spawn+join syscalls instead —
+//!   [`ThreadPool::new_spawning`] keeps that implementation alive purely so
+//!   the `optimizer_step` bench can measure the difference.
+//! * **Lock-free-ish task queue.**  Work is a pre-split task list (one
+//!   entry per disjoint item); workers claim indices with one
+//!   `fetch_add` each — no `Mutex<Iterator>` pop per item — and write
+//!   results into per-index slots — no `Mutex<Option<T>>` per result.
+//! * **Generation counter.**  Each region bumps a generation; a worker
+//!   joins a region at most once (it records the generation it served) and
+//!   a region only waits on workers that joined it, so a still-parked
+//!   worker can never touch a region that has already been closed, and a
+//!   small region does not pay a full-pool barrier.
+//! * **Panic containment.**  A panicking work item marks the region
+//!   poisoned; every engaged worker still checks out (no hang, workers
+//!   stay parked and reusable) and the *caller* panics after the barrier.
+//! * `threads == 1` (or fewer than two items) never spawns and never did:
+//!   that path is a plain serial loop, bit-identical to the pooled one.
+//!
+//! Safety model: a region's closure borrows the caller's stack (items,
+//! result slots, `f`).  The lifetime is erased to hand it to the long-lived
+//! workers, which is sound because `map_mut` does not return until every
+//! worker that observed the region has checked out under the pool mutex —
+//! the borrow never outlives the call.  Results are written through
+//! per-index raw slots claimed by exactly one worker (the `fetch_add`
+//! makes indices unique), and the closing mutex acquisition makes all
+//! worker writes visible to the caller.
 
-use std::sync::Mutex;
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// Fixed-width scoped thread pool.  Cheap to construct (no persistent
-/// threads); share one per trainer/executor and call [`ThreadPool::map_mut`]
-/// per parallel region.
-#[derive(Debug, Clone)]
+thread_local! {
+    /// True while this thread is executing a region work item.  A nested
+    /// [`ThreadPool::map_mut`] issued from inside a work item (on any
+    /// persistent pool) runs serially instead of publishing a region —
+    /// the nested publish would otherwise wait on the region slot that
+    /// its own caller holds open, a silent deadlock the old per-call
+    /// scoped pool did not have.
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+pub mod policy {
+    //! Serial-fallback policy — the one home for every "is this enough
+    //! work to engage the pool?" threshold, so the trainer, the plan
+    //! executor and the collectives cannot drift apart.
+    //!
+    //! Rationale: a persistent-pool region costs two mutex passes plus the
+    //! wakeup latency of the engaged workers (~µs-class), where the old
+    //! scoped pool paid a spawn+join per worker (~100µs-class).  The
+    //! thresholds below predate the persistent pool and are kept at their
+    //! measured values: they now mark the point where a region's *barrier*
+    //! cost (not spawn cost) exceeds the sharded compute, and keeping them
+    //! stable keeps every existing serial-vs-pooled test boundary intact.
+
+    /// Below this many total parameters an optimizer step is cheaper
+    /// serial than as pool regions; `ParallelExecutor::step` falls back
+    /// automatically (results are identical either way).
+    pub const PARALLEL_MIN_ELEMS: usize = 1 << 16;
+
+    /// Below this buffer length a ring collective's per-step regions cost
+    /// more than the chunk work; the pooled collectives and the sharded
+    /// optimizer fall back to the serial schedule (identical results).
+    pub const POOLED_MIN_ELEMS: usize = 1 << 12;
+
+    /// Chunks per pool thread for the plan-granularity executor: the
+    /// balanced `ShardPlan` over-partitions the flat vector by this factor
+    /// so dynamic scheduling can absorb chunk-cost skew (the last chunks
+    /// of a block carry partial segments) without a static-partition tail.
+    pub const PLAN_CHUNKS_PER_THREAD: usize = 8;
+
+    /// Number of plan chunks the plan-granularity executor cuts for a
+    /// `threads`-wide pool.
+    pub fn plan_chunks(threads: usize) -> usize {
+        threads.max(1) * PLAN_CHUNKS_PER_THREAD
+    }
+}
+
+/// One parallel region, lifetime-erased for the long-lived workers.  Lives
+/// on the caller's stack for exactly the duration of the region (see the
+/// module safety model).
+struct Region {
+    /// type- and lifetime-erased task body: `run(i)` executes task `i`
+    run: *const (dyn Fn(usize) + Sync),
+    /// number of tasks in the pre-split list
+    count: usize,
+    /// next unclaimed task index — the whole queue is this one atomic
+    cursor: AtomicUsize,
+    /// workers currently engaged with *this* region (joined under the
+    /// pool mutex, checked out under it); the close barrier waits for 0
+    engaged: AtomicUsize,
+    /// set by any worker whose task panicked; the caller re-panics
+    poisoned: AtomicBool,
+    /// the first panicking task's payload, resumed by the caller after
+    /// the close barrier so the original message/location survive
+    payload: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Erase the borrow's lifetime so the long-lived workers can hold the
+/// pointer.  Sound only because [`run_region`] does not return until every
+/// worker that observed the region has checked out.
+#[allow(clippy::transmutes_expressible_as_ptr_casts)]
+fn erase<'a>(run: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync + 'static) {
+    // SAFETY: fat-pointer transmute between the same trait object with a
+    // shorter vs 'static lifetime bound; layout is identical.
+    unsafe {
+        std::mem::transmute::<
+            &'a (dyn Fn(usize) + Sync + 'a),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(run)
+    }
+}
+
+/// Raw pointer to the active region, made sendable: workers only ever
+/// dereference it between joining and checking out, both under the pool
+/// mutex protocol that keeps the caller alive for that window.
+#[derive(Clone, Copy)]
+struct RegionPtr(*const Region);
+unsafe impl Send for RegionPtr {}
+
+struct PoolState {
+    /// the currently open region, if any
+    region: Option<RegionPtr>,
+    /// bumped once per region; a worker serves each generation at most once
+    generation: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers park here waiting for a new generation
+    work_cv: Condvar,
+    /// the caller parks here waiting for engaged workers to check out
+    /// (and queued callers wait here for the region slot to free up)
+    done_cv: Condvar,
+}
+
+/// Owns the worker threads.  Dropped when the last [`ThreadPool`] clone
+/// drops: signals shutdown and joins the (parked) workers.
+struct PoolCore {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut served = 0u64;
+    loop {
+        // park until a generation we have not served opens (or shutdown);
+        // joining (the engaged increment) happens under the lock, so the
+        // region cannot close while we take it
+        let region = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != served {
+                    if let Some(r) = st.region {
+                        served = st.generation;
+                        // SAFETY: region open ⇒ its caller is inside
+                        // run_region, the stack referent is alive
+                        unsafe { &*r.0 }.engaged.fetch_add(1, Ordering::Relaxed);
+                        break r;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // drain tasks: one fetch_add per claim, body runs lock-free
+        let r = unsafe { &*region.0 };
+        IN_REGION.with(|c| c.set(true));
+        loop {
+            let i = r.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= r.count {
+                break;
+            }
+            let run = unsafe { &*r.run };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| run(i))) {
+                r.poisoned.store(true, Ordering::Relaxed);
+                let mut slot = r.payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+        IN_REGION.with(|c| c.set(false));
+        // check out under the lock; the closing caller waits for 0 and
+        // frees the region only after, so `r` is never touched again
+        let st = shared.state.lock().unwrap();
+        r.engaged.fetch_sub(1, Ordering::Relaxed);
+        shared.done_cv.notify_all();
+        drop(st);
+    }
+}
+
+enum Backend {
+    /// width 1: plain serial loop, nothing ever spawned
+    Serial,
+    /// long-lived parked workers (the default for width ≥ 2)
+    Persistent(Arc<PoolCore>),
+    /// per-call `std::thread::scope` spawn — the legacy implementation,
+    /// kept only as the baseline the `optimizer_step` bench beats
+    Spawn,
+}
+
+/// Fixed-width worker pool.  Construct once per trainer/executor and call
+/// [`ThreadPool::map_mut`] per parallel region; clones share the same
+/// workers.  Width `w ≥ 2` keeps `w - 1` threads parked — the calling
+/// thread is the `w`-th worker of every region.
 pub struct ThreadPool {
     threads: usize,
+    backend: Backend,
+}
+
+impl Clone for ThreadPool {
+    fn clone(&self) -> ThreadPool {
+        let backend = match &self.backend {
+            Backend::Serial => Backend::Serial,
+            Backend::Persistent(core) => Backend::Persistent(core.clone()),
+            Backend::Spawn => Backend::Spawn,
+        };
+        ThreadPool { threads: self.threads, backend }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.backend {
+            Backend::Serial => "serial",
+            Backend::Persistent(_) => "persistent",
+            Backend::Spawn => "spawn",
+        };
+        write!(f, "ThreadPool {{ threads: {}, backend: {kind} }}", self.threads)
+    }
 }
 
 impl ThreadPool {
     /// A pool with `threads` workers; `0` selects the machine's available
-    /// parallelism.  The width is clamped to at least 1.
+    /// parallelism.  The width is clamped to at least 1; width 1 spawns
+    /// nothing, width `w ≥ 2` parks `w - 1` persistent workers.
     pub fn new(threads: usize) -> ThreadPool {
         let threads = if threads == 0 { Self::available() } else { threads };
-        ThreadPool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        if threads == 1 {
+            return ThreadPool { threads, backend: Backend::Serial };
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                region: None,
+                generation: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lans-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool {
+            threads,
+            backend: Backend::Persistent(Arc::new(PoolCore { shared, handles })),
+        }
+    }
+
+    /// The legacy per-call-spawn pool: same API, same results, but every
+    /// [`map_mut`](Self::map_mut) pays a scoped spawn+join per worker.
+    /// Exists only so the `optimizer_step` bench can quantify what the
+    /// persistent pool removes; never used on the training path.
+    pub fn new_spawning(threads: usize) -> ThreadPool {
+        let threads = if threads == 0 { Self::available() } else { threads };
+        let threads = threads.max(1);
+        let backend = if threads == 1 { Backend::Serial } else { Backend::Spawn };
+        ThreadPool { threads, backend }
     }
 
     /// The machine's available parallelism (1 if unknown).
@@ -45,9 +320,22 @@ impl ThreadPool {
     }
 
     /// Apply `f` to every item, distributing items across the pool's
-    /// workers.  Results are returned in item order.  Runs serially (no
-    /// threads spawned) when the pool is width-1 or there are fewer than
-    /// two items.
+    /// workers (the caller included), dynamically: a skewed task list does
+    /// not serialize on a bad static partition.  Results are returned in
+    /// item order regardless of which worker ran what, so reductions that
+    /// combine them stay deterministic.  Runs serially (no other threads
+    /// touched) when the pool is width-1 or there are fewer than two
+    /// items.
+    ///
+    /// If any item's `f` panics the region is poisoned: remaining items
+    /// may be skipped, every engaged worker still checks out, and this
+    /// call re-raises the first panic once the region has closed (items
+    /// may be left partially mutated, as with any panic mid-mutation).
+    ///
+    /// Reentrancy: a `map_mut` issued from *inside* a work item (any
+    /// persistent pool) runs its items serially on the current thread —
+    /// the nested publish would otherwise deadlock on the region slot its
+    /// own caller holds open.  Results are identical either way.
     pub fn map_mut<I, T, F>(&self, items: &mut [I], f: F) -> Vec<T>
     where
         I: Send,
@@ -58,30 +346,141 @@ impl ThreadPool {
         if self.threads <= 1 || n <= 1 {
             return items.iter_mut().map(f).collect();
         }
-        let workers = self.threads.min(n);
-        let queue = Mutex::new(items.iter_mut().enumerate());
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    // take the lock only to pop the next item; `f` runs
-                    // outside it
-                    let next = queue.lock().unwrap().next();
-                    match next {
-                        Some((i, item)) => {
-                            let out = f(item);
-                            *slots[i].lock().unwrap() = Some(out);
-                        }
-                        None => break,
-                    }
-                });
+        match &self.backend {
+            Backend::Serial => items.iter_mut().map(f).collect(),
+            Backend::Spawn => map_mut_spawning(self.threads, items, f),
+            Backend::Persistent(core) => {
+                if IN_REGION.with(|c| c.get()) {
+                    // nested region from inside a work item: publishing
+                    // would deadlock on the slot our own caller holds —
+                    // run serially instead (identical results)
+                    return items.iter_mut().map(f).collect();
+                }
+                let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+                {
+                    let items_ptr = SendSyncPtr(items.as_mut_ptr());
+                    let slots_ptr = SendSyncPtr(slots.as_mut_ptr());
+                    let run = |i: usize| {
+                        // each index is claimed exactly once (fetch_add),
+                        // so these derefs are disjoint across workers
+                        let item: &mut I = unsafe { &mut *items_ptr.0.add(i) };
+                        let out = f(item);
+                        unsafe { *slots_ptr.0.add(i) = Some(out) };
+                    };
+                    run_region(&core.shared, n, &run);
+                }
+                slots
+                    .into_iter()
+                    .map(|s| s.expect("pool worker lost a result"))
+                    .collect()
             }
-        });
-        slots
-            .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("pool worker lost a result"))
-            .collect()
+        }
     }
+}
+
+/// Raw pointer that may cross threads; disjointness of the indexed
+/// accesses is guaranteed by the region's task-claim protocol.
+struct SendSyncPtr<T>(*mut T);
+unsafe impl<T> Send for SendSyncPtr<T> {}
+unsafe impl<T> Sync for SendSyncPtr<T> {}
+
+/// Execute one region on the persistent workers: publish (sync point 1),
+/// have the caller drain tasks alongside the workers, close (sync point
+/// 2: wait for engaged workers to check out).
+fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
+    let region = Region {
+        run: erase(run),
+        count,
+        cursor: AtomicUsize::new(0),
+        engaged: AtomicUsize::new(0),
+        poisoned: AtomicBool::new(false),
+        payload: Mutex::new(None),
+    };
+
+    // publish: one mutex pass + wakeups.  If another thread's region is
+    // still open (pools are shared), queue behind it.
+    {
+        let mut st = shared.state.lock().unwrap();
+        while st.region.is_some() {
+            st = shared.done_cv.wait(st).unwrap();
+        }
+        st.region = Some(RegionPtr(&region as *const Region));
+        st.generation = st.generation.wrapping_add(1);
+        shared.work_cv.notify_all();
+    }
+
+    // the caller is a worker too: claim and run tasks until none remain
+    IN_REGION.with(|c| c.set(true));
+    let caller_panic = loop {
+        let i = region.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= count {
+            break None;
+        }
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| run(i))) {
+            region.poisoned.store(true, Ordering::Relaxed);
+            break Some(payload);
+        }
+    };
+    IN_REGION.with(|c| c.set(false));
+
+    // close: retract the region so no new worker joins (and the slot
+    // frees for queued callers), then wait for this region's engaged
+    // workers to check out.  After this, no thread can touch `region` (or
+    // the caller's borrows inside `run`) again.
+    {
+        let mut st = shared.state.lock().unwrap();
+        st.region = None;
+        shared.done_cv.notify_all();
+        while region.engaged.load(Ordering::Relaxed) > 0 {
+            st = shared.done_cv.wait(st).unwrap();
+        }
+        drop(st);
+    }
+
+    if let Some(payload) = caller_panic {
+        std::panic::resume_unwind(payload);
+    }
+    if region.poisoned.load(Ordering::Relaxed) {
+        // resume the first worker's payload so the original panic
+        // message and location survive the thread hop
+        if let Some(payload) = region.payload.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+        panic!("ThreadPool region poisoned: a work item panicked on a pool worker");
+    }
+}
+
+/// The legacy scoped-thread implementation (per-call spawn + join,
+/// `Mutex<Iterator>` task pop, `Mutex<Option<T>>` result slots) — the
+/// baseline [`ThreadPool::new_spawning`] preserves for the bench.
+fn map_mut_spawning<I, T, F>(threads: usize, items: &mut [I], f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(&mut I) -> T + Sync,
+{
+    let n = items.len();
+    let workers = threads.min(n);
+    let queue = Mutex::new(items.iter_mut().enumerate());
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((i, item)) => {
+                        let out = f(item);
+                        *slots[i].lock().unwrap() = Some(out);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("pool worker lost a result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -137,5 +536,133 @@ mod tests {
         let mut items: Vec<usize> = Vec::new();
         let out: Vec<usize> = ThreadPool::new(4).map_mut(&mut items, |x| *x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_regions() {
+        // the persistent-pool point: one pool, many cheap regions.  Every
+        // region's results must be correct and in item order.
+        let pool = ThreadPool::new(4);
+        for round in 0..200u64 {
+            let mut items: Vec<u64> = (0..(1 + round % 13)).collect();
+            let out = pool.map_mut(&mut items, |x| *x + round);
+            let want: Vec<u64> = (0..(1 + round % 13)).map(|i| i + round).collect();
+            assert_eq!(out, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn clones_share_workers_and_agree() {
+        let a = ThreadPool::new(3);
+        let b = a.clone();
+        let mut xs: Vec<u32> = (0..50).collect();
+        let mut ys = xs.clone();
+        assert_eq!(a.map_mut(&mut xs, |x| *x * 3), b.map_mut(&mut ys, |x| *x * 3));
+    }
+
+    #[test]
+    fn spawning_baseline_matches_persistent() {
+        let persistent = ThreadPool::new(4);
+        let spawning = ThreadPool::new_spawning(4);
+        let mut a: Vec<u64> = (0..64).collect();
+        let mut b = a.clone();
+        let ra = persistent.map_mut(&mut a, |x| {
+            *x *= 5;
+            *x
+        });
+        let rb = spawning.map_mut(&mut b, |x| {
+            *x *= 5;
+            *x
+        });
+        assert_eq!(ra, rb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn panicking_item_poisons_region_but_not_the_pool() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut items: Vec<usize> = (0..64).collect();
+            pool.map_mut(&mut items, |x| {
+                if *x == 13 {
+                    panic!("boom");
+                }
+                *x
+            });
+        }));
+        assert!(result.is_err(), "poisoned region must panic the caller");
+        // workers must still be parked and serviceable, not hung or dead
+        let mut items: Vec<usize> = (0..32).collect();
+        let out = pool.map_mut(&mut items, |x| *x + 1);
+        assert_eq!(out, (1..33).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_regions_queue_behind_each_other() {
+        // two threads sharing one pool: regions serialize on the region
+        // slot, both complete correctly
+        let pool = ThreadPool::new(3);
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for round in 0..50u64 {
+                        let mut items: Vec<u64> = (0..9).collect();
+                        let out = pool.map_mut(&mut items, |x| *x + t * 1000 + round);
+                        let want: Vec<u64> =
+                            (0..9).map(|i| i + t * 1000 + round).collect();
+                        assert_eq!(out, want);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn nested_map_mut_runs_serially_instead_of_deadlocking() {
+        let pool = ThreadPool::new(3);
+        let inner = pool.clone();
+        let mut items: Vec<u64> = (0..8).collect();
+        let out = pool.map_mut(&mut items, |x| {
+            // nested region from inside a work item: must not hang
+            let mut sub: Vec<u64> = (0..4).map(|i| *x + i).collect();
+            inner.map_mut(&mut sub, |y| *y * 2).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..8).map(|x| (0..4).map(|i| (x + i) * 2).sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn worker_panic_payload_survives() {
+        // the original panic message must reach the caller even when the
+        // panicking task ran on a pool worker, not the calling thread
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut items: Vec<usize> = (0..64).collect();
+            pool.map_mut(&mut items, |x| {
+                if *x == 13 {
+                    panic!("distinctive-payload-13");
+                }
+                *x
+            });
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_owned)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("distinctive-payload-13"),
+            "payload lost: {msg:?}"
+        );
+    }
+
+    #[test]
+    fn policy_constants_are_sane() {
+        assert!(policy::PARALLEL_MIN_ELEMS > policy::POOLED_MIN_ELEMS);
+        assert_eq!(policy::plan_chunks(4), 4 * policy::PLAN_CHUNKS_PER_THREAD);
+        assert!(policy::plan_chunks(0) >= 1);
     }
 }

@@ -296,12 +296,13 @@ fn prop_lans_gradient_scale_invariance() {
 }
 
 #[test]
-fn prop_parallel_block_sharded_step_matches_serial() {
-    // the ParallelExecutor contract: across random block tables (including
-    // blocks that straddle the 4K reduction sub-chunk), thread counts and
-    // step counts, the block-sharded parallel LANS/LAMB/AdamW step matches
-    // the serial step within 1e-6 (in practice: bit-identical, since both
-    // paths run the same per-block kernels in the same reduction order).
+fn prop_plan_parallel_step_bit_identical_to_serial() {
+    // the plan-granularity executor contract: across random block tables
+    // (including blocks that straddle the 4K reduction segment), thread
+    // counts and step counts, the parallel LANS/LAMB/AdamW step is
+    // *bit-identical* to the serial step — both paths run the same
+    // segment kernels and combine partials in the same (global segment)
+    // order, for any cut on the NORM_SEG grid.
     for_cases(40, |_, rng| {
         let nblocks = 1 + rng.below_usize(5);
         let specs: Vec<(String, usize, bool)> = (0..nblocks)
@@ -330,30 +331,65 @@ fn prop_parallel_block_sharded_step_matches_serial() {
                 let lr = 0.001 + 0.01 * k as f32;
                 let s_ser = o_ser.step(&mut xs, &g, lr);
                 let s_par = o_par.step_parallel(&pool, &mut xp, &g, lr);
-                assert!(
-                    (s_ser.mean_trust_ratio - s_par.mean_trust_ratio).abs() <= 1e-9,
-                    "{name}: trust {} vs {}",
-                    s_ser.mean_trust_ratio,
-                    s_par.mean_trust_ratio
+                assert_eq!(
+                    s_ser.mean_trust_ratio, s_par.mean_trust_ratio,
+                    "{name}: trust mismatch"
                 );
-                assert!(
-                    (s_ser.grad_norm - s_par.grad_norm).abs() <= 1e-9,
-                    "{name}: grad norm {} vs {}",
-                    s_ser.grad_norm,
-                    s_par.grad_norm
-                );
-                assert!(
-                    (s_ser.max_abs_param - s_par.max_abs_param).abs() <= 1e-6,
-                    "{name}: max abs param"
+                assert_eq!(s_ser.grad_norm, s_par.grad_norm, "{name}: grad norm mismatch");
+                assert_eq!(
+                    s_ser.max_abs_param, s_par.max_abs_param,
+                    "{name}: max abs param mismatch"
                 );
             }
-            for (i, (a, b)) in xs.iter().zip(&xp).enumerate() {
-                assert!(
-                    (a - b).abs() < 1e-6,
-                    "{name} (threads={threads}, steps={steps}): \
-                     param {i} diverged: {a} vs {b}"
-                );
+            assert_eq!(
+                xs, xp,
+                "{name} (threads={threads}, steps={steps}): params diverged"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_long_lived_pool_bit_identical_to_fresh_pools() {
+    // pool-reuse contract: ONE persistent pool driving many interleaved
+    // parallel regions — optimizer steps and ring collectives, across
+    // many unrelated cases — produces exactly the bits of a fresh pool
+    // per operation.  Guards against region-state leakage between uses
+    // (stale cursors, generation mixups, result-slot reuse).
+    let shared = ThreadPool::new(4);
+    for_cases(25, |_, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(6000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let w = 2 + rng.below_usize(4);
+        let hp = Hyper::default();
+        let mut o_shared = make_optimizer("lans", table.clone(), hp).unwrap();
+        let mut o_fresh = make_optimizer("lans", table.clone(), hp).unwrap();
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let mut xs = x0.clone();
+        let mut xf = x0;
+        for k in 0..3 {
+            // a collective on both pools...
+            let bufs: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut a = bufs.clone();
+            let mut b = bufs;
+            ring_allreduce_pooled(&mut a, &shared);
+            ring_allreduce_pooled(&mut b, &ThreadPool::new(4));
+            assert_eq!(a, b, "allreduce diverged on the long-lived pool");
+            // ...then an optimizer step on both, interleaved
+            let mut grad = std::mem::take(&mut a[0]);
+            let inv = 1.0 / w as f32;
+            for g in grad.iter_mut() {
+                *g *= inv;
             }
+            let lr = 0.01 + 0.002 * k as f32;
+            o_shared.step_parallel(&shared, &mut xs, &grad, lr);
+            o_fresh.step_parallel(&ThreadPool::new(4), &mut xf, &grad, lr);
+            assert_eq!(xs, xf, "optimizer step diverged on the long-lived pool");
         }
     });
 }
@@ -392,11 +428,12 @@ fn prop_shard_plan_is_aligned_partition() {
 
 #[test]
 fn prop_sharded_pipeline_matches_replicated_bit_for_bit() {
-    // the full ZeRO-1 step — reduce-scatter, scatter_to_plan, sharded
-    // update — against allreduce + replicated serial update, from the same
+    // the full ZeRO-1 step — reduce-scatter, stitch, sharded update —
+    // against allreduce + replicated serial update, from the same
     // per-worker gradient buffers: identical trajectories and stats,
     // across random block tables (straddling NORM_SEG), worker counts,
-    // steps, and both sharded execution modes (serial/pooled)
+    // steps, and all three sharded execution modes (serial / pooled /
+    // pipelined step_scattered, which fuses the stitch with phase A)
     for_cases(30, |seed, rng| {
         let nblocks = 1 + rng.below_usize(5);
         let specs: Vec<(String, usize, bool)> = (0..nblocks)
@@ -406,7 +443,7 @@ fn prop_sharded_pipeline_matches_replicated_bit_for_bit() {
         let w = 1 + rng.below_usize(6);
         let steps = 1 + rng.below_usize(3);
         let pool = ThreadPool::new(2 + rng.below_usize(6));
-        let use_pool = seed % 2 == 0;
+        let mode = seed % 3; // 0 = serial, 1 = pooled, 2 = pipelined
         let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
 
         for name in ["lans", "lamb"] {
@@ -433,24 +470,35 @@ fn prop_sharded_pipeline_matches_replicated_bit_for_bit() {
                 }
                 let s_rep = rep.step(&mut xr, &grad, lr);
 
-                // sharded: reduce-scatter, stitch owned ranges, shard update
+                // sharded: reduce-scatter, then one of the three modes
                 let mut b = bufs;
                 ring_reduce_scatter(&mut b);
-                let shard_grads = scatter_to_plan(&b, sh.plan(), scale);
-                let s_sh = if use_pool {
-                    sh.step_pooled(&pool, &mut xs, &shard_grads, lr)
-                } else {
-                    sh.step(&mut xs, &shard_grads, lr)
+                let s_sh = match mode {
+                    0 => {
+                        let sg = scatter_to_plan(&b, sh.plan(), scale);
+                        sh.step(&mut xs, &sg, lr)
+                    }
+                    1 => {
+                        let sg = scatter_to_plan(&b, sh.plan(), scale);
+                        sh.step_pooled(&pool, &mut xs, &sg, lr)
+                    }
+                    _ => sh.step_scattered(&pool, &mut xs, &b, scale, lr),
                 };
 
-                assert_eq!(s_rep.grad_norm, s_sh.grad_norm, "{name} w={w}");
+                assert_eq!(s_rep.grad_norm, s_sh.grad_norm, "{name} w={w} mode={mode}");
                 assert_eq!(
                     s_rep.mean_trust_ratio, s_sh.mean_trust_ratio,
-                    "{name} w={w}"
+                    "{name} w={w} mode={mode}"
                 );
-                assert_eq!(s_rep.max_abs_param, s_sh.max_abs_param, "{name} w={w}");
+                assert_eq!(
+                    s_rep.max_abs_param, s_sh.max_abs_param,
+                    "{name} w={w} mode={mode}"
+                );
             }
-            assert_eq!(xr, xs, "{name} (w={w}, steps={steps}): trajectory diverged");
+            assert_eq!(
+                xr, xs,
+                "{name} (w={w}, steps={steps}, mode={mode}): trajectory diverged"
+            );
         }
     });
 }
