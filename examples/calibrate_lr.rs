@@ -6,6 +6,7 @@ use anyhow::Result;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{from_ratios, Hyper};
+use lans::precision::{DType, LossScale};
 use lans::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -25,6 +26,8 @@ fn main() -> Result<()> {
                 threads: 0,
                 shard_optimizer: false,
                 resume_opt_state: false,
+                grad_dtype: DType::F32,
+                loss_scale: LossScale::Off,
                 global_batch: batch,
                 steps,
                 seed: 1,

@@ -14,6 +14,7 @@ use anyhow::Result;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
+use lans::precision::{DType, LossScale};
 use lans::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -37,6 +38,8 @@ fn main() -> Result<()> {
             // per-worker moments cut 4x
             shard_optimizer: true,
             resume_opt_state: false,
+            grad_dtype: DType::F32,
+            loss_scale: LossScale::Off,
             global_batch: 32,
             steps: 60,
             seed: 42,
@@ -71,6 +74,8 @@ fn main() -> Result<()> {
         threads: 0,
         shard_optimizer: false, // adamw_bgn is element-wise; nothing to shard
         resume_opt_state: false,
+        grad_dtype: DType::F32,
+        loss_scale: LossScale::Off,
         global_batch: 8,
         steps: 40,
         seed: 9,

@@ -19,6 +19,7 @@ use anyhow::Result;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::Hyper;
+use lans::precision::{DType, LossScale};
 use lans::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -55,6 +56,8 @@ fn main() -> Result<()> {
         // the replicated update it replaces
         shard_optimizer: true,
         resume_opt_state: false,
+        grad_dtype: DType::F32,
+        loss_scale: LossScale::Off,
         global_batch: 32,
         steps: phase1_steps,
         seed: 42,
@@ -103,6 +106,8 @@ fn main() -> Result<()> {
         // seq-128 moments do not transfer to the seq-512 geometry)
         shard_optimizer: true,
         resume_opt_state: false,
+        grad_dtype: DType::F32,
+        loss_scale: LossScale::Off,
         // paper: phase-2 batch ≈ phase-1/3 (96K -> 33K)
         global_batch: 12,
         steps: phase2_steps.max(5),

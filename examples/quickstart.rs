@@ -10,6 +10,7 @@ use anyhow::Result;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{Hyper, Schedule};
+use lans::precision::{DType, LossScale};
 
 fn main() -> Result<()> {
     let meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
@@ -25,6 +26,8 @@ fn main() -> Result<()> {
         threads: 0, // auto: block-parallel update + chunk-parallel allreduce
         shard_optimizer: false,
         resume_opt_state: false,
+        grad_dtype: DType::F32,
+        loss_scale: LossScale::Off,
         global_batch: 16,
         steps: 40,
         seed: 42,

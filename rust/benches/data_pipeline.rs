@@ -1,39 +1,63 @@
 //! Data-pipeline bench: corpus generation, MLM masking and batch-building
 //! throughput — the L3 work that must stay off the critical path.
+//!
+//! `--quick` (CI smoke): fewer iterations and a smaller corpus, same
+//! shape.  Numbers land in `BENCH_data_pipeline.json` via the shared
+//! `util::bench::Reporter` so the throughput trajectory accumulates
+//! across PRs.
 
 use lans::data::{Masker, SequenceSet, SyntheticCorpus};
-use lans::util::bench::{bench, print_result};
+use lans::util::bench::{bench, print_result, quick_mode, Reporter};
 use lans::util::rng::Rng;
 
 fn main() {
-    println!("=== corpus generation ===");
-    let corpus = SyntheticCorpus::new(8192, 1);
-    let r = bench("markov-zipf generate 1M tokens", 1, 10, || {
-        std::hint::black_box(corpus.generate(1 << 20, 7));
-    });
-    print_result(&r);
+    let quick = quick_mode();
+    let mut rep = Reporter::new("data_pipeline");
+
     println!(
-        "  -> {:.1} Mtok/s",
-        (1 << 20) as f64 / (r.mean_ns * 1e-9) / 1e6
+        "=== corpus generation{} ===",
+        if quick { " (--quick)" } else { "" }
     );
+    let gen_tokens = if quick { 1 << 18 } else { 1 << 20 };
+    let gen_iters = if quick { 3 } else { 10 };
+    let corpus = SyntheticCorpus::new(8192, 1);
+    let r = bench(
+        &format!("markov-zipf generate {gen_tokens} tokens"),
+        1,
+        gen_iters,
+        || {
+            std::hint::black_box(corpus.generate(gen_tokens, 7));
+        },
+    );
+    print_result(&r);
+    let gen_mtok_s = gen_tokens as f64 / (r.mean_ns * 1e-9) / 1e6;
+    println!("  -> {gen_mtok_s:.1} Mtok/s");
+    rep.result(&r);
+    rep.metric("generate_mtok_per_s", gen_mtok_s);
 
     println!("\n=== MLM masking + batch building ===");
+    let mask_iters = if quick { 20 } else { 100 };
     let toks = corpus.generate(128 * 4096, 2);
     let seqs = SequenceSet::new(toks, 128);
     let masker = Masker::new(20, &corpus.vocab);
     let mut rng = Rng::new(3);
     let idx: Vec<usize> = (0..32).collect();
-    let r = bench("make_batch b=32 s=128 slots=20", 5, 100, || {
+    let r = bench("make_batch b=32 s=128 slots=20", 5, mask_iters, || {
         std::hint::black_box(masker.make_batch(&seqs, &idx, &mut rng));
     });
     print_result(&r);
     let tok_rate = (32 * 128) as f64 / (r.mean_ns * 1e-9);
     println!("  -> {:.2} Mtok/s masked", tok_rate / 1e6);
+    rep.result(&r);
+    rep.metric("mask_mtok_per_s", tok_rate / 1e6);
     // a 96K-sequence global batch at seq 128 needs 12.6M tokens/step;
     // report how many masker threads the paper-scale pipeline would need
     // at a 1 s step time
+    let masker_threads = (96.0 * 1024.0 * 128.0) / tok_rate;
     println!(
-        "  -> paper-scale 96K batch needs {:.1} masker-threads at 1 s/step",
-        (96.0 * 1024.0 * 128.0) / tok_rate
+        "  -> paper-scale 96K batch needs {masker_threads:.1} masker-threads at 1 s/step"
     );
+    rep.metric("paper_scale_masker_threads", masker_threads);
+
+    rep.write().expect("writing BENCH_data_pipeline.json");
 }

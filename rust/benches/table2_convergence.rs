@@ -20,6 +20,7 @@ use std::path::PathBuf;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{sqrt_scaled_lr, Hyper};
+use lans::precision::{DType, LossScale};
 use lans::runtime::Engine;
 use lans::util::bench::Table;
 
@@ -66,6 +67,8 @@ fn main() {
             threads: 0, // auto: block-parallel update path
             shard_optimizer: false,
             resume_opt_state: false,
+            grad_dtype: DType::F32,
+            loss_scale: LossScale::Off,
             global_batch: batch,
             steps,
             seed: 1,

@@ -82,6 +82,39 @@ fn main() {
         c.devices(),
     );
 
+    println!("\n=== wire precision: fp32 vs fp16 gradient exchange (grad_dtype) ===\n");
+    // the paper's run moves gradients in fp16: half the bytes on every
+    // hop, so exactly half the β (bandwidth) term of the collective — the
+    // α latency, compute and (fp32-master) update terms are unchanged
+    let mut t4 = Table::new(&[
+        "cluster", "phase", "fp32 step", "fp16 step", "beta term saved",
+    ]);
+    for run in table2_runs() {
+        for (i, p) in run.phases.iter().enumerate() {
+            let f32s = run.cluster.step_time_with_wire(
+                &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::AllReduce, 4.0);
+            let f16s = run.cluster.step_time_with_wire(
+                &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::AllReduce, 2.0);
+            let base = run.cluster.step_time_with_wire(
+                &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::AllReduce, 0.0);
+            let (b32, b16) = (f32s - base, f16s - base);
+            t4.row(&[
+                run.label.to_string(),
+                format!("{}", i + 1),
+                format!("{f32s:.3}s"),
+                format!("{f16s:.3}s"),
+                format!("{:.1}%", (1.0 - b16 / b32) * 100.0),
+            ]);
+            assert!(
+                (b16 - b32 / 2.0).abs() <= 1e-9 * b32,
+                "fp16 wire must model exactly half the beta term \
+                 ({b16} vs {b32}/2)"
+            );
+        }
+    }
+    t4.print();
+    println!("\nfp16 wire: exactly half the modeled β term per phase ✔");
+
     println!("\n=== sensitivity: what if LAMB could use LANS's hardware? ===\n");
     // isolate algorithm speedup (fewer steps) from hardware differences
     let lamb_on_gpu = Run {

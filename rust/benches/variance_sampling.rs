@@ -1,16 +1,30 @@
 //! §3.4 bench: minibatch-gradient variance, sampling with vs without
 //! replacement, empirical vs the paper's closed forms, plus sampler
 //! throughput (the data-pipeline cost of without-replacement sharding).
+//!
+//! `--quick` (CI smoke): fewer trials and a trimmed k-sweep — the trial
+//! count stays high enough that the 20% empirical-vs-theory assertion
+//! keeps real margin (the variance estimator's relative sd is
+//! ~sqrt(2/trials) ≈ 3.7% at 1500 trials).  Numbers land in
+//! `BENCH_variance_sampling.json` via `util::bench::Reporter`.
 
 use lans::data::{make_shards, WithReplacementSampler};
-use lans::util::bench::{bench, print_result, Table};
+use lans::util::bench::{bench, print_result, quick_mode, Reporter, Table};
 use lans::variance::{sweep, GradientPopulation};
 
 fn main() {
+    let quick = quick_mode();
+    let mut rep = Reporter::new("variance_sampling");
+
     let n = 4096;
+    let trials = if quick { 1500 } else { 4000 };
     let pop = GradientPopulation::synthetic(n, 16, 1);
-    println!("=== §3.4: variance of the minibatch mean (n={n}) ===\n");
-    let ks = [16, 64, 256, 1024, 2048, 4096];
+    println!(
+        "=== §3.4: variance of the minibatch mean (n={n}, {trials} trials{}) ===\n",
+        if quick { ", --quick" } else { "" }
+    );
+    let ks: &[usize] =
+        if quick { &[16, 256, 4096] } else { &[16, 64, 256, 1024, 2048, 4096] };
     let mut t = Table::new(&[
         "k",
         "with-repl emp",
@@ -18,7 +32,7 @@ fn main() {
         "wo-repl emp",
         "(n-k)/(k(n-1))s^2",
     ]);
-    for row in sweep(&pop, &ks, 4000, 7) {
+    for row in sweep(&pop, ks, trials, 7) {
         t.row(&[
             row.k.to_string(),
             format!("{:.3e}", row.with_repl_empirical),
@@ -26,6 +40,8 @@ fn main() {
             format!("{:.3e}", row.without_repl_empirical),
             format!("{:.3e}", row.without_repl_theory),
         ]);
+        rep.metric(&format!("with_repl_ratio_k{}", row.k),
+                   row.with_repl_empirical / row.with_repl_theory);
         // shape assertions: empirical within 20% of theory; wo <= with
         assert!(
             (row.with_repl_empirical - row.with_repl_theory).abs()
@@ -41,14 +57,27 @@ fn main() {
     println!("\nk = n row: without-replacement variance vanishes (exact pass) ✔\n");
 
     println!("=== sampler throughput ===");
+    let iters = if quick { 40 } else { 200 };
     let mut shard = make_shards(1 << 20, 1, 3).remove(0);
-    let r = bench("shard.next_batch(1024) from 1M", 10, 200, || {
+    let r = bench("shard.next_batch(1024) from 1M", 10, iters, || {
         std::hint::black_box(shard.next_batch(1024));
     });
     print_result(&r);
+    rep.metric(
+        "wo_repl_msamples_per_s",
+        1024.0 / (r.mean_ns * 1e-9) / 1e6,
+    );
+    rep.result(&r);
     let mut wr = WithReplacementSampler::new(1 << 20, 3);
-    let r = bench("with_replacement(1024) from 1M", 10, 200, || {
+    let r = bench("with_replacement(1024) from 1M", 10, iters, || {
         std::hint::black_box(wr.next_batch(1024));
     });
     print_result(&r);
+    rep.metric(
+        "with_repl_msamples_per_s",
+        1024.0 / (r.mean_ns * 1e-9) / 1e6,
+    );
+    rep.result(&r);
+
+    rep.write().expect("writing BENCH_variance_sampling.json");
 }

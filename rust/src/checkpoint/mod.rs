@@ -5,6 +5,14 @@
 //!   per tensor: name_len u32, name bytes, rank u32, dims u64…, data f32… |
 //!   crc32 of everything after the magic
 //!
+//! Format versions: **v1** is the original params+moments layout; **v2**
+//! (current) declares that auxiliary subsystem state may ride along as
+//! extra named tensors (`optshard:*` sharded moments, `lossscale:state`
+//! dynamic loss-scaler state).  The binary layout is unchanged, so v1
+//! files load under v2 rules; files from a *newer* format fail with a
+//! contextual error naming the path and the supported range instead of
+//! mis-parsing.
+//!
 //! The two-phase pretraining flow depends on this: phase 2 (seq 512) resumes
 //! from the phase-1 checkpoint, exactly as the paper's 3519+782-step split.
 
@@ -16,12 +24,21 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::runtime::tensor::TensorF32;
 
 const MAGIC: &[u8; 8] = b"LANSCKPT";
-const VERSION: u32 = 1;
+
+/// The format version this build writes.
+pub const FORMAT_VERSION: u32 = 2;
+/// The oldest format version this build still reads.
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
+    /// Format version: [`FORMAT_VERSION`] for checkpoints built in-process
+    /// ([`Checkpoint::new`]); whatever the file declared after a load.
+    /// Saving always writes the current [`FORMAT_VERSION`].
+    pub version: u32,
     pub step: u64,
-    /// named tensors: params first, then moments ("m:<name>", "v:<name>")
+    /// named tensors: params first, then moments ("m:<name>", "v:<name>"),
+    /// then any auxiliary subsystem state (v2)
     pub tensors: Vec<(String, TensorF32)>,
 }
 
@@ -43,6 +60,11 @@ fn crc32(data: &[u8]) -> u32 {
 }
 
 impl Checkpoint {
+    /// A checkpoint at the current [`FORMAT_VERSION`].
+    pub fn new(step: u64, tensors: Vec<(String, TensorF32)>) -> Checkpoint {
+        Checkpoint { version: FORMAT_VERSION, step, tensors }
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         // create missing parent directories, and fail with the offending
         // directory in the message (not a bare io error) if that's impossible
@@ -54,7 +76,7 @@ impl Checkpoint {
             }
         }
         let mut body: Vec<u8> = Vec::new();
-        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
         body.extend_from_slice(&self.step.to_le_bytes());
         body.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for (name, t) in &self.tensors {
@@ -103,8 +125,13 @@ impl Checkpoint {
             Ok(a)
         };
         let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
+        if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
+            bail!(
+                "{}: unsupported checkpoint format version {version} (this \
+                 build reads {MIN_FORMAT_VERSION}..={FORMAT_VERSION}); was it \
+                 written by a newer build?",
+                path.display()
+            );
         }
         let step = u64::from_le_bytes(take(8)?.try_into().unwrap());
         let n_tensors = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
@@ -129,7 +156,7 @@ impl Checkpoint {
         if !cur.is_empty() {
             bail!("trailing bytes in checkpoint");
         }
-        Ok(Checkpoint { step, tensors })
+        Ok(Checkpoint { version, step, tensors })
     }
 }
 
@@ -138,13 +165,25 @@ mod tests {
     use super::*;
 
     fn sample() -> Checkpoint {
-        Checkpoint {
-            step: 42,
-            tensors: vec![
+        Checkpoint::new(
+            42,
+            vec![
                 ("w".into(), TensorF32::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0])),
                 ("m:w".into(), TensorF32::new(vec![4], vec![0.1; 4])),
             ],
-        }
+        )
+    }
+
+    /// Rewrite a saved checkpoint's version field (offset 8..12, right
+    /// after the magic) and refresh the trailing crc so only the version
+    /// check can object.
+    fn patch_version(path: &Path, version: u32) {
+        let mut raw = std::fs::read(path).unwrap();
+        raw[8..12].copy_from_slice(&version.to_le_bytes());
+        let body_end = raw.len() - 4;
+        let crc = crc32(&raw[8..body_end]);
+        raw[body_end..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(path, &raw).unwrap();
     }
 
     #[test]
@@ -153,9 +192,47 @@ mod tests {
         let c = sample();
         c.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.version, FORMAT_VERSION);
         assert_eq!(back.step, 42);
         assert_eq!(back.tensors.len(), 2);
         assert_eq!(back.tensors[0].1, c.tensors[0].1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // the pre-versioned-aux-state format: same layout, version 1
+        let p = std::env::temp_dir().join("lans_test_ckpt_v1.bin");
+        sample().save(&p).unwrap();
+        patch_version(&p, 1);
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.version, 1);
+        assert_eq!(back.step, 42);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unknown_version_fails_with_context() {
+        let p = std::env::temp_dir().join("lans_test_ckpt_v99.bin");
+        sample().save(&p).unwrap();
+        patch_version(&p, 99);
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("version 99"), "unhelpful: {err}");
+        assert!(err.contains("lans_test_ckpt_v99.bin"), "unhelpful: {err}");
+        assert!(
+            err.contains(&format!("{MIN_FORMAT_VERSION}..={FORMAT_VERSION}")),
+            "unhelpful: {err}"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn version_zero_rejected() {
+        let p = std::env::temp_dir().join("lans_test_ckpt_v0.bin");
+        sample().save(&p).unwrap();
+        patch_version(&p, 0);
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("version 0"), "unhelpful: {err}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -50,7 +50,14 @@ impl BertDims {
     }
 
     pub fn param_bytes_f32(&self) -> f64 {
-        self.param_count() as f64 * 4.0
+        self.param_bytes(4.0)
+    }
+
+    /// Parameter-vector bytes at an arbitrary wire element width — 2.0
+    /// prices the fp16/bf16 gradient exchange of the paper's mixed-
+    /// precision run, 4.0 the fp32 baseline.
+    pub fn param_bytes(&self, bytes_per_elem: f64) -> f64 {
+        self.param_count() as f64 * bytes_per_elem
     }
 
     /// Forward FLOPs for one sequence of length `seq` with `slots` MLM

@@ -99,7 +99,7 @@ impl ClusterSpec {
     }
 
     /// Seconds for one synchronous data-parallel step under the chosen
-    /// collective schedule.
+    /// collective schedule, at the default f32 wire width.
     pub fn step_time_with(
         &self,
         dims: &BertDims,
@@ -108,10 +108,28 @@ impl ClusterSpec {
         slots: usize,
         collective: Collective,
     ) -> f64 {
+        self.step_time_with_wire(dims, batch_seqs, seq, slots, collective, 4.0)
+    }
+
+    /// [`step_time_with`](Self::step_time_with) at an explicit wire width
+    /// (`bytes_per_elem`: 4.0 = fp32, 2.0 = fp16/bf16).  Halving the wire
+    /// bytes halves exactly the β (bandwidth) term of the collective; the
+    /// α (latency) term and the compute/update terms are unchanged — the
+    /// optimizer update stays a full-precision pass over the fp32 master
+    /// copy, as in the paper's mixed-precision recipe.
+    pub fn step_time_with_wire(
+        &self,
+        dims: &BertDims,
+        batch_seqs: usize,
+        seq: usize,
+        slots: usize,
+        collective: Collective,
+        bytes_per_elem: f64,
+    ) -> f64 {
         let flops = dims.train_flops_per_seq(seq, slots) * batch_seqs as f64;
         let t_compute =
             flops / (self.devices() as f64 * self.peak_flops * self.efficiency);
-        let bytes = dims.param_bytes_f32();
+        let bytes = dims.param_bytes(bytes_per_elem);
         let (t_comm, sharded) = match collective {
             Collective::AllReduce => (
                 hierarchical_allreduce_time_s(
@@ -267,6 +285,34 @@ mod tests {
         let rep = c.optimizer_update_time_s(&BERT_LARGE, false);
         let sh = c.optimizer_update_time_s(&BERT_LARGE, true);
         assert!((rep / sh - c.devices() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fp16_wire_halves_the_beta_term() {
+        // wire width scales only the bandwidth term: with bytes/elem = 0
+        // isolating α + compute + update, the fp16 surplus must be exactly
+        // half the fp32 surplus (the cost model is linear in bytes)
+        let c = ClusterSpec::p3dn(192);
+        let (b, s, sl) = (98304, 128, 20);
+        for coll in [Collective::AllReduce, Collective::ReduceScatterGather] {
+            let t32 = c.step_time_with_wire(&BERT_LARGE, b, s, sl, coll, 4.0);
+            let t16 = c.step_time_with_wire(&BERT_LARGE, b, s, sl, coll, 2.0);
+            let base = c.step_time_with_wire(&BERT_LARGE, b, s, sl, coll, 0.0);
+            let beta32 = t32 - base;
+            let beta16 = t16 - base;
+            assert!(beta32 > 0.0, "{coll:?}");
+            assert!(
+                (beta16 - beta32 / 2.0).abs() <= 1e-9 * beta32,
+                "{coll:?}: beta16 {beta16} vs half of {beta32}"
+            );
+            assert!(t16 < t32, "{coll:?}");
+        }
+        // and the default-width entry point is the 4-byte wire
+        let via_default =
+            c.step_time_with(&BERT_LARGE, b, s, sl, Collective::AllReduce);
+        let via_wire =
+            c.step_time_with_wire(&BERT_LARGE, b, s, sl, Collective::AllReduce, 4.0);
+        assert_eq!(via_default, via_wire);
     }
 
     #[test]

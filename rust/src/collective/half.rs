@@ -1,0 +1,326 @@
+//! Half-precision wire variants of the ring collectives — the fp16/bf16
+//! gradient exchange of the paper's 54-minute run, where halving wire
+//! bytes halves the β-term the cost model prices.
+//!
+//! Schedule and chunk grid are exactly the f32 ring's
+//! ([`ring_chunk_starts`], same `W-1`-step phases); only what crosses the
+//! wire changes:
+//!
+//! * **reduce-scatter** — every hop's outgoing chunk is quantized into a
+//!   packed [`HalfVec`] (2 bytes/element on the wire), and the receiver
+//!   *accumulates in f32*: `dst[i] += dq(wire[i])`.  Chunk `c` is still
+//!   reduced in worker order `c, c+1, …` regardless of schedule, so for
+//!   fixed inputs the result is a deterministic function — the pooled
+//!   variant is bit-identical to the serial one (property-tested).
+//! * **all-gather** — each reduced chunk crosses the wire once as a
+//!   `HalfVec`; the owner *also adopts* the dequantized wire value, so
+//!   every replica ends bit-identical (a replicated trainer requires it).
+//!   Re-quantizing an already-quantized value is the identity
+//!   (`q ∘ dq ∘ q = q`), so multi-hop forwarding adds no further loss.
+//!
+//! `wire == DType::F32` is the identity wire format: these entry points
+//! delegate straight to the exact f32 schedule, so routing the trainer
+//! through them leaves the f32 path exact-bit unchanged.
+//!
+//! Every function returns the total bytes its schedule put on the wire
+//! (summed over all endpoints) — `(W-1) · N · bytes/elem` per phase — so
+//! the `mixed_precision` bench can assert the fp16 wire moves half the
+//! fp32 bytes without re-deriving the schedule.
+
+use crate::precision::{DType, HalfVec};
+use crate::util::pool::ThreadPool;
+
+use super::reduce_scatter::{
+    check_bufs, chunk_owner, ring_all_gather, ring_all_gather_at, ring_all_gather_pooled,
+    ring_chunk_starts, ring_reduce_scatter, ring_reduce_scatter_pooled, ring_step_tasks,
+    split_two, POOLED_MIN_ELEMS,
+};
+use super::ring::{ring_allreduce, ring_allreduce_pooled};
+
+/// Bytes one ring phase (reduce-scatter *or* all-gather) puts on the wire,
+/// summed over all endpoints: each of the `W-1` steps moves every chunk
+/// once, i.e. `N` elements per step.
+pub fn ring_phase_wire_bytes(w: usize, n: usize, wire: DType) -> u64 {
+    if w <= 1 {
+        return 0;
+    }
+    (w as u64 - 1) * n as u64 * wire.bytes() as u64
+}
+
+/// Wire bytes of the full allreduce (both phases).
+pub fn ring_allreduce_wire_bytes(w: usize, n: usize, wire: DType) -> u64 {
+    2 * ring_phase_wire_bytes(w, n, wire)
+}
+
+/// Reduce-scatter with half-precision wire chunks and f32 accumulation.
+/// Postcondition matches [`ring_reduce_scatter`]: chunk `c`'s (f32) sum
+/// sits at [`chunk_owner`]`(c, w)`.  Returns wire bytes moved.
+pub fn ring_reduce_scatter_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
+    let (w, n) = check_bufs(bufs);
+    let bytes = ring_phase_wire_bytes(w, n, wire);
+    if !wire.is_half() {
+        ring_reduce_scatter(bufs);
+        return bytes;
+    }
+    if w == 1 || n == 0 {
+        return bytes;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let src = (c + s) % w;
+            let dst = (c + s + 1) % w;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            if lo == hi {
+                continue;
+            }
+            let (a, b) = split_two(bufs, src, dst);
+            // wire boundary: the outgoing chunk is packed half data; the
+            // receiver widens and accumulates in f32
+            let packed = HalfVec::from_f32(wire, &a[lo..hi]);
+            for (d, q) in b[lo..hi].iter_mut().zip(packed.iter_f32()) {
+                *d += q;
+            }
+        }
+    }
+    bytes
+}
+
+/// Chunk-parallel [`ring_reduce_scatter_half`]: the `W` per-chunk
+/// quantize/accumulate ops of every ring step run concurrently on `pool`
+/// (disjoint buffer regions).  Bit-identical to the serial path; falls
+/// back to it for width-1 pools, small buffers or degenerate inputs.
+pub fn ring_reduce_scatter_half_pooled(
+    bufs: &mut [Vec<f32>],
+    wire: DType,
+    pool: &ThreadPool,
+) -> u64 {
+    let (w, n) = check_bufs(bufs);
+    if !wire.is_half() {
+        ring_reduce_scatter_pooled(bufs, pool);
+        return ring_phase_wire_bytes(w, n, wire);
+    }
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        return ring_reduce_scatter_half(bufs, wire);
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        let mut tasks = ring_step_tasks(bufs, &starts, s, true);
+        pool.map_mut(&mut tasks, |t| {
+            let packed = HalfVec::from_f32(wire, t.src);
+            for (d, q) in t.dst.iter_mut().zip(packed.iter_f32()) {
+                *d += q;
+            }
+        });
+    }
+    ring_phase_wire_bytes(w, n, wire)
+}
+
+/// All-gather with half-precision wire chunks: each owner's reduced chunk
+/// is quantized once at the wire boundary, the owner adopts the
+/// dequantized value, and the pure-copy ring circulates it — every
+/// replica (owner included) ends bit-identical.  Returns wire bytes.
+pub fn ring_all_gather_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
+    let (w, n) = check_bufs(bufs);
+    let bytes = ring_phase_wire_bytes(w, n, wire);
+    if !wire.is_half() {
+        ring_all_gather(bufs);
+        return bytes;
+    }
+    if w == 1 || n == 0 {
+        return bytes;
+    }
+    let starts = ring_chunk_starts(w, n);
+    round_owner_chunks(bufs, &starts, wire);
+    ring_all_gather_at(bufs, &starts);
+    bytes
+}
+
+/// Pooled [`ring_all_gather_half`]; bit-identical to the serial path.
+pub fn ring_all_gather_half_pooled(bufs: &mut [Vec<f32>], wire: DType, pool: &ThreadPool) -> u64 {
+    let (w, n) = check_bufs(bufs);
+    if !wire.is_half() {
+        ring_all_gather_pooled(bufs, pool);
+        return ring_phase_wire_bytes(w, n, wire);
+    }
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        return ring_all_gather_half(bufs, wire);
+    }
+    let starts = ring_chunk_starts(w, n);
+    // one region rounds every owner's chunk (disjoint: one owned chunk per
+    // buffer), then the pooled pure-copy gather circulates the values
+    let mut tasks: Vec<OwnedChunk<'_>> = bufs
+        .iter_mut()
+        .enumerate()
+        .map(|(b, buf)| {
+            let c = (b + 1) % w; // chunk_owner(c, w) == b
+            debug_assert_eq!(chunk_owner(c, w), b);
+            OwnedChunk { seg: &mut buf[starts[c]..starts[c + 1]] }
+        })
+        .collect();
+    pool.map_mut(&mut tasks, |t| round_segment(t.seg, wire));
+    drop(tasks);
+    ring_all_gather_pooled(bufs, pool);
+    ring_phase_wire_bytes(w, n, wire)
+}
+
+struct OwnedChunk<'a> {
+    seg: &'a mut [f32],
+}
+
+/// Quantize a segment to the wire format and adopt the dequantized image —
+/// the owner-side half of the gather's wire boundary.
+fn round_segment(seg: &mut [f32], wire: DType) {
+    if seg.is_empty() {
+        return;
+    }
+    let packed = HalfVec::from_f32(wire, seg);
+    packed.to_f32_into(seg);
+}
+
+fn round_owner_chunks(bufs: &mut [Vec<f32>], starts: &[usize], wire: DType) {
+    let w = bufs.len();
+    for c in 0..w {
+        let o = chunk_owner(c, w);
+        round_segment(&mut bufs[o][starts[c]..starts[c + 1]], wire);
+    }
+}
+
+/// Half-wire allreduce: [`ring_reduce_scatter_half`] then
+/// [`ring_all_gather_half`].  Every worker ends with the same bits.
+pub fn ring_allreduce_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
+    if !wire.is_half() {
+        let (w, n) = check_bufs(bufs);
+        ring_allreduce(bufs);
+        return ring_allreduce_wire_bytes(w, n, wire);
+    }
+    ring_reduce_scatter_half(bufs, wire) + ring_all_gather_half(bufs, wire)
+}
+
+/// Pooled [`ring_allreduce_half`]; bit-identical to the serial path.
+pub fn ring_allreduce_half_pooled(bufs: &mut [Vec<f32>], wire: DType, pool: &ThreadPool) -> u64 {
+    if !wire.is_half() {
+        let (w, n) = check_bufs(bufs);
+        ring_allreduce_pooled(bufs, pool);
+        return ring_allreduce_wire_bytes(w, n, wire);
+    }
+    ring_reduce_scatter_half_pooled(bufs, wire, pool)
+        + ring_all_gather_half_pooled(bufs, wire, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_bufs(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..w).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn f32_wire_is_the_exact_legacy_path() {
+        for (w, n) in [(1, 8), (3, 100), (4, 5000)] {
+            let template = random_bufs(w, n, (w * 100 + n) as u64);
+            let mut legacy = template.clone();
+            let mut wirev = template;
+            ring_allreduce(&mut legacy);
+            let bytes = ring_allreduce_half(&mut wirev, DType::F32);
+            assert_eq!(legacy, wirev, "w={w} n={n}");
+            assert_eq!(bytes, ring_allreduce_wire_bytes(w, n, DType::F32));
+        }
+    }
+
+    #[test]
+    fn half_allreduce_replicas_agree_and_approximate_the_sum() {
+        for wire in [DType::F16, DType::Bf16] {
+            for (w, n) in [(2, 10), (4, 257), (8, 31), (5, 4099)] {
+                let mut bufs = random_bufs(w, n, (w * 7 + n) as u64);
+                let expect: Vec<f32> =
+                    (0..n).map(|i| bufs.iter().map(|b| b[i]).sum()).collect();
+                ring_allreduce_half(&mut bufs, wire);
+                for b in &bufs[1..] {
+                    assert_eq!(&bufs[0], b, "{} replicas disagree", wire.name());
+                }
+                // half wire: ~2^-11 (f16) / 2^-8 (bf16) relative per hop,
+                // compounded over up to W-1 requantized partial sums
+                let tol = if wire == DType::F16 { 0.1 } else { 0.5 };
+                for (got, want) in bufs[0].iter().zip(&expect) {
+                    assert!(
+                        (got - want).abs() <= tol * want.abs().max(1.0),
+                        "{}: {got} vs {want} (w={w} n={n})",
+                        wire.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_half_matches_serial_bit_for_bit() {
+        for wire in [DType::F16, DType::Bf16] {
+            for (w, n, threads) in
+                [(2, 10, 4), (8, 3, 4), (2, 5000, 4), (3, 4099, 2), (4, 30011, 8)]
+            {
+                let pool = ThreadPool::new(threads);
+                let template = random_bufs(w, n, (w * 31 + n + threads) as u64);
+
+                let mut serial = template.clone();
+                let mut pooled = template.clone();
+                let bs = ring_reduce_scatter_half(&mut serial, wire);
+                let bp = ring_reduce_scatter_half_pooled(&mut pooled, wire, &pool);
+                assert_eq!(serial, pooled, "{} rs w={w} n={n}", wire.name());
+                assert_eq!(bs, bp);
+
+                let bs = ring_all_gather_half(&mut serial, wire);
+                let bp = ring_all_gather_half_pooled(&mut pooled, wire, &pool);
+                assert_eq!(serial, pooled, "{} ag w={w} n={n}", wire.name());
+                assert_eq!(bs, bp);
+            }
+        }
+    }
+
+    #[test]
+    fn half_wire_moves_half_the_bytes() {
+        for (w, n) in [(2, 100), (8, 4096), (192, 1 << 20)] {
+            let f32b = ring_allreduce_wire_bytes(w, n, DType::F32);
+            let f16b = ring_allreduce_wire_bytes(w, n, DType::F16);
+            assert_eq!(f16b * 2, f32b, "w={w} n={n}");
+            assert_eq!(ring_allreduce_wire_bytes(w, n, DType::Bf16), f16b);
+        }
+        assert_eq!(ring_allreduce_wire_bytes(1, 1000, DType::F16), 0);
+    }
+
+    #[test]
+    fn executed_bytes_match_the_analytic_count() {
+        let (w, n) = (4, 999);
+        let mut bufs = random_bufs(w, n, 9);
+        let rs = ring_reduce_scatter_half(&mut bufs, DType::F16);
+        let ag = ring_all_gather_half(&mut bufs, DType::F16);
+        assert_eq!(rs, ring_phase_wire_bytes(w, n, DType::F16));
+        assert_eq!(rs + ag, ring_allreduce_wire_bytes(w, n, DType::F16));
+    }
+
+    #[test]
+    fn gather_values_survive_requantization() {
+        // the circulated values are exactly representable in the wire
+        // format, so a second quantization is the identity
+        let (w, n) = (4, 200);
+        let mut bufs = random_bufs(w, n, 17);
+        ring_allreduce_half(&mut bufs, DType::F16);
+        for b in &bufs {
+            for &x in b.iter() {
+                assert_eq!(DType::F16.round_trip(x).to_bits(), x.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn width_one_ring_is_identity() {
+        let mut bufs = vec![vec![0.1f32, 0.2, 0.3]];
+        let orig = bufs.clone();
+        let bytes = ring_allreduce_half(&mut bufs, DType::F16);
+        assert_eq!(bufs, orig);
+        assert_eq!(bytes, 0);
+    }
+}

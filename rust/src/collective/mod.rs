@@ -1,13 +1,21 @@
 //! Collectives: a real (summing) ring allreduce over in-process gradient
 //! buffers, the reduce-scatter / all-gather halves it is composed from
-//! (the sharded-optimizer path uses them directly), plus the α-β cost
-//! model used by the cluster time simulator.
+//! (the sharded-optimizer path uses them directly), the half-precision
+//! wire variants of both (fp16/bf16 chunks on the wire, f32
+//! accumulation), plus the α-β cost model used by the cluster time
+//! simulator.
 
 pub mod cost;
+pub mod half;
 pub mod reduce_scatter;
 pub mod ring;
 
 pub use cost::{allreduce_time_s, Collective, CommSpec};
+pub use half::{
+    ring_all_gather_half, ring_all_gather_half_pooled, ring_allreduce_half,
+    ring_allreduce_half_pooled, ring_allreduce_wire_bytes, ring_phase_wire_bytes,
+    ring_reduce_scatter_half, ring_reduce_scatter_half_pooled,
+};
 pub use reduce_scatter::{
     chunk_owner, ring_all_gather, ring_all_gather_pooled, ring_chunk_starts,
     ring_reduce_scatter, ring_reduce_scatter_pooled,

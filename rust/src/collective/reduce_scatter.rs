@@ -39,7 +39,10 @@ pub fn chunk_owner(c: usize, w: usize) -> usize {
     (c + w - 1) % w
 }
 
-fn check_bufs(bufs: &[Vec<f32>]) -> (usize, usize) {
+/// Validate a worker-buffer set and return `(workers, elements)` — shared
+/// with the half-wire variants in [`super::half`] so the invariant has
+/// one home.
+pub(crate) fn check_bufs(bufs: &[Vec<f32>]) -> (usize, usize) {
     let w = bufs.len();
     assert!(w > 0, "no workers");
     let n = bufs[0].len();

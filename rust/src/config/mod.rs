@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::optim::schedule::{from_ratios, Schedule};
 use crate::optim::Hyper;
+use crate::precision::{DType, DynamicLossScaler, LossScale};
 
 pub use parser::{Document, Value};
 
@@ -44,6 +45,15 @@ pub struct TrainConfig {
     /// current worker count) instead of the default moment restart — the
     /// exact-continuation path, as opposed to the two-phase warm start
     pub resume_opt_state: bool,
+    /// gradient *wire* format (native backend): `f32` is the historical
+    /// exact path; `f16`/`bf16` quantize each hop's chunk at the wire
+    /// boundary while accumulating in f32 — master params and moments
+    /// stay f32 regardless (the paper's fp32-master mixed-precision run)
+    pub grad_dtype: DType,
+    /// loss scaling (native backend): `off`, a fixed power-of-two, or
+    /// dynamic (backoff on overflow, growth after a quiet interval);
+    /// overflowed steps are skipped and logged by the Recorder
+    pub loss_scale: LossScale,
     /// per-worker microbatch must equal the artifact's static batch dim
     pub global_batch: usize,
     pub steps: u64,
@@ -101,6 +111,39 @@ impl TrainConfig {
             weight_decay: doc.f64_or("optimizer", "weight_decay", 0.01) as f32,
         };
 
+        let grad_dtype_s = doc.str_or("train", "grad_dtype", "f32");
+        let grad_dtype = DType::parse(grad_dtype_s).ok_or_else(|| {
+            anyhow::anyhow!("unknown grad_dtype {grad_dtype_s:?} (f32|f16|bf16)")
+        })?;
+        let loss_scale = match doc.get("train", "loss_scale") {
+            None => LossScale::Off,
+            Some(Value::Str(s)) => match s.as_str() {
+                "off" | "none" => LossScale::Off,
+                "dynamic" => LossScale::Dynamic { init: DynamicLossScaler::DEFAULT_INIT },
+                other => bail!(
+                    "unknown loss_scale {other:?} (off|dynamic|<positive number>)"
+                ),
+            },
+            Some(v) => match v.as_f64() {
+                // validate here so a bad value is a contextual config
+                // error, not a panic when the scaler is built at run start
+                Some(x)
+                    if (x as f32).is_finite()
+                        && (x as f32) >= DynamicLossScaler::MIN_SCALE
+                        && (x as f32) <= DynamicLossScaler::MAX_SCALE =>
+                {
+                    LossScale::Static(x as f32)
+                }
+                _ => bail!(
+                    "loss_scale must be \"off\", \"dynamic\" or a number in \
+                     [{:e}, {:e}] (rounded to the nearest power of two), \
+                     got {v:?}",
+                    DynamicLossScaler::MIN_SCALE,
+                    DynamicLossScaler::MAX_SCALE
+                ),
+            },
+        };
+
         let steps = doc.usize_or("train", "steps", 100) as u64;
         let eta = doc.f64_or("schedule", "eta", 0.00675);
         let schedule = match doc.str_or("schedule", "kind", "warmup_const_decay") {
@@ -127,6 +170,8 @@ impl TrainConfig {
             threads: doc.usize_or("train", "threads", 0),
             shard_optimizer: doc.bool_or("train", "shard_optimizer", false),
             resume_opt_state: doc.bool_or("train", "resume_opt_state", false),
+            grad_dtype,
+            loss_scale,
             global_batch: doc.usize_or("train", "global_batch", 16),
             steps,
             seed: doc.usize_or("train", "seed", 42) as u64,
@@ -200,6 +245,9 @@ mod tests {
         assert_eq!(c.threads, 8);
         assert!(c.shard_optimizer);
         assert!(!c.resume_opt_state);
+        // precision knobs default to the historical exact path
+        assert_eq!(c.grad_dtype, DType::F32);
+        assert_eq!(c.loss_scale, LossScale::Off);
         assert!(c.meta_path.starts_with("/base"));
         assert_eq!(c.data.source, "text");
         match c.schedule {
@@ -225,5 +273,61 @@ mod tests {
         )
         .unwrap();
         assert!(TrainConfig::from_doc(&doc, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn precision_knobs_parse() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\ngrad_dtype = \"f16\"\n\
+             loss_scale = \"dynamic\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert_eq!(c.grad_dtype, DType::F16);
+        assert_eq!(
+            c.loss_scale,
+            LossScale::Dynamic { init: DynamicLossScaler::DEFAULT_INIT }
+        );
+
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\ngrad_dtype = \"bf16\"\n\
+             loss_scale = 1024",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert_eq!(c.grad_dtype, DType::Bf16);
+        assert_eq!(c.loss_scale, LossScale::Static(1024.0));
+
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\nloss_scale = \"off\"",
+        )
+        .unwrap();
+        assert_eq!(
+            TrainConfig::from_doc(&doc, Path::new(".")).unwrap().loss_scale,
+            LossScale::Off
+        );
+    }
+
+    #[test]
+    fn bad_precision_knobs_are_errors() {
+        for body in [
+            "grad_dtype = \"int8\"",
+            "loss_scale = \"huge\"",
+            "loss_scale = -4",
+            "loss_scale = 0",
+            // overflows f32 to inf / underflows to 0: must be a config
+            // error, not a panic at run start
+            "loss_scale = 4e38",
+            "loss_scale = 1e-46",
+        ] {
+            let doc = Document::parse(&format!(
+                "[model]\nmeta = \"m.json\"\n[train]\n{body}"
+            ))
+            .unwrap();
+            assert!(
+                TrainConfig::from_doc(&doc, Path::new(".")).is_err(),
+                "{body} should be rejected"
+            );
+        }
     }
 }

@@ -16,12 +16,17 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::collective::{ring_allreduce_pooled, ring_reduce_scatter_pooled};
+use crate::collective::{
+    ring_allreduce_half_pooled, ring_allreduce_pooled, ring_reduce_scatter_half_pooled,
+    ring_reduce_scatter_pooled,
+};
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::Recorder;
 use crate::optim::{
     make_optimizer, BlockTable, Optimizer, ParallelExecutor, ShardedOptimizer,
 };
+use crate::precision::scaler::LOSS_SCALE_TENSOR;
+use crate::precision::DynamicLossScaler;
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
 
 use super::source::DataSource;
@@ -109,6 +114,16 @@ impl Trainer {
                  resume_from checkpoint"
             );
         }
+        if (cfg.grad_dtype.is_half() || cfg.loss_scale.enabled())
+            && cfg.backend != OptBackend::Native
+        {
+            bail!(
+                "grad_dtype = {} / loss_scale require the native backend \
+                 (the HLO optimizer artifacts have no half-wire or \
+                 skip-step form)",
+                cfg.grad_dtype.name()
+            );
+        }
 
         let table = Arc::new(BlockTable::from_meta(&runtime.meta));
         Ok(Trainer { cfg, runtime, source, table, micro_steps_per_worker: micro_steps })
@@ -150,6 +165,9 @@ impl Trainer {
         // The non-param tensors (per-shard optimizer moments) are kept
         // aside from the same single load instead of re-reading the file.
         let mut resume_state: Option<(u64, Vec<(String, TensorF32)>)> = None;
+        // loss-scaler state embedded in the checkpoint (v2 aux tensor);
+        // restored below iff this run has loss scaling enabled
+        let mut resume_loss_scale: Option<TensorF32> = None;
         let mut params = match &cfg.resume_from {
             None => self.runtime.init_params(cfg.seed),
             Some(path) => {
@@ -157,6 +175,7 @@ impl Trainer {
                 let step = ckpt.step;
                 let mut by_name: std::collections::HashMap<String, TensorF32> =
                     ckpt.tensors.into_iter().collect();
+                resume_loss_scale = by_name.remove(LOSS_SCALE_TENSOR);
                 let params = meta
                     .params
                     .iter()
@@ -230,17 +249,36 @@ impl Trainer {
         // 1 → the exact serial path, nothing spawned)
         let exec = ParallelExecutor::new(cfg.threads);
 
+        // mixed precision: the gradient wire format and the loss scaler.
+        // `scaled` routes the optimizer through the probe/skip path — any
+        // loss scale, or an f16/bf16 wire whose quantization can mint inf
+        // on its own.  With scaling off and an f32 wire the legacy
+        // exact-bit path below runs unchanged.
+        let wire = cfg.grad_dtype;
+        let mut scaler: Option<DynamicLossScaler> = cfg.loss_scale.build();
+        if let (Some(sc), Some(t)) = (scaler.as_mut(), resume_loss_scale.as_ref()) {
+            sc.import_tensor(t).with_context(|| {
+                format!(
+                    "restoring loss-scaler state from {}",
+                    cfg.resume_from.as_ref().unwrap().display()
+                )
+            })?;
+        }
+        let scaled = scaler.is_some() || wire.is_half();
+
         let mut recorder = Recorder::new(0.9);
         let mut status = TrainStatus::Completed;
         let mut steps_run = 0;
 
         for t in 1..=cfg.steps {
             let lr = cfg.schedule.lr(t);
+            let scale_s = scaler.as_ref().map_or(1.0, |s| s.scale());
             let snapshot = Arc::new(params.clone());
             for w in &workers {
                 w.send(WorkerCmd::Step {
                     params: snapshot.clone(),
                     micro_steps: self.micro_steps_per_worker,
+                    loss_scale: scale_s,
                 });
             }
             let replies: Vec<WorkerReply> =
@@ -260,8 +298,10 @@ impl Trainer {
             let inv = 1.0 / total_micros as f32;
             let loss = loss_sum / total_micros as f64;
 
-            // combine worker gradients and update
-            let (grad_norm, trust) = if let Some(so) = sharded_opt.as_mut() {
+            // combine worker gradients and update.  `None` = the loss-
+            // scaled gradient overflowed (inf/nan after unscale): the step
+            // is skipped with params/moments/step-clock untouched.
+            let outcome: Option<(f64, f64)> = if let Some(so) = sharded_opt.as_mut() {
                 // pipelined ZeRO-1 step: reduce-scatter on the ring's own
                 // chunk grid (summation order identical to the allreduce),
                 // then hand the scattered buffers straight to the
@@ -269,31 +309,83 @@ impl Trainer {
                 // mean-gradient range is fused with the grad² phase in
                 // one pool region instead of barriering on a full-vector
                 // scatter.  The parameter all-gather stays a no-op
-                // in-process (every worker reads the same flat vector;
-                // the time model prices the wire version).  step_scattered
-                // self-falls-back to the serial path for width-1 pools /
-                // small per-shard work; results are identical either way.
-                ring_reduce_scatter_pooled(&mut bufs, exec.pool());
-                let stats =
-                    so.step_scattered(exec.pool(), &mut flat_params, &bufs, inv, lr as f32);
-                self.table.unflatten_into(&flat_params, &mut params);
-                (stats.grad_norm, stats.mean_trust_ratio)
+                // in-process (every worker reads the same f32 master flat
+                // vector; the time model prices the wire version).
+                // step_scattered self-falls-back to the serial path for
+                // width-1 pools / small per-shard work; results are
+                // identical either way.  A half `grad_dtype` swaps in the
+                // half-wire reduce-scatter (f32 accumulation, 2-byte wire
+                // chunks); the stitch's mean factor then also folds the
+                // loss-scale unscale — exact for power-of-two scales.
+                if wire.is_half() {
+                    ring_reduce_scatter_half_pooled(&mut bufs, wire, exec.pool());
+                } else {
+                    ring_reduce_scatter_pooled(&mut bufs, exec.pool());
+                }
+                if scaled {
+                    let inv_eff = inv * (1.0 / scale_s);
+                    so.step_scattered_scaled(
+                        exec.pool(),
+                        &mut flat_params,
+                        &bufs,
+                        inv_eff,
+                        lr as f32,
+                    )
+                    .map(|stats| {
+                        self.table.unflatten_into(&flat_params, &mut params);
+                        (stats.grad_norm, stats.mean_trust_ratio)
+                    })
+                } else {
+                    let stats = so.step_scattered(
+                        exec.pool(),
+                        &mut flat_params,
+                        &bufs,
+                        inv,
+                        lr as f32,
+                    );
+                    self.table.unflatten_into(&flat_params, &mut params);
+                    Some((stats.grad_norm, stats.mean_trust_ratio))
+                }
             } else {
                 // replicated path: ring allreduce (sum), then mean
-                ring_allreduce_pooled(&mut bufs, exec.pool());
-                let mut grad = std::mem::take(&mut bufs[0]);
-                for g in grad.iter_mut() {
-                    *g *= inv;
+                if wire.is_half() {
+                    ring_allreduce_half_pooled(&mut bufs, wire, exec.pool());
+                } else {
+                    ring_allreduce_pooled(&mut bufs, exec.pool());
                 }
+                let mut grad = std::mem::take(&mut bufs[0]);
                 match cfg.backend {
+                    OptBackend::Native if scaled => {
+                        // unscale (mean × 1/loss-scale, fused into the
+                        // grad² probe) + skip-on-overflow step
+                        let inv_eff = inv * (1.0 / scale_s);
+                        let opt = native_opt.as_mut().unwrap();
+                        opt.step_scaled(
+                            exec.pool(),
+                            &mut flat_params,
+                            &mut grad,
+                            lr as f32,
+                            inv_eff,
+                        )
+                        .map(|stats| {
+                            self.table.unflatten_into(&flat_params, &mut params);
+                            (stats.grad_norm, stats.mean_trust_ratio)
+                        })
+                    }
                     OptBackend::Native => {
+                        for g in grad.iter_mut() {
+                            *g *= inv;
+                        }
                         let opt = native_opt.as_mut().unwrap();
                         let stats =
                             exec.step(opt.as_mut(), &mut flat_params, &grad, lr as f32);
                         self.table.unflatten_into(&flat_params, &mut params);
-                        (stats.grad_norm, stats.mean_trust_ratio)
+                        Some((stats.grad_norm, stats.mean_trust_ratio))
                     }
                     OptBackend::Hlo => {
+                        for g in grad.iter_mut() {
+                            *g *= inv;
+                        }
                         let gn = grad
                             .iter()
                             .map(|&x| (x as f64) * (x as f64))
@@ -312,12 +404,51 @@ impl Trainer {
                             &grads_t,
                             lr as f32,
                         )?;
-                        (gn, 1.0)
+                        Some((gn, 1.0))
                     }
                 }
             };
 
-            recorder.push(t, lr, loss, grad_norm, trust, tokens_per_step);
+            match outcome {
+                Some((grad_norm, trust)) => {
+                    if let Some(sc) = scaler.as_mut() {
+                        sc.update(false);
+                    }
+                    if scaled {
+                        recorder.push_scaled(
+                            t,
+                            lr,
+                            loss,
+                            grad_norm,
+                            trust,
+                            tokens_per_step,
+                            scale_s as f64,
+                        );
+                    } else {
+                        recorder.push(t, lr, loss, grad_norm, trust, tokens_per_step);
+                    }
+                }
+                None => {
+                    // overflow: the batch is spent, the update is not
+                    match scaler.as_mut() {
+                        Some(sc) => {
+                            sc.update(true);
+                            eprintln!(
+                                "step {t:>6}  gradient overflow at loss scale \
+                                 {scale_s} — step skipped, scale -> {}",
+                                sc.scale()
+                            );
+                        }
+                        None => eprintln!(
+                            "step {t:>6}  gradient overflow on the {} wire — \
+                             step skipped (no loss scaler configured; consider \
+                             loss_scale = \"dynamic\")",
+                            wire.name()
+                        ),
+                    }
+                    recorder.push_skipped(t, lr, loss, tokens_per_step, scale_s as f64);
+                }
+            }
             steps_run = t;
 
             if cfg.stop_on_divergence && recorder.diverged() {
@@ -352,7 +483,13 @@ impl Trainer {
             if let Some(so) = &sharded_opt {
                 tensors.extend(so.export_state());
             }
-            Checkpoint { step: steps_run, tensors }.save(path)?;
+            // the loss-scaler state rides along too (v2 aux tensor), so a
+            // resumed mixed-precision run keeps its calibrated scale
+            // instead of re-walking the backoff ladder
+            if let Some(sc) = &scaler {
+                tensors.push(sc.export_tensor());
+            }
+            Checkpoint::new(steps_run, tensors).save(path)?;
         }
         if let Some(path) = &cfg.curve_out {
             recorder.write_tsv(path)?;

@@ -20,7 +20,16 @@ use super::source::DataSource;
 
 pub enum WorkerCmd {
     /// Run `micro_steps` microbatches against the given parameter snapshot.
-    Step { params: Arc<Vec<TensorF32>>, micro_steps: usize },
+    /// `loss_scale` multiplies every gradient contribution during
+    /// accumulation — modeling a loss-scaled backward pass (a real fp16
+    /// run scales the loss so the backward emits scaled gradients; here
+    /// the scaling fuses into the accumulation loop at zero extra cost).
+    /// `1.0` is the exact historical path.
+    Step {
+        params: Arc<Vec<TensorF32>>,
+        micro_steps: usize,
+        loss_scale: f32,
+    },
     Shutdown,
 }
 
@@ -95,7 +104,7 @@ fn worker_loop(
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             WorkerCmd::Shutdown => break,
-            WorkerCmd::Step { params, micro_steps } => {
+            WorkerCmd::Step { params, micro_steps, loss_scale } => {
                 grad_flat.iter_mut().for_each(|x| *x = 0.0);
                 let mut loss_sum = 0.0f64;
                 let mut error = None;
@@ -105,12 +114,16 @@ fn worker_loop(
                     let batch = source.masker.make_batch(&source.seqs, &idx, &mut rng);
                     match runtime.fwd_bwd(&params, &batch) {
                         Ok((loss, grads)) => {
+                            // the *reported* loss stays unscaled — only the
+                            // gradient carries the loss scale
                             loss_sum += loss as f64;
-                            // accumulate into the flat layout
+                            // accumulate into the flat layout, loss-scaled
+                            // (×1.0 is bit-exact; a power-of-two scale
+                            // commutes exactly with the f32 sums)
                             for (b, g) in table.blocks.iter().zip(&grads) {
                                 let dst = &mut grad_flat[b.offset..b.offset + b.len];
                                 for (d, s) in dst.iter_mut().zip(&g.data) {
-                                    *d += s;
+                                    *d += s * loss_scale;
                                 }
                             }
                         }

@@ -19,6 +19,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod optim;
+pub mod precision;
 pub mod runtime;
 pub mod util;
 pub mod variance;

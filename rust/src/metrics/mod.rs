@@ -19,6 +19,11 @@ pub struct StepRecord {
     pub trust_ratio: f64,
     pub tokens: u64,
     pub wall_s: f64,
+    /// loss scale in effect this step (1.0 when loss scaling is off)
+    pub loss_scale: f64,
+    /// true when the update was skipped (gradient overflow under loss
+    /// scaling) — the data was still consumed, the parameters untouched
+    pub skipped: bool,
 }
 
 /// Loss-curve recorder with EMA smoothing and divergence detection.
@@ -27,6 +32,7 @@ pub struct Recorder {
     ema: Ema,
     start: Instant,
     tokens_seen: u64,
+    skipped: u64,
     /// loss above this, or non-finite, counts as diverged
     pub divergence_ceiling: f64,
     initial_loss: Option<f64>,
@@ -39,6 +45,7 @@ impl Recorder {
             ema: Ema::new(ema_alpha),
             start: Instant::now(),
             tokens_seen: 0,
+            skipped: 0,
             divergence_ceiling: f64::INFINITY,
             initial_loss: None,
         }
@@ -52,6 +59,56 @@ impl Recorder {
         grad_norm: f64,
         trust_ratio: f64,
         tokens: u64,
+    ) -> &StepRecord {
+        self.push_scaled(step, lr, loss, grad_norm, trust_ratio, tokens, 1.0)
+    }
+
+    /// [`push`](Recorder::push) with the loss scale in effect recorded.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_scaled(
+        &mut self,
+        step: u64,
+        lr: f64,
+        loss: f64,
+        grad_norm: f64,
+        trust_ratio: f64,
+        tokens: u64,
+        loss_scale: f64,
+    ) -> &StepRecord {
+        self.push_record(step, lr, loss, grad_norm, trust_ratio, tokens, loss_scale, false)
+    }
+
+    /// Record a *skipped* step: the gradient overflowed under loss scaling
+    /// and the update was dropped.  The batch was still consumed (tokens
+    /// advance), grad norm / trust ratio are not meaningful (NaN).
+    pub fn push_skipped(
+        &mut self,
+        step: u64,
+        lr: f64,
+        loss: f64,
+        tokens: u64,
+        loss_scale: f64,
+    ) -> &StepRecord {
+        self.skipped += 1;
+        self.push_record(step, lr, loss, f64::NAN, f64::NAN, tokens, loss_scale, true)
+    }
+
+    /// Updates skipped so far (overflow under loss scaling).
+    pub fn skipped_steps(&self) -> u64 {
+        self.skipped
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push_record(
+        &mut self,
+        step: u64,
+        lr: f64,
+        loss: f64,
+        grad_norm: f64,
+        trust_ratio: f64,
+        tokens: u64,
+        loss_scale: f64,
+        skipped: bool,
     ) -> &StepRecord {
         self.tokens_seen += tokens;
         if self.initial_loss.is_none() {
@@ -72,6 +129,8 @@ impl Recorder {
             trust_ratio,
             tokens: self.tokens_seen,
             wall_s: self.start.elapsed().as_secs_f64(),
+            loss_scale,
+            skipped,
         });
         self.records.last().unwrap()
     }
@@ -102,20 +161,33 @@ impl Recorder {
     }
 
     /// Write the curve as TSV (step, lr, loss, ema, grad_norm, trust, tokens,
-    /// wall seconds) — consumed by EXPERIMENTS.md plots.
+    /// wall seconds, loss scale, skipped flag) — consumed by EXPERIMENTS.md
+    /// plots.
     pub fn write_tsv(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        writeln!(f, "step\tlr\tloss\tloss_ema\tgrad_norm\ttrust_ratio\ttokens\twall_s")?;
+        writeln!(
+            f,
+            "step\tlr\tloss\tloss_ema\tgrad_norm\ttrust_ratio\ttokens\twall_s\
+             \tloss_scale\tskipped"
+        )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{}\t{:.6e}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3}",
-                r.step, r.lr, r.loss, r.loss_ema, r.grad_norm, r.trust_ratio,
-                r.tokens, r.wall_s
+                "{}\t{:.6e}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3}\t{}\t{}",
+                r.step,
+                r.lr,
+                r.loss,
+                r.loss_ema,
+                r.grad_norm,
+                r.trust_ratio,
+                r.tokens,
+                r.wall_s,
+                r.loss_scale,
+                r.skipped as u8
             )?;
         }
         Ok(())
@@ -159,7 +231,29 @@ mod tests {
         r.write_tsv(&p).unwrap();
         let body = std::fs::read_to_string(&p).unwrap();
         assert!(body.starts_with("step\t"));
+        let header = body.lines().next().unwrap();
+        assert!(header.ends_with("loss_scale\tskipped"), "header: {header}");
         assert_eq!(body.lines().count(), 2);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn skipped_steps_are_counted_and_flagged() {
+        let mut r = Recorder::new(0.5);
+        r.push_scaled(1, 0.01, 5.0, 1.0, 1.0, 64, 65536.0);
+        r.push_skipped(2, 0.01, 5.1, 64, 65536.0);
+        r.push_scaled(3, 0.01, 4.9, 1.0, 1.0, 64, 32768.0);
+        assert_eq!(r.skipped_steps(), 1);
+        assert!(!r.records[0].skipped);
+        assert!(r.records[1].skipped);
+        assert!(r.records[1].grad_norm.is_nan());
+        assert_eq!(r.records[1].loss_scale, 65536.0);
+        assert_eq!(r.records[2].loss_scale, 32768.0);
+        // skipped batches still consume data
+        assert_eq!(r.records[2].tokens, 192);
+        // plain push records unit scale
+        r.push(4, 0.01, 4.8, 1.0, 1.0, 64);
+        assert_eq!(r.records[3].loss_scale, 1.0);
+        assert!(!r.diverged());
     }
 }

@@ -61,6 +61,32 @@ pub(crate) fn grad_sq_segments(g: &[f32], mut sink: impl FnMut(f64)) {
     }
 }
 
+/// Per-segment f64 partials of Σ g² with the loss-scale unscale fused
+/// into the same sweep: every element is multiplied by `inv_scale` in
+/// place and the *unscaled* value is squared — one gradient pass serves
+/// both the overflow probe and eq. 4's block norms.  Same segment grid
+/// and fold order as [`grad_sq_segments`], so when `inv_scale` is the
+/// exact inverse of a power-of-two loss scale the emitted partials are
+/// bit-identical to the unscaled sweep's (the scale→unscale round trip is
+/// exact in IEEE arithmetic).
+pub(crate) fn unscale_grad_sq_segments(
+    g: &mut [f32],
+    inv_scale: f32,
+    mut sink: impl FnMut(f64),
+) {
+    let mut lo = 0;
+    while lo < g.len() {
+        let hi = (lo + NORM_SEG).min(g.len());
+        let mut s = 0.0f64;
+        for gi in &mut g[lo..hi] {
+            *gi *= inv_scale;
+            s += (*gi as f64) * (*gi as f64);
+        }
+        sink(s);
+        lo = hi;
+    }
+}
+
 /// Adam-family hyper-parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct Hyper {
@@ -107,6 +133,27 @@ pub trait Optimizer: Send {
     ) -> StepStats {
         let _ = pool;
         self.step(params, grads, lr)
+    }
+
+    /// Loss-scale-aware step: multiplies `grads` by `inv_scale` in place
+    /// (the unscale, fused into the grad² sweep — see
+    /// [`unscale_grad_sq_segments`]) and *skips* the update when the
+    /// unscaled gradient contains inf/nan — parameters, moments and the
+    /// bias-correction clock all untouched — returning `None` so the
+    /// caller can back off the loss scale.  When `inv_scale` undoes an
+    /// exact power-of-two scaling and no overflow occurs, the taken step
+    /// is bit-identical to [`step_parallel`](Optimizer::step_parallel) on
+    /// the unscaled gradient (property-tested in `tests/proptests.rs`).
+    fn step_scaled(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &mut [f32],
+        lr: f32,
+        inv_scale: f32,
+    ) -> Option<StepStats> {
+        super::parallel::unscale_probe_pooled(pool, self.blocks(), grads, inv_scale)?;
+        Some(self.step_parallel(pool, params, grads, lr))
     }
 
     fn blocks(&self) -> &BlockTable;
@@ -336,6 +383,21 @@ impl Optimizer for Lans {
         lr: f32,
     ) -> StepStats {
         super::parallel::lans_step_parallel(self, pool, params, grads, lr)
+    }
+
+    /// LANS reuses the probe's block grad² as phase A of the segmented
+    /// engine — the unscale sweep and eq. 4's norm pass are one gradient
+    /// read, not two.
+    fn step_scaled(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &mut [f32],
+        lr: f32,
+        inv_scale: f32,
+    ) -> Option<StepStats> {
+        let g2 = super::parallel::unscale_probe_pooled(pool, &self.table, grads, inv_scale)?;
+        Some(super::parallel::lans_step_with_g2(self, pool, params, grads, lr, g2))
     }
 }
 
@@ -616,6 +678,28 @@ impl Optimizer for AdamW {
         lr: f32,
     ) -> StepStats {
         super::parallel::adamw_step_parallel(self, pool, params, grads, lr)
+    }
+
+    /// AdamW reuses the probe's block grad² (eq. 4 normalization for the
+    /// bgn variant, the grad-norm stat otherwise) instead of re-sweeping
+    /// the gradient.
+    fn step_scaled(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &mut [f32],
+        lr: f32,
+        inv_scale: f32,
+    ) -> Option<StepStats> {
+        let g2 = super::parallel::unscale_probe_pooled(pool, &self.table, grads, inv_scale)?;
+        Some(super::parallel::adamw_step_parallel_g2(
+            self,
+            pool,
+            params,
+            grads,
+            lr,
+            Some(g2),
+        ))
     }
 }
 

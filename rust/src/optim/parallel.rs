@@ -34,7 +34,8 @@ pub use crate::util::pool::policy::PARALLEL_MIN_ELEMS;
 
 use super::blocks::BlockTable;
 use super::native::{
-    adamw_apply, lans_inv_gnorm, AdamCtx, AdamW, Lamb, Lans, Optimizer, StepStats,
+    adamw_apply, lans_inv_gnorm, unscale_grad_sq_segments, AdamCtx, AdamW, Lamb, Lans,
+    Optimizer, StepStats,
 };
 use super::sharded::{
     combine_block_g2, frag_grad_sq_parts, segmented_step, split_at_plan, Algo, Fragment,
@@ -133,6 +134,70 @@ fn build_seg_tasks<'a>(
     tasks
 }
 
+/// Fused unscale + overflow probe: one sweep multiplies the gradient by
+/// `inv_scale` in place while folding the canonical per-block grad²
+/// partials ([`unscale_grad_sq_segments`], block-local segment grid,
+/// global segment order — the serial kernels' own fold).  Returns the
+/// per-block grad² for reuse as the segmented engine's phase A, or `None`
+/// when any block's sum is inf/nan — the fp16 overflow signal that turns
+/// the step into a skip.  Pooled on the balanced plan grid when the work
+/// is large enough; bit-identical either way.
+pub(crate) fn unscale_probe_pooled(
+    pool: &ThreadPool,
+    table: &BlockTable,
+    grads: &mut [f32],
+    inv_scale: f32,
+) -> Option<Vec<f64>> {
+    let nb = table.blocks.len();
+    let parts: Vec<Vec<(usize, Vec<f64>)>> =
+        if pool.threads() <= 1 || table.total < policy::POOLED_MIN_ELEMS {
+            table
+                .blocks
+                .iter()
+                .enumerate()
+                .map(|(bi, b)| {
+                    let mut ps = Vec::new();
+                    unscale_grad_sq_segments(
+                        &mut grads[b.offset..b.offset + b.len],
+                        inv_scale,
+                        |p| ps.push(p),
+                    );
+                    vec![(bi, ps)]
+                })
+                .collect()
+        } else {
+            let plan = balanced_plan(table, pool.threads());
+            struct ProbeTask<'a> {
+                g: &'a mut [f32],
+                frags: &'a [Fragment],
+                base: usize,
+            }
+            let mut tasks: Vec<ProbeTask<'_>> = split_at_plan(&plan, grads)
+                .into_iter()
+                .enumerate()
+                .map(|(s, g)| ProbeTask {
+                    g,
+                    frags: plan.fragments(s),
+                    base: plan.starts[s],
+                })
+                .collect();
+            pool.map_mut(&mut tasks, |t| {
+                let mut out = Vec::with_capacity(t.frags.len());
+                for f in t.frags {
+                    let lo = f.start - t.base;
+                    let mut ps = Vec::new();
+                    unscale_grad_sq_segments(&mut t.g[lo..lo + f.len], inv_scale, |p| {
+                        ps.push(p)
+                    });
+                    out.push((f.block, ps));
+                }
+                out
+            })
+        };
+    let g2 = combine_block_g2(nb, &parts);
+    g2.iter().all(|x| x.is_finite()).then_some(g2)
+}
+
 pub(crate) fn lans_step_parallel(
     o: &mut Lans,
     pool: &ThreadPool,
@@ -141,7 +206,7 @@ pub(crate) fn lans_step_parallel(
     lr: f32,
 ) -> StepStats {
     let plan = balanced_plan(&o.table, pool.threads());
-    lans_step_on_plan(o, pool, &plan, params, grads, lr)
+    lans_step_on_plan_g2(o, pool, &plan, params, grads, lr, None)
 }
 
 /// One LANS step on an explicit work grid.  `step_parallel` uses the
@@ -156,6 +221,33 @@ pub fn lans_step_on_plan(
     grads: &[f32],
     lr: f32,
 ) -> StepStats {
+    lans_step_on_plan_g2(o, pool, plan, params, grads, lr, None)
+}
+
+/// LANS step with the probe's per-block grad² handed in as phase A — the
+/// loss-scaled path ([`Optimizer::step_scaled`]) computed it during the
+/// fused unscale sweep, so the engine must not re-read the gradient.
+pub(crate) fn lans_step_with_g2(
+    o: &mut Lans,
+    pool: &ThreadPool,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+    g2: Vec<f64>,
+) -> StepStats {
+    let plan = balanced_plan(&o.table, pool.threads());
+    lans_step_on_plan_g2(o, pool, &plan, params, grads, lr, Some(g2))
+}
+
+fn lans_step_on_plan_g2(
+    o: &mut Lans,
+    pool: &ThreadPool,
+    plan: &ShardPlan,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+    g2: Option<Vec<f64>>,
+) -> StepStats {
     o.t += 1;
     let cx = AdamCtx::new(o.hp, o.t as i32, lr);
     let mut tasks = build_seg_tasks(
@@ -167,7 +259,7 @@ pub fn lans_step_on_plan(
         &mut o.r_full,
         Some(&mut o.c_full),
     );
-    segmented_step(Algo::Lans, &cx, o.hp, &o.table, pool, &mut tasks, None)
+    segmented_step(Algo::Lans, &cx, o.hp, &o.table, pool, &mut tasks, g2)
 }
 
 pub(crate) fn lamb_step_parallel(
@@ -204,6 +296,23 @@ pub(crate) fn adamw_step_parallel(
     grads: &[f32],
     lr: f32,
 ) -> StepStats {
+    adamw_step_parallel_g2(o, pool, params, grads, lr, None)
+}
+
+/// AdamW step with the probe's per-block grad² handed in
+/// ([`Optimizer::step_scaled`] folded it during the fused unscale sweep):
+/// the bgn variant skips its grad² region entirely, the plain variant
+/// skips the partial emission inside its fused region — either way the
+/// redundant gradient sweep is gone and the folded values are identical
+/// by construction (same segment grid, same order).
+pub(crate) fn adamw_step_parallel_g2(
+    o: &mut AdamW,
+    pool: &ThreadPool,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+    g2: Option<Vec<f64>>,
+) -> StepStats {
     o.t += 1;
     let cx = AdamCtx::new(o.hp, o.t as i32, lr);
     let hp = o.hp;
@@ -238,9 +347,16 @@ pub(crate) fn adamw_step_parallel(
     let nb = table.blocks.len();
     let (block_g2, maxes) = if bgn {
         // blockwise normalization needs every block's grad² before any
-        // element updates: two regions — grad² partials, then apply
-        let parts = pool.map_mut(&mut tasks, |t| frag_grad_sq_parts(t.g, t.base, t.frags));
-        let block_g2 = combine_block_g2(nb, &parts);
+        // element updates: grad² partials (skipped when the scaled-step
+        // probe already folded them), then apply
+        let block_g2 = match g2 {
+            Some(v) => v,
+            None => {
+                let parts =
+                    pool.map_mut(&mut tasks, |t| frag_grad_sq_parts(t.g, t.base, t.frags));
+                combine_block_g2(nb, &parts)
+            }
+        };
         let inv: Vec<f32> = block_g2.iter().map(|&g2| lans_inv_gnorm(g2)).collect();
         let maxes = pool.map_mut(&mut tasks, |t| {
             let mut mx = 0.0f32;
@@ -262,6 +378,28 @@ pub(crate) fn adamw_step_parallel(
             mx
         });
         (block_g2, maxes)
+    } else if let Some(v) = g2 {
+        // plain AdamW with the probe's grad² in hand: apply-only region
+        let maxes = pool.map_mut(&mut tasks, |t| {
+            let mut mx = 0.0f32;
+            for f in t.frags {
+                let lo = f.start - t.base;
+                let hi = lo + f.len;
+                let wd = if table.blocks[f.block].decay { hp.weight_decay } else { 0.0 };
+                let ma = adamw_apply(
+                    &cx,
+                    1.0,
+                    wd,
+                    &mut t.x[lo..hi],
+                    &t.g[lo..hi],
+                    &mut t.m[lo..hi],
+                    &mut t.v[lo..hi],
+                );
+                mx = mx.max(ma);
+            }
+            mx
+        });
+        (v, maxes)
     } else {
         // plain AdamW: nothing feeds forward, so one fused region does
         // the element-wise update and emits the grad² stat partials from

@@ -43,12 +43,18 @@ pub enum Schedule {
 
 impl Schedule {
     /// Learning rate at 1-based step `t`.
+    ///
+    /// `t_warmup == 0` means "no warmup" — the post-warmup branch applies
+    /// from the first step (the naive ratio would be the `0/0 → NaN` every
+    /// downstream consumer of the rate would silently propagate).  The
+    /// decay ratios divide by a zero span only when `t` is already past
+    /// `t_total`, where `.max(0.0)`/`.clamp` pin the rate to a finite 0.
     pub fn lr(&self, t: u64) -> f64 {
         let tf = t as f64;
         match *self {
             Schedule::Constant { eta } => eta,
             Schedule::LinearWarmupDecay { eta, t_warmup, t_total } => {
-                if t <= t_warmup {
+                if t_warmup > 0 && t <= t_warmup {
                     eta * tf / t_warmup as f64
                 } else {
                     (eta * (t_total as f64 - tf)
@@ -57,7 +63,7 @@ impl Schedule {
                 }
             }
             Schedule::WarmupConstDecay { eta, t_warmup, t_const, t_total } => {
-                if t <= t_warmup {
+                if t_warmup > 0 && t <= t_warmup {
                     eta * tf / t_warmup as f64
                 } else if t <= t_warmup + t_const {
                     eta
@@ -68,7 +74,7 @@ impl Schedule {
                 }
             }
             Schedule::PolyDecay { eta, t_warmup, t_total, power } => {
-                if t <= t_warmup {
+                if t_warmup > 0 && t <= t_warmup {
                     eta * tf / t_warmup as f64
                 } else {
                     let frac = ((t_total as f64 - tf)
@@ -206,5 +212,71 @@ mod tests {
     fn zero_const_falls_back_to_eq8() {
         let s = from_ratios(0.01, 1000, 0.1, 0.0);
         assert!(matches!(s, Schedule::LinearWarmupDecay { .. }));
+    }
+
+    #[test]
+    fn zero_warmup_never_nans() {
+        // t_warmup = 0 used to hit 0/0 at t = 0 in every warmup branch
+        let eta = 0.01;
+        let schedules = [
+            Schedule::LinearWarmupDecay { eta, t_warmup: 0, t_total: 100 },
+            Schedule::WarmupConstDecay { eta, t_warmup: 0, t_const: 30, t_total: 100 },
+            Schedule::PolyDecay { eta, t_warmup: 0, t_total: 100, power: 2.0 },
+        ];
+        for s in &schedules {
+            for t in [0u64, 1, 50, 100, 101] {
+                let lr = s.lr(t);
+                assert!(lr.is_finite(), "{s:?} at t={t}: lr = {lr}");
+                assert!(
+                    (0.0..=eta * (1.0 + 1e-12)).contains(&lr),
+                    "{s:?} at t={t}: lr = {lr} outside [0, eta]"
+                );
+            }
+            // no warmup ⇒ the run starts at (or decaying from) full rate
+            assert!(s.lr(1) > eta * 0.9, "{s:?}: lr(1) = {}", s.lr(1));
+        }
+        // with no warmup and a const stage, the rate is exactly eta at t=0/1
+        assert_eq!(schedules[1].lr(0), eta);
+        assert_eq!(schedules[1].lr(1), eta);
+    }
+
+    #[test]
+    fn t_zero_is_finite_with_warmup() {
+        // t = 0 is below the 1-based domain but must still be well-defined
+        for s in [
+            Schedule::LinearWarmupDecay { eta: 0.01, t_warmup: 10, t_total: 100 },
+            Schedule::WarmupConstDecay {
+                eta: 0.01,
+                t_warmup: 10,
+                t_const: 20,
+                t_total: 100,
+            },
+            Schedule::PolyDecay { eta: 0.01, t_warmup: 10, t_total: 100, power: 1.0 },
+        ] {
+            assert_eq!(s.lr(0), 0.0, "{s:?}");
+        }
+        assert_eq!(Schedule::Constant { eta: 0.01 }.lr(0), 0.01);
+    }
+
+    #[test]
+    fn t_total_endpoint_across_variants() {
+        let (t_total, eta) = (100u64, 0.01);
+        // eq. 8 / eq. 9 / poly decay all reach (or clamp to) 0 at t_total
+        let lwd = Schedule::LinearWarmupDecay { eta, t_warmup: 10, t_total };
+        assert!(lwd.lr(t_total).abs() < 1e-15);
+        let wcd =
+            Schedule::WarmupConstDecay { eta, t_warmup: 10, t_const: 20, t_total };
+        assert!(wcd.lr(t_total).abs() < 1e-15);
+        let poly = Schedule::PolyDecay { eta, t_warmup: 10, t_total, power: 2.0 };
+        assert!(poly.lr(t_total).abs() < 1e-15);
+        // past the end: clamped to 0, never negative or non-finite
+        for s in [&lwd, &wcd, &poly] {
+            let lr = s.lr(t_total + 10);
+            assert_eq!(lr, 0.0, "{s:?} past t_total");
+        }
+        // degenerate all-warmup schedule: finite everywhere, peaks at eta
+        let all_warm = Schedule::LinearWarmupDecay { eta, t_warmup: t_total, t_total };
+        assert_eq!(all_warm.lr(t_total), eta);
+        assert_eq!(all_warm.lr(t_total + 1), 0.0);
     }
 }

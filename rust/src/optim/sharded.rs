@@ -680,13 +680,43 @@ impl ShardedOptimizer {
         scale: f32,
         lr: f32,
     ) -> StepStats {
+        self.step_scattered_impl(pool, params, bufs, scale, lr, false)
+            .expect("unprobed step_scattered never skips")
+    }
+
+    /// Loss-scale-aware [`step_scattered`](Self::step_scattered): `scale`
+    /// folds the mean factor *and* the loss-scale unscale (both exact for
+    /// power-of-two loss scales), and the fused stitch region doubles as
+    /// the overflow probe — the grad² segment partials it already emits
+    /// are checked for inf/nan before any shard state is touched.  On
+    /// overflow the step is skipped (moments, parameters and the
+    /// bias-correction clock untouched) and `None` is returned so the
+    /// trainer can back off the loss scale.
+    pub fn step_scattered_scaled(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        bufs: &[Vec<f32>],
+        scale: f32,
+        lr: f32,
+    ) -> Option<StepStats> {
+        self.step_scattered_impl(pool, params, bufs, scale, lr, true)
+    }
+
+    fn step_scattered_impl(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        bufs: &[Vec<f32>],
+        scale: f32,
+        lr: f32,
+        probe: bool,
+    ) -> Option<StepStats> {
         let w = self.plan.workers();
         assert_eq!(bufs.len(), w, "need one reduce-scattered buffer per shard");
         let n = self.table.total;
         assert_eq!(params.len(), n, "params do not match block table");
         assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
-        self.t += 1;
-        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
         let algo = self.algo;
         let table = &self.table;
         let plan = &self.plan;
@@ -709,7 +739,10 @@ impl ShardedOptimizer {
             lo: usize,
             hi: usize,
         }
-        let needs_g2 = algo == Algo::Lans;
+        // LANS needs the block grad² for eq. 4; the probe needs it for
+        // overflow detection (LAMB included — its moments would otherwise
+        // already be polluted by the time phase B surfaces the inf)
+        let needs_g2 = probe || algo == Algo::Lans;
         let mut stitch: Vec<StitchTask<'_>> = self
             .shards
             .iter_mut()
@@ -730,15 +763,30 @@ impl ShardedOptimizer {
             frag_grad_sq_parts(t.grad, t.lo, t.frags)
         });
         drop(stitch);
-        let precomputed = if needs_g2 {
+        let g2 = if needs_g2 {
             Some(combine_block_g2(table.blocks.len(), &parts))
         } else {
             None
         };
+        if probe {
+            let finite =
+                g2.as_ref().is_some_and(|v| v.iter().all(|x| x.is_finite()));
+            if !finite {
+                return None;
+            }
+        }
+
+        // the step clock advances only once the step is certain to run
+        self.t += 1;
+        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
+        // LAMB's coefficients never read block grad² — hand the engine
+        // exactly what the unprobed path would (None), keeping the two
+        // call sites bit-identical by construction
+        let precomputed = if algo == Algo::Lans { g2 } else { None };
 
         // --- phases B/C on the stitched scratch gradients ---
         let mut tasks = build_shard_tasks(&self.plan, &mut self.shards, params, None);
-        segmented_step(algo, &cx, self.hp, table, eff, &mut tasks, precomputed)
+        Some(segmented_step(algo, &cx, self.hp, table, eff, &mut tasks, precomputed))
     }
 
     /// Serialize per-shard moments as named tensors (`optshard:m:<s>` /
@@ -831,7 +879,7 @@ impl ShardedOptimizer {
 
     /// Save the optimizer state alone as a checkpoint file.
     pub fn save_state(&self, path: &Path) -> Result<()> {
-        Checkpoint { step: self.t, tensors: self.export_state() }
+        Checkpoint::new(self.t, self.export_state())
             .save(path)
             .with_context(|| format!("saving sharded optimizer state to {}", path.display()))
     }
@@ -985,6 +1033,47 @@ mod tests {
                 assert_eq!(sa.max_abs_param, sb.max_abs_param, "{name}");
             }
             assert_eq!(xa, xb, "{name}: pipelined trajectory diverged");
+        }
+    }
+
+    #[test]
+    fn scattered_scaled_matches_unprobed_and_skips_on_overflow() {
+        use crate::collective::reduce_scatter::ring_reduce_scatter;
+        let table = big_table();
+        let mut rng = Rng::new(31);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let pool = ThreadPool::new(3);
+        let (w, hp) = (3usize, Hyper::default());
+        for name in ["lans", "lamb"] {
+            let mut a = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut b = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut xa = x0.clone();
+            let mut xb = x0.clone();
+            let bufs: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut rs = bufs;
+            ring_reduce_scatter(&mut rs);
+            let scale = 1.0 / w as f32;
+            // probe on finite gradients: identical to the unprobed step
+            let sa = a.step_scattered(&pool, &mut xa, &rs, scale, 0.01);
+            let sb = b.step_scattered_scaled(&pool, &mut xb, &rs, scale, 0.01).unwrap();
+            assert_eq!(sa.grad_norm, sb.grad_norm, "{name}");
+            assert_eq!(xa, xb, "{name}: probed step diverged");
+            // poisoned buffer: skip, no state change, clock untouched.
+            // position 17 sits in ring chunk 0, so the NaN must live in
+            // that chunk's owner buffer — the only one the stitch reads
+            let mut bad = rs.clone();
+            bad[chunk_owner(0, w)][17] = f32::NAN;
+            let t_before = b.steps_taken();
+            assert!(b.step_scattered_scaled(&pool, &mut xb, &bad, scale, 0.01).is_none());
+            assert_eq!(xa, xb, "{name}: skipped step touched params");
+            assert_eq!(t_before, b.steps_taken(), "{name}: skip advanced the clock");
+            // both continue identically afterwards
+            let sa = a.step_scattered(&pool, &mut xa, &rs, scale, 0.02);
+            let sb = b.step_scattered_scaled(&pool, &mut xb, &rs, scale, 0.02).unwrap();
+            assert_eq!(sa.max_abs_param, sb.max_abs_param, "{name}");
+            assert_eq!(xa, xb, "{name}: post-skip trajectory diverged");
         }
     }
 

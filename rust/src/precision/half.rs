@@ -1,0 +1,389 @@
+//! Bit-level `f32 ↔ f16/bf16` conversion (no `half` crate offline) and the
+//! packed [`HalfVec`] wire buffer.
+//!
+//! Both conversions implement IEEE 754 round-to-nearest-even on the
+//! dropped mantissa bits, with the full special-value contract:
+//!
+//! * overflow (a finite f32 past the half format's range) rounds to ±inf
+//!   — the signal dynamic loss scaling watches for;
+//! * f16 subnormals are produced and consumed exactly (down to 2^-24);
+//!   values below half the smallest subnormal underflow to signed zero;
+//! * NaN stays NaN (quiet bit forced; payload truncated), infinities map
+//!   to the format's infinities.
+//!
+//! The half→f32 direction is exact (every f16/bf16 value is representable
+//! in f32), so `to_f32 ∘ from_f32` is idempotent — quantizing an
+//! already-quantized value is the identity, which is what makes multi-hop
+//! wire forwarding in `collective::half` loss-free after the first hop.
+//!
+//! Golden-vector tests below pin known bit patterns (normals, subnormals,
+//! inf/nan, round-to-nearest-even ties); `tests/proptests.rs` adds the
+//! determinism / monotonicity / bounded-error properties.
+
+use super::DType;
+
+// ------------------------------------------------------------------ f16 ----
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even, overflow → ±inf.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xFF) as i32;
+    let man = x & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan: keep the top payload bits, force the quiet bit so a
+        // payload that truncates to zero stays a NaN
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 | ((man >> 13) as u16 & 0x01FF)
+        };
+    }
+    let e = exp - 127; // unbiased
+    if e >= 16 {
+        // >= 2^16 > 65504: past the largest half, round to inf
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // normal half range; rounding may carry into the exponent and
+        // produce inf naturally (values in (65504, 65536))
+        let mut out = (((e + 15) as u32) << 10) | (man >> 13);
+        let rem = man & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | (out as u16);
+    }
+    if e < -25 {
+        // below half the smallest subnormal (2^-25): underflow to ±0
+        return sign;
+    }
+    // subnormal: shift the full significand (implicit bit made explicit)
+    // so the result counts units of 2^-24, rounding to nearest even; a
+    // round-up from 1023 lands on 0x0400 = the smallest normal, which is
+    // exactly the adjacent representable value
+    let full = man | 0x0080_0000;
+    let shift = (-e - 1) as u32; // 14..=24
+    let kept = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut m = kept;
+    if rem > half || (rem == half && (m & 1) == 1) {
+        m += 1;
+    }
+    sign | (m as u16)
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        // inf / nan
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: value = man * 2^-24; normalize so the leading
+            // significand bit becomes f32's implicit bit
+            let mut e = 113u32; // 127 - 14, decremented per shift below
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ----------------------------------------------------------------- bf16 ----
+
+/// f32 → bfloat16 bits, round-to-nearest-even, overflow → ±inf.
+pub fn f32_to_bf16_bits(value: f32) -> u16 {
+    let bits = value.to_bits();
+    if value.is_nan() {
+        // force the quiet bit so a payload living in the dropped low bits
+        // does not truncate the NaN into an infinity
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even on the dropped 16 bits; the carry propagates
+    // through exponent bits, turning a just-under-max value into inf
+    let lsb = (bits >> 16) & 1;
+    ((bits + 0x7FFF + lsb) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact — bf16 is f32's top half).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// -------------------------------------------------------------- HalfVec ----
+
+/// A packed half-precision buffer — the wire format of the half
+/// collectives.  Stores one `u16` per element (`dtype.bytes() == 2` of
+/// wire traffic each), quantized once at construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HalfVec {
+    dtype: DType,
+    bits: Vec<u16>,
+}
+
+impl HalfVec {
+    /// Quantize an f32 slice (round-to-nearest-even, overflow → inf).
+    /// `dtype` must be a half format — an f32 "HalfVec" has no packed form.
+    pub fn from_f32(dtype: DType, data: &[f32]) -> HalfVec {
+        assert!(dtype.is_half(), "HalfVec needs a half dtype, got {}", dtype.name());
+        let bits = match dtype {
+            DType::F16 => data.iter().map(|&x| f32_to_f16_bits(x)).collect(),
+            DType::Bf16 => data.iter().map(|&x| f32_to_bf16_bits(x)).collect(),
+            DType::F32 => unreachable!(),
+        };
+        HalfVec { dtype, bits }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Bytes this buffer would occupy on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        self.bits.len() * self.dtype.bytes()
+    }
+
+    /// Raw packed bits (what a transport would memcpy).
+    pub fn bits(&self) -> &[u16] {
+        &self.bits
+    }
+
+    /// Element `i` widened back to f32 (exact).
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self.dtype {
+            DType::F16 => f16_bits_to_f32(self.bits[i]),
+            DType::Bf16 => bf16_bits_to_f32(self.bits[i]),
+            DType::F32 => unreachable!(),
+        }
+    }
+
+    /// Dequantize the whole buffer into `out` (exact widening).
+    pub fn to_f32_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.bits.len(), "length mismatch");
+        match self.dtype {
+            DType::F16 => {
+                for (o, &b) in out.iter_mut().zip(&self.bits) {
+                    *o = f16_bits_to_f32(b);
+                }
+            }
+            DType::Bf16 => {
+                for (o, &b) in out.iter_mut().zip(&self.bits) {
+                    *o = bf16_bits_to_f32(b);
+                }
+            }
+            DType::F32 => unreachable!(),
+        }
+    }
+
+    /// Iterate the elements widened to f32.
+    pub fn iter_f32(&self) -> impl Iterator<Item = f32> + '_ {
+        let dtype = self.dtype;
+        self.bits.iter().map(move |&b| match dtype {
+            DType::F16 => f16_bits_to_f32(b),
+            DType::Bf16 => bf16_bits_to_f32(b),
+            DType::F32 => unreachable!(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- golden IEEE-754 vectors: f16 ------------------------------------
+
+    #[test]
+    fn f16_golden_normals() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3C00),
+            (-1.0, 0xBC00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (-2.5, 0xC100),
+            (0.1, 0x2E66),     // nearest f16 to f32(0.1)
+            (65504.0, 0x7BFF), // largest finite f16
+            (2.0f32.powi(-14), 0x0400), // smallest normal
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "f32_to_f16({x})");
+        }
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn f16_golden_subnormals() {
+        // 2^-24: the smallest f16 subnormal
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+        // 2^-25 is exactly halfway between 0 and 2^-24: ties to even -> 0
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-25)), 0x0000);
+        // 1.5 * 2^-25 rounds up to 2^-24
+        assert_eq!(f32_to_f16_bits(1.5 * 2.0f32.powi(-25)), 0x0001);
+        // largest subnormal: 1023 * 2^-24
+        let largest_sub = 1023.0f32 * 2.0f32.powi(-24);
+        assert_eq!(f32_to_f16_bits(largest_sub), 0x03FF);
+        // below half the smallest subnormal: underflow to signed zero
+        assert_eq!(f32_to_f16_bits(1.0e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1.0e-9), 0x8000);
+        // subnormals decode exactly
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x03FF), largest_sub);
+        assert_eq!(f16_bits_to_f32(0x8001), -(2.0f32.powi(-24)));
+    }
+
+    #[test]
+    fn f16_golden_inf_nan_overflow() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        // overflow -> inf: 65520 ties up into 65536 (unrepresentable),
+        // 1e9 and f32::MAX are far past the range
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16_bits(1.0e9), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::MAX), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-65520.0), 0xFC00);
+        // just below the tie: rounds back down to the max finite
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7BFF);
+        // NaN stays NaN, sign preserved, payload truncated but non-zero
+        let n = f32_to_f16_bits(f32::NAN);
+        assert_eq!(n & 0x7C00, 0x7C00);
+        assert_ne!(n & 0x03FF, 0);
+        assert!(f16_bits_to_f32(n).is_nan());
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2^-11 sits exactly between 0x3C00 (1.0) and 0x3C01: even wins
+        assert_eq!(f32_to_f16_bits(1.000_488_281_25), 0x3C00);
+        // 1 + 3*2^-11 sits between 0x3C01 and 0x3C02: even (0x3C02) wins
+        assert_eq!(f32_to_f16_bits(1.001_464_843_75), 0x3C02);
+        // just past the tie rounds up
+        assert_eq!(f32_to_f16_bits(1.000_489), 0x3C01);
+    }
+
+    // ---- golden IEEE-754 vectors: bf16 -----------------------------------
+
+    #[test]
+    fn bf16_golden_normals() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3F80),
+            (-2.0, 0xC000),
+            (0.5, 0x3F00),
+            (std::f32::consts::PI, 0x4049), // 0x40490FDB rounds down
+            (0.1, 0x3DCD),                  // 0x3DCCCCCD rounds up
+        ] {
+            assert_eq!(f32_to_bf16_bits(x), bits, "f32_to_bf16({x})");
+        }
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        // decode is the exact top half
+        assert_eq!(bf16_bits_to_f32(0x3F80), 1.0);
+        assert_eq!(bf16_bits_to_f32(0xC000), -2.0);
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even_ties() {
+        // 0x3F808000 is halfway between 0x3F80 and 0x3F81: even (0x3F80)
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // 0x3F818000 is halfway between 0x3F81 and 0x3F82: even (0x3F82)
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // just past the tie rounds up
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8001)), 0x3F81);
+    }
+
+    #[test]
+    fn bf16_golden_inf_nan_overflow_subnormal() {
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16_bits(f32::NEG_INFINITY), 0xFF80);
+        // f32::MAX rounds up past the largest bf16 into inf
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16_bits(-f32::MAX), 0xFF80);
+        // largest finite bf16 survives
+        assert_eq!(f32_to_bf16_bits(bf16_bits_to_f32(0x7F7F)), 0x7F7F);
+        let n = f32_to_bf16_bits(f32::NAN);
+        assert!(bf16_bits_to_f32(n).is_nan());
+        // f32 subnormals map onto bf16 subnormals exactly when the low 16
+        // bits are zero; the smallest bf16 subnormal is 2^-133
+        assert_eq!(bf16_bits_to_f32(0x0001), 2.0f32.powi(-133));
+        assert_eq!(f32_to_bf16_bits(2.0f32.powi(-133)), 0x0001);
+        assert_eq!(f32_to_bf16_bits(bf16_bits_to_f32(0x8001)), 0x8001);
+    }
+
+    // ---- roundtrip / HalfVec ---------------------------------------------
+
+    #[test]
+    fn every_f16_value_roundtrips_exactly() {
+        // exhaustive: all 2^16 bit patterns survive f16 -> f32 -> f16
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(x), h, "pattern {h:#06x} ({x})");
+            }
+        }
+    }
+
+    #[test]
+    fn every_bf16_value_roundtrips_exactly() {
+        for b in 0..=u16::MAX {
+            let x = bf16_bits_to_f32(b);
+            if x.is_nan() {
+                assert!(bf16_bits_to_f32(f32_to_bf16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_bf16_bits(x), b, "pattern {b:#06x} ({x})");
+            }
+        }
+    }
+
+    #[test]
+    fn halfvec_packs_and_unpacks() {
+        let data = [0.0f32, 1.0, -2.5, 0.1, 65504.0, 1.0e9];
+        for dtype in [DType::F16, DType::Bf16] {
+            let hv = HalfVec::from_f32(dtype, &data);
+            assert_eq!(hv.len(), data.len());
+            assert_eq!(hv.wire_bytes(), data.len() * 2);
+            let mut back = vec![0.0f32; data.len()];
+            hv.to_f32_into(&mut back);
+            for (i, (&x, &b)) in data.iter().zip(&back).enumerate() {
+                assert_eq!(b, dtype.round_trip(x), "{} elem {i}", dtype.name());
+                assert_eq!(hv.get(i), b);
+            }
+            let collected: Vec<f32> = hv.iter_f32().collect();
+            assert_eq!(collected, back);
+        }
+        // f16 saturates 1e9 to inf; bf16 keeps it finite
+        assert_eq!(HalfVec::from_f32(DType::F16, &[1.0e9]).get(0), f32::INFINITY);
+        assert!(HalfVec::from_f32(DType::Bf16, &[1.0e9]).get(0).is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "half dtype")]
+    fn halfvec_rejects_f32() {
+        let _ = HalfVec::from_f32(DType::F32, &[1.0]);
+    }
+}

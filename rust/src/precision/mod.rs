@@ -1,0 +1,116 @@
+//! Mixed-precision subsystem: software half-precision formats, the packed
+//! wire buffer, and dynamic loss scaling — the numerics layer behind the
+//! paper's fp16 run (192 P3dn nodes move gradients over EFA in half
+//! precision while the optimizer keeps fp32 master state).
+//!
+//! Three pieces, each consumed by a different layer of the stack:
+//!
+//! * [`half`] — bit-level `f32 ↔ f16/bf16` conversion (round-to-nearest-
+//!   even, overflow → ±inf, full subnormal support) and the packed
+//!   [`HalfVec`] buffer that is the wire format of the half-precision
+//!   collectives (`collective::half`).
+//! * [`DType`] — the element-type knob (`TrainConfig::grad_dtype`) that
+//!   selects the gradient wire format.  `DType::F32` is the identity wire:
+//!   routing through the precision-aware entry points with `F32` is
+//!   exact-bit identical to the historical f32 path.
+//! * [`scaler`] — [`DynamicLossScaler`]: power-of-two loss scales with
+//!   backoff-on-overflow / growth-after-quiet-interval, plus the
+//!   [`LossScale`] config knob.  The scaled gradient is unscaled inside
+//!   the optimizer's grad² phase (`optim::native::step_scaled`), where
+//!   inf/nan detection turns an overflowed step into a skip.
+//!
+//! Exact-bit boundary (DESIGN.md §7): master parameters and optimizer
+//! moments are always f32; only the gradient *wire* carries half data.
+//! Power-of-two scales make scale→unscale a bit-exact round trip, so with
+//! an f32 wire the loss-scaled trajectory is identical to the unscaled
+//! one (property-tested in `tests/proptests.rs`).
+
+pub mod half;
+pub mod scaler;
+
+pub use half::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, HalfVec,
+};
+pub use scaler::{DynamicLossScaler, LossScale};
+
+/// Element type of a wire buffer.  `F32` is the identity (historical)
+/// format; the half formats quantize at the wire boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    /// IEEE 754 binary16: 5 exponent bits, 10 mantissa bits.  Narrow range
+    /// (max 65504) — the format that needs loss scaling.
+    F16,
+    /// bfloat16: 8 exponent bits (f32's range), 7 mantissa bits.
+    Bf16,
+}
+
+impl DType {
+    /// Bytes one element occupies on the wire.
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+        }
+    }
+
+    pub fn is_half(&self) -> bool {
+        !matches!(self, DType::F32)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a config-file spelling.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(DType::F32),
+            "f16" | "fp16" | "half" | "float16" => Some(DType::F16),
+            "bf16" | "bfloat16" => Some(DType::Bf16),
+            _ => None,
+        }
+    }
+
+    /// One trip across the wire: quantize to this dtype and back to f32
+    /// (round-to-nearest-even; overflow → ±inf).  Identity for `F32`.
+    #[inline]
+    pub fn round_trip(&self, x: f32) -> f32 {
+        match self {
+            DType::F32 => x,
+            DType::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+            DType::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_and_names() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert!(!DType::F32.is_half());
+        assert!(DType::F16.is_half() && DType::Bf16.is_half());
+        for d in [DType::F32, DType::F16, DType::Bf16] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("fp16"), Some(DType::F16));
+        assert_eq!(DType::parse("bfloat16"), Some(DType::Bf16));
+        assert_eq!(DType::parse("int8"), None);
+    }
+
+    #[test]
+    fn f32_round_trip_is_identity() {
+        for x in [0.0f32, -1.5, 3.0e38, f32::INFINITY, 1e-42] {
+            assert_eq!(DType::F32.round_trip(x).to_bits(), x.to_bits());
+        }
+    }
+}

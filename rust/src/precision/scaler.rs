@@ -1,0 +1,318 @@
+//! Dynamic loss scaling — the state machine that keeps fp16 gradients
+//! inside the format's narrow range (max 65504).
+//!
+//! The loss (hence every gradient) is multiplied by a power-of-two scale
+//! before the backward/wire, and unscaled inside the optimizer's grad²
+//! phase.  When the unscaled gradient contains inf/nan the step is
+//! *skipped* (parameters, moments and the bias-correction clock all
+//! untouched) and the scale backs off; after [`growth_interval`] clean
+//! steps in a row it grows back.  Power-of-two scales make the
+//! scale→unscale round trip bit-exact in IEEE arithmetic, which is what
+//! lets the f32-wire loss-scaled trajectory match the unscaled one
+//! exactly (property-tested in `tests/proptests.rs`).
+//!
+//! [`growth_interval`]: DynamicLossScaler::DEFAULT_GROWTH_INTERVAL
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::TensorF32;
+
+/// The `TrainConfig::loss_scale` knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LossScale {
+    /// Unit scale — the historical fp32 path (no scaling, no skip logic).
+    Off,
+    /// Fixed power-of-two scale: overflowed steps are still skipped, but
+    /// the scale never moves.
+    Static(f32),
+    /// Backoff-on-overflow / growth-after-quiet-interval, starting at
+    /// `init` (rounded to the nearest power of two).
+    Dynamic { init: f32 },
+}
+
+impl LossScale {
+    pub fn enabled(&self) -> bool {
+        !matches!(self, LossScale::Off)
+    }
+
+    /// Build the runtime scaler; `None` when scaling is off.
+    pub fn build(&self) -> Option<DynamicLossScaler> {
+        match *self {
+            LossScale::Off => None,
+            LossScale::Static(s) => Some(DynamicLossScaler::fixed(s)),
+            LossScale::Dynamic { init } => Some(DynamicLossScaler::dynamic(init)),
+        }
+    }
+}
+
+/// Name of the checkpoint tensor the scaler state rides in.
+pub const LOSS_SCALE_TENSOR: &str = "lossscale:state";
+
+/// Power-of-two loss scale with apex/amp-style dynamics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicLossScaler {
+    scale: f32,
+    good_steps: u64,
+    growth_interval: u64,
+    dynamic: bool,
+    /// total overflowed (skipped) steps — telemetry
+    overflows: u64,
+}
+
+impl DynamicLossScaler {
+    /// amp's defaults: start at 2^16, try to double every 2000 clean steps.
+    pub const DEFAULT_INIT: f32 = 65536.0;
+    pub const DEFAULT_GROWTH_INTERVAL: u64 = 2000;
+    /// Scale bounds, both powers of two.  Both keep `scale` and `1/scale`
+    /// well inside the normal f32 range so scaling stays an exact
+    /// exponent shift.  The floor sits *below* 1: the wire carries
+    /// un-normalized gradient sums (the 1/micro-steps mean applies after
+    /// the collective), so at large accumulation counts the scaler must
+    /// be able to shrink gradients to fit the f16 range, not just grow
+    /// them.
+    pub const MIN_SCALE: f32 = 5.960_464_5e-8; // 2^-24
+    pub const MAX_SCALE: f32 = 16_777_216.0; // 2^24
+
+    /// Dynamic scaler starting at `init` (rounded to a power of two and
+    /// clamped to the legal range).
+    pub fn dynamic(init: f32) -> DynamicLossScaler {
+        DynamicLossScaler {
+            scale: round_pow2(init),
+            good_steps: 0,
+            growth_interval: Self::DEFAULT_GROWTH_INTERVAL,
+            dynamic: true,
+            overflows: 0,
+        }
+    }
+
+    /// Fixed scaler: overflow still skips the step, but the scale is pinned.
+    pub fn fixed(scale: f32) -> DynamicLossScaler {
+        DynamicLossScaler { dynamic: false, ..Self::dynamic(scale) }
+    }
+
+    /// Override the growth interval (tests, aggressive schedules).
+    pub fn with_growth_interval(mut self, interval: u64) -> DynamicLossScaler {
+        self.growth_interval = interval.max(1);
+        self
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// `1 / scale` — exact, since the scale is a power of two.
+    pub fn inv_scale(&self) -> f32 {
+        1.0 / self.scale
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        self.dynamic
+    }
+
+    pub fn overflows(&self) -> u64 {
+        self.overflows
+    }
+
+    /// Record one step's outcome: backoff ×1/2 on overflow, growth ×2
+    /// after `growth_interval` consecutive clean steps (dynamic only; a
+    /// fixed scaler only counts overflows).
+    pub fn update(&mut self, overflow: bool) {
+        if overflow {
+            self.overflows += 1;
+            self.good_steps = 0;
+            if self.dynamic {
+                self.scale = (self.scale * 0.5).max(Self::MIN_SCALE);
+            }
+            return;
+        }
+        if !self.dynamic {
+            return;
+        }
+        self.good_steps += 1;
+        if self.good_steps >= self.growth_interval {
+            self.scale = (self.scale * 2.0).min(Self::MAX_SCALE);
+            self.good_steps = 0;
+        }
+    }
+
+    /// Serialize as the checkpoint tensor [`LOSS_SCALE_TENSOR`]:
+    /// `[scale, good_steps, dynamic]` (the counters fit f32 exactly —
+    /// `good_steps < growth_interval ≤ 2^24`).
+    pub fn export_tensor(&self) -> (String, TensorF32) {
+        (
+            LOSS_SCALE_TENSOR.to_string(),
+            TensorF32::new(
+                vec![3],
+                vec![
+                    self.scale,
+                    self.good_steps as f32,
+                    if self.dynamic { 1.0 } else { 0.0 },
+                ],
+            ),
+        )
+    }
+
+    /// Restore scale + quiet-step counter from a checkpoint tensor.  The
+    /// `dynamic` flag stays whatever the current config says (the config
+    /// owns the policy; the checkpoint owns the trajectory).  For a
+    /// *fixed* scaler the configured scale IS the policy, so only the
+    /// telemetry counter is restored and the pinned scale stands.
+    pub fn import_tensor(&mut self, t: &TensorF32) -> Result<()> {
+        if t.data.len() != 3 {
+            bail!(
+                "loss-scale state tensor has {} elements, expected 3 \
+                 (scale, good_steps, dynamic)",
+                t.data.len()
+            );
+        }
+        let scale = t.data[0];
+        if !scale.is_finite() || scale <= 0.0 {
+            bail!("loss-scale state has non-positive scale {scale}");
+        }
+        if self.dynamic {
+            self.scale = round_pow2(scale);
+            self.good_steps = t.data[1] as u64;
+        }
+        Ok(())
+    }
+}
+
+/// Nearest power of two (in log space), clamped to the legal scale range.
+fn round_pow2(x: f32) -> f32 {
+    assert!(x.is_finite() && x > 0.0, "loss scale must be positive, got {x}");
+    let e = x.log2().round() as i32;
+    2.0f32
+        .powi(e)
+        .clamp(DynamicLossScaler::MIN_SCALE, DynamicLossScaler::MAX_SCALE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_builds_the_right_scaler() {
+        assert!(LossScale::Off.build().is_none());
+        assert!(!LossScale::Off.enabled());
+        let s = LossScale::Static(1024.0).build().unwrap();
+        assert_eq!(s.scale(), 1024.0);
+        assert!(!s.is_dynamic());
+        let d = LossScale::Dynamic { init: 65536.0 }.build().unwrap();
+        assert_eq!(d.scale(), 65536.0);
+        assert!(d.is_dynamic());
+    }
+
+    #[test]
+    fn init_rounds_to_power_of_two() {
+        assert_eq!(DynamicLossScaler::dynamic(1000.0).scale(), 1024.0);
+        assert_eq!(DynamicLossScaler::dynamic(1.5).scale(), 2.0);
+        // sub-unit scales are legal (they *shrink* oversized wire sums)
+        assert_eq!(DynamicLossScaler::dynamic(0.01).scale(), 0.0078125); // 2^-7
+        // out-of-range inits clamp to the legal bounds
+        assert_eq!(DynamicLossScaler::dynamic(1e30).scale(), DynamicLossScaler::MAX_SCALE);
+        assert_eq!(DynamicLossScaler::dynamic(1e-30).scale(), DynamicLossScaler::MIN_SCALE);
+        assert_eq!(DynamicLossScaler::MIN_SCALE, 2.0f32.powi(-24));
+    }
+
+    #[test]
+    fn overflow_backs_off_growth_restores() {
+        let mut s = DynamicLossScaler::dynamic(65536.0).with_growth_interval(3);
+        s.update(true);
+        assert_eq!(s.scale(), 32768.0);
+        assert_eq!(s.overflows(), 1);
+        // two clean steps: not enough to grow
+        s.update(false);
+        s.update(false);
+        assert_eq!(s.scale(), 32768.0);
+        // third clean step grows; counter resets
+        s.update(false);
+        assert_eq!(s.scale(), 65536.0);
+        s.update(false);
+        s.update(false);
+        // an overflow resets the quiet counter too
+        s.update(true);
+        assert_eq!(s.scale(), 32768.0);
+        s.update(false);
+        s.update(false);
+        assert_eq!(s.scale(), 32768.0);
+    }
+
+    #[test]
+    fn scale_stays_power_of_two_and_bounded() {
+        let mut s = DynamicLossScaler::dynamic(65536.0).with_growth_interval(1);
+        for _ in 0..40 {
+            s.update(false);
+            assert!(s.scale() <= DynamicLossScaler::MAX_SCALE);
+            assert_eq!(s.scale().log2().fract(), 0.0);
+        }
+        assert_eq!(s.scale(), DynamicLossScaler::MAX_SCALE);
+        for _ in 0..60 {
+            s.update(true);
+            assert!(s.scale() >= DynamicLossScaler::MIN_SCALE);
+        }
+        assert_eq!(s.scale(), DynamicLossScaler::MIN_SCALE);
+    }
+
+    #[test]
+    fn fixed_scale_never_moves() {
+        let mut s = DynamicLossScaler::fixed(256.0).with_growth_interval(1);
+        s.update(true);
+        s.update(false);
+        s.update(false);
+        assert_eq!(s.scale(), 256.0);
+        assert_eq!(s.overflows(), 1);
+    }
+
+    #[test]
+    fn inv_scale_is_exact() {
+        let s = DynamicLossScaler::dynamic(65536.0);
+        assert_eq!(s.inv_scale() * s.scale(), 1.0);
+        assert_eq!(s.inv_scale(), 2.0f32.powi(-16));
+    }
+
+    #[test]
+    fn state_roundtrips_through_tensor() {
+        let mut a = DynamicLossScaler::dynamic(65536.0).with_growth_interval(100);
+        a.update(true);
+        a.update(false);
+        a.update(false);
+        let (name, t) = a.export_tensor();
+        assert_eq!(name, LOSS_SCALE_TENSOR);
+        let mut b = DynamicLossScaler::dynamic(2.0).with_growth_interval(100);
+        b.import_tensor(&t).unwrap();
+        assert_eq!(b.scale(), a.scale());
+        // continue in lockstep
+        for ov in [false, true, false] {
+            a.update(ov);
+            b.update(ov);
+            assert_eq!(a.scale(), b.scale());
+        }
+    }
+
+    #[test]
+    fn fixed_scaler_keeps_its_configured_scale_on_import() {
+        // the user pinned the scale in the config: a checkpoint written by
+        // an earlier dynamic run must not silently override it
+        let mut dynamic = DynamicLossScaler::dynamic(65536.0);
+        for _ in 0..6 {
+            dynamic.update(true); // walk down to 2^10
+        }
+        let (_, state) = dynamic.export_tensor();
+        let mut pinned = DynamicLossScaler::fixed(65536.0);
+        pinned.import_tensor(&state).unwrap();
+        assert_eq!(pinned.scale(), 65536.0);
+        // a dynamic scaler does adopt the checkpointed trajectory
+        let mut resumed = DynamicLossScaler::dynamic(2.0);
+        resumed.import_tensor(&state).unwrap();
+        assert_eq!(resumed.scale(), 1024.0);
+    }
+
+    #[test]
+    fn import_rejects_garbage() {
+        let mut s = DynamicLossScaler::dynamic(2.0);
+        let bad_len = TensorF32::new(vec![2], vec![1.0, 0.0]);
+        assert!(s.import_tensor(&bad_len).is_err());
+        let bad_scale = TensorF32::new(vec![3], vec![-4.0, 0.0, 1.0]);
+        assert!(s.import_tensor(&bad_scale).is_err());
+    }
+}

@@ -7,6 +7,7 @@ use lans::checkpoint::Checkpoint;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{BlockTable, Hyper, Schedule, ShardedOptimizer};
+use lans::precision::{DType, LossScale};
 use lans::runtime::{Engine, ModelMeta, ModelRuntime, TensorF32};
 
 fn artifacts_dir() -> PathBuf {
@@ -27,6 +28,8 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         threads: 1,
         shard_optimizer: false,
         resume_opt_state: false,
+        grad_dtype: DType::F32,
+        loss_scale: LossScale::Off,
         global_batch: 16,
         steps: 2,
         seed: 1,
@@ -180,11 +183,10 @@ fn resume_from_mismatched_checkpoint_errors() {
     let dir = std::env::temp_dir().join("lans_fi_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
     let p = dir.join("wrong.ckpt");
-    Checkpoint {
-        step: 1,
-        tensors: vec![("not/a/real/param".into(),
-                       TensorF32::new(vec![2], vec![0.0, 1.0]))],
-    }
+    Checkpoint::new(
+        1,
+        vec![("not/a/real/param".into(), TensorF32::new(vec![2], vec![0.0, 1.0]))],
+    )
     .save(&p)
     .unwrap();
     let mut cfg = base_cfg(meta);
@@ -199,12 +201,9 @@ fn checkpoint_save_creates_missing_parent_dirs() {
     let root = std::env::temp_dir().join("lans_fi_ckpt_dirs");
     let _ = std::fs::remove_dir_all(&root);
     let p = root.join("phase1/seed42/step.ckpt");
-    Checkpoint {
-        step: 7,
-        tensors: vec![("w".into(), TensorF32::new(vec![2], vec![0.5, -0.5]))],
-    }
-    .save(&p)
-    .unwrap();
+    Checkpoint::new(7, vec![("w".into(), TensorF32::new(vec![2], vec![0.5, -0.5]))])
+        .save(&p)
+        .unwrap();
     assert_eq!(Checkpoint::load(&p).unwrap().step, 7);
     std::fs::remove_dir_all(&root).ok();
 }
@@ -223,7 +222,7 @@ fn checkpoint_load_missing_file_is_contextual() {
 fn checkpoint_save_behind_file_is_contextual() {
     let base = std::env::temp_dir().join("lans_fi_ckpt_parent_file");
     std::fs::write(&base, b"i am a file").unwrap();
-    let Err(e) = Checkpoint { step: 0, tensors: vec![] }.save(&base.join("x.ckpt"))
+    let Err(e) = Checkpoint::new(0, vec![]).save(&base.join("x.ckpt"))
     else {
         panic!("expected error")
     };
@@ -307,6 +306,28 @@ fn shard_optimizer_with_elementwise_optimizer_rejected() {
 }
 
 #[test]
+fn half_wire_on_hlo_backend_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.backend = OptBackend::Hlo;
+    cfg.grad_dtype = DType::F16;
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("native"), "unhelpful: {err}");
+}
+
+#[test]
+fn loss_scale_on_hlo_backend_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.backend = OptBackend::Hlo;
+    cfg.loss_scale = LossScale::Dynamic { init: 65536.0 };
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("native"), "unhelpful: {err}");
+}
+
+#[test]
 fn resume_opt_state_without_shard_optimizer_rejected() {
     let Some(meta) = meta_path() else { return };
     let mut cfg = base_cfg(meta);
@@ -326,16 +347,15 @@ fn resume_opt_state_from_params_only_checkpoint_errors() {
     let dir = std::env::temp_dir().join("lans_fi_shard_resume");
     std::fs::create_dir_all(&dir).unwrap();
     let p = dir.join("params_only.ckpt");
-    Checkpoint {
-        step: 1,
-        tensors: rt
-            .meta
+    Checkpoint::new(
+        1,
+        rt.meta
             .params
             .iter()
             .zip(&params)
             .map(|(s, t)| (s.name.clone(), t.clone()))
             .collect(),
-    }
+    )
     .save(&p)
     .unwrap();
 

@@ -5,14 +5,17 @@
 //! which reproduces deterministically).
 
 use lans::collective::{
-    ring_all_gather, ring_all_gather_pooled, ring_allreduce, ring_allreduce_pooled,
-    ring_reduce_scatter, ring_reduce_scatter_pooled,
+    ring_all_gather, ring_all_gather_half, ring_all_gather_half_pooled,
+    ring_all_gather_pooled, ring_allreduce, ring_allreduce_half,
+    ring_allreduce_half_pooled, ring_allreduce_pooled, ring_reduce_scatter,
+    ring_reduce_scatter_half, ring_reduce_scatter_half_pooled, ring_reduce_scatter_pooled,
 };
 use lans::data::{make_shards, WithReplacementSampler};
 use lans::optim::schedule::{from_ratios, sqrt_scaled_lr, Schedule};
 use lans::optim::{
     make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ShardPlan, ShardedOptimizer,
 };
+use lans::precision::DType;
 use lans::util::json::Json;
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
@@ -227,6 +230,324 @@ fn prop_reduce_scatter_then_all_gather_is_allreduce_bit_for_bit() {
         ring_reduce_scatter_pooled(&mut pooled, &pool);
         ring_all_gather_pooled(&mut pooled, &pool);
         assert_eq!(pooled, reference, "pooled halves (w={w} n={n} threads={threads})");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// mixed-precision properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_f32_path_exact_bit_unchanged_through_precision_entry_points() {
+    // acceptance (a): with the subsystem present, routing through the
+    // precision-aware wire entry points at DType::F32 is the legacy f32
+    // path, bit for bit
+    for_cases(40, |_, rng| {
+        let w = 1 + rng.below_usize(9);
+        let n = rng.below_usize(9000);
+        let threads = 1 + rng.below_usize(8);
+        let pool = ThreadPool::new(threads);
+        let template: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+
+        let mut legacy = template.clone();
+        let mut wire = template.clone();
+        ring_reduce_scatter(&mut legacy);
+        ring_reduce_scatter_half(&mut wire, DType::F32);
+        assert_eq!(legacy, wire, "rs (w={w} n={n})");
+        ring_all_gather(&mut legacy);
+        ring_all_gather_half(&mut wire, DType::F32);
+        assert_eq!(legacy, wire, "ag (w={w} n={n})");
+
+        let mut legacy = template.clone();
+        let mut wire = template;
+        ring_allreduce_pooled(&mut legacy, &pool);
+        ring_allreduce_half_pooled(&mut wire, DType::F32, &pool);
+        assert_eq!(legacy, wire, "allreduce pooled (w={w} n={n} threads={threads})");
+    });
+}
+
+#[test]
+fn prop_half_wire_bit_identical_across_w_and_serial_vs_pooled() {
+    // acceptance (b): for every W in 1..=8 and both half formats, the
+    // pooled schedule produces exactly the serial schedule's bits, and
+    // the serial schedule is deterministic (re-running it reproduces
+    // itself) — the half path is a well-defined function of its inputs,
+    // independent of execution schedule
+    for_cases(12, |_, rng| {
+        let n = rng.below_usize(9000);
+        let threads = 2 + rng.below_usize(7);
+        let pool = ThreadPool::new(threads);
+        for wire in [DType::F16, DType::Bf16] {
+            for w in 1..=8usize {
+                let template: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                    .collect();
+
+                let mut serial = template.clone();
+                let mut again = template.clone();
+                let mut pooled = template.clone();
+                ring_reduce_scatter_half(&mut serial, wire);
+                ring_reduce_scatter_half(&mut again, wire);
+                ring_reduce_scatter_half_pooled(&mut pooled, wire, &pool);
+                assert_eq!(serial, again, "{} rs determinism w={w}", wire.name());
+                assert_eq!(serial, pooled, "{} rs pooled w={w} n={n}", wire.name());
+
+                ring_all_gather_half(&mut serial, wire);
+                ring_all_gather_half_pooled(&mut pooled, wire, &pool);
+                assert_eq!(serial, pooled, "{} ag pooled w={w} n={n}", wire.name());
+
+                let mut serial = template.clone();
+                let mut pooled = template;
+                ring_allreduce_half(&mut serial, wire);
+                ring_allreduce_half_pooled(&mut pooled, wire, &pool);
+                assert_eq!(serial, pooled, "{} allreduce w={w} n={n}", wire.name());
+                // replicas agree — the replicated trainer's requirement
+                for b in &serial[1..] {
+                    assert_eq!(&serial[0], b, "{} replicas w={w}", wire.name());
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_half_conversion_deterministic_monotone_bounded() {
+    // satellite: f32 -> half -> f32 is deterministic (idempotent: a value
+    // already on the half grid maps to itself), monotone (rounding never
+    // reorders), and error-bounded in the format's normal range
+    for_cases(120, |_, rng| {
+        for wire in [DType::F16, DType::Bf16] {
+            let mut xs: Vec<f32> = (0..64)
+                .map(|_| {
+                    let mag = 10f32.powi(rng.below(12) as i32 - 6);
+                    rng.normal_f32() * mag
+                })
+                .collect();
+            for &x in xs.iter() {
+                let q = wire.round_trip(x);
+                // determinism + idempotence
+                assert_eq!(q.to_bits(), wire.round_trip(x).to_bits());
+                assert_eq!(q.to_bits(), wire.round_trip(q).to_bits(), "{x}");
+                // bounded relative error in the normal range (eps/2 with
+                // round-to-nearest: 2^-12 for f16's 10-bit, 2^-9 for
+                // bf16's 7-bit mantissa; allow the full eps for slack)
+                let (lo, hi, eps) = match wire {
+                    DType::F16 => (6.2e-5f32, 6.5e4f32, 2.0f32.powi(-11)),
+                    DType::Bf16 => (1.2e-38, 3.3e38, 2.0f32.powi(-8)),
+                    DType::F32 => unreachable!(),
+                };
+                if x.abs() > lo && x.abs() < hi {
+                    assert!(
+                        (q - x).abs() <= eps * x.abs(),
+                        "{}: {x} -> {q}",
+                        wire.name()
+                    );
+                }
+            }
+            // monotone: sort the inputs, the images must be sorted too
+            xs.sort_by(f32::total_cmp);
+            let quantized: Vec<f32> = xs.iter().map(|&x| wire.round_trip(x)).collect();
+            for pair in quantized.windows(2) {
+                assert!(
+                    pair[0] <= pair[1],
+                    "{}: rounding reordered {} > {}",
+                    wire.name(),
+                    pair[0],
+                    pair[1]
+                );
+            }
+        }
+    });
+}
+
+/// Pick a random power-of-two loss scale 2^k, k in [1, 20].
+fn random_pow2(rng: &mut Rng) -> f32 {
+    2.0f32.powi(1 + rng.below(20) as i32)
+}
+
+#[test]
+fn prop_scaled_step_without_overflow_matches_unscaled_exactly() {
+    // acceptance (c): gradients scaled by a power of two, unscaled inside
+    // step_scaled, walk exactly the unscaled serial trajectory — params
+    // and stats bit for bit, every optimizer
+    for_cases(30, |_, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(6000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let pool = ThreadPool::new(1 + rng.below_usize(8));
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb", "adamw", "adamw_bgn", "msgd"] {
+            let hp = Hyper::default();
+            let mut plain = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut scaled = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut xp = x0.clone();
+            let mut xs = x0.clone();
+            for k in 0..3 {
+                let g: Vec<f32> =
+                    (0..table.total).map(|_| rng.normal_f32()).collect();
+                let s = random_pow2(rng);
+                let mut gs: Vec<f32> = g.iter().map(|&v| v * s).collect();
+                let lr = 0.005 + 0.004 * k as f32;
+                // reference: the parallel step on the raw gradient (the
+                // serial == parallel identity is covered elsewhere)
+                let st_p = plain.step_parallel(&pool, &mut xp, &g, lr);
+                let st_s = scaled
+                    .step_scaled(&pool, &mut xs, &mut gs, lr, 1.0 / s)
+                    .expect("no overflow in finite gradients");
+                assert_eq!(st_p.grad_norm, st_s.grad_norm, "{name} s={s}");
+                assert_eq!(st_p.mean_trust_ratio, st_s.mean_trust_ratio, "{name}");
+                assert_eq!(st_p.max_abs_param, st_s.max_abs_param, "{name}");
+                // the in-place unscale reproduced the raw gradient exactly
+                assert_eq!(g, gs, "{name}: unscale was not exact (s={s})");
+            }
+            assert_eq!(xp, xs, "{name}: scaled trajectory diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_overflow_skips_step_and_leaves_state_untouched() {
+    // acceptance (d): an inf/nan gradient makes step_scaled return None
+    // with parameters, moments and the step clock untouched — the
+    // optimizer continues afterwards exactly as if the bad step never
+    // happened
+    for_cases(30, |seed, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(4000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let pool = ThreadPool::new(1 + rng.below_usize(8));
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb", "adamw"] {
+            let hp = Hyper::default();
+            let mut clean = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut poked = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut xc = x0.clone();
+            let mut xk = x0.clone();
+            // one good step on both, so moments are non-trivial
+            let g0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+            clean.step_parallel(&pool, &mut xc, &g0, 0.01);
+            let mut g0s: Vec<f32> = g0.iter().map(|&v| v * 4.0).collect();
+            poked.step_scaled(&pool, &mut xk, &mut g0s, 0.01, 0.25).unwrap();
+            assert_eq!(xc, xk, "{name}: setup step diverged");
+
+            // the poisoned step: inf or nan at a random position
+            let mut bad: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+            let poison = if seed % 2 == 0 { f32::INFINITY } else { f32::NAN };
+            bad[rng.below_usize(table.total)] = poison;
+            let before = xk.clone();
+            assert!(
+                poked.step_scaled(&pool, &mut xk, &mut bad, 0.01, 0.5).is_none(),
+                "{name}: overflow not detected"
+            );
+            assert_eq!(before, xk, "{name}: skipped step touched params");
+
+            // continue on clean gradients: bit-identical to the optimizer
+            // that never saw the poisoned step (moments + clock untouched)
+            let g1: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+            let sc = clean.step_parallel(&pool, &mut xc, &g1, 0.02);
+            let mut g1s: Vec<f32> = g1.iter().map(|&v| v * 8.0).collect();
+            let sk = poked.step_scaled(&pool, &mut xk, &mut g1s, 0.02, 0.125).unwrap();
+            assert_eq!(sc.grad_norm, sk.grad_norm, "{name}");
+            assert_eq!(xc, xk, "{name}: post-skip trajectory diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_scaled_step_matches_replicated_and_skips_on_overflow() {
+    // the ZeRO-1 side of (c)+(d): step_scattered_scaled with the loss
+    // scale folded into the stitch factor matches the replicated
+    // trajectory exactly, and a poisoned worker buffer skips the step
+    // with all shard state untouched
+    for_cases(20, |_, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(9000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let w = 1 + rng.below_usize(6);
+        let pool = ThreadPool::new(2 + rng.below_usize(6));
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb"] {
+            let hp = Hyper::default();
+            let mut rep = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut sh = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut xr = x0.clone();
+            let mut xs = x0.clone();
+            for k in 0..2 {
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                let s = random_pow2(rng);
+                let inv = 1.0 / (w as f32);
+                let lr = 0.005 + 0.004 * k as f32;
+
+                // replicated reference on the unscaled buffers
+                let mut r = bufs.clone();
+                ring_allreduce(&mut r);
+                let mut grad = std::mem::take(&mut r[0]);
+                for g in grad.iter_mut() {
+                    *g *= inv;
+                }
+                let s_rep = rep.step(&mut xr, &grad, lr);
+
+                // sharded on the loss-scaled buffers, unscale in the stitch
+                let mut b: Vec<Vec<f32>> = bufs
+                    .iter()
+                    .map(|buf| buf.iter().map(|&v| v * s).collect())
+                    .collect();
+                ring_reduce_scatter(&mut b);
+                let s_sh = sh
+                    .step_scattered_scaled(&pool, &mut xs, &b, inv * (1.0 / s), lr)
+                    .expect("no overflow in finite gradients");
+                assert_eq!(s_rep.grad_norm, s_sh.grad_norm, "{name} w={w}");
+                assert_eq!(s_rep.mean_trust_ratio, s_sh.mean_trust_ratio, "{name}");
+                assert_eq!(s_rep.max_abs_param, s_sh.max_abs_param, "{name}");
+            }
+            assert_eq!(xr, xs, "{name} w={w}: scaled sharded trajectory diverged");
+
+            // poison one worker's buffer: the step must skip cleanly...
+            let mut bad: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                .collect();
+            bad[rng.below_usize(w)][rng.below_usize(table.total)] = f32::INFINITY;
+            ring_reduce_scatter(&mut bad);
+            let before = xs.clone();
+            let t_before = sh.steps_taken();
+            assert!(
+                sh.step_scattered_scaled(&pool, &mut xs, &bad, 1.0 / w as f32, 0.01)
+                    .is_none(),
+                "{name}: poisoned buffer not detected"
+            );
+            assert_eq!(before, xs, "{name}: skipped sharded step touched params");
+            assert_eq!(t_before, sh.steps_taken(), "{name}: skip advanced the clock");
+
+            // ...and the next clean step continues the joint trajectory
+            let bufs: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let inv = 1.0 / w as f32;
+            let mut r = bufs.clone();
+            ring_allreduce(&mut r);
+            let mut grad = std::mem::take(&mut r[0]);
+            for g in grad.iter_mut() {
+                *g *= inv;
+            }
+            rep.step(&mut xr, &grad, 0.02);
+            let mut b = bufs;
+            ring_reduce_scatter(&mut b);
+            sh.step_scattered_scaled(&pool, &mut xs, &b, inv, 0.02).unwrap();
+            assert_eq!(xr, xs, "{name}: post-skip sharded trajectory diverged");
+        }
     });
 }
 

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{DataSource, TrainStatus, Trainer};
 use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer, Schedule};
+use lans::precision::{DType, LossScale};
 use lans::runtime::{Engine, ModelRuntime};
 use lans::util::rng::Rng;
 
@@ -156,6 +157,8 @@ fn trainer_loss_decreases_small_run() {
         threads: 1,
         shard_optimizer: false,
         resume_opt_state: false,
+        grad_dtype: DType::F32,
+        loss_scale: LossScale::Off,
         global_batch: 16,
         steps: 30,
         seed: 1,
