@@ -7,6 +7,7 @@ use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{from_ratios, Hyper};
 use lans::precision::{DType, LossScale};
+use lans::topology::Topology;
 use lans::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -26,7 +27,9 @@ fn main() -> Result<()> {
                 threads: 0,
                 shard_optimizer: false,
                 resume_opt_state: false,
+                topology: Topology::flat(4),
                 grad_dtype: DType::F32,
+                intra_dtype: DType::F32,
                 loss_scale: LossScale::Off,
                 global_batch: batch,
                 steps,

@@ -15,6 +15,7 @@ use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
+use lans::topology::Topology;
 use lans::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -38,7 +39,9 @@ fn main() -> Result<()> {
             // per-worker moments cut 4x
             shard_optimizer: true,
             resume_opt_state: false,
+            topology: Topology::flat(4),
             grad_dtype: DType::F32,
+            intra_dtype: DType::F32,
             loss_scale: LossScale::Off,
             global_batch: 32,
             steps: 60,
@@ -74,7 +77,9 @@ fn main() -> Result<()> {
         threads: 0,
         shard_optimizer: false, // adamw_bgn is element-wise; nothing to shard
         resume_opt_state: false,
+        topology: Topology::flat(2),
         grad_dtype: DType::F32,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
         global_batch: 8,
         steps: 40,

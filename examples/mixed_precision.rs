@@ -16,6 +16,7 @@ use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
+use lans::topology::Topology;
 
 fn main() -> Result<()> {
     let meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
@@ -39,9 +40,11 @@ fn main() -> Result<()> {
         threads: 0,
         shard_optimizer: false,
         resume_opt_state: false,
+        topology: Topology::flat(2),
         // fp16 wire + dynamic loss scaling, deliberately started far too
         // high so the first steps overflow and demonstrate the skip path
         grad_dtype: DType::F16,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Dynamic { init: 16_777_216.0 }, // 2^24
         global_batch: 16,
         steps,

@@ -1,0 +1,134 @@
+//! Multi-node training on a declared two-tier topology: 8 workers laid out
+//! as 2 nodes × 4 gpus, ZeRO-1 sharded optimizer, fp32 intra-node wire and
+//! bf16 on the scarce inter-node hops — the paper's 192×8 communication
+//! recipe at laptop scale.
+//!
+//! Demonstrates and asserts the subsystem's two contracts:
+//!
+//! 1. **Exact bits.**  A short fp32 run on the 2x4 topology finishes with
+//!    *bit-identical* parameters to the same run on the flat topology —
+//!    the tiered ring keeps the flat ring's per-element reduction order
+//!    (DESIGN.md §8), so declaring a topology never changes training.
+//! 2. **Accounted bytes.**  The bf16-inter run's executed wire bytes,
+//!    split intra/inter, equal the analytic `collective::cost` terms ×
+//!    steps, and the inter-node share is 1/gpus_per_node of what the
+//!    node-oblivious flat ring would pay.
+//!
+//!     make artifacts && cargo run --release --example multi_node
+
+use anyhow::Result;
+use lans::collective::hierarchical_phase_wire_bytes;
+use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::coordinator::{TrainStatus, Trainer};
+use lans::optim::{Hyper, Schedule};
+use lans::precision::{DType, LossScale};
+use lans::runtime::Engine;
+use lans::topology::{TierPrecision, Topology};
+
+const WORKERS: usize = 8;
+
+fn base_cfg(meta: std::path::PathBuf, topology: Topology, inter: DType, steps: u64) -> TrainConfig {
+    TrainConfig {
+        meta_path: meta,
+        optimizer: "lans".into(),
+        backend: OptBackend::Native,
+        workers: WORKERS,
+        threads: 0,
+        // ZeRO-1: the tiered reduce-scatter feeds step_scattered directly
+        shard_optimizer: true,
+        resume_opt_state: false,
+        topology,
+        grad_dtype: inter,
+        intra_dtype: DType::F32,
+        loss_scale: LossScale::Off,
+        global_batch: 32,
+        steps,
+        seed: 42,
+        eval_every: 0,
+        eval_batches: 4,
+        hyper: Hyper::default(),
+        schedule: Schedule::WarmupConstDecay {
+            eta: 0.02,
+            t_warmup: steps / 5,
+            t_const: steps * 2 / 5,
+            t_total: steps,
+        },
+        data: DataConfig {
+            source: "text".into(),
+            vocab: 2048,
+            corpus_tokens: 64 * 500,
+            seed: 7,
+        },
+        checkpoint: None,
+        resume_from: None,
+        curve_out: None,
+        stop_on_divergence: true,
+    }
+}
+
+fn main() -> Result<()> {
+    let meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
+    if !meta.exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let engine = Engine::cpu()?;
+    let topo = Topology::grid(2, 4);
+    let flat = Topology::flat(WORKERS);
+
+    // ---- contract 1: declaring a topology never changes the bits ---------
+    println!("=== fp32: flat({WORKERS}) vs {topo} must walk identical trajectories ===");
+    let mut t_flat =
+        Trainer::with_engine(base_cfg(meta.clone(), flat, DType::F32, 12), engine.clone())?;
+    let mut t_grid =
+        Trainer::with_engine(base_cfg(meta.clone(), topo, DType::F32, 12), engine.clone())?;
+    let r_flat = t_flat.run()?;
+    let r_grid = t_grid.run()?;
+    assert_eq!(r_flat.status, TrainStatus::Completed);
+    assert_eq!(r_grid.status, TrainStatus::Completed);
+    for (a, b) in r_flat.params.iter().zip(&r_grid.params) {
+        assert_eq!(a.data, b.data, "fp32 topology changed the trajectory");
+    }
+    println!(
+        "bit-identical after 12 steps ✔ (flat inter wire {:.1} MB vs {topo} {:.1} MB)",
+        r_flat.wire.inter as f64 / 1e6,
+        r_grid.wire.inter as f64 / 1e6
+    );
+
+    // ---- contract 2: the bf16-inter run, end to end -----------------------
+    let steps = 40u64;
+    println!("\n=== {topo} | sharded LANS | fp32 intra / bf16 inter wire | {steps} steps ===");
+    let mut trainer =
+        Trainer::with_engine(base_cfg(meta, topo, DType::Bf16, steps), engine)?;
+    let n_params = trainer.meta().param_count;
+    let report = trainer.run()?;
+    assert_eq!(report.status, TrainStatus::Completed, "run diverged");
+
+    let first = report.recorder.records.first().unwrap().loss;
+    let last = report.recorder.ema_loss().unwrap();
+    println!("loss {first:.4} -> {last:.4} (ema) | eval {:.4}", report.final_eval_loss.unwrap());
+    assert!(last < first, "loss should improve on the bf16 inter wire");
+
+    // the sharded path executes one tiered reduce-scatter per step; its
+    // split byte count must equal the analytic model exactly
+    let prec = TierPrecision::half_inter(DType::Bf16);
+    let per_step = hierarchical_phase_wire_bytes(&topo, n_params, prec, false);
+    assert_eq!(report.wire.intra, per_step.intra * steps, "intra bytes vs model");
+    assert_eq!(report.wire.inter, per_step.inter * steps, "inter bytes vs model");
+
+    // and the scarce tier carries ~1/gpus_per_node of the flat ring's load
+    let flat_step = hierarchical_phase_wire_bytes(&flat, n_params, prec, false);
+    let shrink = flat_step.inter as f64 / per_step.inter as f64;
+    println!(
+        "wire per step: intra {:.2} MB (fp32 NVLink-tier) + inter {:.2} MB (bf16 NIC-tier); \
+         flat would put {:.2} MB on the NICs — {shrink:.2}x more",
+        per_step.intra as f64 / 1e6,
+        per_step.inter as f64 / 1e6,
+        flat_step.inter as f64 / 1e6,
+    );
+    assert!(
+        shrink >= topo.gpus_per_node as f64 * 0.999,
+        "inter-node bytes must shrink by ~gpus_per_node ({shrink:.3})"
+    );
+    println!("\nexecuted bytes == analytic cost model, inter tier cut {shrink:.2}x ✔");
+    Ok(())
+}

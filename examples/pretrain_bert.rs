@@ -21,6 +21,7 @@ use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::Hyper;
 use lans::precision::{DType, LossScale};
 use lans::runtime::Engine;
+use lans::topology::Topology;
 
 fn main() -> Result<()> {
     let p1_meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
@@ -56,7 +57,9 @@ fn main() -> Result<()> {
         // the replicated update it replaces
         shard_optimizer: true,
         resume_opt_state: false,
+        topology: Topology::flat(4),
         grad_dtype: DType::F32,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
         global_batch: 32,
         steps: phase1_steps,
@@ -106,7 +109,9 @@ fn main() -> Result<()> {
         // seq-128 moments do not transfer to the seq-512 geometry)
         shard_optimizer: true,
         resume_opt_state: false,
+        topology: Topology::flat(4),
         grad_dtype: DType::F32,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
         // paper: phase-2 batch ≈ phase-1/3 (96K -> 33K)
         global_batch: 12,

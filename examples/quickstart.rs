@@ -11,6 +11,7 @@ use lans::config::{DataConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
+use lans::topology::Topology;
 
 fn main() -> Result<()> {
     let meta = std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json");
@@ -26,7 +27,9 @@ fn main() -> Result<()> {
         threads: 0, // auto: block-parallel update + chunk-parallel allreduce
         shard_optimizer: false,
         resume_opt_state: false,
+        topology: Topology::flat(2),
         grad_dtype: DType::F32,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
         global_batch: 16,
         steps: 40,

@@ -1,0 +1,201 @@
+//! Hierarchical-collectives bench: the executed two-tier ring vs the
+//! node-oblivious flat ring over a `nodes × gpus_per_node` sweep — wire
+//! traffic split by tier, exact-bit parity with the flat path at fp32, and
+//! the α-β model pricing what the tiered schedule buys at paper scale.
+//!
+//! Acceptance (runs under `--quick` in CI):
+//!   * fp32/fp32 `hierarchical_allreduce` is exact-bit equal to the flat
+//!     `ring_allreduce` at every swept topology, serial and pooled;
+//!   * executed intra/inter wire bytes equal the analytic
+//!     `cost::tiered_ring_*_wire_bytes` terms;
+//!   * at ≥ 2 nodes the inter-node bytes shrink by ≥ gpus_per_node× vs the
+//!     flat ring (exactly gpus_per_node× at equal chunks);
+//!   * a bf16 inter tier halves the inter bytes again, bit-identical
+//!     serial vs pooled.
+//!
+//! Numbers land in `BENCH_hierarchical_collectives.json` via `Reporter`.
+
+use lans::cluster::BERT_LARGE;
+use lans::collective::cost::{
+    flat_gpu_ring_time_s, hierarchical_allreduce_shard_aware_time_s,
+    hierarchical_allreduce_time_s,
+};
+use lans::collective::{
+    hierarchical_allreduce, hierarchical_allreduce_pooled, hierarchical_allreduce_wire_bytes,
+    ring_allreduce,
+};
+use lans::precision::DType;
+use lans::topology::{TierLinks, TierPrecision, Topology};
+use lans::util::bench::{bench, quick_mode, Reporter, Table};
+use lans::util::pool::ThreadPool;
+use lans::util::rng::Rng;
+
+fn main() {
+    let quick = quick_mode();
+    let mut rep = Reporter::new("hierarchical_collectives");
+    let iters = if quick { 3 } else { 10 };
+    let pool = ThreadPool::new(ThreadPool::available());
+    let n: usize = if quick { 1 << 16 } else { 1 << 18 }; // divisible by every W below
+
+    println!(
+        "=== two-tier ring vs flat ring (N = {n} floats{}) ===\n",
+        if quick { ", --quick" } else { "" }
+    );
+    let grids: &[(usize, usize)] =
+        if quick { &[(2, 2), (2, 4)] } else { &[(1, 4), (2, 2), (2, 4), (4, 2), (4, 4), (4, 8)] };
+
+    let mut t = Table::new(&[
+        "topology",
+        "W",
+        "flat ms",
+        "hier ms",
+        "hier pooled ms",
+        "bf16-inter ms",
+        "flat inter MB",
+        "hier inter MB",
+        "shrink",
+    ]);
+    for &(nodes, gpus) in grids {
+        let w = nodes * gpus;
+        assert_eq!(n % w, 0, "sweep sizes keep chunks equal");
+        let topo = Topology::grid(nodes, gpus);
+        let flat_topo = Topology::flat(w);
+        let mut rng = Rng::new((nodes * 37 + gpus) as u64);
+        let template: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut bufs = template.clone();
+
+        let r_flat = bench(&format!("flat/{nodes}x{gpus}"), 1, iters, || {
+            bufs.clone_from(&template);
+            ring_allreduce(std::hint::black_box(&mut bufs));
+        });
+        let r_hier = bench(&format!("hier/{nodes}x{gpus}"), 1, iters, || {
+            bufs.clone_from(&template);
+            hierarchical_allreduce(
+                std::hint::black_box(&mut bufs),
+                &topo,
+                TierPrecision::fp32(),
+            );
+        });
+        let r_hier_p = bench(&format!("hier_pooled/{nodes}x{gpus}"), 1, iters, || {
+            bufs.clone_from(&template);
+            hierarchical_allreduce_pooled(
+                std::hint::black_box(&mut bufs),
+                &topo,
+                TierPrecision::fp32(),
+                &pool,
+            );
+        });
+        let r_bf16 = bench(&format!("hier_bf16/{nodes}x{gpus}"), 1, iters, || {
+            bufs.clone_from(&template);
+            hierarchical_allreduce_pooled(
+                std::hint::black_box(&mut bufs),
+                &topo,
+                TierPrecision::half_inter(DType::Bf16),
+                &pool,
+            );
+        });
+
+        // --- acceptance: exact-bit parity + byte accounting ---------------
+        let mut reference = template.clone();
+        ring_allreduce(&mut reference);
+        let mut serial = template.clone();
+        let mut pooled = template.clone();
+        let wb_serial = hierarchical_allreduce(&mut serial, &topo, TierPrecision::fp32());
+        let wb_pooled =
+            hierarchical_allreduce_pooled(&mut pooled, &topo, TierPrecision::fp32(), &pool);
+        assert_eq!(serial, reference, "{topo}: fp32 hier != flat ring bits");
+        assert_eq!(pooled, reference, "{topo}: fp32 pooled hier != flat ring bits");
+        let analytic = hierarchical_allreduce_wire_bytes(&topo, n, TierPrecision::fp32());
+        assert_eq!(wb_serial, analytic, "{topo}: executed != analytic bytes");
+        assert_eq!(wb_pooled, analytic, "{topo}: pooled executed != analytic bytes");
+
+        let mut flat_bufs = template.clone();
+        let wb_flat =
+            hierarchical_allreduce(&mut flat_bufs, &flat_topo, TierPrecision::fp32());
+        assert_eq!(flat_bufs, reference, "flat({w}) must be the flat ring");
+        if nodes >= 2 {
+            assert!(
+                wb_flat.inter >= gpus as u64 * analytic.inter,
+                "{topo}: inter bytes must shrink >= {gpus}x \
+                 (flat {} vs hier {})",
+                wb_flat.inter,
+                analytic.inter
+            );
+            // at equal chunks the shrink is exact
+            assert_eq!(wb_flat.inter, gpus as u64 * analytic.inter, "{topo}");
+        }
+
+        // bf16 inter tier: bit-identical serial vs pooled, half the inter
+        // bytes of the fp32 tiered ring, intra bytes unchanged
+        let prec_bf = TierPrecision::half_inter(DType::Bf16);
+        let mut bf_serial = template.clone();
+        let mut bf_pooled = template.clone();
+        let wb_bf_s = hierarchical_allreduce(&mut bf_serial, &topo, prec_bf);
+        let wb_bf_p = hierarchical_allreduce_pooled(&mut bf_pooled, &topo, prec_bf, &pool);
+        assert_eq!(bf_serial, bf_pooled, "{topo}: bf16 serial vs pooled bits");
+        assert_eq!(wb_bf_s, wb_bf_p);
+        assert_eq!(wb_bf_s, hierarchical_allreduce_wire_bytes(&topo, n, prec_bf));
+        if nodes >= 2 {
+            assert_eq!(wb_bf_s.inter * 2, analytic.inter, "{topo}: bf16 halves inter");
+        }
+        assert_eq!(wb_bf_s.intra, analytic.intra, "{topo}: intra tier stays fp32");
+
+        let shrink = if analytic.inter > 0 {
+            wb_flat.inter as f64 / analytic.inter as f64
+        } else {
+            f64::INFINITY
+        };
+        t.row(&[
+            topo.to_string(),
+            w.to_string(),
+            format!("{:.3}", r_flat.mean_ms()),
+            format!("{:.3}", r_hier.mean_ms()),
+            format!("{:.3}", r_hier_p.mean_ms()),
+            format!("{:.3}", r_bf16.mean_ms()),
+            format!("{:.1}", wb_flat.inter as f64 / 1e6),
+            format!("{:.1}", analytic.inter as f64 / 1e6),
+            format!("{shrink:.1}x"),
+        ]);
+        for r in [&r_flat, &r_hier, &r_hier_p, &r_bf16] {
+            rep.result(r);
+        }
+        if nodes >= 2 {
+            rep.metric(&format!("inter_shrink_{nodes}x{gpus}"), shrink);
+        }
+    }
+    t.print();
+    println!(
+        "\n(in-process the tiers only relabel which link a hop uses; the \
+         byte split is what a real NIC pockets — the α-β model below \
+         prices it at paper scale)"
+    );
+
+    // ---- α-β model: the paper's 192×8 testbed ----------------------------
+    println!("\n=== α-β model: BERT-Large allreduce on 192 x 8 V100 (EFA inter) ===\n");
+    let links = TierLinks::default();
+    let bytes = BERT_LARGE.param_bytes_f32();
+    let (nodes, gpus) = (192usize, 8usize);
+    let flat_s = flat_gpu_ring_time_s(nodes, gpus, bytes, links.inter);
+    let naive_s = hierarchical_allreduce_time_s(nodes, gpus, bytes, links.intra, links.inter);
+    let aware_s =
+        hierarchical_allreduce_shard_aware_time_s(nodes, gpus, bytes, links.intra, links.inter);
+    let mut t2 = Table::new(&["schedule", "modeled s", "vs flat"]);
+    for (label, s) in [
+        ("flat ring (NIC shared by 8 GPUs)", flat_s),
+        ("hierarchical, naive full-message inter", naive_s),
+        ("hierarchical, shard-aware inter", aware_s),
+    ] {
+        t2.row(&[label.to_string(), format!("{s:.3}"), format!("{:.1}x", flat_s / s)]);
+    }
+    t2.print();
+    assert!(naive_s < flat_s, "hierarchical must beat the shared-NIC flat ring");
+    assert!(aware_s < naive_s, "shard-aware must beat the naive inter ring");
+    rep.metric("model_flat_s", flat_s);
+    rep.metric("model_hier_naive_s", naive_s);
+    rep.metric("model_hier_shard_aware_s", aware_s);
+
+    rep.write().expect("writing BENCH_hierarchical_collectives.json");
+    println!("\ntwo-tier ring: flat bits, 1/gpus_per_node the inter-node bytes ✔");
+}

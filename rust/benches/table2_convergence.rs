@@ -22,6 +22,7 @@ use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{sqrt_scaled_lr, Hyper};
 use lans::precision::{DType, LossScale};
 use lans::runtime::Engine;
+use lans::topology::Topology;
 use lans::util::bench::Table;
 
 fn main() {
@@ -67,7 +68,9 @@ fn main() {
             threads: 0, // auto: block-parallel update path
             shard_optimizer: false,
             resume_opt_state: false,
+            topology: Topology::flat(4),
             grad_dtype: DType::F32,
+            intra_dtype: DType::F32,
             loss_scale: LossScale::Off,
             global_batch: batch,
             steps,

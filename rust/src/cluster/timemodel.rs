@@ -16,8 +16,8 @@
 //! explains the substitution and EXPERIMENTS.md compares model vs paper.
 
 use crate::collective::cost::{
-    hierarchical_all_gather_time_s, hierarchical_allreduce_time_s,
-    hierarchical_reduce_scatter_time_s, Collective, CommSpec,
+    hierarchical_all_gather_time_tiered_s, hierarchical_allreduce_time_tiered_s,
+    hierarchical_reduce_scatter_time_tiered_s, Collective, CommSpec,
 };
 
 use super::flops::BertDims;
@@ -112,11 +112,12 @@ impl ClusterSpec {
     }
 
     /// [`step_time_with`](Self::step_time_with) at an explicit wire width
-    /// (`bytes_per_elem`: 4.0 = fp32, 2.0 = fp16/bf16).  Halving the wire
-    /// bytes halves exactly the β (bandwidth) term of the collective; the
-    /// α (latency) term and the compute/update terms are unchanged — the
-    /// optimizer update stays a full-precision pass over the fp32 master
-    /// copy, as in the paper's mixed-precision recipe.
+    /// (`bytes_per_elem`: 4.0 = fp32, 2.0 = fp16/bf16), applied to both
+    /// tiers.  Halving the wire bytes halves exactly the β (bandwidth)
+    /// term of the collective; the α (latency) term and the
+    /// compute/update terms are unchanged — the optimizer update stays a
+    /// full-precision pass over the fp32 master copy, as in the paper's
+    /// mixed-precision recipe.
     pub fn step_time_with_wire(
         &self,
         dims: &BertDims,
@@ -126,16 +127,47 @@ impl ClusterSpec {
         collective: Collective,
         bytes_per_elem: f64,
     ) -> f64 {
+        self.step_time_with_tier_wire(
+            dims,
+            batch_seqs,
+            seq,
+            slots,
+            collective,
+            bytes_per_elem,
+            bytes_per_elem,
+        )
+    }
+
+    /// [`step_time_with_wire`](Self::step_time_with_wire) at *per-tier*
+    /// wire widths: `intra_bytes_per_elem` prices the intra-node (NVLink)
+    /// phases and `inter_bytes_per_elem` the inter-node (NIC) phases, so a
+    /// mixed fp32-intra / f16-inter topology (`intra_dtype = "f32"`,
+    /// `grad_dtype = "f16"`) halves only the scarce tier's β term.  Equal
+    /// widths reproduce the single-width price exactly (regression-pinned
+    /// in the tests below).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_time_with_tier_wire(
+        &self,
+        dims: &BertDims,
+        batch_seqs: usize,
+        seq: usize,
+        slots: usize,
+        collective: Collective,
+        intra_bytes_per_elem: f64,
+        inter_bytes_per_elem: f64,
+    ) -> f64 {
         let flops = dims.train_flops_per_seq(seq, slots) * batch_seqs as f64;
         let t_compute =
             flops / (self.devices() as f64 * self.peak_flops * self.efficiency);
-        let bytes = dims.param_bytes(bytes_per_elem);
+        let intra_bytes = dims.param_bytes(intra_bytes_per_elem);
+        let inter_bytes = dims.param_bytes(inter_bytes_per_elem);
         let (t_comm, sharded) = match collective {
             Collective::AllReduce => (
-                hierarchical_allreduce_time_s(
+                hierarchical_allreduce_time_tiered_s(
                     self.nodes,
                     self.devices_per_node,
-                    bytes,
+                    intra_bytes,
+                    inter_bytes,
                     self.intra,
                     self.inter,
                 ),
@@ -145,16 +177,18 @@ impl ClusterSpec {
             // updated parameter bytes (same total volume, but each
             // inter-node phase moves only the per-node shard)
             Collective::ReduceScatterGather => (
-                hierarchical_reduce_scatter_time_s(
+                hierarchical_reduce_scatter_time_tiered_s(
                     self.nodes,
                     self.devices_per_node,
-                    bytes,
+                    intra_bytes,
+                    inter_bytes,
                     self.intra,
                     self.inter,
-                ) + hierarchical_all_gather_time_s(
+                ) + hierarchical_all_gather_time_tiered_s(
                     self.nodes,
                     self.devices_per_node,
-                    bytes,
+                    intra_bytes,
+                    inter_bytes,
                     self.intra,
                     self.inter,
                 ),
@@ -313,6 +347,43 @@ mod tests {
         let via_wire =
             c.step_time_with_wire(&BERT_LARGE, b, s, sl, Collective::AllReduce, 4.0);
         assert_eq!(via_default, via_wire);
+    }
+
+    #[test]
+    fn tier_wire_endpoints_pin_to_single_width_prices() {
+        // the per-tier generalization must not move the uniform endpoints:
+        // (4,4) == the old fp32 price, (2,2) == the old fp16 price, and a
+        // mixed fp32-intra/f16-inter run lands strictly between
+        let c = ClusterSpec::p3dn(192);
+        let (b, s, sl) = (98304, 128, 20);
+        for coll in [Collective::AllReduce, Collective::ReduceScatterGather] {
+            let t32 = c.step_time_with_wire(&BERT_LARGE, b, s, sl, coll, 4.0);
+            let t16 = c.step_time_with_wire(&BERT_LARGE, b, s, sl, coll, 2.0);
+            assert_eq!(
+                t32,
+                c.step_time_with_tier_wire(&BERT_LARGE, b, s, sl, coll, 4.0, 4.0),
+                "{coll:?} fp32 endpoint moved"
+            );
+            assert_eq!(
+                t16,
+                c.step_time_with_tier_wire(&BERT_LARGE, b, s, sl, coll, 2.0, 2.0),
+                "{coll:?} fp16 endpoint moved"
+            );
+            let mixed = c.step_time_with_tier_wire(&BERT_LARGE, b, s, sl, coll, 4.0, 2.0);
+            assert!(t16 < mixed && mixed < t32, "{coll:?}: {t16} < {mixed} < {t32}");
+            // on the naive allreduce the inter β term dominates, so
+            // halving only the scarce tier keeps most of the uniform-fp16
+            // saving (the sharded collective moves only shards inter-node,
+            // so its saving concentrates intra — no such claim there)
+            if coll == Collective::AllReduce {
+                let saved_mixed = t32 - mixed;
+                let saved_all = t32 - t16;
+                assert!(
+                    saved_mixed > 0.5 * saved_all,
+                    "inter-only saving {saved_mixed} vs full {saved_all}"
+                );
+            }
+        }
     }
 
     #[test]

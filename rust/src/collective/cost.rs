@@ -12,6 +12,11 @@
 //!     T = T_ring(gpus_per_node, NVLink) + T_ring(nodes, NIC) +
 //!         T_bcast(gpus_per_node, NVLink)
 
+use crate::precision::DType;
+use crate::topology::Topology;
+
+use super::reduce_scatter::ring_chunk_starts;
+
 /// One communication level: link latency (s) and per-endpoint bandwidth (B/s).
 #[derive(Debug, Clone, Copy)]
 pub struct CommSpec {
@@ -86,9 +91,10 @@ pub fn all_gather_time_s(w: usize, bytes: f64, link: CommSpec) -> f64 {
 /// schedule — the form it was calibrated against).  These shard-aware
 /// halves move only the per-node shard inter-node, so part of the gap
 /// between `ReduceScatterGather` and `AllReduce` in the time model
-/// reflects that baseline pessimism: a shard-aware NCCL hierarchical
-/// allreduce lands between the two.  The robust, schedule-independent win
-/// of the sharded optimizer is the update term
+/// reflects that baseline pessimism:
+/// [`hierarchical_allreduce_shard_aware_time_s`] is the shard-aware
+/// allreduce that lands between the two.  The robust,
+/// schedule-independent win of the sharded optimizer is the update term
 /// (`ClusterSpec::optimizer_update_time_s`), not the wire time.
 pub fn hierarchical_reduce_scatter_time_s(
     nodes: usize,
@@ -97,8 +103,24 @@ pub fn hierarchical_reduce_scatter_time_s(
     intra: CommSpec,
     inter: CommSpec,
 ) -> f64 {
-    reduce_scatter_time_s(gpus_per_node, bytes, intra)
-        + reduce_scatter_time_s(nodes, bytes / gpus_per_node as f64, inter)
+    hierarchical_reduce_scatter_time_tiered_s(nodes, gpus_per_node, bytes, bytes, intra, inter)
+}
+
+/// [`hierarchical_reduce_scatter_time_s`] at per-tier wire widths:
+/// `intra_bytes` crosses the intra-node phase, `inter_bytes` sizes the
+/// inter-node shard phase (mixed fp32-intra / f16-inter topologies halve
+/// only the inter term).  Equal widths reproduce the single-width formula
+/// exactly.
+pub fn hierarchical_reduce_scatter_time_tiered_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    intra_bytes: f64,
+    inter_bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
+    reduce_scatter_time_s(gpus_per_node, intra_bytes, intra)
+        + reduce_scatter_time_s(nodes, inter_bytes / gpus_per_node as f64, inter)
 }
 
 /// Two-level all-gather: the mirror of
@@ -111,8 +133,21 @@ pub fn hierarchical_all_gather_time_s(
     intra: CommSpec,
     inter: CommSpec,
 ) -> f64 {
-    all_gather_time_s(nodes, bytes / gpus_per_node as f64, inter)
-        + all_gather_time_s(gpus_per_node, bytes, intra)
+    hierarchical_all_gather_time_tiered_s(nodes, gpus_per_node, bytes, bytes, intra, inter)
+}
+
+/// [`hierarchical_all_gather_time_s`] at per-tier wire widths; see
+/// [`hierarchical_reduce_scatter_time_tiered_s`].
+pub fn hierarchical_all_gather_time_tiered_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    intra_bytes: f64,
+    inter_bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
+    all_gather_time_s(nodes, inter_bytes / gpus_per_node as f64, inter)
+        + all_gather_time_s(gpus_per_node, intra_bytes, intra)
 }
 
 /// Broadcast (ring pipeline) time for `bytes` across `w` endpoints.
@@ -131,12 +166,44 @@ pub fn hierarchical_allreduce_time_s(
     intra: CommSpec,
     inter: CommSpec,
 ) -> f64 {
+    hierarchical_allreduce_time_tiered_s(nodes, gpus_per_node, bytes, bytes, intra, inter)
+}
+
+/// [`hierarchical_allreduce_time_s`] at per-tier wire widths (the naive
+/// full-message inter ring, priced at `inter_bytes`).
+pub fn hierarchical_allreduce_time_tiered_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    intra_bytes: f64,
+    inter_bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
     // intra-node reduce-scatter+gather ≈ one intra allreduce
-    let t_intra = allreduce_time_s(gpus_per_node, bytes, intra);
+    let t_intra = allreduce_time_s(gpus_per_node, intra_bytes, intra);
     // one endpoint per node participates in the inter-node ring
-    let t_inter = allreduce_time_s(nodes, bytes, inter);
-    let t_bcast = broadcast_time_s(gpus_per_node, bytes, intra);
+    let t_inter = allreduce_time_s(nodes, inter_bytes, inter);
+    let t_bcast = broadcast_time_s(gpus_per_node, intra_bytes, intra);
     t_intra + t_inter + t_bcast
+}
+
+/// Shard-aware two-level allreduce — the variant the baseline caveat on
+/// [`hierarchical_reduce_scatter_time_s`] promises: the inter-node ring
+/// runs over node leaders on the `1/gpus_per_node` reduced shard (the β
+/// term divides by `gpus_per_node`) instead of the naive full message,
+/// then the intra-node gather distributes the result.  Lands between
+/// [`hierarchical_allreduce_time_s`] and the reduce-scatter/all-gather
+/// composition, as the caveat describes.
+pub fn hierarchical_allreduce_shard_aware_time_s(
+    nodes: usize,
+    gpus_per_node: usize,
+    bytes: f64,
+    intra: CommSpec,
+    inter: CommSpec,
+) -> f64 {
+    reduce_scatter_time_s(gpus_per_node, bytes, intra)
+        + allreduce_time_s(nodes, bytes / gpus_per_node as f64, inter)
+        + all_gather_time_s(gpus_per_node, bytes, intra)
 }
 
 /// Naive single ring over every GPU: all `gpus_per_node` ranks of a node
@@ -154,6 +221,62 @@ pub fn flat_gpu_ring_time_s(
         beta_bytes_per_s: inter.beta_bytes_per_s / gpus_per_node as f64,
     };
     allreduce_time_s(nodes * gpus_per_node, bytes, shared)
+}
+
+/// Analytic wire bytes, split `(intra, inter)` and summed over all
+/// endpoints, for one phase of the executed two-tier ring
+/// (`collective::hierarchical`) over `elems` f32 elements.
+///
+/// Under the node-contiguous rank layout, chunk `c`'s `W−1`-hop path ends
+/// at every rank except one — the chunk index itself in the reduce-scatter
+/// phase, its owner `(c+W−1) % W` in the all-gather phase (`gather`
+/// selects which).  A hop ending at rank `t` crosses a node boundary iff
+/// `t % gpus_per_node == 0` (and there is more than one node), so each
+/// chunk pays `nodes` inter-node crossings minus at most the one its path
+/// skips.  For equal chunks the inter total per phase collapses to
+/// `(W−1)·N·b / gpus_per_node` — exactly `1/gpus_per_node` of the
+/// node-oblivious flat ring's `(W−1)·N·b`, the shrink the
+/// `hierarchical_collectives` bench asserts.
+pub fn tiered_ring_phase_wire_bytes(
+    nodes: usize,
+    gpus_per_node: usize,
+    elems: usize,
+    intra: DType,
+    inter: DType,
+    gather: bool,
+) -> (u64, u64) {
+    let w = nodes * gpus_per_node;
+    if w <= 1 {
+        return (0, 0);
+    }
+    // one home for the node-boundary count: the same Topology helper the
+    // executed collectives use, so counters and execution cannot drift
+    let topo = Topology::grid(nodes, gpus_per_node);
+    let starts = ring_chunk_starts(w, elems);
+    let (mut intra_b, mut inter_b) = (0u64, 0u64);
+    for c in 0..w {
+        let len = (starts[c + 1] - starts[c]) as u64;
+        let excl = if gather { (c + w - 1) % w } else { c };
+        let inter_hops = topo.inter_hops_excluding(excl);
+        let intra_hops = w - 1 - inter_hops;
+        intra_b += len * intra_hops as u64 * intra.bytes() as u64;
+        inter_b += len * inter_hops as u64 * inter.bytes() as u64;
+    }
+    (intra_b, inter_b)
+}
+
+/// Both phases of the tiered-ring allreduce:
+/// reduce-scatter + all-gather [`tiered_ring_phase_wire_bytes`] terms.
+pub fn tiered_ring_allreduce_wire_bytes(
+    nodes: usize,
+    gpus_per_node: usize,
+    elems: usize,
+    intra: DType,
+    inter: DType,
+) -> (u64, u64) {
+    let rs = tiered_ring_phase_wire_bytes(nodes, gpus_per_node, elems, intra, inter, false);
+    let ag = tiered_ring_phase_wire_bytes(nodes, gpus_per_node, elems, intra, inter, true);
+    (rs.0 + ag.0, rs.1 + ag.1)
 }
 
 #[cfg(test)]
@@ -210,6 +333,121 @@ mod tests {
     fn single_endpoint_halves_are_free() {
         assert_eq!(reduce_scatter_time_s(1, 1e9, CommSpec::efa()), 0.0);
         assert_eq!(all_gather_time_s(1, 1e9, CommSpec::efa()), 0.0);
+    }
+
+    #[test]
+    fn shard_aware_allreduce_lands_between_naive_and_halves() {
+        // the variant the baseline caveat promises: cheaper than the naive
+        // full-message inter ring, dearer than the reduce-scatter +
+        // all-gather composition whose inter phases move only shards
+        let bytes = 1.36e9;
+        let (intra, inter) = (CommSpec::nvlink(), CommSpec::efa());
+        for (nodes, gpus) in [(192usize, 8usize), (24, 8), (4, 4)] {
+            let naive = hierarchical_allreduce_time_s(nodes, gpus, bytes, intra, inter);
+            let aware =
+                hierarchical_allreduce_shard_aware_time_s(nodes, gpus, bytes, intra, inter);
+            let halves = hierarchical_reduce_scatter_time_s(nodes, gpus, bytes, intra, inter)
+                + hierarchical_all_gather_time_s(nodes, gpus, bytes, intra, inter);
+            assert!(aware < naive, "{nodes}x{gpus}: {aware} !< {naive}");
+            assert!(halves < aware, "{nodes}x{gpus}: {halves} !< {aware}");
+        }
+    }
+
+    #[test]
+    fn tiered_time_equals_single_width_at_equal_bytes() {
+        // regression pin for the per-tier generalization: equal widths
+        // reproduce the historical single-width formulas exactly
+        let (intra, inter) = (CommSpec::nvlink(), CommSpec::efa());
+        for bytes in [1.36e9, 6.8e8, 0.0] {
+            for (nodes, gpus) in [(192usize, 8usize), (2, 4)] {
+                assert_eq!(
+                    hierarchical_allreduce_time_s(nodes, gpus, bytes, intra, inter),
+                    hierarchical_allreduce_time_tiered_s(
+                        nodes, gpus, bytes, bytes, intra, inter
+                    )
+                );
+                assert_eq!(
+                    hierarchical_reduce_scatter_time_s(nodes, gpus, bytes, intra, inter),
+                    hierarchical_reduce_scatter_time_tiered_s(
+                        nodes, gpus, bytes, bytes, intra, inter
+                    )
+                );
+                assert_eq!(
+                    hierarchical_all_gather_time_s(nodes, gpus, bytes, intra, inter),
+                    hierarchical_all_gather_time_tiered_s(
+                        nodes, gpus, bytes, bytes, intra, inter
+                    )
+                );
+            }
+        }
+        // a mixed fp32-intra / fp16-inter wire sits strictly between the
+        // all-fp16 and all-fp32 prices
+        let (b32, b16) = (1.36e9, 0.68e9);
+        let hi = hierarchical_allreduce_time_tiered_s(192, 8, b32, b32, intra, inter);
+        let lo = hierarchical_allreduce_time_tiered_s(192, 8, b16, b16, intra, inter);
+        let mixed = hierarchical_allreduce_time_tiered_s(192, 8, b32, b16, intra, inter);
+        assert!(lo < mixed && mixed < hi, "{lo} < {mixed} < {hi}");
+    }
+
+    #[test]
+    fn tiered_ring_bytes_shrink_inter_by_gpus_per_node() {
+        // exact identity at equal chunks: the tiered ring's inter bytes are
+        // 1/gpus_per_node of the node-oblivious flat ring's, per phase
+        for (nodes, gpus, n) in [(2usize, 2usize, 4096usize), (2, 4, 65536), (4, 8, 1 << 15)] {
+            let w = nodes * gpus;
+            assert_eq!(n % w, 0, "test wants equal chunks");
+            for gather in [false, true] {
+                let (intra, inter) = tiered_ring_phase_wire_bytes(
+                    nodes, gpus, n, DType::F32, DType::F32, gather,
+                );
+                let flat = tiered_ring_phase_wire_bytes(w, 1, n, DType::F32, DType::F32, gather);
+                assert_eq!(flat.0, 0, "flat has no intra tier");
+                assert_eq!(flat.1, (w as u64 - 1) * n as u64 * 4);
+                assert_eq!(inter * gpus as u64, flat.1, "{nodes}x{gpus} gather={gather}");
+                // total volume is conserved — only which tier carries it moves
+                assert_eq!(intra + inter, flat.1);
+            }
+        }
+        // degenerate cases are free / single-tier
+        assert_eq!(tiered_ring_phase_wire_bytes(1, 1, 999, DType::F32, DType::F32, false), (0, 0));
+        let one_node = tiered_ring_phase_wire_bytes(1, 6, 600, DType::F32, DType::F32, false);
+        assert_eq!(one_node.1, 0, "single node never crosses a NIC");
+        assert_eq!(one_node.0, 5 * 600 * 4);
+    }
+
+    #[test]
+    fn shard_aware_pricing_cross_checks_executed_byte_counts() {
+        // the shard-aware inter β term prices (nodes−1)/nodes · N/G bytes
+        // per NIC (node leaders ring the reduced shard); the executed
+        // tiered ring keeps one W-rank ring, so each NIC carries the full
+        // (W−1)/W · N — exactly (W−1)/(nodes−1) ≈ G more.  The leader
+        // schedule is therefore a strict lower bound on the executed
+        // count, and the gap factor is pinned here so the pricing and the
+        // byte counters cannot drift apart silently.
+        let n = 393_216; // 3 · 2^17 elems — divisible by every W below (8, 64, 1536)
+        for (nodes, gpus) in [(2usize, 4usize), (8, 8), (192, 8)] {
+            let w = nodes * gpus;
+            let (_, inter_total) =
+                tiered_ring_phase_wire_bytes(nodes, gpus, n, DType::F32, DType::F32, false);
+            let executed_per_nic = inter_total as f64 / nodes as f64;
+            let model_per_nic =
+                (nodes as f64 - 1.0) / nodes as f64 * (n as f64 * 4.0) / gpus as f64;
+            assert!(
+                model_per_nic <= executed_per_nic,
+                "{nodes}x{gpus}: model {model_per_nic} > executed {executed_per_nic}"
+            );
+            let ratio = executed_per_nic / model_per_nic;
+            let expect = (w as f64 - 1.0) / (nodes as f64 - 1.0);
+            assert!((ratio - expect).abs() < 1e-9, "{nodes}x{gpus}: {ratio} vs {expect}");
+            // the gap never exceeds the G-fold fan-in the leader skips
+            // (W−1)/(nodes−1) ≤ G·(nodes)/(nodes−1), and → G at scale
+            if nodes >= 192 {
+                assert!(
+                    (ratio - gpus as f64).abs() / gpus as f64 < 0.01,
+                    "at paper scale the gap is the fan-in factor: {ratio} vs {gpus}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Executed two-level (topology-aware) ring collectives: the schedule the
+//! paper's 192-node deployment actually runs — one ring laid out
+//! node-contiguously so that of the `W` links in the cycle only `nodes`
+//! cross a NIC, with a per-tier wire format (fp32 over NVLink, f16/bf16 on
+//! the scarce inter-node hops).
+//!
+//! **Why a tiered ring and not a leader-based two-phase reduction.**  The
+//! repo's bit-identity contract (DESIGN.md §8) pins the *per-element f32
+//! reduction order*: the sharded optimizer stitches reduce-scattered
+//! chunks assuming exactly [`ring_allreduce`]'s summation order, and the
+//! replicated / parallel / sharded trajectories are exact-bit equal only
+//! because every path folds in that order.  A leader-based hierarchical
+//! reduction (pre-sum each node, ring the node sums) regroups the f32
+//! adds — `(a+b)+(c+d)` instead of `((a+b)+c)+d` — and can never be
+//! bitwise-equal to the flat ring.  The tiered ring keeps the flat
+//! schedule's arithmetic *unchanged* (fp32 tiers are exact-bit equal to
+//! [`ring_allreduce`] for every topology, by construction) and moves the
+//! hierarchy into the *hops*: intra-node hops stay inside a node, and each
+//! chunk crosses each NIC once per cycle instead of every hop — the
+//! inter-node byte total shrinks by exactly `gpus_per_node` versus the
+//! node-oblivious flat ring (`cost::tiered_ring_phase_wire_bytes`).  The
+//! leader-based schedule survives in the cost model
+//! (`cost::hierarchical_allreduce_shard_aware_time_s`) as the pricing
+//! lower bound.
+//!
+//! Wire-precision semantics extend `collective::half` per tier:
+//!
+//! * **reduce-scatter** — a hop whose tier has a half wire format packs
+//!   its outgoing chunk into a [`HalfVec`] and the receiver accumulates in
+//!   f32; fp32-tier hops add exactly.  Deterministic, so serial == pooled
+//!   bit-for-bit, and the postcondition matches [`ring_reduce_scatter`]:
+//!   chunk `c`'s sum sits at `chunk_owner(c, w)` — the sharded optimizer's
+//!   `step_scattered` consumes the buffers unchanged.
+//! * **all-gather** — each owner *adopts* the image of its chunk under
+//!   every half format its gather path will cross (inter first, then
+//!   intra), then the pure-copy ring circulates it; `q∘dq∘q = q` makes
+//!   every later crossing the identity, so all replicas end bit-identical.
+//!   [`TierPrecision::validate`] restricts tier combinations to ones where
+//!   that fixed point exists (at most one distinct half format).
+//!
+//! Every entry point returns its executed wire bytes split by tier
+//! ([`WireBytes`]), counted hop by hop where a wire loop runs; unit tests
+//! and the `hierarchical_collectives` bench assert they equal the analytic
+//! `cost.rs` terms.
+
+use crate::precision::{DType, HalfVec};
+use crate::topology::{TierPrecision, Topology, WireBytes};
+use crate::util::pool::ThreadPool;
+
+use super::cost::tiered_ring_phase_wire_bytes;
+use super::reduce_scatter::{
+    check_bufs, chunk_owner, ring_all_gather, ring_all_gather_at, ring_all_gather_pooled,
+    ring_chunk_starts, ring_reduce_scatter, ring_reduce_scatter_pooled, ring_step_tasks,
+    split_two, POOLED_MIN_ELEMS,
+};
+#[cfg(doc)]
+use super::ring::ring_allreduce;
+
+/// Analytic wire bytes of one tiered-ring phase, as a [`WireBytes`] split
+/// (`gather` selects the all-gather path variant — see
+/// [`tiered_ring_phase_wire_bytes`]).
+pub fn hierarchical_phase_wire_bytes(
+    topo: &Topology,
+    elems: usize,
+    prec: TierPrecision,
+    gather: bool,
+) -> WireBytes {
+    let (intra, inter) = tiered_ring_phase_wire_bytes(
+        topo.nodes,
+        topo.gpus_per_node,
+        elems,
+        prec.intra,
+        prec.inter,
+        gather,
+    );
+    WireBytes { intra, inter }
+}
+
+/// Analytic wire bytes of the full tiered allreduce (both phases).
+pub fn hierarchical_allreduce_wire_bytes(
+    topo: &Topology,
+    elems: usize,
+    prec: TierPrecision,
+) -> WireBytes {
+    hierarchical_phase_wire_bytes(topo, elems, prec, false)
+        + hierarchical_phase_wire_bytes(topo, elems, prec, true)
+}
+
+fn check_topology(topo: &Topology, prec: TierPrecision, w: usize) {
+    assert_eq!(topo.world(), w, "topology {topo} does not describe {w} buffers");
+    if let Err(e) = prec.validate() {
+        panic!("unsupported tier precision: {e}");
+    }
+}
+
+/// Tiered-ring reduce-scatter.  Postcondition matches
+/// [`ring_reduce_scatter`] (chunk `c`'s f32 sum at its `chunk_owner`);
+/// with both tiers fp32 it *is* that function, bit for bit.  Returns the
+/// executed wire bytes split by tier.
+pub fn hierarchical_reduce_scatter(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    let (w, n) = check_bufs(bufs);
+    check_topology(topo, prec, w);
+    if !prec.any_half() {
+        // the exact flat schedule — the tiers only relabel whose link
+        // each hop uses, which the analytic counter accounts
+        ring_reduce_scatter(bufs);
+        return hierarchical_phase_wire_bytes(topo, n, prec, false);
+    }
+    let mut wire = WireBytes::default();
+    if w == 1 || n == 0 {
+        return wire;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let src = (c + s) % w;
+            let dst = (c + s + 1) % w;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            if lo == hi {
+                continue;
+            }
+            let tier = topo.ring_hop_tier(dst);
+            let dtype = prec.tier(tier);
+            wire.add(tier, ((hi - lo) * dtype.bytes()) as u64);
+            let (a, b) = split_two(bufs, src, dst);
+            if dtype.is_half() {
+                // wire boundary: pack at the hop's tier format, widen and
+                // accumulate in f32 at the receiver
+                let packed = HalfVec::from_f32(dtype, &a[lo..hi]);
+                for (d, q) in b[lo..hi].iter_mut().zip(packed.iter_f32()) {
+                    *d += q;
+                }
+            } else {
+                for i in lo..hi {
+                    b[i] += a[i];
+                }
+            }
+        }
+    }
+    wire
+}
+
+/// One pooled unit of a tiered ring step: the chunk task plus the wire
+/// format of the hop it executes.
+struct TieredTask<'a> {
+    task: super::reduce_scatter::ChunkTask<'a>,
+    dtype: DType,
+}
+
+/// Chunk-parallel [`hierarchical_reduce_scatter`]; bit-identical to the
+/// serial path (falls back to it for width-1 pools / small buffers).
+pub fn hierarchical_reduce_scatter_pooled(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    pool: &ThreadPool,
+) -> WireBytes {
+    let (w, n) = check_bufs(bufs);
+    check_topology(topo, prec, w);
+    if !prec.any_half() {
+        ring_reduce_scatter_pooled(bufs, pool);
+        return hierarchical_phase_wire_bytes(topo, n, prec, false);
+    }
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        return hierarchical_reduce_scatter(bufs, topo, prec);
+    }
+    let starts = ring_chunk_starts(w, n);
+    let mut wire = WireBytes::default();
+    for s in 0..w - 1 {
+        // per chunk c this step hops (c+s) → (c+s+1): resolve each hop's
+        // tier before the region so the workers only quantize/accumulate
+        let dtypes: Vec<DType> = (0..w)
+            .map(|c| {
+                let dst = (c + s + 1) % w;
+                let tier = topo.ring_hop_tier(dst);
+                wire.add(tier, ((starts[c + 1] - starts[c]) * prec.tier(tier).bytes()) as u64);
+                prec.tier(tier)
+            })
+            .collect();
+        let mut tasks: Vec<TieredTask<'_>> = ring_step_tasks(bufs, &starts, s, true)
+            .into_iter()
+            .zip(dtypes)
+            .map(|(task, dtype)| TieredTask { task, dtype })
+            .collect();
+        pool.map_mut(&mut tasks, |t| {
+            if t.dtype.is_half() {
+                let packed = HalfVec::from_f32(t.dtype, t.task.src);
+                for (d, q) in t.task.dst.iter_mut().zip(packed.iter_f32()) {
+                    *d += q;
+                }
+            } else {
+                for (d, x) in t.task.dst.iter_mut().zip(t.task.src.iter()) {
+                    *d += *x;
+                }
+            }
+        });
+    }
+    wire
+}
+
+/// The half formats chunk `c`'s gather path crosses, in adoption order
+/// (inter first — with the supported tier combinations at most one
+/// distinct format survives).  The path hops into every rank except the
+/// chunk's owner, so it misses at most one inter link.
+fn owner_roundings(
+    topo: &Topology,
+    prec: TierPrecision,
+    c: usize,
+) -> (Option<DType>, Option<DType>) {
+    let w = topo.world();
+    let owner = chunk_owner(c, w);
+    let inter_hops = topo.inter_hops_excluding(owner);
+    let intra_hops = (w - 1) - inter_hops;
+    let first = (prec.inter.is_half() && inter_hops > 0).then_some(prec.inter);
+    let second = (prec.intra.is_half() && intra_hops > 0 && first != Some(prec.intra))
+        .then_some(prec.intra);
+    (first, second)
+}
+
+/// Quantize a segment through `dtype` and adopt the dequantized image —
+/// the owner-side half of the gather's wire boundary.
+fn round_segment(seg: &mut [f32], dtype: DType) {
+    if seg.is_empty() || !dtype.is_half() {
+        return;
+    }
+    let packed = HalfVec::from_f32(dtype, seg);
+    packed.to_f32_into(seg);
+}
+
+/// Tiered-ring all-gather: assumes the [`hierarchical_reduce_scatter`]
+/// postcondition, circulates every owner chunk until all buffers agree.
+/// Replicas end bit-identical for every supported tier precision; with
+/// both tiers fp32 it is [`ring_all_gather`] exactly.  Returns the
+/// executed wire bytes split by tier.
+pub fn hierarchical_all_gather(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    let (w, n) = check_bufs(bufs);
+    check_topology(topo, prec, w);
+    let bytes = hierarchical_phase_wire_bytes(topo, n, prec, true);
+    if !prec.any_half() {
+        ring_all_gather(bufs);
+        return bytes;
+    }
+    if w == 1 || n == 0 {
+        return bytes;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for c in 0..w {
+        let (first, second) = owner_roundings(topo, prec, c);
+        let o = chunk_owner(c, w);
+        let seg = &mut bufs[o][starts[c]..starts[c + 1]];
+        if let Some(d) = first {
+            round_segment(seg, d);
+        }
+        if let Some(d) = second {
+            round_segment(seg, d);
+        }
+    }
+    // the circulation itself is pure copies of the adopted values — every
+    // later wire crossing re-quantizes a fixed point (q∘dq∘q = q)
+    ring_all_gather_at(bufs, &starts);
+    bytes
+}
+
+struct OwnedChunk<'a> {
+    seg: &'a mut [f32],
+    first: Option<DType>,
+    second: Option<DType>,
+}
+
+/// Pooled [`hierarchical_all_gather`]; bit-identical to the serial path.
+pub fn hierarchical_all_gather_pooled(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    pool: &ThreadPool,
+) -> WireBytes {
+    let (w, n) = check_bufs(bufs);
+    check_topology(topo, prec, w);
+    if !prec.any_half() {
+        ring_all_gather_pooled(bufs, pool);
+        return hierarchical_phase_wire_bytes(topo, n, prec, true);
+    }
+    if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
+        return hierarchical_all_gather(bufs, topo, prec);
+    }
+    let starts = ring_chunk_starts(w, n);
+    // one region rounds every owner's chunk (disjoint: one owned chunk per
+    // buffer), then the pooled pure-copy gather circulates the values
+    let mut tasks: Vec<OwnedChunk<'_>> = bufs
+        .iter_mut()
+        .enumerate()
+        .map(|(b, buf)| {
+            let c = (b + 1) % w; // chunk_owner(c, w) == b
+            debug_assert_eq!(chunk_owner(c, w), b);
+            let (first, second) = owner_roundings(topo, prec, c);
+            OwnedChunk { seg: &mut buf[starts[c]..starts[c + 1]], first, second }
+        })
+        .collect();
+    pool.map_mut(&mut tasks, |t| {
+        if let Some(d) = t.first {
+            round_segment(t.seg, d);
+        }
+        if let Some(d) = t.second {
+            round_segment(t.seg, d);
+        }
+    });
+    drop(tasks);
+    ring_all_gather_pooled(bufs, pool);
+    hierarchical_phase_wire_bytes(topo, n, prec, true)
+}
+
+/// Tiered-ring allreduce: [`hierarchical_reduce_scatter`] then
+/// [`hierarchical_all_gather`].  Exact-bit equal to
+/// [`ring_allreduce`] when both tiers are fp32 (any topology); all
+/// replicas bit-identical for every supported tier precision.
+pub fn hierarchical_allreduce(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    hierarchical_reduce_scatter(bufs, topo, prec) + hierarchical_all_gather(bufs, topo, prec)
+}
+
+/// Pooled [`hierarchical_allreduce`]; bit-identical to the serial path.
+pub fn hierarchical_allreduce_pooled(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    pool: &ThreadPool,
+) -> WireBytes {
+    hierarchical_reduce_scatter_pooled(bufs, topo, prec, pool)
+        + hierarchical_all_gather_pooled(bufs, topo, prec, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::half::{ring_allreduce_half, ring_allreduce_wire_bytes};
+    use crate::collective::ring::ring_allreduce;
+    use crate::util::rng::Rng;
+
+    fn random_bufs(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..w).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    /// Every (nodes, gpus) factorization of w.
+    fn factorizations(w: usize) -> Vec<Topology> {
+        (1..=w)
+            .filter(|d| w % d == 0)
+            .map(|d| Topology::grid(d, w / d))
+            .collect()
+    }
+
+    #[test]
+    fn fp32_tiers_exact_bit_equal_flat_ring_every_topology() {
+        for w in [1usize, 2, 4, 6, 8] {
+            for n in [0usize, 3, 257, 5000] {
+                let template = random_bufs(w, n, (w * 31 + n) as u64);
+                let mut reference = template.clone();
+                ring_allreduce(&mut reference);
+                for topo in factorizations(w) {
+                    let mut hier = template.clone();
+                    let wire = hierarchical_allreduce(&mut hier, &topo, TierPrecision::fp32());
+                    assert_eq!(hier, reference, "{topo} w={w} n={n}");
+                    assert_eq!(
+                        wire,
+                        hierarchical_allreduce_wire_bytes(&topo, n, TierPrecision::fp32()),
+                        "{topo} n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_topology_half_wire_is_the_flat_half_path() {
+        // G = 1: every hop inter — identical schedule and bits to the
+        // historical ring_allreduce_half at the inter dtype
+        for wire in [DType::F16, DType::Bf16] {
+            for (w, n) in [(2usize, 100usize), (4, 4099), (5, 3)] {
+                let template = random_bufs(w, n, (w * 7 + n) as u64);
+                let mut legacy = template.clone();
+                let mut tiered = template;
+                let lb = ring_allreduce_half(&mut legacy, wire);
+                let tb = hierarchical_allreduce(
+                    &mut tiered,
+                    &Topology::flat(w),
+                    TierPrecision::half_inter(wire),
+                );
+                assert_eq!(legacy, tiered, "{} w={w} n={n}", wire.name());
+                assert_eq!(tb.intra, 0);
+                assert_eq!(tb.inter, lb);
+                assert_eq!(tb.inter, ring_allreduce_wire_bytes(w, n, wire));
+            }
+        }
+    }
+
+    #[test]
+    fn half_inter_replicas_bit_identical_and_approximate_sum() {
+        for wire in [DType::F16, DType::Bf16] {
+            for topo in [Topology::grid(2, 2), Topology::grid(2, 4), Topology::grid(4, 2)] {
+                let w = topo.world();
+                let n = 1031;
+                let mut bufs = random_bufs(w, n, (w * 13 + n) as u64);
+                let expect: Vec<f32> =
+                    (0..n).map(|i| bufs.iter().map(|b| b[i]).sum()).collect();
+                let prec = TierPrecision::half_inter(wire);
+                let wb = hierarchical_allreduce(&mut bufs, &topo, prec);
+                for b in &bufs[1..] {
+                    assert_eq!(&bufs[0], b, "{} {topo} replicas disagree", wire.name());
+                }
+                assert_eq!(wb, hierarchical_allreduce_wire_bytes(&topo, n, prec), "{topo}");
+                // only the scarce hops quantize: the result still tracks
+                // the true sum well inside the flat-half tolerance
+                let tol = if wire == DType::F16 { 0.1 } else { 0.5 };
+                for (got, want) in bufs[0].iter().zip(&expect) {
+                    assert!(
+                        (got - want).abs() <= tol * want.abs().max(1.0),
+                        "{} {topo}: {got} vs {want}",
+                        wire.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matches_serial_bit_for_bit_mixed_tiers() {
+        let pool = ThreadPool::new(4);
+        for wire in [DType::F16, DType::Bf16] {
+            for topo in [Topology::grid(2, 2), Topology::grid(2, 4), Topology::grid(3, 2)] {
+                let w = topo.world();
+                for n in [10usize, 4099, 30011] {
+                    let template = random_bufs(w, n, (w * 17 + n) as u64);
+                    let prec = TierPrecision::half_inter(wire);
+
+                    let mut serial = template.clone();
+                    let mut pooled = template.clone();
+                    let bs = hierarchical_reduce_scatter(&mut serial, &topo, prec);
+                    let bp = hierarchical_reduce_scatter_pooled(&mut pooled, &topo, prec, &pool);
+                    assert_eq!(serial, pooled, "{} {topo} rs n={n}", wire.name());
+                    assert_eq!(bs, bp, "{topo} rs bytes n={n}");
+                    assert_eq!(bs, hierarchical_phase_wire_bytes(&topo, n, prec, false));
+
+                    let bs = hierarchical_all_gather(&mut serial, &topo, prec);
+                    let bp = hierarchical_all_gather_pooled(&mut pooled, &topo, prec, &pool);
+                    assert_eq!(serial, pooled, "{} {topo} ag n={n}", wire.name());
+                    assert_eq!(bs, bp, "{topo} ag bytes n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_postcondition_matches_flat_owners() {
+        // fp32 tiers: the owner chunks after the tiered reduce-scatter are
+        // the flat ring's, so step_scattered can consume the buffers as-is
+        let topo = Topology::grid(2, 3);
+        let (w, n) = (6, 1000);
+        let template = random_bufs(w, n, 99);
+        let mut flat = template.clone();
+        let mut hier = template;
+        crate::collective::reduce_scatter::ring_reduce_scatter(&mut flat);
+        hierarchical_reduce_scatter(&mut hier, &topo, TierPrecision::fp32());
+        let starts = ring_chunk_starts(w, n);
+        for c in 0..w {
+            let o = chunk_owner(c, w);
+            assert_eq!(
+                &hier[o][starts[c]..starts[c + 1]],
+                &flat[o][starts[c]..starts[c + 1]],
+                "chunk {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn inter_bytes_shrink_by_gpus_per_node_vs_flat() {
+        // the headline invariant, on executed counters: W divisible cases
+        // make the shrink exact
+        let n = 1 << 12;
+        for (nodes, gpus) in [(2usize, 2usize), (2, 4), (4, 2)] {
+            let w = nodes * gpus;
+            let topo = Topology::grid(nodes, gpus);
+            let mut flat_bufs = random_bufs(w, n, 5);
+            let mut hier_bufs = flat_bufs.clone();
+            let flat =
+                hierarchical_allreduce(&mut flat_bufs, &Topology::flat(w), TierPrecision::fp32());
+            let hier = hierarchical_allreduce(&mut hier_bufs, &topo, TierPrecision::fp32());
+            assert_eq!(flat.intra, 0);
+            assert_eq!(hier.inter * gpus as u64, flat.inter, "{topo}");
+            assert_eq!(hier.total(), flat.total(), "volume conserved, tiers relabel");
+        }
+    }
+
+    #[test]
+    fn uniform_half_tiers_supported_on_grids() {
+        // intra == inter == f16 on a 2x2: every hop quantizes; replicas
+        // agree and serial == pooled
+        let topo = Topology::grid(2, 2);
+        let prec = TierPrecision::uniform(DType::F16);
+        let pool = ThreadPool::new(3);
+        let template = random_bufs(4, 6000, 23);
+        let mut serial = template.clone();
+        let mut pooled = template;
+        hierarchical_allreduce(&mut serial, &topo, prec);
+        hierarchical_allreduce_pooled(&mut pooled, &topo, prec, &pool);
+        assert_eq!(serial, pooled);
+        for b in &serial[1..] {
+            assert_eq!(&serial[0], b);
+        }
+    }
+
+    #[test]
+    fn gathered_values_are_wire_fixed_points() {
+        // whatever mix of tiers a chunk crosses, the circulated value must
+        // survive requantization at every half format on its path — the
+        // single-node uniform-half case (all hops intra) included
+        for (topo, prec) in [
+            (Topology::grid(1, 4), TierPrecision::uniform(DType::F16)),
+            (Topology::grid(2, 2), TierPrecision::uniform(DType::F16)),
+            (Topology::grid(2, 2), TierPrecision::half_inter(DType::F16)),
+            (Topology::flat(4), TierPrecision::half_inter(DType::F16)),
+        ] {
+            let mut bufs = random_bufs(topo.world(), 333, 77);
+            hierarchical_allreduce(&mut bufs, &topo, prec);
+            for b in &bufs[1..] {
+                assert_eq!(&bufs[0], b, "{topo} replicas disagree");
+            }
+            for b in &bufs {
+                for &x in b.iter() {
+                    assert_eq!(
+                        DType::F16.round_trip(x).to_bits(),
+                        x.to_bits(),
+                        "{topo}: {x} not an f16 fixed point"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tier precision")]
+    fn mismatched_half_tiers_rejected() {
+        let mut bufs = vec![vec![0.0f32; 8]; 4];
+        hierarchical_allreduce(
+            &mut bufs,
+            &Topology::grid(2, 2),
+            TierPrecision { intra: DType::F16, inter: DType::Bf16 },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "does not describe")]
+    fn topology_world_must_match_buffer_count() {
+        let mut bufs = vec![vec![0.0f32; 8]; 3];
+        hierarchical_reduce_scatter(&mut bufs, &Topology::grid(2, 2), TierPrecision::fp32());
+    }
+
+    #[test]
+    fn width_one_is_identity() {
+        let topo = Topology::grid(1, 1);
+        let mut bufs = vec![vec![0.25f32, -1.0, 3.0]];
+        let orig = bufs.clone();
+        let wb = hierarchical_allreduce(&mut bufs, &topo, TierPrecision::half_inter(DType::F16));
+        assert_eq!(bufs, orig);
+        assert_eq!(wb, WireBytes::default());
+    }
+}

@@ -2,15 +2,27 @@
 //! buffers, the reduce-scatter / all-gather halves it is composed from
 //! (the sharded-optimizer path uses them directly), the half-precision
 //! wire variants of both (fp16/bf16 chunks on the wire, f32
-//! accumulation), plus the α-β cost model used by the cluster time
-//! simulator.
+//! accumulation), the topology-aware two-tier variants (per-tier wire
+//! precision over a declared `nodes × gpus_per_node` fabric, split
+//! intra/inter byte accounting), plus the α-β cost model used by the
+//! cluster time simulator.
 
 pub mod cost;
 pub mod half;
+pub mod hierarchical;
 pub mod reduce_scatter;
 pub mod ring;
 
-pub use cost::{allreduce_time_s, Collective, CommSpec};
+pub use cost::{
+    allreduce_time_s, tiered_ring_allreduce_wire_bytes, tiered_ring_phase_wire_bytes,
+    Collective, CommSpec,
+};
+pub use hierarchical::{
+    hierarchical_all_gather, hierarchical_all_gather_pooled, hierarchical_allreduce,
+    hierarchical_allreduce_pooled, hierarchical_allreduce_wire_bytes,
+    hierarchical_phase_wire_bytes, hierarchical_reduce_scatter,
+    hierarchical_reduce_scatter_pooled,
+};
 pub use half::{
     ring_all_gather_half, ring_all_gather_half_pooled, ring_allreduce_half,
     ring_allreduce_half_pooled, ring_allreduce_wire_bytes, ring_phase_wire_bytes,

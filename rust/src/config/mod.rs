@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use crate::optim::schedule::{from_ratios, Schedule};
 use crate::optim::Hyper;
 use crate::precision::{DType, DynamicLossScaler, LossScale};
+use crate::topology::{TierPrecision, Topology};
 
 pub use parser::{Document, Value};
 
@@ -45,11 +46,24 @@ pub struct TrainConfig {
     /// current worker count) instead of the default moment restart — the
     /// exact-continuation path, as opposed to the two-phase warm start
     pub resume_opt_state: bool,
-    /// gradient *wire* format (native backend): `f32` is the historical
-    /// exact path; `f16`/`bf16` quantize each hop's chunk at the wire
-    /// boundary while accumulating in f32 — master params and moments
-    /// stay f32 regardless (the paper's fp32-master mixed-precision run)
+    /// the declared cluster shape (`"flat"` or `"<nodes>x<gpus_per_node>"`,
+    /// world must equal `workers`): tiers the ring's hops into intra-node
+    /// and inter-node links, splitting wire-byte accounting per tier and
+    /// letting `grad_dtype`/`intra_dtype` quantize each tier separately.
+    /// The fp32 trajectory is exact-bit identical for every topology (the
+    /// tiered ring keeps the flat ring's reduction order — DESIGN.md §8)
+    pub topology: Topology,
+    /// gradient *wire* format on the scarce inter-node tier (every hop of
+    /// a `flat` topology; native backend): `f32` is the historical exact
+    /// path; `f16`/`bf16` quantize each hop's chunk at the wire boundary
+    /// while accumulating in f32 — master params and moments stay f32
+    /// regardless (the paper's fp32-master mixed-precision run)
     pub grad_dtype: DType,
+    /// wire format of the plentiful intra-node (NVLink-class) hops of a
+    /// hierarchical topology: `f32` (default, the paper's config) or equal
+    /// to `grad_dtype` — a gathered value crosses both tiers, so a second
+    /// distinct half format would break replica bit-identity (validated)
+    pub intra_dtype: DType,
     /// loss scaling (native backend): `off`, a fixed power-of-two, or
     /// dynamic (backoff on overflow, growth after a quiet interval);
     /// overflowed steps are skipped and logged by the Recorder
@@ -115,6 +129,23 @@ impl TrainConfig {
         let grad_dtype = DType::parse(grad_dtype_s).ok_or_else(|| {
             anyhow::anyhow!("unknown grad_dtype {grad_dtype_s:?} (f32|f16|bf16)")
         })?;
+        let intra_dtype_s = doc.str_or("train", "intra_dtype", "f32");
+        let intra_dtype = DType::parse(intra_dtype_s).ok_or_else(|| {
+            anyhow::anyhow!("unknown intra_dtype {intra_dtype_s:?} (f32|f16|bf16)")
+        })?;
+        // one home for the tier-compatibility rule (the trainer re-checks
+        // it for programmatically built configs)
+        if let Err(e) = (TierPrecision { intra: intra_dtype, inter: grad_dtype }).validate() {
+            bail!("bad intra_dtype/grad_dtype combination: {e}");
+        }
+        let workers = doc.usize_or("train", "workers", 2);
+        let topo_s = doc.str_or("train", "topology", "flat");
+        let topology = Topology::parse(topo_s, workers).map_err(|e| {
+            anyhow::anyhow!(
+                "bad topology {topo_s:?} (expect \"flat\" or \"<nodes>x<gpus_per_node>\" \
+                 matching workers = {workers}): {e}"
+            )
+        })?;
         let loss_scale = match doc.get("train", "loss_scale") {
             None => LossScale::Off,
             Some(Value::Str(s)) => match s.as_str() {
@@ -166,11 +197,13 @@ impl TrainConfig {
             meta_path,
             optimizer: doc.str_or("train", "optimizer", "lans").to_string(),
             backend,
-            workers: doc.usize_or("train", "workers", 2),
+            workers,
             threads: doc.usize_or("train", "threads", 0),
             shard_optimizer: doc.bool_or("train", "shard_optimizer", false),
             resume_opt_state: doc.bool_or("train", "resume_opt_state", false),
+            topology,
             grad_dtype,
+            intra_dtype,
             loss_scale,
             global_batch: doc.usize_or("train", "global_batch", 16),
             steps,
@@ -245,9 +278,11 @@ mod tests {
         assert_eq!(c.threads, 8);
         assert!(c.shard_optimizer);
         assert!(!c.resume_opt_state);
-        // precision knobs default to the historical exact path
+        // precision + topology knobs default to the historical exact path
         assert_eq!(c.grad_dtype, DType::F32);
+        assert_eq!(c.intra_dtype, DType::F32);
         assert_eq!(c.loss_scale, LossScale::Off);
+        assert_eq!(c.topology, Topology::flat(4));
         assert!(c.meta_path.starts_with("/base"));
         assert_eq!(c.data.source, "text");
         match c.schedule {
@@ -306,6 +341,51 @@ mod tests {
             TrainConfig::from_doc(&doc, Path::new(".")).unwrap().loss_scale,
             LossScale::Off
         );
+    }
+
+    #[test]
+    fn topology_knobs_parse() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\nworkers = 8\n\
+             topology = \"2x4\"\ngrad_dtype = \"bf16\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert_eq!(c.topology, Topology::grid(2, 4));
+        assert_eq!(c.grad_dtype, DType::Bf16);
+        assert_eq!(c.intra_dtype, DType::F32);
+
+        // uniform half tiers are allowed when the formats match
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\nworkers = 4\n\
+             topology = \"2x2\"\ngrad_dtype = \"f16\"\nintra_dtype = \"f16\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert_eq!(c.intra_dtype, DType::F16);
+    }
+
+    #[test]
+    fn bad_topology_knobs_are_errors() {
+        for (body, needle) in [
+            // world mismatch: 2x2 = 4 ranks, workers = 8
+            ("workers = 8\ntopology = \"2x2\"", "workers"),
+            ("topology = \"0x2\"", "topology"),
+            ("topology = \"banana\"", "topology"),
+            // a half intra tier must match the inter tier
+            ("intra_dtype = \"f16\"\ngrad_dtype = \"bf16\"", "intra_dtype"),
+            ("intra_dtype = \"bf16\"", "intra_dtype"),
+            ("intra_dtype = \"int8\"", "intra_dtype"),
+        ] {
+            let doc = Document::parse(&format!(
+                "[model]\nmeta = \"m.json\"\n[train]\n{body}"
+            ))
+            .unwrap();
+            let err = TrainConfig::from_doc(&doc, Path::new("."))
+                .expect_err(&format!("{body} should be rejected"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{body}: unhelpful error {msg}");
+        }
     }
 
     #[test]

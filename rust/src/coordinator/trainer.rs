@@ -16,10 +16,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::collective::{
-    ring_allreduce_half_pooled, ring_allreduce_pooled, ring_reduce_scatter_half_pooled,
-    ring_reduce_scatter_pooled,
-};
+use crate::collective::{hierarchical_allreduce_pooled, hierarchical_reduce_scatter_pooled};
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::Recorder;
 use crate::optim::{
@@ -28,6 +25,7 @@ use crate::optim::{
 use crate::precision::scaler::LOSS_SCALE_TENSOR;
 use crate::precision::DynamicLossScaler;
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
+use crate::topology::{TierPrecision, WireBytes};
 
 use super::source::DataSource;
 use super::worker::{WorkerCmd, WorkerHandle, WorkerReply};
@@ -45,6 +43,11 @@ pub struct TrainReport {
     pub steps_run: u64,
     /// final parameters (canonical order) for checkpoint-free callers
     pub params: Vec<TensorF32>,
+    /// executed gradient-wire bytes over the whole run, split by topology
+    /// tier (the sharded path pays the reduce-scatter; the replicated path
+    /// the full allreduce) — `examples/multi_node.rs` and the e2e tests
+    /// assert this equals the analytic `collective::cost` terms × steps
+    pub wire: WireBytes,
 }
 
 pub struct Trainer {
@@ -114,15 +117,28 @@ impl Trainer {
                  resume_from checkpoint"
             );
         }
-        if (cfg.grad_dtype.is_half() || cfg.loss_scale.enabled())
+        if (cfg.grad_dtype.is_half() || cfg.intra_dtype.is_half() || cfg.loss_scale.enabled())
             && cfg.backend != OptBackend::Native
         {
             bail!(
-                "grad_dtype = {} / loss_scale require the native backend \
-                 (the HLO optimizer artifacts have no half-wire or \
-                 skip-step form)",
-                cfg.grad_dtype.name()
+                "grad_dtype = {} / intra_dtype = {} / loss_scale require the \
+                 native backend (the HLO optimizer artifacts have no \
+                 half-wire or skip-step form)",
+                cfg.grad_dtype.name(),
+                cfg.intra_dtype.name()
             );
+        }
+        if cfg.topology.world() != cfg.workers {
+            bail!(
+                "topology {} describes {} ranks but workers = {}",
+                cfg.topology,
+                cfg.topology.world(),
+                cfg.workers
+            );
+        }
+        let tier_prec = TierPrecision { intra: cfg.intra_dtype, inter: cfg.grad_dtype };
+        if let Err(e) = tier_prec.validate() {
+            bail!("bad intra_dtype/grad_dtype combination: {e}");
         }
 
         let table = Arc::new(BlockTable::from_meta(&runtime.meta));
@@ -249,12 +265,17 @@ impl Trainer {
         // 1 → the exact serial path, nothing spawned)
         let exec = ParallelExecutor::new(cfg.threads);
 
-        // mixed precision: the gradient wire format and the loss scaler.
-        // `scaled` routes the optimizer through the probe/skip path — any
-        // loss scale, or an f16/bf16 wire whose quantization can mint inf
-        // on its own.  With scaling off and an f32 wire the legacy
-        // exact-bit path below runs unchanged.
-        let wire = cfg.grad_dtype;
+        // the declared topology tiers the ring's hops (intra-node links
+        // carry `intra_dtype`, the scarce inter-node links `grad_dtype`);
+        // executed wire bytes accumulate per tier onto the report.  Mixed
+        // precision: `scaled` routes the optimizer through the probe/skip
+        // path — any loss scale, or a half tier whose quantization can
+        // mint inf on its own.  With scaling off and all-f32 tiers the
+        // legacy exact-bit path below runs unchanged (the tiered ring
+        // keeps the flat ring's reduction order for every topology).
+        let topo = cfg.topology;
+        let prec = TierPrecision { intra: cfg.intra_dtype, inter: cfg.grad_dtype };
+        let mut wire_bytes = WireBytes::default();
         let mut scaler: Option<DynamicLossScaler> = cfg.loss_scale.build();
         if let (Some(sc), Some(t)) = (scaler.as_mut(), resume_loss_scale.as_ref()) {
             sc.import_tensor(t).with_context(|| {
@@ -264,7 +285,7 @@ impl Trainer {
                 )
             })?;
         }
-        let scaled = scaler.is_some() || wire.is_half();
+        let scaled = scaler.is_some() || prec.any_half();
 
         let mut recorder = Recorder::new(0.9);
         let mut status = TrainStatus::Completed;
@@ -313,15 +334,13 @@ impl Trainer {
                 // vector; the time model prices the wire version).
                 // step_scattered self-falls-back to the serial path for
                 // width-1 pools / small per-shard work; results are
-                // identical either way.  A half `grad_dtype` swaps in the
-                // half-wire reduce-scatter (f32 accumulation, 2-byte wire
-                // chunks); the stitch's mean factor then also folds the
-                // loss-scale unscale — exact for power-of-two scales.
-                if wire.is_half() {
-                    ring_reduce_scatter_half_pooled(&mut bufs, wire, exec.pool());
-                } else {
-                    ring_reduce_scatter_pooled(&mut bufs, exec.pool());
-                }
+                // identical either way.  The tiered reduce-scatter
+                // quantizes each hop at its tier's wire format (f32
+                // accumulation, 2-byte inter-node chunks under a half
+                // `grad_dtype`); the stitch's mean factor then also folds
+                // the loss-scale unscale — exact for power-of-two scales.
+                wire_bytes +=
+                    hierarchical_reduce_scatter_pooled(&mut bufs, &topo, prec, exec.pool());
                 if scaled {
                     let inv_eff = inv * (1.0 / scale_s);
                     so.step_scattered_scaled(
@@ -347,12 +366,8 @@ impl Trainer {
                     Some((stats.grad_norm, stats.mean_trust_ratio))
                 }
             } else {
-                // replicated path: ring allreduce (sum), then mean
-                if wire.is_half() {
-                    ring_allreduce_half_pooled(&mut bufs, wire, exec.pool());
-                } else {
-                    ring_allreduce_pooled(&mut bufs, exec.pool());
-                }
+                // replicated path: tiered ring allreduce (sum), then mean
+                wire_bytes += hierarchical_allreduce_pooled(&mut bufs, &topo, prec, exec.pool());
                 let mut grad = std::mem::take(&mut bufs[0]);
                 match cfg.backend {
                     OptBackend::Native if scaled => {
@@ -443,7 +458,7 @@ impl Trainer {
                             "step {t:>6}  gradient overflow on the {} wire — \
                              step skipped (no loss scaler configured; consider \
                              loss_scale = \"dynamic\")",
-                            wire.name()
+                            cfg.grad_dtype.name()
                         ),
                     }
                     recorder.push_skipped(t, lr, loss, tokens_per_step, scale_s as f64);
@@ -495,7 +510,7 @@ impl Trainer {
             recorder.write_tsv(path)?;
         }
 
-        Ok(TrainReport { status, recorder, final_eval_loss, steps_run, params })
+        Ok(TrainReport { status, recorder, final_eval_loss, steps_run, params, wire: wire_bytes })
     }
 
     /// Mean eval loss over the held-out shard.

@@ -21,5 +21,6 @@ pub mod metrics;
 pub mod optim;
 pub mod precision;
 pub mod runtime;
+pub mod topology;
 pub mod util;
 pub mod variance;

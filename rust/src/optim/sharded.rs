@@ -1037,6 +1037,80 @@ mod tests {
     }
 
     #[test]
+    fn scattered_step_accepts_hierarchical_reduce_scatter() {
+        // the topology-aware (tiered-ring) reduce-scatter keeps the flat
+        // ring's postcondition — same chunk owners, and at fp32 tiers the
+        // same bits — so the pipelined ZeRO-1 step consumes its buffers
+        // unchanged: flat and 2x2 trajectories are exact-bit equal, and a
+        // half inter tier composes through the probed path with serial ==
+        // pooled bit-identity
+        use crate::collective::hierarchical::hierarchical_reduce_scatter;
+        use crate::collective::reduce_scatter::ring_reduce_scatter;
+        use crate::precision::DType;
+        use crate::topology::{TierPrecision, Topology};
+
+        let table = big_table();
+        let mut rng = Rng::new(41);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let pool = ThreadPool::new(4);
+        let (w, hp) = (4usize, Hyper::default());
+        let topo = Topology::grid(2, 2);
+        for name in ["lans", "lamb"] {
+            let mut flat = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut hier = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut xf = x0.clone();
+            let mut xh = x0.clone();
+            for k in 0..2 {
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                let mut rs_flat = bufs.clone();
+                let mut rs_hier = bufs;
+                ring_reduce_scatter(&mut rs_flat);
+                let wire =
+                    hierarchical_reduce_scatter(&mut rs_hier, &topo, TierPrecision::fp32());
+                assert_eq!(rs_flat, rs_hier, "{name}: fp32 tiers must not change bits");
+                assert!(wire.inter > 0 && wire.intra > 0, "{name}: both tiers executed");
+                let scale = 1.0 / w as f32;
+                let lr = 0.01 + 0.002 * k as f32;
+                let sf = flat.step_scattered(&pool, &mut xf, &rs_flat, scale, lr);
+                let sh = hier.step_scattered(&pool, &mut xh, &rs_hier, scale, lr);
+                assert_eq!(sf.grad_norm, sh.grad_norm, "{name}");
+            }
+            assert_eq!(xf, xh, "{name}: hierarchical-fed trajectory diverged");
+
+            // bf16 inter tier: the sharded+mixed-precision composition the
+            // trainer runs.  The tiered reduce-scatter is deterministic,
+            // and two optimizers with identical state walk identical
+            // trajectories on its buffers, serial pool vs wide pool.
+            let bufs: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let prec = TierPrecision::half_inter(DType::Bf16);
+            let mut rs_a = bufs.clone();
+            let mut rs_b = bufs;
+            hierarchical_reduce_scatter(&mut rs_a, &topo, prec);
+            hierarchical_reduce_scatter(&mut rs_b, &topo, prec);
+            assert_eq!(rs_a, rs_b, "{name}: half tier must be deterministic");
+            // twin optimizer with hier's exact state (resharded import)
+            let mut twin = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            twin.import_state(hier.steps_taken(), &hier.export_state()).unwrap();
+            let mut xa = xh.clone();
+            let mut xb = xh.clone();
+            let serial = ThreadPool::new(1);
+            let sa = hier
+                .step_scattered_scaled(&serial, &mut xa, &rs_a, 1.0 / w as f32, 0.01)
+                .expect("finite gradients");
+            let sb = twin
+                .step_scattered_scaled(&pool, &mut xb, &rs_b, 1.0 / w as f32, 0.01)
+                .expect("finite gradients");
+            assert_eq!(sa.grad_norm, sb.grad_norm, "{name}: bf16 serial vs pooled");
+            assert_eq!(xa, xb, "{name}: bf16-fed step diverged serial vs pooled");
+            assert!(xa.iter().all(|v| v.is_finite()), "{name}: non-finite params");
+        }
+    }
+
+    #[test]
     fn scattered_scaled_matches_unprobed_and_skips_on_overflow() {
         use crate::collective::reduce_scatter::ring_reduce_scatter;
         let table = big_table();

@@ -1,0 +1,393 @@
+//! Cluster-topology descriptor: the two-tier fabric the paper trains on
+//! (192 × P3dn nodes: NVLink inside a node, one 100 Gb/s EFA NIC per node)
+//! and the types the executed two-level collectives
+//! (`collective::hierarchical`) are parameterized over.
+//!
+//! A [`Topology`] is `nodes × gpus_per_node` with the node-contiguous rank
+//! layout `rank = node · gpus_per_node + local`.  Under that layout the
+//! ring's hop `r → (r+1) % W` stays inside a node except when it crosses a
+//! node boundary (`(r+1) % gpus_per_node == 0`), so of the `W` links in the
+//! cycle exactly `nodes` are inter-node — the scarce tier.  The degenerate
+//! [`flat`](Topology::flat) case is `W × 1`: every hop crosses a NIC, which
+//! is the node-oblivious single ring the cost model's
+//! [`flat_gpu_ring_time_s`](crate::collective::cost::flat_gpu_ring_time_s)
+//! baseline prices.
+//!
+//! [`TierPrecision`] selects the wire format per tier (the paper's config:
+//! fp32 over NVLink, f16/bf16 over the NIC) and [`WireBytes`] is the
+//! split intra/inter byte accounting every executed collective returns.
+
+use std::fmt;
+
+use crate::precision::DType;
+
+/// Which tier of the fabric a ring hop crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// inside one node (NVLink-class: plentiful bandwidth)
+    Intra,
+    /// between nodes (NIC-class: the scarce, shared link)
+    Inter,
+}
+
+/// A two-tier cluster shape: `nodes × gpus_per_node`, ranks laid out
+/// node-contiguously (`rank = node · gpus_per_node + local`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    /// `nodes × gpus_per_node`, both ≥ 1.
+    pub fn grid(nodes: usize, gpus_per_node: usize) -> Topology {
+        assert!(nodes > 0, "topology needs at least one node");
+        assert!(gpus_per_node > 0, "topology needs at least one gpu per node");
+        Topology { nodes, gpus_per_node }
+    }
+
+    /// The degenerate node-oblivious case: `workers × 1` — one rank per
+    /// "node", every ring hop on the inter tier.  This is exactly the
+    /// historical single ring (same schedule, same bits); declaring it
+    /// keeps the flat path and the hierarchical path one code path.
+    pub fn flat(workers: usize) -> Topology {
+        Topology::grid(workers.max(1), 1)
+    }
+
+    /// Parse the config spelling: `"flat"` or `"<nodes>x<gpus_per_node>"`
+    /// (e.g. `"2x4"`).  The grid must describe exactly `workers` ranks.
+    pub fn parse(s: &str, workers: usize) -> Result<Topology, String> {
+        if s == "flat" {
+            return Ok(Topology::flat(workers));
+        }
+        let (n, g) = s
+            .split_once('x')
+            .ok_or_else(|| "expected \"flat\" or \"<nodes>x<gpus_per_node>\"".to_string())?;
+        let nodes: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad node count {n:?}"))?;
+        let gpus: usize = g
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad gpus-per-node count {g:?}"))?;
+        if nodes == 0 || gpus == 0 {
+            return Err("topology dimensions must be at least 1".to_string());
+        }
+        if nodes * gpus != workers {
+            return Err(format!(
+                "{nodes}x{gpus} describes {} ranks but workers = {workers}",
+                nodes * gpus
+            ));
+        }
+        Ok(Topology::grid(nodes, gpus))
+    }
+
+    /// Total ranks.
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// One rank per node — the node-oblivious single ring.
+    pub fn is_flat(&self) -> bool {
+        self.gpus_per_node == 1
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.world());
+        rank / self.gpus_per_node
+    }
+
+    pub fn local_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.world());
+        rank % self.gpus_per_node
+    }
+
+    pub fn rank_of(&self, node: usize, local: usize) -> usize {
+        debug_assert!(node < self.nodes && local < self.gpus_per_node);
+        node * self.gpus_per_node + local
+    }
+
+    /// Which tier the link `src → dst` crosses.
+    pub fn hop_tier(&self, src: usize, dst: usize) -> Tier {
+        if self.node_of(src) == self.node_of(dst) {
+            Tier::Intra
+        } else {
+            Tier::Inter
+        }
+    }
+
+    /// Tier of the ring hop that *ends* at `dst` (the ring only ever hops
+    /// `r → (r+1) % W`, which crosses a node boundary iff `dst` is the
+    /// first rank of a node and there is more than one node).
+    pub fn ring_hop_tier(&self, dst: usize) -> Tier {
+        if self.nodes > 1 && dst % self.gpus_per_node == 0 {
+            Tier::Inter
+        } else {
+            Tier::Intra
+        }
+    }
+
+    /// Inter-node links in the full ring cycle (`nodes`, or 0 when the
+    /// whole ring lives inside one node).
+    pub fn inter_links(&self) -> usize {
+        if self.nodes > 1 {
+            self.nodes
+        } else {
+            0
+        }
+    }
+
+    /// Inter-node hops on the `W−1`-hop ring path that hops into every
+    /// rank except `excl` — the path every chunk takes (the
+    /// reduce-scatter phase excludes the chunk index, the all-gather its
+    /// owner).  The one home for the node-boundary count shared by the
+    /// executed collectives (`collective::hierarchical`) and the analytic
+    /// byte counters (`collective::cost::tiered_ring_phase_wire_bytes`).
+    pub fn inter_hops_excluding(&self, excl: usize) -> usize {
+        if self.nodes <= 1 {
+            return 0;
+        }
+        self.inter_links() - usize::from(self.ring_hop_tier(excl) == Tier::Inter)
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_flat() {
+            write!(f, "flat({})", self.nodes)
+        } else {
+            write!(f, "{}x{}", self.nodes, self.gpus_per_node)
+        }
+    }
+}
+
+/// Per-tier wire formats: what crosses an intra-node hop and what crosses
+/// an inter-node hop.  The supported combinations are `intra == inter` or
+/// `intra == F32` (see [`validate`](TierPrecision::validate)): a gathered
+/// value can traverse both tiers, so it must be a fixed point of every
+/// wire format on its path — guaranteed when at most one distinct half
+/// format is in play, not guaranteed for e.g. f16-intra/bf16-inter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierPrecision {
+    pub intra: DType,
+    pub inter: DType,
+}
+
+impl TierPrecision {
+    /// Both tiers exact fp32 — the historical wire.
+    pub fn fp32() -> TierPrecision {
+        TierPrecision { intra: DType::F32, inter: DType::F32 }
+    }
+
+    /// The same format on both tiers (what the flat half collectives do).
+    pub fn uniform(d: DType) -> TierPrecision {
+        TierPrecision { intra: d, inter: d }
+    }
+
+    /// The paper's two-tier config: exact fp32 over NVLink, a half format
+    /// over the scarce NIC.
+    pub fn half_inter(inter: DType) -> TierPrecision {
+        TierPrecision { intra: DType::F32, inter }
+    }
+
+    pub fn tier(&self, t: Tier) -> DType {
+        match t {
+            Tier::Intra => self.intra,
+            Tier::Inter => self.inter,
+        }
+    }
+
+    pub fn any_half(&self) -> bool {
+        self.intra.is_half() || self.inter.is_half()
+    }
+
+    /// Reject tier combinations whose replicas could disagree (a half
+    /// intra format different from the inter format: a value quantized for
+    /// one tier is not a fixed point of the other).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.intra.is_half() && self.intra != self.inter {
+            return Err(format!(
+                "intra tier {} must be f32 or match the inter tier {}",
+                self.intra.name(),
+                self.inter.name()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Wire bytes split by tier — what the executed hierarchical collectives
+/// report and the analytic `collective::cost` counters predict.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireBytes {
+    pub intra: u64,
+    pub inter: u64,
+}
+
+impl WireBytes {
+    pub fn total(&self) -> u64 {
+        self.intra + self.inter
+    }
+
+    pub fn add(&mut self, tier: Tier, bytes: u64) {
+        match tier {
+            Tier::Intra => self.intra += bytes,
+            Tier::Inter => self.inter += bytes,
+        }
+    }
+}
+
+impl std::ops::AddAssign for WireBytes {
+    fn add_assign(&mut self, rhs: WireBytes) {
+        self.intra += rhs.intra;
+        self.inter += rhs.inter;
+    }
+}
+
+impl std::ops::Add for WireBytes {
+    type Output = WireBytes;
+
+    fn add(mut self, rhs: WireBytes) -> WireBytes {
+        self += rhs;
+        self
+    }
+}
+
+/// Per-tier link parameters (α-β) for modeling a declared topology —
+/// defaults match the paper's P3dn testbed (NVLink intra, EFA inter).
+#[derive(Debug, Clone, Copy)]
+pub struct TierLinks {
+    pub intra: crate::collective::cost::CommSpec,
+    pub inter: crate::collective::cost::CommSpec,
+}
+
+impl Default for TierLinks {
+    fn default() -> TierLinks {
+        TierLinks {
+            intra: crate::collective::cost::CommSpec::nvlink(),
+            inter: crate::collective::cost::CommSpec::efa(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_mapping_roundtrips() {
+        let t = Topology::grid(3, 4);
+        assert_eq!(t.world(), 12);
+        for rank in 0..t.world() {
+            let (n, l) = (t.node_of(rank), t.local_of(rank));
+            assert!(n < 3 && l < 4);
+            assert_eq!(t.rank_of(n, l), rank);
+        }
+        // node-contiguous layout
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.local_of(7), 3);
+    }
+
+    #[test]
+    fn ring_hops_cross_exactly_once_per_node() {
+        for (nodes, gpus) in [(1, 1), (1, 8), (2, 4), (4, 2), (8, 1), (3, 5)] {
+            let t = Topology::grid(nodes, gpus);
+            let w = t.world();
+            let crossings = (0..w)
+                .filter(|&r| t.ring_hop_tier((r + 1) % w) == Tier::Inter)
+                .count();
+            assert_eq!(crossings, t.inter_links(), "{t}");
+            // ring_hop_tier agrees with the general hop_tier on ring hops
+            for r in 0..w {
+                let dst = (r + 1) % w;
+                assert_eq!(t.hop_tier(r, dst), t.ring_hop_tier(dst), "{t} hop {r}->{dst}");
+            }
+        }
+    }
+
+    #[test]
+    fn inter_hops_excluding_matches_the_per_hop_count() {
+        // the helper must agree with literally walking the path: hops end
+        // at every rank except `excl`
+        for (nodes, gpus) in [(1, 1), (1, 4), (2, 2), (2, 4), (4, 2), (3, 5), (8, 1)] {
+            let t = Topology::grid(nodes, gpus);
+            let w = t.world();
+            for excl in 0..w {
+                let walked = (0..w)
+                    .filter(|&dst| dst != excl && t.ring_hop_tier(dst) == Tier::Inter)
+                    .count();
+                assert_eq!(t.inter_hops_excluding(excl), walked, "{t} excl={excl}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_is_all_inter_single_node_all_intra() {
+        let flat = Topology::flat(6);
+        assert!(flat.is_flat());
+        assert_eq!(flat.world(), 6);
+        for r in 0..6 {
+            assert_eq!(flat.ring_hop_tier(r), Tier::Inter);
+        }
+        let one = Topology::grid(1, 6);
+        for r in 0..6 {
+            assert_eq!(one.ring_hop_tier(r), Tier::Intra);
+        }
+    }
+
+    #[test]
+    fn parse_accepts_flat_and_grids() {
+        assert_eq!(Topology::parse("flat", 8).unwrap(), Topology::flat(8));
+        assert_eq!(Topology::parse("2x4", 8).unwrap(), Topology::grid(2, 4));
+        assert_eq!(Topology::parse("8x1", 8).unwrap(), Topology::flat(8));
+        assert_eq!(Topology::parse("1x1", 1).unwrap(), Topology::grid(1, 1));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for (s, w) in [
+            ("2x3", 8),   // world mismatch
+            ("0x4", 0),   // zero dimension
+            ("4x0", 0),
+            ("abc", 4),   // no separator
+            ("2xtwo", 4), // non-numeric
+            ("", 4),
+        ] {
+            let e = Topology::parse(s, w).unwrap_err();
+            assert!(!e.is_empty(), "{s:?} produced an empty error");
+        }
+        // the mismatch error names both counts
+        let e = Topology::parse("2x3", 8).unwrap_err();
+        assert!(e.contains('6') && e.contains('8'), "unhelpful: {e}");
+    }
+
+    #[test]
+    fn tier_precision_validation() {
+        assert!(TierPrecision::fp32().validate().is_ok());
+        assert!(TierPrecision::half_inter(DType::F16).validate().is_ok());
+        assert!(TierPrecision::uniform(DType::Bf16).validate().is_ok());
+        let bad = TierPrecision { intra: DType::F16, inter: DType::Bf16 };
+        assert!(bad.validate().is_err());
+        let bad = TierPrecision { intra: DType::F16, inter: DType::F32 };
+        assert!(bad.validate().is_err());
+        assert!(!TierPrecision::fp32().any_half());
+        assert!(TierPrecision::half_inter(DType::Bf16).any_half());
+    }
+
+    #[test]
+    fn wire_bytes_accumulate() {
+        let mut w = WireBytes::default();
+        w.add(Tier::Intra, 10);
+        w.add(Tier::Inter, 3);
+        w += WireBytes { intra: 5, inter: 7 };
+        assert_eq!(w, WireBytes { intra: 15, inter: 10 });
+        assert_eq!(w.total(), 25);
+        assert_eq!(
+            WireBytes { intra: 1, inter: 2 } + WireBytes { intra: 3, inter: 4 },
+            WireBytes { intra: 4, inter: 6 }
+        );
+    }
+}

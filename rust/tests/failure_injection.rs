@@ -9,6 +9,7 @@ use lans::coordinator::Trainer;
 use lans::optim::{BlockTable, Hyper, Schedule, ShardedOptimizer};
 use lans::precision::{DType, LossScale};
 use lans::runtime::{Engine, ModelMeta, ModelRuntime, TensorF32};
+use lans::topology::Topology;
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -28,7 +29,9 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         threads: 1,
         shard_optimizer: false,
         resume_opt_state: false,
+        topology: Topology::flat(2),
         grad_dtype: DType::F32,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
         global_batch: 16,
         steps: 2,
@@ -322,6 +325,44 @@ fn loss_scale_on_hlo_backend_rejected() {
     let mut cfg = base_cfg(meta);
     cfg.backend = OptBackend::Hlo;
     cfg.loss_scale = LossScale::Dynamic { init: 65536.0 };
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("native"), "unhelpful: {err}");
+}
+
+#[test]
+fn topology_worker_mismatch_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    // 2x2 describes 4 ranks, but the config runs 2 workers
+    cfg.topology = Topology::grid(2, 2);
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(
+        err.contains("topology") && err.contains('4') && err.contains('2'),
+        "unhelpful: {err}"
+    );
+}
+
+#[test]
+fn mismatched_half_tier_precisions_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.topology = Topology::grid(2, 1);
+    cfg.grad_dtype = DType::Bf16;
+    cfg.intra_dtype = DType::F16; // a second distinct half format
+    let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
+    let err = format!("{e:#}");
+    assert!(err.contains("intra"), "unhelpful: {err}");
+}
+
+#[test]
+fn half_intra_tier_on_hlo_backend_rejected() {
+    let Some(meta) = meta_path() else { return };
+    let mut cfg = base_cfg(meta);
+    cfg.backend = OptBackend::Hlo;
+    cfg.grad_dtype = DType::F16;
+    cfg.intra_dtype = DType::F16;
     let Err(e) = Trainer::new(cfg) else { panic!("expected error") };
     let err = format!("{e:#}");
     assert!(err.contains("native"), "unhelpful: {err}");

@@ -5,8 +5,10 @@
 //! which reproduces deterministically).
 
 use lans::collective::{
-    ring_all_gather, ring_all_gather_half, ring_all_gather_half_pooled,
-    ring_all_gather_pooled, ring_allreduce, ring_allreduce_half,
+    hierarchical_allreduce, hierarchical_allreduce_pooled, hierarchical_allreduce_wire_bytes,
+    hierarchical_phase_wire_bytes, hierarchical_reduce_scatter,
+    hierarchical_reduce_scatter_pooled, ring_all_gather, ring_all_gather_half,
+    ring_all_gather_half_pooled, ring_all_gather_pooled, ring_allreduce, ring_allreduce_half,
     ring_allreduce_half_pooled, ring_allreduce_pooled, ring_reduce_scatter,
     ring_reduce_scatter_half, ring_reduce_scatter_half_pooled, ring_reduce_scatter_pooled,
 };
@@ -16,6 +18,7 @@ use lans::optim::{
     make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ShardPlan, ShardedOptimizer,
 };
 use lans::precision::DType;
+use lans::topology::{TierPrecision, Topology};
 use lans::util::json::Json;
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
@@ -230,6 +233,110 @@ fn prop_reduce_scatter_then_all_gather_is_allreduce_bit_for_bit() {
         ring_reduce_scatter_pooled(&mut pooled, &pool);
         ring_all_gather_pooled(&mut pooled, &pool);
         assert_eq!(pooled, reference, "pooled halves (w={w} n={n} threads={threads})");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// topology / hierarchical-collective properties
+// ---------------------------------------------------------------------------
+
+/// All `nodes × gpus` factorizations of `w`.
+fn factorizations(w: usize) -> Vec<Topology> {
+    (1..=w).filter(|d| w % d == 0).map(|d| Topology::grid(d, w / d)).collect()
+}
+
+#[test]
+fn prop_hierarchical_fp32_exact_bit_equals_flat_ring() {
+    // the tentpole contract: with both tiers fp32, the executed two-tier
+    // ring is the flat ring bit for bit — for every W in {1,2,4,8}, every
+    // nodes×gpus factorization, serial and pooled, and the reduce-scatter
+    // half on its own (the postcondition the sharded optimizer consumes);
+    // executed wire bytes always equal the analytic cost terms
+    for_cases(15, |_, rng| {
+        let n = rng.below_usize(9000);
+        let threads = 1 + rng.below_usize(8);
+        let pool = ThreadPool::new(threads);
+        for w in [1usize, 2, 4, 8] {
+            let template: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut reference = template.clone();
+            ring_allreduce(&mut reference);
+            let mut rs_reference = template.clone();
+            ring_reduce_scatter(&mut rs_reference);
+
+            for topo in factorizations(w) {
+                let prec = TierPrecision::fp32();
+                let mut serial = template.clone();
+                let mut pooled = template.clone();
+                let ws = hierarchical_allreduce(&mut serial, &topo, prec);
+                let wp = hierarchical_allreduce_pooled(&mut pooled, &topo, prec, &pool);
+                assert_eq!(serial, reference, "{topo} n={n}: serial != flat ring");
+                assert_eq!(pooled, reference, "{topo} n={n}: pooled != flat ring");
+                let analytic = hierarchical_allreduce_wire_bytes(&topo, n, prec);
+                assert_eq!(ws, analytic, "{topo} n={n}: serial bytes");
+                assert_eq!(wp, analytic, "{topo} n={n}: pooled bytes");
+
+                let mut rs = template.clone();
+                hierarchical_reduce_scatter(&mut rs, &topo, prec);
+                assert_eq!(rs, rs_reference, "{topo} n={n}: reduce-scatter bits");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_hierarchical_half_inter_replicas_bit_identical() {
+    // with an f16/bf16 inter tier the result is still a deterministic
+    // function of the inputs: serial == pooled == a re-run, every replica
+    // ends with the same bits, and the executed intra/inter byte split
+    // matches the analytic terms (intra stays at 4 bytes/elem, inter
+    // drops to 2)
+    for_cases(10, |_, rng| {
+        let n = rng.below_usize(9000);
+        let threads = 2 + rng.below_usize(7);
+        let pool = ThreadPool::new(threads);
+        for wire in [DType::F16, DType::Bf16] {
+            for w in [2usize, 4, 8] {
+                let template: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                for topo in factorizations(w) {
+                    let prec = TierPrecision::half_inter(wire);
+                    let mut serial = template.clone();
+                    let mut again = template.clone();
+                    let mut pooled = template.clone();
+                    let ws = hierarchical_allreduce(&mut serial, &topo, prec);
+                    let wa = hierarchical_allreduce(&mut again, &topo, prec);
+                    let wp = hierarchical_allreduce_pooled(&mut pooled, &topo, prec, &pool);
+                    assert_eq!(serial, again, "{} {topo}: not deterministic", wire.name());
+                    assert_eq!(serial, pooled, "{} {topo}: pooled diverged", wire.name());
+                    assert_eq!(ws, wa);
+                    assert_eq!(ws, wp, "{} {topo}: byte counts diverged", wire.name());
+                    for b in &serial[1..] {
+                        assert_eq!(&serial[0], b, "{} {topo}: replicas disagree", wire.name());
+                    }
+                    assert_eq!(
+                        ws,
+                        hierarchical_allreduce_wire_bytes(&topo, n, prec),
+                        "{} {topo}: executed != analytic",
+                        wire.name()
+                    );
+                    // single-node grids never touch the inter tier; multi-
+                    // node grids must, unless there is nothing to move
+                    if topo.nodes == 1 || n == 0 {
+                        assert_eq!(ws.inter, 0, "{topo}");
+                    } else {
+                        assert!(ws.inter > 0, "{topo}");
+                    }
+                    // the reduce-scatter half alone reports the same split
+                    // the phase-level analytic predicts
+                    let mut rs = template.clone();
+                    let wr = hierarchical_reduce_scatter_pooled(&mut rs, &topo, prec, &pool);
+                    assert_eq!(wr, hierarchical_phase_wire_bytes(&topo, n, prec, false));
+                }
+            }
+        }
     });
 }
 

@@ -13,6 +13,7 @@ use lans::coordinator::{DataSource, TrainStatus, Trainer};
 use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer, Schedule};
 use lans::precision::{DType, LossScale};
 use lans::runtime::{Engine, ModelRuntime};
+use lans::topology::Topology;
 use lans::util::rng::Rng;
 
 fn meta_path() -> Option<PathBuf> {
@@ -157,7 +158,9 @@ fn trainer_loss_decreases_small_run() {
         threads: 1,
         shard_optimizer: false,
         resume_opt_state: false,
+        topology: Topology::flat(2),
         grad_dtype: DType::F32,
+        intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
         global_batch: 16,
         steps: 30,
@@ -183,6 +186,86 @@ fn trainer_loss_decreases_small_run() {
         "loss did not improve: {first:.3} -> {last:.3}"
     );
     assert!(report.final_eval_loss.unwrap().is_finite());
+}
+
+#[test]
+fn trainer_on_declared_topology_keeps_bits_and_accounts_wire() {
+    // the full-system topology contract: a 2x2 grid walks the flat run's
+    // exact trajectory at fp32, and the executed wire bytes (split
+    // intra/inter) equal the analytic per-step terms × steps — for both
+    // the sharded (reduce-scatter only) and replicated (allreduce) paths
+    use lans::collective::{hierarchical_allreduce_wire_bytes, hierarchical_phase_wire_bytes};
+    use lans::topology::TierPrecision;
+
+    let Some(meta) = meta_path() else { return skip() };
+    let engine = Engine::cpu().unwrap();
+    let mk = |topology: Topology, shard: bool, inter: DType| TrainConfig {
+        meta_path: meta.clone(),
+        optimizer: "lans".into(),
+        backend: OptBackend::Native,
+        workers: 4,
+        threads: 0,
+        shard_optimizer: shard,
+        resume_opt_state: false,
+        topology,
+        grad_dtype: inter,
+        intra_dtype: DType::F32,
+        loss_scale: LossScale::Off,
+        global_batch: 16,
+        steps: 8,
+        seed: 3,
+        eval_every: 0,
+        eval_batches: 1,
+        hyper: Hyper::default(),
+        schedule: Schedule::Constant { eta: 0.01 },
+        data: data_cfg(),
+        checkpoint: None,
+        resume_from: None,
+        curve_out: None,
+        stop_on_divergence: true,
+    };
+    let grid = Topology::grid(2, 2);
+
+    for shard in [true, false] {
+        let r_flat = Trainer::with_engine(mk(Topology::flat(4), shard, DType::F32), engine.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let r_grid = Trainer::with_engine(mk(grid, shard, DType::F32), engine.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        for (a, b) in r_flat.params.iter().zip(&r_grid.params) {
+            assert_eq!(a.data, b.data, "shard={shard}: topology changed the fp32 bits");
+        }
+        // byte accounting: per step the sharded path pays one tiered
+        // reduce-scatter, the replicated path the full allreduce
+        let n = r_grid.params.iter().map(|t| t.data.len()).sum::<usize>();
+        let prec = TierPrecision::fp32();
+        let per_step = if shard {
+            hierarchical_phase_wire_bytes(&grid, n, prec, false)
+        } else {
+            hierarchical_allreduce_wire_bytes(&grid, n, prec)
+        };
+        assert_eq!(r_grid.wire.intra, per_step.intra * 8, "shard={shard}: intra bytes");
+        assert_eq!(r_grid.wire.inter, per_step.inter * 8, "shard={shard}: inter bytes");
+        assert!(r_grid.wire.inter > 0 && r_grid.wire.intra > 0, "both tiers executed");
+        // flat puts everything on the inter tier
+        assert_eq!(r_flat.wire.intra, 0, "shard={shard}");
+    }
+
+    // bf16 inter tier end-to-end on the sharded path: completes, improves,
+    // and the split still matches the model (inter now 2 bytes/elem)
+    let rep = Trainer::with_engine(mk(grid, true, DType::Bf16), engine).unwrap().run().unwrap();
+    assert_eq!(rep.status, TrainStatus::Completed);
+    let n = rep.params.iter().map(|t| t.data.len()).sum::<usize>();
+    let per_step =
+        hierarchical_phase_wire_bytes(&grid, n, TierPrecision::half_inter(DType::Bf16), false);
+    assert_eq!(rep.wire.intra, per_step.intra * 8);
+    assert_eq!(rep.wire.inter, per_step.inter * 8);
+    let first = rep.recorder.records.first().unwrap().loss;
+    let last = rep.recorder.ema_loss().unwrap();
+    assert!(last < first, "bf16 inter wire should still learn: {first} -> {last}");
 }
 
 #[test]

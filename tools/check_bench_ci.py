@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Guard against "new bench forgot CI" drift.
+
+Every bench registered in rust/Cargo.toml must either be executed by the
+bench-quick CI job (a `cargo bench --bench <name>` line in
+.github/workflows/ci.yml) or appear in the conscious allowlist below.
+The bench-quick job runs this first, so adding a [[bench]] without wiring
+it into CI fails the pipeline instead of rotting silently.
+
+Run from anywhere: paths resolve relative to this file.
+"""
+
+import pathlib
+import re
+import sys
+
+# Long-running paper-table benches that regenerate full tables (training
+# runs, large sweeps) and are covered by the compile-only bench-smoke job.
+# Adding a bench here is a conscious decision — prefer teaching it --quick
+# and putting it in bench-quick.
+ALLOW_COMPILE_ONLY = {
+    "ablation_optimizers",
+    "fig1_schedule",
+    "table2_convergence",
+    "table2_time_model",
+}
+
+
+def bench_quick_runs(ci: str) -> set[str]:
+    """Bench names actually executed by the bench-quick job: only
+    uncommented lines inside that job's block count (a mention in a YAML
+    comment or another job must not satisfy the guard)."""
+    runs: set[str] = set()
+    in_job = False
+    for line in ci.splitlines():
+        stripped = line.strip()
+        if re.fullmatch(r"bench-quick:", stripped) and line.startswith("  "):
+            in_job = True
+            continue
+        # a new two-space-indented key ends the bench-quick block
+        if in_job and re.match(r"  \S", line) and not line.startswith("   "):
+            in_job = False
+        if not in_job or stripped.startswith("#"):
+            continue
+        m = re.search(r"cargo bench --bench\s+(\S+)", stripped)
+        if m:
+            runs.add(m.group(1))
+    return runs
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    cargo = (root / "rust" / "Cargo.toml").read_text(encoding="utf-8")
+    ci = (root / ".github" / "workflows" / "ci.yml").read_text(encoding="utf-8")
+
+    registered = re.findall(r'\[\[bench\]\]\s*\nname\s*=\s*"([^"]+)"', cargo)
+    if not registered:
+        print("check_bench_ci: found no [[bench]] entries — parsing broke?")
+        return 1
+    run_in_ci = bench_quick_runs(ci)
+    if not run_in_ci:
+        print("check_bench_ci: found no bench runs in the bench-quick job — parsing broke?")
+        return 1
+
+    missing = [b for b in registered if b not in run_in_ci and b not in ALLOW_COMPILE_ONLY]
+    stale_allow = sorted(ALLOW_COMPILE_ONLY - set(registered))
+
+    ok = True
+    if missing:
+        ok = False
+        print(
+            "check_bench_ci: benches registered in rust/Cargo.toml but not "
+            "executed by the bench-quick job (add a `cargo bench --bench "
+            "<name> -- --quick` line to .github/workflows/ci.yml, or "
+            "allowlist consciously in tools/check_bench_ci.py):"
+        )
+        for b in missing:
+            print(f"  - {b}")
+    if stale_allow:
+        ok = False
+        print("check_bench_ci: allowlist entries with no matching [[bench]]:")
+        for b in stale_allow:
+            print(f"  - {b}")
+    if ok:
+        executed = [b for b in registered if b in run_in_ci]
+        print(
+            f"check_bench_ci: ok — {len(executed)}/{len(registered)} benches "
+            f"run in bench-quick, {len(ALLOW_COMPILE_ONLY)} allowlisted "
+            "compile-only"
+        )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
