@@ -43,6 +43,9 @@ fn main() -> Result<()> {
             grad_dtype: DType::F32,
             intra_dtype: DType::F32,
             loss_scale: LossScale::Off,
+            bucket_mb: 0,
+            overlap: true,
+            relaxed_collectives: false,
             global_batch: 32,
             steps: 60,
             seed: 42,
@@ -81,6 +84,9 @@ fn main() -> Result<()> {
         grad_dtype: DType::F32,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 8,
         steps: 40,
         seed: 9,

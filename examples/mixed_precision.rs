@@ -31,7 +31,11 @@ fn main() -> Result<()> {
     }
     println!("(7e4 saturates to inf: that is the overflow loss scaling absorbs)\n");
 
-    let steps = 60;
+    // CI smoke budget (examples-smoke job): cap the run without editing code
+    let steps: u64 = std::env::var("LANS_SMOKE_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
     let cfg = TrainConfig {
         meta_path: meta,
         optimizer: "lans".into(),
@@ -46,6 +50,11 @@ fn main() -> Result<()> {
         grad_dtype: DType::F16,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Dynamic { init: 16_777_216.0 }, // 2^24
+        // bucketed pipeline on the replicated path: overflow probing and
+        // the skip/back-off dance run through the step DAG (DESIGN.md §9)
+        bucket_mb: 1,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 16,
         steps,
         seed: 42,
@@ -54,8 +63,8 @@ fn main() -> Result<()> {
         hyper: Hyper::default(),
         schedule: Schedule::WarmupConstDecay {
             eta: 0.02,
-            t_warmup: 12,
-            t_const: 24,
+            t_warmup: steps / 5,
+            t_const: steps * 2 / 5,
             t_total: steps,
         },
         data: DataConfig {

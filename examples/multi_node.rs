@@ -41,6 +41,9 @@ fn base_cfg(meta: std::path::PathBuf, topology: Topology, inter: DType, steps: u
         grad_dtype: inter,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 32,
         steps,
         seed: 42,
@@ -94,11 +97,32 @@ fn main() -> Result<()> {
         r_grid.wire.inter as f64 / 1e6
     );
 
+    // ---- contract 1b: and neither does the bucketed step DAG -------------
+    // 1 MiB buckets split bert-tiny's gradient into several pipeline stages;
+    // the overlapped schedule must still land on the flat run's exact bits
+    // and the same per-tier wire bytes (DESIGN.md §9)
+    let mut cfg_b = base_cfg(meta.clone(), topo, DType::F32, 12);
+    cfg_b.bucket_mb = 1;
+    cfg_b.overlap = true;
+    let mut t_bkt = Trainer::with_engine(cfg_b, engine.clone())?;
+    let r_bkt = t_bkt.run()?;
+    assert_eq!(r_bkt.status, TrainStatus::Completed);
+    for (a, b) in r_flat.params.iter().zip(&r_bkt.params) {
+        assert_eq!(a.data, b.data, "bucketed pipeline changed the trajectory");
+    }
+    assert_eq!(r_bkt.wire, r_grid.wire, "bucketed wire accounting drifted");
+    println!("bucketed+overlapped (1 MiB buckets) bit-identical too ✔");
+
     // ---- contract 2: the bf16-inter run, end to end -----------------------
-    let steps = 40u64;
+    // (bucketed here as well: the pipeline composes with the half wire)
+    let steps: u64 = std::env::var("LANS_SMOKE_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
     println!("\n=== {topo} | sharded LANS | fp32 intra / bf16 inter wire | {steps} steps ===");
-    let mut trainer =
-        Trainer::with_engine(base_cfg(meta, topo, DType::Bf16, steps), engine)?;
+    let mut cfg2 = base_cfg(meta, topo, DType::Bf16, steps);
+    cfg2.bucket_mb = 1;
+    let mut trainer = Trainer::with_engine(cfg2, engine)?;
     let n_params = trainer.meta().param_count;
     let report = trainer.run()?;
     assert_eq!(report.status, TrainStatus::Completed, "run diverged");

@@ -61,6 +61,9 @@ fn main() -> Result<()> {
         grad_dtype: DType::F32,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 32,
         steps: phase1_steps,
         seed: 42,
@@ -113,6 +116,9 @@ fn main() -> Result<()> {
         grad_dtype: DType::F32,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         // paper: phase-2 batch ≈ phase-1/3 (96K -> 33K)
         global_batch: 12,
         steps: phase2_steps.max(5),

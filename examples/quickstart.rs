@@ -19,6 +19,12 @@ fn main() -> Result<()> {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
 
+    // CI smoke budget (examples-smoke job): cap the run without editing code
+    let steps: u64 = std::env::var("LANS_SMOKE_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+
     let cfg = TrainConfig {
         meta_path: meta,
         optimizer: "lans".into(),
@@ -31,17 +37,20 @@ fn main() -> Result<()> {
         grad_dtype: DType::F32,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 16,
-        steps: 40,
+        steps,
         seed: 42,
         eval_every: 10,
         eval_batches: 4,
         hyper: Hyper::default(),
         schedule: Schedule::WarmupConstDecay {
             eta: 0.02,
-            t_warmup: 8,
-            t_const: 16,
-            t_total: 40,
+            t_warmup: steps / 5,
+            t_const: steps * 2 / 5,
+            t_total: steps,
         },
         data: DataConfig {
             source: "text".into(),

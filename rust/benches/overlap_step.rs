@@ -1,0 +1,335 @@
+//! Bucketed-pipeline bench: the step-DAG scheduler (DESIGN.md §9) against
+//! the phase-synchronous sharded step it generalizes.
+//!
+//! Three arms over the same reduce-scattered gradients:
+//!   1. phase-sync — full-vector `hierarchical_reduce_scatter`, then the
+//!      fused `step_scattered` (the pre-DAG trainer path),
+//!   2. DAG serial — `sharded_bucketed_step` with `overlap = false`
+//!      (same stages, caller-thread schedule),
+//!   3. DAG overlapped — `overlap = true`: reduce-scatter of bucket k runs
+//!      concurrently with the stitch of bucket k−1 on the worker pool.
+//!
+//! The contract under test is the tentpole's: all three arms are
+//! *bit-identical* (asserted here at tens-of-millions-params scale, and
+//! property-tested in `rust/tests/proptests.rs`), the overlapped schedule
+//! is strictly faster than the serial one on ≥ 4 threads, and every
+//! bucket's executed wire bytes equal the analytic
+//! `hierarchical_phase_wire_bytes_range` prediction on both fabric tiers.
+//!
+//! `--quick` (CI smoke): fewer reps, one bucket count, smaller model,
+//! same assertions.  Numbers land in `BENCH_overlap_step.json`.
+
+use lans::collective::{
+    hierarchical_phase_wire_bytes, hierarchical_phase_wire_bytes_range,
+    hierarchical_reduce_scatter, hierarchical_reduce_scatter_views,
+};
+use lans::coordinator::sharded_bucketed_step;
+use lans::optim::{Block, BlockTable, Hyper, ShardPlan, ShardedOptimizer};
+use lans::precision::DType;
+use lans::topology::{TierPrecision, Topology, WireBytes};
+use lans::util::bench::{quick_mode, BenchResult, Reporter, Table};
+use lans::util::pool::ThreadPool;
+use lans::util::rng::Rng;
+use lans::util::stats::percentile;
+
+const W: usize = 4;
+const LR: f32 = 0.001;
+
+/// A prefix of the bert-base block table totalling at least `min_total`
+/// params — bench-sized real layer shapes without bert-base's full 4·W
+/// buffer footprint.
+fn prefix_table(min_total: usize) -> BlockTable {
+    let full = BlockTable::bert_base();
+    let mut blocks: Vec<Block> = Vec::new();
+    for b in full.blocks {
+        let done = b.offset >= min_total;
+        if done {
+            break;
+        }
+        blocks.push(b);
+    }
+    let total = blocks.last().map_or(0, |b| b.offset + b.len);
+    BlockTable { blocks, total }
+}
+
+/// Small table with blocks deliberately straddling the `NORM_SEG` grid, so
+/// the wire-byte accounting is exercised on ragged bucket boundaries.
+fn lumpy_table() -> BlockTable {
+    let lens = [4096 * 3 + 7, 2048, 4096 * 5, 133, 9000, 4096 * 2, 77, 30000];
+    let mut blocks = Vec::new();
+    let mut off = 0usize;
+    for &l in &lens {
+        blocks.push(Block { offset: off, len: l });
+        off += l;
+    }
+    BlockTable { blocks, total: off }
+}
+
+fn fresh_bufs(rng: &mut Rng, n: usize) -> Vec<Vec<f32>> {
+    (0..W).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+}
+
+/// Time `step` over restored-from-master gradient buffers, excluding the
+/// restore itself (the in-tree `bench` helper would fold the 4·n memcpy
+/// into both arms and dilute the overlap signal).
+fn timed_arm<F: FnMut(&mut [Vec<f32>])>(
+    name: &str,
+    master: &[Vec<f32>],
+    scratch: &mut [Vec<f32>],
+    warmup: usize,
+    iters: usize,
+    mut step: F,
+) -> BenchResult {
+    let mut samples = Vec::with_capacity(iters);
+    for it in 0..warmup + iters {
+        for (d, s) in scratch.iter_mut().zip(master) {
+            d.copy_from_slice(s);
+        }
+        let t0 = std::time::Instant::now();
+        step(scratch);
+        let dt = t0.elapsed().as_nanos() as f64;
+        if it >= warmup {
+            samples.push(dt);
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: percentile(&samples, 50.0),
+        p99_ns: percentile(&samples, 99.0),
+    }
+}
+
+/// Per-bucket executed wire bytes must equal the analytic range counter on
+/// both tiers, and their sum the full-vector counter — for every topology
+/// × wire-format combination the trainer accepts.
+fn check_wire_accounting(rng: &mut Rng) {
+    let table = lumpy_table();
+    let n = table.total;
+    let cuts = ShardPlan::bucket_starts(&table, 2 * 4096);
+    assert!(cuts.len() > 3, "lumpy table should split into several buckets");
+    let master = fresh_bufs(rng, n);
+    let combos: &[(Topology, TierPrecision, &str)] = &[
+        (Topology::flat(W), TierPrecision::fp32(), "flat fp32"),
+        (Topology::grid(2, 2), TierPrecision::fp32(), "2x2 fp32"),
+        (Topology::grid(2, 2), TierPrecision::half_inter(DType::Bf16), "2x2 bf16-inter"),
+        (Topology::grid(2, 2), TierPrecision::uniform(DType::F16), "2x2 f16"),
+    ];
+    for (topo, prec, label) in combos {
+        let mut bufs = master.clone();
+        let mut executed_total = WireBytes::default();
+        for b in cuts.windows(2) {
+            let (lo, hi) = (b[0], b[1]);
+            let mut views: Vec<&mut [f32]> =
+                bufs.iter_mut().map(|v| &mut v[lo..hi]).collect();
+            let executed = hierarchical_reduce_scatter_views(&mut views, n, lo, topo, *prec);
+            let analytic = hierarchical_phase_wire_bytes_range(topo, n, lo, hi, *prec, false);
+            assert_eq!(
+                executed, analytic,
+                "{label}: bucket [{lo}, {hi}) executed wire bytes != analytic"
+            );
+            executed_total += executed;
+        }
+        assert_eq!(
+            executed_total,
+            hierarchical_phase_wire_bytes(topo, n, *prec, false),
+            "{label}: bucket sum != full-vector reduce-scatter accounting"
+        );
+
+        // and the bucketed DAG step must land on the same parameters as the
+        // phase-synchronous path, per combo (full matrix in proptests)
+        let scale = 1.0 / W as f32;
+        let pool = ThreadPool::new(2);
+        let x0: Vec<f32> = (0..n).map(|i| (i as f32).sin() * 0.01).collect();
+        let mut x_phase = x0.clone();
+        let mut so_phase =
+            ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), W).unwrap();
+        let mut phase_bufs = master.clone();
+        hierarchical_reduce_scatter(&mut phase_bufs, topo, *prec);
+        so_phase.step_scattered(&pool, &mut x_phase, &phase_bufs, scale, LR);
+        for overlap in [false, true] {
+            let mut x = x0.clone();
+            let mut so =
+                ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), W)
+                    .unwrap();
+            let mut dag_bufs = master.clone();
+            let (stats, wb) = sharded_bucketed_step(
+                &mut so, &pool, &mut x, &mut dag_bufs, &cuts, scale, LR, false, topo,
+                *prec, overlap,
+            );
+            assert!(stats.is_some(), "unprobed bucketed step never skips");
+            assert_eq!(wb, executed_total, "{label}: step wire bytes (overlap={overlap})");
+            assert_eq!(x, x_phase, "{label}: bucketed bits (overlap={overlap})");
+        }
+    }
+    println!(
+        "wire accounting: {} buckets x {} combos, executed == analytic on both tiers; \
+         bucketed step bit-identical to phase-sync in every combo\n",
+        cuts.len() - 1,
+        combos.len()
+    );
+}
+
+fn main() {
+    let quick = quick_mode();
+    let mut rep = Reporter::new("overlap_step");
+    let mut rng = Rng::new(7);
+
+    check_wire_accounting(&mut rng);
+
+    let table = prefix_table(if quick { 12 << 20 } else { 48 << 20 });
+    let n = table.total;
+    let topo = Topology::grid(2, 2);
+    let prec = TierPrecision::fp32();
+    let scale = 1.0 / W as f32;
+    let avail = ThreadPool::available();
+    let pool = ThreadPool::new(avail);
+    let (warmup, reps) = if quick { (1, 2) } else { (1, 5) };
+
+    println!(
+        "=== bucketed step DAG, {:.1}M params, W={W} on a 2x2 grid, pool={avail} \
+         threads{} ===\n",
+        n as f64 / 1e6,
+        if quick { ", --quick" } else { "" }
+    );
+
+    let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.02).collect();
+    let master = fresh_bufs(&mut rng, n);
+    let mut scratch: Vec<Vec<f32>> = master.clone();
+
+    // arm 1: the pre-DAG path — full-vector reduce-scatter, then the fused
+    // scattered step (comm and update never overlap)
+    let (r_phase, x_phase, wb_phase) = {
+        let mut so =
+            ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), W).unwrap();
+        let mut x = x0.clone();
+        let mut wb = WireBytes::default();
+        let r = timed_arm("phase-sync RS + step_scattered", &master, &mut scratch, warmup, reps, |bufs| {
+            wb = hierarchical_reduce_scatter(bufs, &topo, prec);
+            so.step_scattered(&pool, std::hint::black_box(&mut x), bufs, scale, LR);
+        });
+        (r, x, wb)
+    };
+    rep.result(&r_phase);
+    rep.metric("phase_sync_ms", r_phase.mean_ms());
+
+    let bucket_counts: &[usize] = if quick { &[8] } else { &[4, 8, 16] };
+    let mut t = Table::new(&["buckets", "DAG serial ms", "DAG overlap ms", "overlap speedup"]);
+    let mut primary: Option<(BenchResult, BenchResult)> = None;
+    for &want in bucket_counts {
+        let cuts = ShardPlan::bucket_starts(&table, n / want);
+        let b = cuts.len() - 1;
+
+        // arm 2: same buckets, same stages, caller-thread schedule
+        let (r_serial, x_serial, wb_serial) = {
+            let mut so =
+                ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), W)
+                    .unwrap();
+            let mut x = x0.clone();
+            let mut wb = WireBytes::default();
+            let r = timed_arm(
+                &format!("DAG serial (B={b})"),
+                &master,
+                &mut scratch,
+                warmup,
+                reps,
+                |bufs| {
+                    let (stats, w) = sharded_bucketed_step(
+                        &mut so, &pool, std::hint::black_box(&mut x), bufs, &cuts, scale,
+                        LR, false, &topo, prec, false,
+                    );
+                    assert!(stats.is_some());
+                    wb = w;
+                },
+            );
+            (r, x, wb)
+        };
+
+        // arm 3: the overlapped schedule — R_k alongside S_{k-1}
+        let (r_overlap, x_overlap, wb_overlap) = {
+            let mut so =
+                ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), W)
+                    .unwrap();
+            let mut x = x0.clone();
+            let mut wb = WireBytes::default();
+            let r = timed_arm(
+                &format!("DAG overlapped (B={b})"),
+                &master,
+                &mut scratch,
+                warmup,
+                reps,
+                |bufs| {
+                    let (stats, w) = sharded_bucketed_step(
+                        &mut so, &pool, std::hint::black_box(&mut x), bufs, &cuts, scale,
+                        LR, false, &topo, prec, true,
+                    );
+                    assert!(stats.is_some());
+                    wb = w;
+                },
+            );
+            (r, x, wb)
+        };
+
+        // the DAG only reorders timing: bits and wire traffic are invariant
+        assert_eq!(x_serial, x_phase, "B={b}: DAG serial diverged from phase-sync");
+        assert_eq!(x_overlap, x_phase, "B={b}: DAG overlapped diverged from phase-sync");
+        assert_eq!(wb_serial, wb_phase, "B={b}: DAG serial wire bytes");
+        assert_eq!(wb_overlap, wb_phase, "B={b}: DAG overlapped wire bytes");
+
+        t.row(&[
+            b.to_string(),
+            format!("{:.2}", r_serial.mean_ms()),
+            format!("{:.2}", r_overlap.mean_ms()),
+            format!("{:.2}x", r_serial.mean_ns / r_overlap.mean_ns),
+        ]);
+        rep.metric(&format!("dag_serial_ms_b{want}"), r_serial.mean_ms());
+        rep.metric(&format!("dag_overlap_ms_b{want}"), r_overlap.mean_ms());
+        rep.metric(
+            &format!("overlap_speedup_b{want}"),
+            r_serial.mean_ns / r_overlap.mean_ns,
+        );
+        rep.result(&r_serial);
+        rep.result(&r_overlap);
+        if want == 8 {
+            primary = Some((r_serial, r_overlap));
+        }
+    }
+    t.print();
+    println!(
+        "\n(phase-sync: {:.2} ms.  All arms bit-identical; wire bytes {:.1} MB intra + \
+         {:.1} MB inter in every arm.)",
+        r_phase.mean_ms(),
+        wb_phase.intra as f64 / 1e6,
+        wb_phase.inter as f64 / 1e6
+    );
+    rep.metric("wire_intra_mb", wb_phase.intra as f64 / 1e6);
+    rep.metric("wire_inter_mb", wb_phase.inter as f64 / 1e6);
+    rep.metric("threads", avail as f64);
+
+    // persist numbers before the acceptance assertions
+    rep.write().expect("writing BENCH_overlap_step.json");
+
+    // acceptance: with >= 4 threads the overlapped schedule must beat the
+    // serial one — that is the whole point of the DAG.  (Two driver lanes
+    // need at least a couple of cores to actually run concurrently.)
+    let (r_serial, r_overlap) = primary.expect("primary bucket count (8) always measured");
+    if avail >= 4 {
+        assert!(
+            r_overlap.mean_ns < r_serial.mean_ns,
+            "overlapped DAG ({:.2} ms) must beat the serial schedule ({:.2} ms) on \
+             {avail} threads",
+            r_overlap.mean_ms(),
+            r_serial.mean_ms()
+        );
+        println!(
+            "\noverlap wins: {:.2} ms -> {:.2} ms ({:.2}x) at B=8 on {avail} threads",
+            r_serial.mean_ms(),
+            r_overlap.mean_ms(),
+            r_serial.mean_ns / r_overlap.mean_ns
+        );
+    } else {
+        println!("\n[{avail} threads — overlap speedup assertion skipped]");
+    }
+}

@@ -72,6 +72,9 @@ fn main() {
             grad_dtype: DType::F32,
             intra_dtype: DType::F32,
             loss_scale: LossScale::Off,
+            bucket_mb: 0,
+            overlap: true,
+            relaxed_collectives: false,
             global_batch: batch,
             steps,
             seed: 1,

@@ -6,4 +6,6 @@ pub mod flops;
 pub mod timemodel;
 
 pub use flops::{BertDims, BERT_BASE, BERT_LARGE};
-pub use timemodel::{table2_runs, ClusterSpec, Phase, Run, UPDATE_WORDS_PER_PARAM};
+pub use timemodel::{
+    pipelined_overlap_time_s, table2_runs, ClusterSpec, Phase, Run, UPDATE_WORDS_PER_PARAM,
+};

@@ -156,6 +156,35 @@ impl ClusterSpec {
         intra_bytes_per_elem: f64,
         inter_bytes_per_elem: f64,
     ) -> f64 {
+        let (t_compute, t_comm, sharded) = self.compute_and_comm_s(
+            dims,
+            batch_seqs,
+            seq,
+            slots,
+            collective,
+            intra_bytes_per_elem,
+            inter_bytes_per_elem,
+        );
+        t_compute
+            + (1.0 - self.overlap) * t_comm
+            + self.optimizer_update_time_s(dims, sharded)
+    }
+
+    /// The raw `(T_compute, T_comm, sharded)` triple behind the step-time
+    /// entry points — one home for the collective dispatch so the scalar
+    /// `overlap` model and the bucketed pipeline model price the same
+    /// terms.
+    #[allow(clippy::too_many_arguments)]
+    fn compute_and_comm_s(
+        &self,
+        dims: &BertDims,
+        batch_seqs: usize,
+        seq: usize,
+        slots: usize,
+        collective: Collective,
+        intra_bytes_per_elem: f64,
+        inter_bytes_per_elem: f64,
+    ) -> (f64, f64, bool) {
         let flops = dims.train_flops_per_seq(seq, slots) * batch_seqs as f64;
         let t_compute =
             flops / (self.devices() as f64 * self.peak_flops * self.efficiency);
@@ -195,8 +224,40 @@ impl ClusterSpec {
                 true,
             ),
         };
-        t_compute
-            + (1.0 - self.overlap) * t_comm
+        (t_compute, t_comm, sharded)
+    }
+
+    /// Seconds for one step under the *bucketed* gradient pipeline
+    /// (DESIGN.md §9): comm and compute are cut into `buckets` equal
+    /// pieces, bucket `k`'s wire transfer overlapping bucket `k-1`'s
+    /// digest, replacing the scalar `overlap` fraction with the explicit
+    /// pipeline schedule [`pipelined_overlap_time_s`].  One bucket prices
+    /// the fully synchronous step (`T_compute + T_comm`); infinitely many
+    /// approach `max(T_compute, T_comm)` — comm fully hidden when compute
+    /// dominates.  The optimizer update stays un-overlapped (it needs the
+    /// whole folded gradient).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_time_bucketed(
+        &self,
+        dims: &BertDims,
+        batch_seqs: usize,
+        seq: usize,
+        slots: usize,
+        collective: Collective,
+        intra_bytes_per_elem: f64,
+        inter_bytes_per_elem: f64,
+        buckets: usize,
+    ) -> f64 {
+        let (t_compute, t_comm, sharded) = self.compute_and_comm_s(
+            dims,
+            batch_seqs,
+            seq,
+            slots,
+            collective,
+            intra_bytes_per_elem,
+            inter_bytes_per_elem,
+        );
+        pipelined_overlap_time_s(t_compute, t_comm, buckets)
             + self.optimizer_update_time_s(dims, sharded)
     }
 
@@ -211,6 +272,22 @@ impl ClusterSpec {
     ) -> f64 {
         self.step_time_with(dims, batch_seqs, seq, slots, Collective::AllReduce)
     }
+}
+
+/// Wall time of a `buckets`-deep two-stage pipeline whose total stage
+/// costs are `t_compute` and `t_comm`: the first bucket's comm and the
+/// last bucket's compute cannot overlap anything, every other slot is
+/// paced by the slower stage —
+///
+///     T(B) = M/B + C/B + (B-1)/B · max(C, M)
+///
+/// `B = 1` degenerates to the synchronous `C + M`; `B → ∞` approaches
+/// `max(C, M)`.  Monotone non-increasing in `B` — more buckets never
+/// model a slower step (real bucket-count overheads are the `overlap_step`
+/// bench's job, not the model's).
+pub fn pipelined_overlap_time_s(t_compute: f64, t_comm: f64, buckets: usize) -> f64 {
+    let b = buckets.max(1) as f64;
+    t_compute / b + t_comm / b + (b - 1.0) / b * t_compute.max(t_comm)
 }
 
 /// One pretraining phase (the paper's seq-128 / seq-512 split).
@@ -383,6 +460,67 @@ mod tests {
                     "inter-only saving {saved_mixed} vs full {saved_all}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pipelined_time_endpoints_and_monotonicity() {
+        let (c, m) = (3.0, 1.25);
+        // B = 1 is the synchronous step, exactly
+        assert_eq!(pipelined_overlap_time_s(c, m, 1), c + m);
+        assert_eq!(pipelined_overlap_time_s(c, m, 0), c + m, "0 clamps to 1");
+        // monotone non-increasing, and approaching max(C, M) from above
+        let mut prev = f64::INFINITY;
+        for b in 1..=64 {
+            let t = pipelined_overlap_time_s(c, m, b);
+            assert!(t <= prev + 1e-12, "B={b}: {t} > {prev}");
+            assert!(t >= c.max(m) - 1e-12, "B={b}: below the pipeline floor");
+            prev = t;
+        }
+        let deep = pipelined_overlap_time_s(c, m, 1 << 20);
+        assert!((deep - c.max(m)).abs() < 1e-4, "B→∞ must approach max(C,M)");
+        // symmetric in which stage dominates
+        assert_eq!(
+            pipelined_overlap_time_s(c, m, 8),
+            pipelined_overlap_time_s(m, c, 8)
+        );
+    }
+
+    #[test]
+    fn bucketed_step_time_brackets_the_scalar_overlap_model() {
+        // one bucket = the overlap-0 scalar model; deep pipelines beat it
+        // and never beat the overlap-1 (compute + update) floor
+        let c = ClusterSpec::p3dn(192);
+        let (b, s, sl) = (98304, 128, 20);
+        for coll in [Collective::AllReduce, Collective::ReduceScatterGather] {
+            let mut sync = c.clone();
+            sync.overlap = 0.0;
+            let t_sync = sync.step_time_with_tier_wire(&BERT_LARGE, b, s, sl, coll, 4.0, 4.0);
+            let one = c.step_time_bucketed(&BERT_LARGE, b, s, sl, coll, 4.0, 4.0, 1);
+            assert!((one - t_sync).abs() <= 1e-12 * t_sync, "{coll:?}: {one} vs {t_sync}");
+
+            let mut hidden = c.clone();
+            hidden.overlap = 1.0;
+            let floor = hidden.step_time_with_tier_wire(&BERT_LARGE, b, s, sl, coll, 4.0, 4.0);
+            let mut prev = f64::INFINITY;
+            for nb in [1usize, 2, 4, 8, 32, 128] {
+                let t = c.step_time_bucketed(&BERT_LARGE, b, s, sl, coll, 4.0, 4.0, nb);
+                assert!(t <= prev + 1e-12, "{coll:?} B={nb} regressed");
+                assert!(t >= floor - 1e-12, "{coll:?} B={nb} beat the comm-free floor");
+                prev = t;
+            }
+            // deep pipeline limit: recover C, M, update from the two
+            // scalar-model endpoints and check T(B→∞) → max(C, M) + update
+            let update =
+                c.optimizer_update_time_s(&BERT_LARGE, coll == Collective::ReduceScatterGather);
+            let comp = floor - update;
+            let comm = one - floor;
+            let deep = c.step_time_bucketed(&BERT_LARGE, b, s, sl, coll, 4.0, 4.0, 4096);
+            let want = comp.max(comm) + update;
+            assert!(
+                (deep - want).abs() <= comp.min(comm) / 4096.0 + 1e-9 * want,
+                "{coll:?}: deep {deep} vs limit {want}"
+            );
         }
     }
 

@@ -245,7 +245,29 @@ pub fn tiered_ring_phase_wire_bytes(
     inter: DType,
     gather: bool,
 ) -> (u64, u64) {
+    tiered_ring_phase_wire_bytes_range(nodes, gpus_per_node, elems, 0, elems, intra, inter, gather)
+}
+
+/// [`tiered_ring_phase_wire_bytes`] restricted to the element range
+/// `[lo, hi)` of the global chunk grid (the grid is still built from
+/// `elems`) — the analytic mirror of the executed range collectives
+/// (`hierarchical_*_range`): each chunk contributes only its clipped
+/// length.  Summing over any partition of `[0, elems)` reproduces the
+/// full-phase counter exactly, which is the per-bucket wire-accounting
+/// invariant the `overlap_step` bench asserts.
+#[allow(clippy::too_many_arguments)]
+pub fn tiered_ring_phase_wire_bytes_range(
+    nodes: usize,
+    gpus_per_node: usize,
+    elems: usize,
+    lo: usize,
+    hi: usize,
+    intra: DType,
+    inter: DType,
+    gather: bool,
+) -> (u64, u64) {
     let w = nodes * gpus_per_node;
+    assert!(lo <= hi && hi <= elems, "bad range {lo}..{hi} for elems={elems}");
     if w <= 1 {
         return (0, 0);
     }
@@ -255,7 +277,11 @@ pub fn tiered_ring_phase_wire_bytes(
     let starts = ring_chunk_starts(w, elems);
     let (mut intra_b, mut inter_b) = (0u64, 0u64);
     for c in 0..w {
-        let len = (starts[c + 1] - starts[c]) as u64;
+        let (clo, chi) = (starts[c].max(lo), starts[c + 1].min(hi));
+        if clo >= chi {
+            continue;
+        }
+        let len = (chi - clo) as u64;
         let excl = if gather { (c + w - 1) % w } else { c };
         let inter_hops = topo.inter_hops_excluding(excl);
         let intra_hops = w - 1 - inter_hops;
@@ -446,6 +472,33 @@ mod tests {
                     (ratio - gpus as f64).abs() / gpus as f64 < 0.01,
                     "at paper scale the gap is the fan-in factor: {ratio} vs {gpus}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn range_wire_bytes_partition_to_the_full_counter() {
+        // per-bucket analytic bytes over any partition of [0, elems) must
+        // sum exactly to the full-phase counter, for every tier dtype mix
+        for (nodes, gpus, n) in [(1usize, 4usize, 30011usize), (2, 4, 4099), (4, 2, 65536)] {
+            for (intra, inter) in
+                [(DType::F32, DType::F32), (DType::F32, DType::Bf16), (DType::F16, DType::F16)]
+            {
+                for gather in [false, true] {
+                    let full =
+                        tiered_ring_phase_wire_bytes(nodes, gpus, n, intra, inter, gather);
+                    for cuts in [vec![0, n], vec![0, 1, n / 2, n], vec![0, 4096, 4096, n]] {
+                        let mut acc = (0u64, 0u64);
+                        for b in cuts.windows(2) {
+                            let (i, x) = tiered_ring_phase_wire_bytes_range(
+                                nodes, gpus, n, b[0], b[1], intra, inter, gather,
+                            );
+                            acc.0 += i;
+                            acc.1 += x;
+                        }
+                        assert_eq!(acc, full, "{nodes}x{gpus} n={n} cuts={cuts:?}");
+                    }
+                }
             }
         }
     }

@@ -47,7 +47,7 @@ use crate::precision::{DType, HalfVec};
 use crate::topology::{TierPrecision, Topology, WireBytes};
 use crate::util::pool::ThreadPool;
 
-use super::cost::tiered_ring_phase_wire_bytes;
+use super::cost::{tiered_ring_phase_wire_bytes, tiered_ring_phase_wire_bytes_range};
 use super::reduce_scatter::{
     check_bufs, chunk_owner, ring_all_gather, ring_all_gather_at, ring_all_gather_pooled,
     ring_chunk_starts, ring_reduce_scatter, ring_reduce_scatter_pooled, ring_step_tasks,
@@ -84,6 +84,30 @@ pub fn hierarchical_allreduce_wire_bytes(
 ) -> WireBytes {
     hierarchical_phase_wire_bytes(topo, elems, prec, false)
         + hierarchical_phase_wire_bytes(topo, elems, prec, true)
+}
+
+/// [`hierarchical_phase_wire_bytes`] restricted to the element range
+/// `[lo, hi)` of the global chunk grid — per-bucket sums over a partition
+/// of `[0, elems)` equal the full-phase counter exactly.
+pub fn hierarchical_phase_wire_bytes_range(
+    topo: &Topology,
+    elems: usize,
+    lo: usize,
+    hi: usize,
+    prec: TierPrecision,
+    gather: bool,
+) -> WireBytes {
+    let (intra, inter) = tiered_ring_phase_wire_bytes_range(
+        topo.nodes,
+        topo.gpus_per_node,
+        elems,
+        lo,
+        hi,
+        prec.intra,
+        prec.inter,
+        gather,
+    );
+    WireBytes { intra, inter }
 }
 
 fn check_topology(topo: &Topology, prec: TierPrecision, w: usize) {
@@ -136,6 +160,84 @@ pub fn hierarchical_reduce_scatter(
                 }
             } else {
                 for i in lo..hi {
+                    b[i] += a[i];
+                }
+            }
+        }
+    }
+    wire
+}
+
+/// Tiered-ring reduce-scatter restricted to the element range `[lo, hi)`
+/// of the *global* chunk grid — the bucket-granular entry point of the
+/// overlapped step.  The full `w−1`-step schedule runs with every chunk
+/// (and its wire quantization) clipped to the range, so each in-range
+/// element sees exactly the hops, formats and f32 accumulation order it
+/// would under [`hierarchical_reduce_scatter`]: running this once per
+/// bucket over a partition of `[0, n)` is bitwise identical to one
+/// full-vector call, and the per-bucket [`WireBytes`] sum to the full
+/// counter exactly ([`hierarchical_phase_wire_bytes_range`]).
+pub fn hierarchical_reduce_scatter_range(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    lo: usize,
+    hi: usize,
+) -> WireBytes {
+    let (_, n) = check_bufs(bufs);
+    assert!(lo <= hi && hi <= n, "bad range {lo}..{hi} for n={n}");
+    let mut views: Vec<&mut [f32]> = bufs.iter_mut().map(|b| &mut b[lo..hi]).collect();
+    hierarchical_reduce_scatter_views(&mut views, n, lo, topo, prec)
+}
+
+/// [`hierarchical_reduce_scatter_range`] on pre-carved per-worker bucket
+/// views — the entry point the DAG-scheduled step uses so communication
+/// of one bucket can run while compute touches another without aliasing.
+/// `views[i]` is worker `i`'s slice of the global element range
+/// `[lo, lo + views[i].len())` of a buffer of `n` elements.  Same clipped
+/// full-ring schedule, hop order, f32 accumulation and per-hop wire
+/// accounting as the range/full entry points (which delegate here for the
+/// range case); executed bytes equal the analytic
+/// [`hierarchical_phase_wire_bytes_range`].
+pub fn hierarchical_reduce_scatter_views(
+    views: &mut [&mut [f32]],
+    n: usize,
+    lo: usize,
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    let w = views.len();
+    assert!(w > 0, "no workers");
+    let len = views[0].len();
+    assert!(views.iter().all(|v| v.len() == len), "view length mismatch");
+    let hi = lo + len;
+    assert!(hi <= n, "bad view range {lo}..{hi} for n={n}");
+    check_topology(topo, prec, w);
+    let mut wire = WireBytes::default();
+    if w == 1 || lo == hi {
+        return wire;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let (clo, chi) = (starts[c].max(lo), starts[c + 1].min(hi));
+            if clo >= chi {
+                continue;
+            }
+            let src = (c + s) % w;
+            let dst = (c + s + 1) % w;
+            let tier = topo.ring_hop_tier(dst);
+            let dtype = prec.tier(tier);
+            wire.add(tier, ((chi - clo) * dtype.bytes()) as u64);
+            let (a, b) = split_two(views, src, dst);
+            let (vlo, vhi) = (clo - lo, chi - lo);
+            if dtype.is_half() {
+                let packed = HalfVec::from_f32(dtype, &a[vlo..vhi]);
+                for (d, q) in b[vlo..vhi].iter_mut().zip(packed.iter_f32()) {
+                    *d += q;
+                }
+            } else {
+                for i in vlo..vhi {
                     b[i] += a[i];
                 }
             }
@@ -269,6 +371,94 @@ pub fn hierarchical_all_gather(
     bytes
 }
 
+/// Tiered-ring all-gather restricted to `[lo, hi)` of the global chunk
+/// grid: each owner adopts the wire image of its *clipped* chunk (the
+/// rounding is element-wise, so per-bucket adoption equals the full
+/// call's), then the clipped pure-copy schedule circulates it.  Bucketing
+/// over a partition of `[0, n)` reproduces
+/// [`hierarchical_all_gather`] bitwise.
+pub fn hierarchical_all_gather_range(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    lo: usize,
+    hi: usize,
+) -> WireBytes {
+    let (_, n) = check_bufs(bufs);
+    assert!(lo <= hi && hi <= n, "bad range {lo}..{hi} for n={n}");
+    let mut views: Vec<&mut [f32]> = bufs.iter_mut().map(|b| &mut b[lo..hi]).collect();
+    hierarchical_all_gather_views(&mut views, n, lo, topo, prec)
+}
+
+/// [`hierarchical_all_gather_range`] on pre-carved per-worker bucket views
+/// (see [`hierarchical_reduce_scatter_views`]): each owner adopts the wire
+/// image of its clipped chunk, then the clipped pure-copy schedule
+/// circulates it.
+pub fn hierarchical_all_gather_views(
+    views: &mut [&mut [f32]],
+    n: usize,
+    lo: usize,
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    let w = views.len();
+    assert!(w > 0, "no workers");
+    let len = views[0].len();
+    assert!(views.iter().all(|v| v.len() == len), "view length mismatch");
+    let hi = lo + len;
+    assert!(hi <= n, "bad view range {lo}..{hi} for n={n}");
+    check_topology(topo, prec, w);
+    let bytes = hierarchical_phase_wire_bytes_range(topo, n, lo, hi, prec, true);
+    if w == 1 || lo == hi {
+        return bytes;
+    }
+    let starts = ring_chunk_starts(w, n);
+    if prec.any_half() {
+        for c in 0..w {
+            let (clo, chi) = (starts[c].max(lo), starts[c + 1].min(hi));
+            if clo >= chi {
+                continue;
+            }
+            let (first, second) = owner_roundings(topo, prec, c);
+            let o = chunk_owner(c, w);
+            let seg = &mut views[o][clo - lo..chi - lo];
+            if let Some(d) = first {
+                round_segment(seg, d);
+            }
+            if let Some(d) = second {
+                round_segment(seg, d);
+            }
+        }
+    }
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let (clo, chi) = (starts[c].max(lo), starts[c + 1].min(hi));
+            if clo >= chi {
+                continue;
+            }
+            let src = (c + w - 1 + s) % w;
+            let dst = (c + w + s) % w;
+            let (a, b) = split_two(views, src, dst);
+            b[clo - lo..chi - lo].copy_from_slice(&a[clo - lo..chi - lo]);
+        }
+    }
+    bytes
+}
+
+/// Bucket-granular tiered allreduce:
+/// [`hierarchical_reduce_scatter_range`] then
+/// [`hierarchical_all_gather_range`] over the same range.
+pub fn hierarchical_allreduce_range(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    lo: usize,
+    hi: usize,
+) -> WireBytes {
+    hierarchical_reduce_scatter_range(bufs, topo, prec, lo, hi)
+        + hierarchical_all_gather_range(bufs, topo, prec, lo, hi)
+}
+
 struct OwnedChunk<'a> {
     seg: &'a mut [f32],
     first: Option<DType>,
@@ -338,6 +528,112 @@ pub fn hierarchical_allreduce_pooled(
 ) -> WireBytes {
     hierarchical_reduce_scatter_pooled(bufs, topo, prec, pool)
         + hierarchical_all_gather_pooled(bufs, topo, prec, pool)
+}
+
+/// Leader-based two-phase allreduce — the **relaxed-bit-identity mode**
+/// (fp32 wire only): per-node ring reduce-scatter over the node's
+/// `gpus_per_node` buffers, an inter-node ring allreduce of each local
+/// chunk across its per-node owners, then a per-node ring all-gather.
+/// This is the executed home of the schedule
+/// [`cost::hierarchical_allreduce_shard_aware_time_s`](super::cost::hierarchical_allreduce_shard_aware_time_s)
+/// prices (DESIGN.md §8-§9): each NIC carries ~`2N·b` instead of the
+/// tiered ring's `~2·gpus_per_node·N·b`.
+///
+/// **It is deliberately NOT bit-equal to the flat ring** — pre-summing a
+/// node regroups the f32 adds (`(a+b)+(c+d)` vs `((a+b)+c)+d`), which is
+/// exactly why the default trainer path refuses it unless
+/// `relaxed_collectives` is set.  All replicas still end bit-identical to
+/// each other, and the result is a deterministic function of the inputs.
+/// Returns the executed wire bytes ([`leader_allreduce_wire_bytes`]).
+pub fn leader_allreduce(bufs: &mut [Vec<f32>], topo: &Topology) -> WireBytes {
+    let (w, n) = check_bufs(bufs);
+    assert_eq!(topo.world(), w, "topology {topo} does not describe {w} buffers");
+    if w == 1 || n == 0 {
+        return WireBytes::default();
+    }
+    let (nodes, g) = (topo.nodes, topo.gpus_per_node);
+    // local chunk grid shared by all three phases
+    let starts = ring_chunk_starts(g, n);
+    // phase 1: per-node reduce-scatter (intra tier) — chunk c's node sum
+    // lands at local rank chunk_owner(c, g) of every node
+    for node in 0..nodes {
+        let base = node * g;
+        for s in 0..g.saturating_sub(1) {
+            for c in 0..g {
+                let src = base + (c + s) % g;
+                let dst = base + (c + s + 1) % g;
+                let (lo, hi) = (starts[c], starts[c + 1]);
+                let (a, b) = split_two(bufs, src, dst);
+                for i in lo..hi {
+                    b[i] += a[i];
+                }
+            }
+        }
+    }
+    // phase 2: per local chunk, ring-allreduce the node sums across the
+    // `nodes` owners (inter tier) — reduce-scatter + all-gather on the
+    // chunk's own inter grid
+    if nodes > 1 {
+        for c in 0..g {
+            let o = chunk_owner(c, g);
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            if lo == hi {
+                continue;
+            }
+            let len = hi - lo;
+            let istarts: Vec<usize> = (0..=nodes).map(|k| lo + k * len / nodes).collect();
+            for s in 0..nodes - 1 {
+                for ic in 0..nodes {
+                    let src = ((ic + s) % nodes) * g + o;
+                    let dst = ((ic + s + 1) % nodes) * g + o;
+                    let (a, b) = split_two(bufs, src, dst);
+                    for i in istarts[ic]..istarts[ic + 1] {
+                        b[i] += a[i];
+                    }
+                }
+            }
+            for s in 0..nodes - 1 {
+                for ic in 0..nodes {
+                    let src = ((ic + nodes - 1 + s) % nodes) * g + o;
+                    let dst = ((ic + nodes + s) % nodes) * g + o;
+                    let (a, b) = split_two(bufs, src, dst);
+                    b[istarts[ic]..istarts[ic + 1]]
+                        .copy_from_slice(&a[istarts[ic]..istarts[ic + 1]]);
+                }
+            }
+        }
+    }
+    // phase 3: per-node all-gather circulates the owner chunks (intra tier)
+    for node in 0..nodes {
+        let base = node * g;
+        for s in 0..g.saturating_sub(1) {
+            for c in 0..g {
+                let src = base + (c + g - 1 + s) % g;
+                let dst = base + (c + g + s) % g;
+                let (lo, hi) = (starts[c], starts[c + 1]);
+                let (a, b) = split_two(bufs, src, dst);
+                b[lo..hi].copy_from_slice(&a[lo..hi]);
+            }
+        }
+    }
+    leader_allreduce_wire_bytes(topo, n)
+}
+
+/// Analytic wire bytes of [`leader_allreduce`], summed over all endpoints:
+/// `2·nodes·(G−1)·N·b` intra (reduce-scatter + all-gather per node) and
+/// `2·(nodes−1)·N·b` inter (each local chunk's inter allreduce moves
+/// `2(nodes−1)·len_c`; lengths sum to `N`) — per NIC the inter volume is
+/// `2(nodes−1)/nodes·N·b`, the `~G×` cut versus the tiered ring that the
+/// shard-aware pricing models.
+pub fn leader_allreduce_wire_bytes(topo: &Topology, elems: usize) -> WireBytes {
+    if topo.world() <= 1 || elems == 0 {
+        return WireBytes::default();
+    }
+    let b = DType::F32.bytes() as u64;
+    WireBytes {
+        intra: 2 * topo.nodes as u64 * (topo.gpus_per_node as u64 - 1) * elems as u64 * b,
+        inter: 2 * (topo.nodes as u64 - 1) * elems as u64 * b,
+    }
 }
 
 #[cfg(test)]
@@ -545,6 +841,117 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn bucketed_range_sweep_equals_full_call_every_precision() {
+        // the tentpole contract: per-bucket range collectives over any
+        // partition of [0, n) are bitwise identical to the full-vector
+        // call, and the per-bucket wire bytes sum to the full counter
+        for (topo, prec) in [
+            (Topology::flat(4), TierPrecision::fp32()),
+            (Topology::grid(2, 2), TierPrecision::fp32()),
+            (Topology::grid(2, 3), TierPrecision::half_inter(DType::Bf16)),
+            (Topology::grid(2, 4), TierPrecision::half_inter(DType::F16)),
+            (Topology::grid(2, 2), TierPrecision::uniform(DType::F16)),
+        ] {
+            let w = topo.world();
+            for n in [10usize, 4099, 30011] {
+                let cuts = vec![0, 1.min(n), n / 3, n / 3, (2 * n / 3 + 1).min(n), n];
+                let template = random_bufs(w, n, (w * 23 + n) as u64);
+
+                let mut full = template.clone();
+                let mut bucketed = template;
+                let fb = hierarchical_reduce_scatter(&mut full, &topo, prec);
+                let mut bb = WireBytes::default();
+                for b in cuts.windows(2) {
+                    bb += hierarchical_reduce_scatter_range(&mut bucketed, &topo, prec, b[0], b[1]);
+                }
+                assert_eq!(full, bucketed, "{topo} rs n={n}");
+                assert_eq!(fb, bb, "{topo} rs bytes n={n}");
+
+                let fb = hierarchical_all_gather(&mut full, &topo, prec);
+                let mut bb = WireBytes::default();
+                for b in cuts.windows(2) {
+                    bb += hierarchical_all_gather_range(&mut bucketed, &topo, prec, b[0], b[1]);
+                }
+                assert_eq!(full, bucketed, "{topo} ag n={n}");
+                assert_eq!(fb, bb, "{topo} ag bytes n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_wire_bytes_match_analytic() {
+        let topo = Topology::grid(2, 2);
+        let prec = TierPrecision::half_inter(DType::Bf16);
+        let n = 4099;
+        let mut bufs = random_bufs(4, n, 3);
+        let executed = hierarchical_reduce_scatter_range(&mut bufs, &topo, prec, 17, 3000);
+        assert_eq!(
+            executed,
+            hierarchical_phase_wire_bytes_range(&topo, n, 17, 3000, prec, false)
+        );
+    }
+
+    #[test]
+    fn leader_allreduce_sums_correctly_with_replicas_identical() {
+        for topo in [
+            Topology::flat(4),
+            Topology::grid(2, 2),
+            Topology::grid(2, 4),
+            Topology::grid(3, 2),
+            Topology::grid(4, 1),
+            Topology::grid(1, 4),
+        ] {
+            let w = topo.world();
+            for n in [0usize, 7, 1031, 8192] {
+                let mut bufs = random_bufs(w, n, (w * 41 + n) as u64);
+                let expect: Vec<f64> = (0..n)
+                    .map(|i| bufs.iter().map(|b| b[i] as f64).sum())
+                    .collect();
+                let wire = leader_allreduce(&mut bufs, &topo);
+                for b in &bufs[1..] {
+                    assert_eq!(&bufs[0], b, "{topo} n={n} replicas disagree");
+                }
+                assert_eq!(wire, leader_allreduce_wire_bytes(&topo, n), "{topo} n={n}");
+                for (got, want) in bufs[0].iter().zip(&expect) {
+                    assert!(
+                        ((*got as f64) - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "{topo} n={n}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leader_allreduce_cuts_inter_bytes_by_roughly_gpus_per_node() {
+        // the relaxed mode's raison d'être: per-NIC inter volume drops by
+        // ~G versus the (bit-exact) tiered ring
+        for (nodes, gpus) in [(2usize, 4usize), (4, 8)] {
+            let topo = Topology::grid(nodes, gpus);
+            let n = 1 << 14;
+            let tiered = hierarchical_allreduce_wire_bytes(&topo, n, TierPrecision::fp32());
+            let leader = leader_allreduce_wire_bytes(&topo, n);
+            let ratio = tiered.inter as f64 / leader.inter as f64;
+            let expect = (topo.world() - 1) as f64 / (nodes - 1) as f64;
+            assert!((ratio - expect).abs() < 1e-9, "{topo}: {ratio} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn leader_allreduce_is_not_the_flat_ring_reduction_order() {
+        // document the relaxation: with >1 gpus per node the regrouped f32
+        // adds generically differ from the flat ring's — this is why the
+        // trainer gates the path behind `relaxed_collectives`
+        let topo = Topology::grid(2, 2);
+        let template = random_bufs(4, 257, 12);
+        let mut flat = template.clone();
+        let mut leader = template;
+        ring_allreduce(&mut flat);
+        leader_allreduce(&mut leader, &topo);
+        assert_ne!(flat, leader, "expected regrouped f32 sums to differ somewhere");
     }
 
     #[test]

@@ -15,13 +15,16 @@ pub mod ring;
 
 pub use cost::{
     allreduce_time_s, tiered_ring_allreduce_wire_bytes, tiered_ring_phase_wire_bytes,
-    Collective, CommSpec,
+    tiered_ring_phase_wire_bytes_range, Collective, CommSpec,
 };
 pub use hierarchical::{
-    hierarchical_all_gather, hierarchical_all_gather_pooled, hierarchical_allreduce,
-    hierarchical_allreduce_pooled, hierarchical_allreduce_wire_bytes,
-    hierarchical_phase_wire_bytes, hierarchical_reduce_scatter,
-    hierarchical_reduce_scatter_pooled,
+    hierarchical_all_gather, hierarchical_all_gather_pooled, hierarchical_all_gather_range,
+    hierarchical_all_gather_views, hierarchical_allreduce, hierarchical_allreduce_pooled,
+    hierarchical_allreduce_range, hierarchical_allreduce_wire_bytes,
+    hierarchical_phase_wire_bytes, hierarchical_phase_wire_bytes_range,
+    hierarchical_reduce_scatter, hierarchical_reduce_scatter_pooled,
+    hierarchical_reduce_scatter_range, hierarchical_reduce_scatter_views, leader_allreduce,
+    leader_allreduce_wire_bytes,
 };
 pub use half::{
     ring_all_gather_half, ring_all_gather_half_pooled, ring_allreduce_half,
@@ -29,7 +32,8 @@ pub use half::{
     ring_reduce_scatter_half, ring_reduce_scatter_half_pooled,
 };
 pub use reduce_scatter::{
-    chunk_owner, ring_all_gather, ring_all_gather_pooled, ring_chunk_starts,
-    ring_reduce_scatter, ring_reduce_scatter_pooled,
+    chunk_owner, ring_all_gather, ring_all_gather_pooled, ring_all_gather_range,
+    ring_chunk_starts, ring_reduce_scatter, ring_reduce_scatter_pooled,
+    ring_reduce_scatter_range,
 };
 pub use ring::{ring_allreduce, ring_allreduce_avg, ring_allreduce_pooled};

@@ -90,6 +90,66 @@ pub fn ring_reduce_scatter_at(bufs: &mut [Vec<f32>], starts: &[usize]) {
     }
 }
 
+/// Reduce-scatter restricted to the element range `[lo, hi)` of the
+/// *global* ring grid (the grid is still computed from the full buffer
+/// length).  The full `w - 1`-step schedule runs with every chunk clipped
+/// to the range, so each in-range element receives exactly the adds it
+/// would under [`ring_reduce_scatter`], from the same sources, in the
+/// same order — an element's summation order depends only on its
+/// containing chunk, never on which other elements travel with it.
+/// Running this once per bucket over a partition of `[0, n)` is therefore
+/// bitwise identical to one full-vector reduce-scatter (the bucketed
+/// trainer path's bit-identity contract; property-tested).  Elements
+/// outside `[lo, hi)` are untouched.
+pub fn ring_reduce_scatter_range(bufs: &mut [Vec<f32>], lo: usize, hi: usize) {
+    let (w, n) = check_bufs(bufs);
+    assert!(lo <= hi && hi <= n, "bad range {lo}..{hi} for n={n}");
+    if w == 1 || lo == hi {
+        return;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let (clo, chi) = (starts[c].max(lo), starts[c + 1].min(hi));
+            if clo >= chi {
+                continue;
+            }
+            let src = (c + s) % w;
+            let dst = (c + s + 1) % w;
+            let (a, b) = split_two(bufs, src, dst);
+            for i in clo..chi {
+                b[i] += a[i];
+            }
+        }
+    }
+}
+
+/// All-gather restricted to the element range `[lo, hi)` of the global
+/// ring grid — the range analogue of [`ring_all_gather`]: pure copies of
+/// the clipped owner chunks, circulated on the full schedule.  Running it
+/// per bucket over a partition of `[0, n)` reproduces the full gather
+/// exactly.
+pub fn ring_all_gather_range(bufs: &mut [Vec<f32>], lo: usize, hi: usize) {
+    let (w, n) = check_bufs(bufs);
+    assert!(lo <= hi && hi <= n, "bad range {lo}..{hi} for n={n}");
+    if w == 1 || lo == hi {
+        return;
+    }
+    let starts = ring_chunk_starts(w, n);
+    for s in 0..w - 1 {
+        for c in 0..w {
+            let (clo, chi) = (starts[c].max(lo), starts[c + 1].min(hi));
+            if clo >= chi {
+                continue;
+            }
+            let src = (c + w - 1 + s) % w;
+            let dst = (c + w + s) % w;
+            let (a, b) = split_two(bufs, src, dst);
+            b[clo..chi].copy_from_slice(&a[clo..chi]);
+        }
+    }
+}
+
 /// All-gather on the default ring grid: assumes each chunk's final value
 /// sits at its [`chunk_owner`] (the reduce-scatter postcondition) and
 /// circulates it until every buffer holds every chunk.
@@ -224,19 +284,21 @@ fn carve<'a>(
     }
 }
 
-/// Borrow two distinct workers' buffers mutably.
-pub(crate) fn split_two(
-    bufs: &mut [Vec<f32>],
+/// Borrow two distinct workers' buffers mutably.  Generic over the buffer
+/// representation (`Vec<f32>` for whole buffers, `&mut [f32]` for the
+/// bucket views the DAG-scheduled step pre-carves).
+pub(crate) fn split_two<B: AsRef<[f32]> + AsMut<[f32]>>(
+    bufs: &mut [B],
     src: usize,
     dst: usize,
 ) -> (&[f32], &mut [f32]) {
     assert_ne!(src, dst);
     if src < dst {
         let (l, r) = bufs.split_at_mut(dst);
-        (&l[src], &mut r[0])
+        (l[src].as_ref(), r[0].as_mut())
     } else {
         let (l, r) = bufs.split_at_mut(src);
-        (&r[0], &mut l[dst])
+        (r[0].as_ref(), l[dst].as_mut())
     }
 }
 
@@ -331,5 +393,60 @@ mod tests {
     fn bad_partition_rejected() {
         let mut bufs = vec![vec![0.0f32; 8]; 2];
         ring_reduce_scatter_at(&mut bufs, &[0, 9, 8]);
+    }
+
+    #[test]
+    fn range_sweep_equals_full_reduce_scatter() {
+        // reducing bucket by bucket over any partition of [0, n) must be
+        // bitwise identical to one full-vector reduce-scatter
+        for (w, n, cuts) in [
+            (2, 10, vec![0, 4, 10]),
+            (3, 4099, vec![0, 1, 4096, 4099]),
+            (4, 64, vec![0, 64]),
+            (8, 30011, vec![0, 5000, 5000, 16384, 30011]),
+            (5, 17, vec![0, 3, 9, 12, 17]),
+        ] {
+            let template = random_bufs(w, n, (w * 131 + n) as u64);
+            let mut full = template.clone();
+            let mut bucketed = template;
+            ring_reduce_scatter(&mut full);
+            for b in cuts.windows(2) {
+                ring_reduce_scatter_range(&mut bucketed, b[0], b[1]);
+            }
+            assert_eq!(full, bucketed, "w={w} n={n} cuts={cuts:?}");
+        }
+    }
+
+    #[test]
+    fn range_sweep_equals_full_all_gather() {
+        for (w, n, cuts) in [
+            (2, 10, vec![0, 7, 10]),
+            (4, 4099, vec![0, 1024, 4099]),
+            (8, 30011, vec![0, 11, 4096, 30011]),
+        ] {
+            let template = random_bufs(w, n, (w * 17 + n) as u64);
+            let mut full = template.clone();
+            let mut bucketed = template;
+            ring_reduce_scatter(&mut full);
+            bucketed.clone_from(&full);
+            ring_all_gather(&mut full);
+            for b in cuts.windows(2) {
+                ring_all_gather_range(&mut bucketed, b[0], b[1]);
+            }
+            assert_eq!(full, bucketed, "w={w} n={n} cuts={cuts:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_ranges_are_noops() {
+        let template = random_bufs(3, 100, 9);
+        let mut bufs = template.clone();
+        ring_reduce_scatter_range(&mut bufs, 40, 40);
+        ring_all_gather_range(&mut bufs, 0, 0);
+        assert_eq!(bufs, template);
+        let mut single = random_bufs(1, 50, 10);
+        let copy = single.clone();
+        ring_reduce_scatter_range(&mut single, 0, 50);
+        assert_eq!(single, copy);
     }
 }

@@ -68,6 +68,25 @@ pub struct TrainConfig {
     /// dynamic (backoff on overflow, growth after a quiet interval);
     /// overflowed steps are skipped and logged by the Recorder
     pub loss_scale: LossScale,
+    /// bucketed gradient pipeline (native backend): cut the flat gradient
+    /// into ~`bucket_mb` MiB buckets on the shard plan's `NORM_SEG` grid
+    /// and run the step as a comm/compute DAG — communicate bucket `k`
+    /// while digesting bucket `k-1`.  `0` (default) keeps the
+    /// phase-synchronous step.  Exact-bit identical either way
+    /// (DESIGN.md §9)
+    pub bucket_mb: usize,
+    /// with `bucket_mb > 0`: execute the step DAG on the thread pool so
+    /// comm and compute stages actually overlap (`false` runs the same
+    /// DAG serially in declaration order — the reference schedule, useful
+    /// for debugging; results are bit-identical)
+    pub overlap: bool,
+    /// replicated path only: swap the tiered ring allreduce for the
+    /// leader-based hierarchical allreduce (`leader_allreduce`) that the
+    /// `cost::hierarchical_allreduce_shard_aware_time_s` model prices.
+    /// Fewer scarce inter-node hops, but a *different* f32 summation
+    /// order — the trajectory is no longer bit-identical to the flat-ring
+    /// baseline, hence the explicit opt-in (DESIGN.md §9)
+    pub relaxed_collectives: bool,
     /// per-worker microbatch must equal the artifact's static batch dim
     pub global_batch: usize,
     pub steps: u64,
@@ -205,6 +224,9 @@ impl TrainConfig {
             grad_dtype,
             intra_dtype,
             loss_scale,
+            bucket_mb: doc.usize_or("train", "bucket_mb", 0),
+            overlap: doc.bool_or("train", "overlap", true),
+            relaxed_collectives: doc.bool_or("train", "relaxed_collectives", false),
             global_batch: doc.usize_or("train", "global_batch", 16),
             steps,
             seed: doc.usize_or("train", "seed", 42) as u64,
@@ -283,6 +305,10 @@ mod tests {
         assert_eq!(c.intra_dtype, DType::F32);
         assert_eq!(c.loss_scale, LossScale::Off);
         assert_eq!(c.topology, Topology::flat(4));
+        // pipeline knobs: bucketing off, overlap armed for when it's on
+        assert_eq!(c.bucket_mb, 0);
+        assert!(c.overlap);
+        assert!(!c.relaxed_collectives);
         assert!(c.meta_path.starts_with("/base"));
         assert_eq!(c.data.source, "text");
         match c.schedule {
@@ -341,6 +367,23 @@ mod tests {
             TrainConfig::from_doc(&doc, Path::new(".")).unwrap().loss_scale,
             LossScale::Off
         );
+    }
+
+    #[test]
+    fn pipeline_knobs_parse() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\nbucket_mb = 4\noverlap = false",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert_eq!(c.bucket_mb, 4);
+        assert!(!c.overlap);
+
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\nrelaxed_collectives = true",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().relaxed_collectives);
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! Step-DAG scheduler: the bucketed gradient pipeline.
+//!
+//! One training step is a small dependency graph over gradient *buckets*
+//! cut on the shard plan's `NORM_SEG` grid ([`ShardPlan::bucket_starts`]):
+//!
+//! ```text
+//!   R_0 ──► R_1 ──► R_2 ──► …        comm lane (one wire, in order)
+//!    │       │       │
+//!    ▼       ▼       ▼
+//!   S_0 ──► S_1 ──► S_2 ──► …        compute lane (stitch/unscale)
+//! ```
+//!
+//! `R_k` reduce-scatters (or allreduces) bucket `k`; `S_k` stitches /
+//! unscales it and emits its grad² partials.  `S_k` depends on `R_k` *and*
+//! `S_{k-1}`, so while the wire carries bucket `k`, the CPU digests bucket
+//! `k-1` — the classic DDP overlap, executed here on the persistent
+//! [`ThreadPool`] via a handful of driver tokens.
+//!
+//! Bit-identity contract (DESIGN.md §9): every per-element f32 reduction
+//! runs the *full* ring schedule clipped to the bucket's range, so the
+//! summation order per element is exactly the phase-synchronous ring's;
+//! the per-block grad² f64 folds visit segments in the same global order
+//! as the fused phase-synchronous step.  The bucketed step is therefore
+//! exact-bit equal to the monolithic one for every optimizer × topology ×
+//! wire-dtype combination — overlap changes *when* work runs, never what
+//! it computes (stages mutate disjoint bucket views; the DAG edges order
+//! every read-after-write).
+//!
+//! [`ShardPlan::bucket_starts`]: crate::optim::ShardPlan::bucket_starts
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+
+use crate::collective::{
+    hierarchical_all_gather_views, hierarchical_reduce_scatter_views, ring_chunk_starts,
+};
+use crate::optim::native::unscale_grad_sq_segments;
+use crate::optim::{Optimizer, ParallelExecutor, ShardedOptimizer, StepStats};
+use crate::topology::{TierPrecision, Topology, WireBytes};
+use crate::util::pool::ThreadPool;
+
+// ------------------------------------------------------------ executor ----
+
+struct Stage<'scope> {
+    label: &'static str,
+    deps: Vec<usize>,
+    run: Option<Box<dyn FnOnce() + Send + 'scope>>,
+}
+
+/// A small single-shot dependency graph of stages.  Stage ids are
+/// insertion order and dependencies must point backwards, so insertion
+/// order is always a valid topological order — the serial execution path
+/// (overlap off, width-1 pool, or a single stage) just runs the stages in
+/// the order they were declared, and the overlapped path can never
+/// deadlock on a cycle.
+pub struct StepDag<'scope> {
+    stages: Vec<Stage<'scope>>,
+}
+
+struct Sched {
+    deps_left: Vec<usize>,
+    ready: VecDeque<usize>,
+    done: usize,
+    poisoned: bool,
+}
+
+impl<'scope> StepDag<'scope> {
+    pub fn new() -> StepDag<'scope> {
+        StepDag { stages: Vec::new() }
+    }
+
+    /// Declare a stage that runs after every stage in `deps`.  Returns its
+    /// id for later stages to depend on.
+    pub fn stage<F>(&mut self, label: &'static str, deps: &[usize], f: F) -> usize
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let id = self.stages.len();
+        for &d in deps {
+            assert!(d < id, "stage {label:?} depends on not-yet-declared stage {d}");
+        }
+        self.stages.push(Stage { label, deps: deps.to_vec(), run: Some(Box::new(f)) });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Execute every stage, respecting the declared edges.
+    ///
+    /// With `overlap` off (or a width-1 pool, or fewer than two stages)
+    /// the stages run serially in insertion order on the calling thread —
+    /// the reference schedule.  Otherwise `min(threads, stages)` driver
+    /// tokens go through [`ThreadPool::map_mut`] and greedily claim ready
+    /// stages from a shared queue; dependents are released as their last
+    /// dependency completes.  Results are identical either way — the DAG
+    /// edges order every conflicting access, overlap only changes timing.
+    ///
+    /// A panicking stage poisons the schedule: no new stage starts, every
+    /// driver drains out, and the first panic payload is re-raised on the
+    /// caller once the pool region has closed (mirroring `map_mut`'s own
+    /// containment).  Stage bodies run inside a pool region, so a nested
+    /// `map_mut` from within a stage degrades to the serial path — keep
+    /// stage bodies serial and save the pool for the post-DAG apply.
+    pub fn run(mut self, pool: &ThreadPool, overlap: bool) {
+        let total = self.stages.len();
+        if total == 0 {
+            return;
+        }
+        if !overlap || pool.threads() <= 1 || total <= 1 {
+            for st in self.stages.iter_mut() {
+                match st.run.take() {
+                    Some(f) => f(),
+                    None => panic!("stage {:?} ran twice", st.label),
+                }
+            }
+            return;
+        }
+
+        let deps_left: Vec<usize> = self.stages.iter().map(|s| s.deps.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); total];
+        for (id, s) in self.stages.iter().enumerate() {
+            for &d in &s.deps {
+                dependents[d].push(id);
+            }
+        }
+        let ready: VecDeque<usize> = (0..total).filter(|&i| deps_left[i] == 0).collect();
+        assert!(!ready.is_empty(), "no root stage");
+        let runs: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 'scope>>>> = self
+            .stages
+            .iter_mut()
+            .map(|s| Mutex::new(s.run.take()))
+            .collect();
+        let sched = Mutex::new(Sched { deps_left, ready, done: 0, poisoned: false });
+        let cv = Condvar::new();
+        let payload: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
+
+        let width = pool.threads().min(total);
+        let mut tokens: Vec<usize> = (0..width).collect();
+        pool.map_mut(&mut tokens, |_| loop {
+            // claim a ready stage, or wait for one to be released
+            let id = {
+                let mut s = sched.lock().unwrap();
+                loop {
+                    if s.poisoned || s.done == total {
+                        break None;
+                    }
+                    if let Some(id) = s.ready.pop_front() {
+                        break Some(id);
+                    }
+                    s = cv.wait(s).unwrap();
+                }
+            };
+            let Some(id) = id else {
+                cv.notify_all();
+                return;
+            };
+            let f = runs[id].lock().unwrap().take().expect("stage scheduled twice");
+            match catch_unwind(AssertUnwindSafe(f)) {
+                Ok(()) => {
+                    let mut s = sched.lock().unwrap();
+                    s.done += 1;
+                    for &d in &dependents[id] {
+                        s.deps_left[d] -= 1;
+                        if s.deps_left[d] == 0 {
+                            s.ready.push_back(d);
+                        }
+                    }
+                }
+                Err(p) => {
+                    let mut slot = payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                    sched.lock().unwrap().poisoned = true;
+                }
+            }
+            cv.notify_all();
+        });
+
+        if let Some(p) = payload.into_inner().unwrap() {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Default for StepDag<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------- bucket view carve ----
+
+/// Split every worker buffer into per-bucket `&mut` views: `result[k]` is
+/// bucket `k`'s view of each worker, behind a lock so the comm stage
+/// (mutating all workers' bucket `k`) and the compute stage (reading it
+/// one DAG edge later) can hand the borrows across driver threads.  The
+/// views of distinct buckets are disjoint slices of the same buffers —
+/// the aliasing the phase-synchronous path never needed, carved here once
+/// so the stages themselves stay safe code.
+type BucketViews<'a> = Vec<Mutex<Option<Vec<&'a mut [f32]>>>>;
+
+fn carve_buckets<'a>(bufs: &'a mut [Vec<f32>], cuts: &[usize]) -> BucketViews<'a> {
+    let nb = cuts.len() - 1;
+    let mut per_bucket: Vec<Vec<&'a mut [f32]>> =
+        (0..nb).map(|_| Vec::with_capacity(bufs.len())).collect();
+    for buf in bufs.iter_mut() {
+        let mut rest: &mut [f32] = buf;
+        for (k, w) in cuts.windows(2).enumerate() {
+            let (head, tail) = rest.split_at_mut(w[1] - w[0]);
+            per_bucket[k].push(head);
+            rest = tail;
+        }
+        assert!(rest.is_empty(), "bucket cuts must cover the whole buffer");
+    }
+    per_bucket.into_iter().map(|v| Mutex::new(Some(v))).collect()
+}
+
+fn check_cuts(cuts: &[usize], n: usize) {
+    assert!(
+        cuts.len() >= 2 && cuts[0] == 0 && *cuts.last().unwrap() == n,
+        "bucket cuts {cuts:?} must partition 0..{n}"
+    );
+    assert!(cuts.windows(2).all(|w| w[0] < w[1]), "bucket cuts must increase");
+}
+
+// ----------------------------------------------------- sharded pipeline ----
+
+/// The bucketed ZeRO-1 step: per bucket, reduce-scatter on the wire
+/// (tiered, per-tier precision) then stitch into the shards' scratch
+/// gradients with the mean/unscale factor folded in — comm of bucket `k`
+/// overlapped with the stitch of bucket `k-1` — and finally one
+/// [`ShardedOptimizer::apply_bucketed`] for the probe and phases B/C.
+///
+/// Exact-bit equal to `hierarchical_reduce_scatter_pooled` +
+/// [`ShardedOptimizer::step_scattered`]/`_scaled` on the same buffers:
+/// each bucket runs the full ring schedule clipped to its range, and the
+/// grad² fold order matches the fused phase-synchronous region.  Returns
+/// `None` (step skipped, no state touched) iff `probe` finds a non-finite
+/// grad² — buckets already communicated leave no trace in the moments.
+#[allow(clippy::too_many_arguments)]
+pub fn sharded_bucketed_step(
+    so: &mut ShardedOptimizer,
+    pool: &ThreadPool,
+    params: &mut [f32],
+    bufs: &mut [Vec<f32>],
+    cuts: &[usize],
+    scale: f32,
+    lr: f32,
+    probe: bool,
+    topo: &Topology,
+    prec: TierPrecision,
+    overlap: bool,
+) -> (Option<StepStats>, WireBytes) {
+    let w = bufs.len();
+    assert!(w > 0, "no worker buffers");
+    let n = bufs[0].len();
+    check_cuts(cuts, n);
+    let nb = cuts.len() - 1;
+    let topo = *topo;
+    let ring = ring_chunk_starts(w, n);
+    let needs_g2 = so.bucketed_needs_g2(probe);
+    so.begin_bucketed();
+
+    let slots = carve_buckets(bufs, cuts);
+    let parts: Vec<Mutex<Vec<Vec<(usize, Vec<f64>)>>>> =
+        (0..nb).map(|_| Mutex::new(Vec::new())).collect();
+    let wire = Mutex::new(WireBytes::default());
+    {
+        let so_cell = Mutex::new(&mut *so);
+        let (so_cell, ring, wire) = (&so_cell, &ring, &wire);
+        let mut dag = StepDag::new();
+        let mut prev_comm: Vec<usize> = Vec::new();
+        let mut prev_stitch: Option<usize> = None;
+        for k in 0..nb {
+            let (lo, hi) = (cuts[k], cuts[k + 1]);
+            let slot = &slots[k];
+            let comm = dag.stage("reduce_scatter", &prev_comm, move || {
+                let mut views = slot.lock().unwrap().take().expect("bucket views taken");
+                let b = hierarchical_reduce_scatter_views(&mut views, n, lo, &topo, prec);
+                *wire.lock().unwrap() += b;
+                *slot.lock().unwrap() = Some(views);
+            });
+            let parts_k = &parts[k];
+            let deps: Vec<usize> = prev_stitch.into_iter().chain([comm]).collect();
+            let stitch = dag.stage("stitch", &deps, move || {
+                let views = slot.lock().unwrap().take().expect("bucket views taken");
+                let shared: Vec<&[f32]> = views.iter().map(|v| &**v).collect();
+                let p = so_cell
+                    .lock()
+                    .unwrap()
+                    .stitch_bucket(&shared, ring, lo, hi, scale, needs_g2);
+                *parts_k.lock().unwrap() = p;
+            });
+            prev_comm = vec![comm];
+            prev_stitch = Some(stitch);
+        }
+        dag.run(pool, overlap);
+    }
+    drop(slots);
+
+    let parts: Vec<Vec<Vec<(usize, Vec<f64>)>>> =
+        parts.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    let stats = so.apply_bucketed(pool, params, lr, probe, &parts);
+    (stats, wire.into_inner().unwrap())
+}
+
+// -------------------------------------------------- replicated pipeline ----
+
+/// The bucketed replicated step: per bucket, a full allreduce
+/// (reduce-scatter + all-gather on the clipped ring schedule) overlapped
+/// with the unscale / grad²-probe sweep of the previous bucket, then one
+/// [`Optimizer::step_prefolded`] (probed path) or
+/// [`ParallelExecutor::step`] (plain path) on the assembled mean
+/// gradient in `bufs[0]`.
+///
+/// Exact-bit equal to `hierarchical_allreduce_pooled` + the trainer's
+/// replicated update for every optimizer: the probed fold visits grad²
+/// segments in the same global order as `unscale_probe_pooled` (bucket
+/// cuts sit on the `NORM_SEG` grid, so no segment straddles a cut), and
+/// optimizers that discard the fold get it discarded here too.  Returns
+/// `None` iff `probe` finds a non-finite grad².
+#[allow(clippy::too_many_arguments)]
+pub fn replicated_bucketed_step(
+    opt: &mut dyn Optimizer,
+    exec: &ParallelExecutor,
+    params: &mut [f32],
+    bufs: &mut [Vec<f32>],
+    cuts: &[usize],
+    scale: f32,
+    lr: f32,
+    probe: bool,
+    topo: &Topology,
+    prec: TierPrecision,
+    overlap: bool,
+) -> (Option<StepStats>, WireBytes) {
+    let w = bufs.len();
+    assert!(w > 0, "no worker buffers");
+    let n = bufs[0].len();
+    check_cuts(cuts, n);
+    let nb = cuts.len() - 1;
+    let topo = *topo;
+    // block geometry for the per-bucket probe sweep (cuts are grid points,
+    // so every block piece starts on a NORM_SEG segment boundary)
+    let blocks: Vec<(usize, usize)> =
+        opt.blocks().blocks.iter().map(|b| (b.offset, b.len)).collect();
+    let nblocks = blocks.len();
+
+    let slots = carve_buckets(bufs, cuts);
+    let parts: Vec<Mutex<Vec<(usize, Vec<f64>)>>> =
+        (0..nb).map(|_| Mutex::new(Vec::new())).collect();
+    let wire = Mutex::new(WireBytes::default());
+    {
+        let (blocks, wire) = (&blocks, &wire);
+        let mut dag = StepDag::new();
+        let mut prev_comm: Vec<usize> = Vec::new();
+        let mut prev_sweep: Option<usize> = None;
+        for k in 0..nb {
+            let (lo, hi) = (cuts[k], cuts[k + 1]);
+            let slot = &slots[k];
+            let comm = dag.stage("allreduce", &prev_comm, move || {
+                let mut views = slot.lock().unwrap().take().expect("bucket views taken");
+                let b = hierarchical_reduce_scatter_views(&mut views, n, lo, &topo, prec)
+                    + hierarchical_all_gather_views(&mut views, n, lo, &topo, prec);
+                *wire.lock().unwrap() += b;
+                *slot.lock().unwrap() = Some(views);
+            });
+            let parts_k = &parts[k];
+            let deps: Vec<usize> = prev_sweep.into_iter().chain([comm]).collect();
+            let sweep = dag.stage("unscale", &deps, move || {
+                let mut views = slot.lock().unwrap().take().expect("bucket views taken");
+                let mine = &mut views[0];
+                if probe {
+                    let mut out = Vec::new();
+                    for (bi, &(off, len)) in blocks.iter().enumerate() {
+                        let (plo, phi) = (off.max(lo), (off + len).min(hi));
+                        if plo >= phi {
+                            continue;
+                        }
+                        let mut ps = Vec::new();
+                        unscale_grad_sq_segments(&mut mine[plo - lo..phi - lo], scale, |p| {
+                            ps.push(p)
+                        });
+                        out.push((bi, ps));
+                    }
+                    *parts_k.lock().unwrap() = out;
+                } else {
+                    for g in mine.iter_mut() {
+                        *g *= scale;
+                    }
+                }
+                *slot.lock().unwrap() = Some(views);
+            });
+            prev_comm = vec![comm];
+            prev_sweep = Some(sweep);
+        }
+        dag.run(exec.pool(), overlap);
+    }
+    drop(slots);
+    let wire = wire.into_inner().unwrap();
+
+    if probe {
+        // fold bucket-major: each block's segments land in increasing
+        // global order, the exact `unscale_probe_pooled` fold
+        let mut g2 = vec![0.0f64; nblocks];
+        for bucket in &parts {
+            for (bi, ps) in bucket.lock().unwrap().iter() {
+                for p in ps {
+                    g2[*bi] += p;
+                }
+            }
+        }
+        if !g2.iter().all(|x| x.is_finite()) {
+            return (None, wire);
+        }
+        let grad = std::mem::take(&mut bufs[0]);
+        let stats = opt.step_prefolded(exec.pool(), params, &grad, lr, g2);
+        (Some(stats), wire)
+    } else {
+        let grad = std::mem::take(&mut bufs[0]);
+        let stats = exec.step(opt, params, &grad, lr);
+        (Some(stats), wire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_run_preserves_insertion_order() {
+        let log = Mutex::new(Vec::new());
+        let mut dag = StepDag::new();
+        let a = dag.stage("a", &[], || log.lock().unwrap().push(0));
+        let b = dag.stage("b", &[a], || log.lock().unwrap().push(1));
+        dag.stage("c", &[a, b], || log.lock().unwrap().push(2));
+        dag.run(&ThreadPool::new(1), true);
+        assert_eq!(log.into_inner().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn overlapped_run_respects_every_edge() {
+        // a diamond fan per "bucket": comm lane chained, compute depends
+        // on its comm and the previous compute — the trainer's shape
+        let pool = ThreadPool::new(4);
+        for _ in 0..50 {
+            let n = 6;
+            let done: Vec<AtomicUsize> = (0..2 * n).map(|_| AtomicUsize::new(0)).collect();
+            let order = Mutex::new(Vec::new());
+            {
+                let (done, order) = (&done, &order);
+                let mut dag = StepDag::new();
+                let mut prev_comm: Vec<usize> = Vec::new();
+                let mut prev_compute: Option<usize> = None;
+                for k in 0..n {
+                    let comm = dag.stage("comm", &prev_comm, move || {
+                        done[k].store(1, Ordering::SeqCst);
+                        order.lock().unwrap().push(k);
+                    });
+                    let deps: Vec<usize> = prev_compute.into_iter().chain([comm]).collect();
+                    let compute = dag.stage("compute", &deps, move || {
+                        // our comm and the previous compute must be done
+                        assert_eq!(done[k].load(Ordering::SeqCst), 1);
+                        if k > 0 {
+                            assert_eq!(done[n + k - 1].load(Ordering::SeqCst), 1);
+                        }
+                        done[n + k].store(1, Ordering::SeqCst);
+                        order.lock().unwrap().push(n + k);
+                    });
+                    prev_comm = vec![comm];
+                    prev_compute = Some(compute);
+                }
+                dag.run(&pool, true);
+            }
+            let ran = order.into_inner().unwrap();
+            assert_eq!(ran.len(), 2 * n, "every stage ran exactly once");
+        }
+    }
+
+    #[test]
+    fn overlap_off_is_the_serial_schedule() {
+        let log = Mutex::new(Vec::new());
+        let mut dag = StepDag::new();
+        for i in 0..5 {
+            let deps: Vec<usize> = if i == 0 { vec![] } else { vec![i - 1] };
+            let log = &log;
+            dag.stage("s", &deps, move || log.lock().unwrap().push(i));
+        }
+        dag.run(&ThreadPool::new(8), false);
+        assert_eq!(log.into_inner().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn panicking_stage_reaches_the_caller_and_blocks_dependents() {
+        let pool = ThreadPool::new(4);
+        let ran_dependent = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let ran = &ran_dependent;
+            let mut dag = StepDag::new();
+            let a = dag.stage("boom", &[], || panic!("stage-boom"));
+            dag.stage("after", &[a], move || {
+                ran.store(1, Ordering::SeqCst);
+            });
+            dag.run(&pool, true);
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_owned)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("stage-boom"), "payload lost: {msg:?}");
+        assert_eq!(ran_dependent.load(Ordering::SeqCst), 0, "dependent must not run");
+        // the pool must still be serviceable after the poisoned region
+        let mut items: Vec<usize> = (0..8).collect();
+        let out = pool.map_mut(&mut items, |x| *x + 1);
+        assert_eq!(out, (1..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_dag_is_a_noop() {
+        StepDag::new().run(&ThreadPool::new(4), true);
+    }
+
+    #[test]
+    fn carve_buckets_covers_and_is_disjoint() {
+        let mut bufs = vec![(0..10).map(|x| x as f32).collect::<Vec<f32>>(); 3];
+        let cuts = [0usize, 4, 10];
+        let slots = carve_buckets(&mut bufs, &cuts);
+        assert_eq!(slots.len(), 2);
+        {
+            let mut b0 = slots[0].lock().unwrap().take().unwrap();
+            let b1 = slots[1].lock().unwrap().take().unwrap();
+            assert_eq!(b0.len(), 3);
+            assert_eq!(b0[0], &[0.0, 1.0, 2.0, 3.0]);
+            assert_eq!(b1[2], &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+            b0[1][0] = 99.0;
+        }
+        drop(slots);
+        assert_eq!(bufs[1][0], 99.0);
+    }
+}

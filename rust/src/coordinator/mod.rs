@@ -1,10 +1,12 @@
 //! L3 coordinator: leader/worker topology, gradient accumulation, the
 //! synchronous data-parallel step loop, and the data-source plumbing.
 
+pub mod dag;
 pub mod source;
 pub mod trainer;
 pub mod worker;
 
+pub use dag::{replicated_bucketed_step, sharded_bucketed_step, StepDag};
 pub use source::DataSource;
 pub use trainer::{TrainReport, TrainStatus, Trainer};
 pub use worker::{WorkerCmd, WorkerHandle, WorkerReply};

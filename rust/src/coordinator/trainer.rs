@@ -16,17 +16,20 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::collective::{hierarchical_allreduce_pooled, hierarchical_reduce_scatter_pooled};
+use crate::collective::{
+    hierarchical_allreduce_pooled, hierarchical_reduce_scatter_pooled, leader_allreduce,
+};
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::Recorder;
 use crate::optim::{
-    make_optimizer, BlockTable, Optimizer, ParallelExecutor, ShardedOptimizer,
+    make_optimizer, BlockTable, Optimizer, ParallelExecutor, ShardPlan, ShardedOptimizer,
 };
 use crate::precision::scaler::LOSS_SCALE_TENSOR;
 use crate::precision::DynamicLossScaler;
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
 use crate::topology::{TierPrecision, WireBytes};
 
+use super::dag::{replicated_bucketed_step, sharded_bucketed_step};
 use super::source::DataSource;
 use super::worker::{WorkerCmd, WorkerHandle, WorkerReply};
 
@@ -139,6 +142,29 @@ impl Trainer {
         let tier_prec = TierPrecision { intra: cfg.intra_dtype, inter: cfg.grad_dtype };
         if let Err(e) = tier_prec.validate() {
             bail!("bad intra_dtype/grad_dtype combination: {e}");
+        }
+        if cfg.bucket_mb > 0 && cfg.backend != OptBackend::Native {
+            bail!(
+                "bucket_mb requires the native backend (the HLO optimizer \
+                 artifacts have no bucketed step form)"
+            );
+        }
+        if cfg.relaxed_collectives {
+            if cfg.shard_optimizer {
+                bail!(
+                    "relaxed_collectives applies to the replicated path only \
+                     (the sharded step consumes the ring reduce-scatter layout)"
+                );
+            }
+            if cfg.bucket_mb > 0 {
+                bail!("relaxed_collectives and bucket_mb are mutually exclusive");
+            }
+            if tier_prec.any_half() {
+                bail!(
+                    "relaxed_collectives is fp32-only (leader_allreduce has no \
+                     half-wire form); clear grad_dtype/intra_dtype"
+                );
+            }
         }
 
         let table = Arc::new(BlockTable::from_meta(&runtime.meta));
@@ -276,6 +302,13 @@ impl Trainer {
         let topo = cfg.topology;
         let prec = TierPrecision { intra: cfg.intra_dtype, inter: cfg.grad_dtype };
         let mut wire_bytes = WireBytes::default();
+        // bucketed pipeline: fixed cuts on the NORM_SEG grid, computed once
+        // (validated native-backend-only at construction).  The same cuts
+        // drive every step so the DAG shape is stable across the run.
+        let bucket_cuts: Option<Vec<usize>> = (cfg.bucket_mb > 0).then(|| {
+            let target = cfg.bucket_mb * (1 << 20) / std::mem::size_of::<f32>();
+            ShardPlan::bucket_starts(&self.table, target)
+        });
         let mut scaler: Option<DynamicLossScaler> = cfg.loss_scale.build();
         if let (Some(sc), Some(t)) = (scaler.as_mut(), resume_loss_scale.as_ref()) {
             sc.import_tensor(t).with_context(|| {
@@ -339,35 +372,96 @@ impl Trainer {
                 // accumulation, 2-byte inter-node chunks under a half
                 // `grad_dtype`); the stitch's mean factor then also folds
                 // the loss-scale unscale — exact for power-of-two scales.
-                wire_bytes +=
-                    hierarchical_reduce_scatter_pooled(&mut bufs, &topo, prec, exec.pool());
-                if scaled {
-                    let inv_eff = inv * (1.0 / scale_s);
-                    so.step_scattered_scaled(
+                if let Some(cuts) = &bucket_cuts {
+                    // bucketed pipeline: reduce-scatter bucket k on the wire
+                    // while stitching bucket k-1 — bit-identical to the
+                    // phase-synchronous branch below (DESIGN.md §9)
+                    let scale = if scaled { inv * (1.0 / scale_s) } else { inv };
+                    let (stats, wb) = sharded_bucketed_step(
+                        so,
                         exec.pool(),
                         &mut flat_params,
-                        &bufs,
-                        inv_eff,
+                        &mut bufs,
+                        cuts,
+                        scale,
                         lr as f32,
-                    )
-                    .map(|stats| {
+                        scaled,
+                        &topo,
+                        prec,
+                        cfg.overlap,
+                    );
+                    wire_bytes += wb;
+                    stats.map(|stats| {
                         self.table.unflatten_into(&flat_params, &mut params);
                         (stats.grad_norm, stats.mean_trust_ratio)
                     })
                 } else {
-                    let stats = so.step_scattered(
+                    wire_bytes += hierarchical_reduce_scatter_pooled(
+                        &mut bufs,
+                        &topo,
+                        prec,
                         exec.pool(),
-                        &mut flat_params,
-                        &bufs,
-                        inv,
-                        lr as f32,
                     );
-                    self.table.unflatten_into(&flat_params, &mut params);
-                    Some((stats.grad_norm, stats.mean_trust_ratio))
+                    if scaled {
+                        let inv_eff = inv * (1.0 / scale_s);
+                        so.step_scattered_scaled(
+                            exec.pool(),
+                            &mut flat_params,
+                            &bufs,
+                            inv_eff,
+                            lr as f32,
+                        )
+                        .map(|stats| {
+                            self.table.unflatten_into(&flat_params, &mut params);
+                            (stats.grad_norm, stats.mean_trust_ratio)
+                        })
+                    } else {
+                        let stats = so.step_scattered(
+                            exec.pool(),
+                            &mut flat_params,
+                            &bufs,
+                            inv,
+                            lr as f32,
+                        );
+                        self.table.unflatten_into(&flat_params, &mut params);
+                        Some((stats.grad_norm, stats.mean_trust_ratio))
+                    }
                 }
+            } else if let Some(cuts) = &bucket_cuts {
+                // replicated bucketed pipeline (native backend, validated):
+                // per-bucket allreduce overlapped with the unscale/probe
+                // sweep, then one prefolded optimizer step on bufs[0]
+                let scale = if scaled { inv * (1.0 / scale_s) } else { inv };
+                let opt = native_opt.as_mut().unwrap();
+                let (stats, wb) = replicated_bucketed_step(
+                    opt.as_mut(),
+                    &exec,
+                    &mut flat_params,
+                    &mut bufs,
+                    cuts,
+                    scale,
+                    lr as f32,
+                    scaled,
+                    &topo,
+                    prec,
+                    cfg.overlap,
+                );
+                wire_bytes += wb;
+                stats.map(|stats| {
+                    self.table.unflatten_into(&flat_params, &mut params);
+                    (stats.grad_norm, stats.mean_trust_ratio)
+                })
             } else {
-                // replicated path: tiered ring allreduce (sum), then mean
-                wire_bytes += hierarchical_allreduce_pooled(&mut bufs, &topo, prec, exec.pool());
+                // replicated path: tiered ring allreduce (sum), then mean.
+                // relaxed_collectives swaps in the leader-based hierarchical
+                // allreduce — fewer inter-node hops (the shard-aware cost
+                // model's schedule), different f32 summation order, hence
+                // the explicit opt-in (fp32-only, validated)
+                wire_bytes += if cfg.relaxed_collectives {
+                    leader_allreduce(&mut bufs, &topo)
+                } else {
+                    hierarchical_allreduce_pooled(&mut bufs, &topo, prec, exec.pool())
+                };
                 let mut grad = std::mem::take(&mut bufs[0]);
                 match cfg.backend {
                     OptBackend::Native if scaled => {
@@ -444,24 +538,27 @@ impl Trainer {
                     }
                 }
                 None => {
-                    // overflow: the batch is spent, the update is not
-                    match scaler.as_mut() {
+                    // overflow: the batch is spent, the update is not.  The
+                    // diagnostic rides on the record (and the TSV `note`
+                    // column) so skip forensics survive without stderr.
+                    let note = match scaler.as_mut() {
                         Some(sc) => {
                             sc.update(true);
-                            eprintln!(
-                                "step {t:>6}  gradient overflow at loss scale \
-                                 {scale_s} — step skipped, scale -> {}",
+                            format!(
+                                "gradient overflow at loss scale {scale_s} — \
+                                 step skipped, scale -> {}",
                                 sc.scale()
-                            );
+                            )
                         }
-                        None => eprintln!(
-                            "step {t:>6}  gradient overflow on the {} wire — \
-                             step skipped (no loss scaler configured; consider \
-                             loss_scale = \"dynamic\")",
+                        None => format!(
+                            "gradient overflow on the {} wire — step skipped \
+                             (no loss scaler configured; consider loss_scale \
+                             = \"dynamic\")",
                             cfg.grad_dtype.name()
                         ),
-                    }
-                    recorder.push_skipped(t, lr, loss, tokens_per_step, scale_s as f64);
+                    };
+                    recorder.push_skipped(t, lr, loss, tokens_per_step, scale_s as f64, &note);
+                    eprintln!("step {t:>6}  {note}");
                 }
             }
             steps_run = t;

@@ -24,6 +24,10 @@ pub struct StepRecord {
     /// true when the update was skipped (gradient overflow under loss
     /// scaling) — the data was still consumed, the parameters untouched
     pub skipped: bool,
+    /// skip diagnostic ("overflow at loss scale 2^15, scale -> 16384");
+    /// empty for applied steps.  Lands in the TSV `note` column so a run's
+    /// skip history survives in the curve file, not just on stderr.
+    pub note: String,
 }
 
 /// Loss-curve recorder with EMA smoothing and divergence detection.
@@ -80,7 +84,9 @@ impl Recorder {
 
     /// Record a *skipped* step: the gradient overflowed under loss scaling
     /// and the update was dropped.  The batch was still consumed (tokens
-    /// advance), grad norm / trust ratio are not meaningful (NaN).
+    /// advance), grad norm / trust ratio are not meaningful (NaN).  The
+    /// `note` diagnostic is persisted on the record (and in the TSV) so
+    /// skip forensics do not depend on captured stderr.
     pub fn push_skipped(
         &mut self,
         step: u64,
@@ -88,9 +94,13 @@ impl Recorder {
         loss: f64,
         tokens: u64,
         loss_scale: f64,
+        note: &str,
     ) -> &StepRecord {
         self.skipped += 1;
-        self.push_record(step, lr, loss, f64::NAN, f64::NAN, tokens, loss_scale, true)
+        let r =
+            self.push_record(step, lr, loss, f64::NAN, f64::NAN, tokens, loss_scale, true);
+        r.note = note.to_string();
+        &*r
     }
 
     /// Updates skipped so far (overflow under loss scaling).
@@ -109,7 +119,7 @@ impl Recorder {
         tokens: u64,
         loss_scale: f64,
         skipped: bool,
-    ) -> &StepRecord {
+    ) -> &mut StepRecord {
         self.tokens_seen += tokens;
         if self.initial_loss.is_none() {
             self.initial_loss = Some(loss);
@@ -131,8 +141,9 @@ impl Recorder {
             wall_s: self.start.elapsed().as_secs_f64(),
             loss_scale,
             skipped,
+            note: String::new(),
         });
-        self.records.last().unwrap()
+        self.records.last_mut().unwrap()
     }
 
     pub fn last_loss(&self) -> Option<f64> {
@@ -161,8 +172,8 @@ impl Recorder {
     }
 
     /// Write the curve as TSV (step, lr, loss, ema, grad_norm, trust, tokens,
-    /// wall seconds, loss scale, skipped flag) — consumed by EXPERIMENTS.md
-    /// plots.
+    /// wall seconds, loss scale, skipped flag, skip note) — consumed by
+    /// EXPERIMENTS.md plots.
     pub fn write_tsv(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).ok();
@@ -172,12 +183,14 @@ impl Recorder {
         writeln!(
             f,
             "step\tlr\tloss\tloss_ema\tgrad_norm\ttrust_ratio\ttokens\twall_s\
-             \tloss_scale\tskipped"
+             \tloss_scale\tskipped\tnote"
         )?;
         for r in &self.records {
+            // the note is free text: keep the row parseable
+            let note = r.note.replace(['\t', '\n'], " ");
             writeln!(
                 f,
-                "{}\t{:.6e}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3}\t{}\t{}",
+                "{}\t{:.6e}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3}\t{}\t{}\t{}",
                 r.step,
                 r.lr,
                 r.loss,
@@ -187,7 +200,8 @@ impl Recorder {
                 r.tokens,
                 r.wall_s,
                 r.loss_scale,
-                r.skipped as u8
+                r.skipped as u8,
+                note
             )?;
         }
         Ok(())
@@ -232,8 +246,27 @@ mod tests {
         let body = std::fs::read_to_string(&p).unwrap();
         assert!(body.starts_with("step\t"));
         let header = body.lines().next().unwrap();
-        assert!(header.ends_with("loss_scale\tskipped"), "header: {header}");
+        assert!(header.ends_with("loss_scale\tskipped\tnote"), "header: {header}");
         assert_eq!(body.lines().count(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn skip_notes_land_in_the_tsv() {
+        let mut r = Recorder::new(0.5);
+        r.push_scaled(1, 0.01, 5.0, 1.0, 1.0, 64, 65536.0);
+        r.push_skipped(2, 0.01, 5.1, 64, 65536.0, "overflow\tat scale 65536");
+        assert_eq!(r.records[1].note, "overflow\tat scale 65536");
+        assert!(r.records[0].note.is_empty());
+        let p = std::env::temp_dir().join("lans_test_metrics_note.tsv");
+        r.write_tsv(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        let skipped_row = body.lines().nth(2).unwrap();
+        // tabs inside the note are flattened so the column count is stable
+        assert_eq!(skipped_row.split('\t').count(), 11, "row: {skipped_row}");
+        assert!(skipped_row.ends_with("overflow at scale 65536"), "row: {skipped_row}");
+        let applied_row = body.lines().nth(1).unwrap();
+        assert_eq!(applied_row.split('\t').count(), 11, "row: {applied_row}");
         std::fs::remove_file(&p).ok();
     }
 
@@ -241,7 +274,7 @@ mod tests {
     fn skipped_steps_are_counted_and_flagged() {
         let mut r = Recorder::new(0.5);
         r.push_scaled(1, 0.01, 5.0, 1.0, 1.0, 64, 65536.0);
-        r.push_skipped(2, 0.01, 5.1, 64, 65536.0);
+        r.push_skipped(2, 0.01, 5.1, 64, 65536.0, "overflow");
         r.push_scaled(3, 0.01, 4.9, 1.0, 1.0, 64, 32768.0);
         assert_eq!(r.skipped_steps(), 1);
         assert!(!r.records[0].skipped);

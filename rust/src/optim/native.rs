@@ -156,6 +156,27 @@ pub trait Optimizer: Send {
         Some(self.step_parallel(pool, params, grads, lr))
     }
 
+    /// Step with the per-block grad² already folded by the caller (the
+    /// bucketed/overlapped replicated path computes it during its
+    /// per-bucket unscale stages, in the canonical segment order).  The
+    /// default discards it and runs [`step_parallel`] — exactly what the
+    /// default [`step_scaled`](Optimizer::step_scaled) does with its
+    /// probe's fold, so optimizers without an override (LAMB, SGD) stay
+    /// bit-identical to the phase-synchronous path.  LANS and AdamW
+    /// override it to feed the fold into their engines, mirroring their
+    /// `step_scaled` overrides.
+    fn step_prefolded(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        block_g2: Vec<f64>,
+    ) -> StepStats {
+        let _ = block_g2;
+        self.step_parallel(pool, params, grads, lr)
+    }
+
     fn blocks(&self) -> &BlockTable;
 }
 
@@ -398,6 +419,17 @@ impl Optimizer for Lans {
     ) -> Option<StepStats> {
         let g2 = super::parallel::unscale_probe_pooled(pool, &self.table, grads, inv_scale)?;
         Some(super::parallel::lans_step_with_g2(self, pool, params, grads, lr, g2))
+    }
+
+    fn step_prefolded(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        block_g2: Vec<f64>,
+    ) -> StepStats {
+        super::parallel::lans_step_with_g2(self, pool, params, grads, lr, block_g2)
     }
 }
 
@@ -700,6 +732,17 @@ impl Optimizer for AdamW {
             lr,
             Some(g2),
         ))
+    }
+
+    fn step_prefolded(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+        block_g2: Vec<f64>,
+    ) -> StepStats {
+        super::parallel::adamw_step_parallel_g2(self, pool, params, grads, lr, Some(block_g2))
     }
 }
 

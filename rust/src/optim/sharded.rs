@@ -78,19 +78,7 @@ impl ShardPlan {
     pub fn build(table: &BlockTable, workers: usize) -> ShardPlan {
         assert!(workers > 0, "no workers");
         let n = table.total;
-        // candidate cut points: block starts/ends + the in-block grid
-        let mut points: Vec<usize> = vec![0];
-        for b in &table.blocks {
-            let end = b.offset + b.len;
-            let mut p = b.offset + Self::ALIGN;
-            while p < end {
-                points.push(p);
-                p += Self::ALIGN;
-            }
-            if end > *points.last().unwrap() {
-                points.push(end);
-            }
-        }
+        let points = Self::grid_points(table);
 
         let mut starts = Vec::with_capacity(workers + 1);
         starts.push(0usize);
@@ -121,6 +109,47 @@ impl ShardPlan {
             .map(|s| Self::fragments_for(table, starts[s], starts[s + 1]))
             .collect();
         ShardPlan { starts, frags }
+    }
+
+    /// Candidate cut points of the block-local [`Self::ALIGN`] grid —
+    /// block starts, in-block grid multiples and block ends — shared by
+    /// [`Self::build`] and [`Self::bucket_starts`] so shard and bucket
+    /// boundaries snap to one grid and no norm segment is ever split.
+    fn grid_points(table: &BlockTable) -> Vec<usize> {
+        let mut points: Vec<usize> = vec![0];
+        for b in &table.blocks {
+            let end = b.offset + b.len;
+            let mut p = b.offset + Self::ALIGN;
+            while p < end {
+                points.push(p);
+                p += Self::ALIGN;
+            }
+            if end > *points.last().unwrap() {
+                points.push(end);
+            }
+        }
+        points
+    }
+
+    /// Bucket boundaries for the DAG-overlapped step: a partition of
+    /// `[0, total)` on the same block-local [`Self::ALIGN`] grid shard
+    /// boundaries use, greedily cutting at the first grid point at least
+    /// `target_elems` past the previous cut (the last bucket takes the
+    /// remainder).  `target_elems == 0` — overlap off — or at least the
+    /// table yields the single full-vector bucket.
+    pub fn bucket_starts(table: &BlockTable, target_elems: usize) -> Vec<usize> {
+        let n = table.total;
+        if target_elems == 0 || target_elems >= n {
+            return vec![0, n];
+        }
+        let mut out = vec![0usize];
+        for p in Self::grid_points(table) {
+            if p < n && p - out.last().unwrap() >= target_elems {
+                out.push(p);
+            }
+        }
+        out.push(n);
+        out
     }
 
     /// The degenerate block-granularity plan: one shard per block — the
@@ -231,15 +260,35 @@ pub(crate) fn stitch_range(
     scale: f32,
     out: &mut [f32],
 ) {
+    let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    stitch_range_views(&views, 0, ring, lo, hi, scale, out);
+}
+
+/// [`stitch_range`] reading from per-worker bucket views instead of whole
+/// buffers: `views[i]` is worker `i`'s slice of the global element range
+/// `[view_lo, ...)`, and the stitched range `[lo, hi)` must fall inside
+/// it.  The DAG-overlapped step hands each bucket's pre-carved views to
+/// its stitch stage so communication of another bucket can run
+/// concurrently on the same underlying buffers.
+pub(crate) fn stitch_range_views(
+    views: &[&[f32]],
+    view_lo: usize,
+    ring: &[usize],
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), hi - lo);
-    let w = bufs.len();
+    let w = views.len();
     let mut cursor = 0usize;
     for c in 0..w {
         let (clo, chi) = (ring[c].max(lo), ring[c + 1].min(hi));
         if clo < chi {
             let owner = chunk_owner(c, w);
-            for (o, &x) in
-                out[cursor..cursor + (chi - clo)].iter_mut().zip(&bufs[owner][clo..chi])
+            for (o, &x) in out[cursor..cursor + (chi - clo)]
+                .iter_mut()
+                .zip(&views[owner][clo - view_lo..chi - view_lo])
             {
                 *o = x * scale;
             }
@@ -789,6 +838,133 @@ impl ShardedOptimizer {
         Some(segmented_step(algo, &cx, self.hp, table, eff, &mut tasks, precomputed))
     }
 
+    /// Whether the bucketed step's stitch stages must emit grad² partials:
+    /// LANS reads them in phase A, and a probed (loss-scaled) step needs
+    /// them for overflow detection — mirrors
+    /// [`step_scattered`](Self::step_scattered)'s fused region.
+    pub(crate) fn bucketed_needs_g2(&self, probe: bool) -> bool {
+        probe || self.algo == Algo::Lans
+    }
+
+    /// Size every shard's stitched-gradient scratch for a bucketed step
+    /// (the per-bucket [`Self::stitch_bucket`] calls then fill disjoint
+    /// ranges of it).
+    pub(crate) fn begin_bucketed(&mut self) {
+        let plan = &self.plan;
+        for (s, st) in self.shards.iter_mut().enumerate() {
+            st.grad.resize(plan.len_of(s), 0.0);
+        }
+    }
+
+    /// Stitch bucket `[lo, hi)` of the mean gradient into every shard's
+    /// scratch (at the shard-local offset) from the bucket's
+    /// reduce-scattered per-worker views, and return each shard's grad²
+    /// segment partials for its bucket-clipped fragments (empty unless
+    /// `needs_g2`).  Bucket cuts sit on the [`ShardPlan::ALIGN`] grid, so
+    /// every clipped fragment still starts on a segment boundary inside
+    /// its block: concatenating one shard's partials over buckets in
+    /// order reproduces [`frag_grad_sq_parts`] over its full fragment
+    /// list exactly — the fold [`Self::apply_bucketed`] relies on.
+    pub(crate) fn stitch_bucket(
+        &mut self,
+        views: &[&[f32]],
+        ring: &[usize],
+        lo: usize,
+        hi: usize,
+        scale: f32,
+        needs_g2: bool,
+    ) -> Vec<Vec<(usize, Vec<f64>)>> {
+        let plan = &self.plan;
+        self.shards
+            .iter_mut()
+            .enumerate()
+            .map(|(s, st)| {
+                let (plo, phi) = (plan.starts[s].max(lo), plan.starts[s + 1].min(hi));
+                if plo >= phi {
+                    return Vec::new();
+                }
+                let base = plan.starts[s];
+                debug_assert_eq!(st.grad.len(), plan.len_of(s), "begin_bucketed not called");
+                stitch_range_views(
+                    views,
+                    lo,
+                    ring,
+                    plo,
+                    phi,
+                    scale,
+                    &mut st.grad[plo - base..phi - base],
+                );
+                if !needs_g2 {
+                    return Vec::new();
+                }
+                let clipped: Vec<Fragment> = plan
+                    .fragments(s)
+                    .iter()
+                    .filter_map(|f| {
+                        let flo = f.start.max(plo);
+                        let fhi = (f.start + f.len).min(phi);
+                        (flo < fhi)
+                            .then_some(Fragment { block: f.block, start: flo, len: fhi - flo })
+                    })
+                    .collect();
+                frag_grad_sq_parts(&st.grad, base, &clipped)
+            })
+            .collect()
+    }
+
+    /// Finish a bucketed step once every bucket is communicated and
+    /// stitched: fold the per-bucket grad² partials in shard-major,
+    /// bucket-minor order (= global segment order, the phase-synchronous
+    /// fold), probe for overflow if requested (returning `None` *before*
+    /// any shard state or the bias-correction clock is touched — buckets
+    /// already communicated leave no trace in the moments), then run
+    /// phases B/C on the assembled scratch gradients.  Bit-identical to
+    /// [`step_scattered`](Self::step_scattered)/`_scaled` on the same
+    /// buffers by construction.
+    pub(crate) fn apply_bucketed(
+        &mut self,
+        pool: &ThreadPool,
+        params: &mut [f32],
+        lr: f32,
+        probe: bool,
+        parts_per_bucket: &[Vec<Vec<(usize, Vec<f64>)>>],
+    ) -> Option<StepStats> {
+        let w = self.plan.workers();
+        let n = self.table.total;
+        assert_eq!(params.len(), n, "params do not match block table");
+        let algo = self.algo;
+        let g2 = self.bucketed_needs_g2(probe).then(|| {
+            let mut g2 = vec![0.0f64; self.table.blocks.len()];
+            for s in 0..w {
+                for bucket in parts_per_bucket {
+                    for (b, ps) in &bucket[s] {
+                        for p in ps {
+                            g2[*b] += p;
+                        }
+                    }
+                }
+            }
+            g2
+        });
+        if probe {
+            let finite = g2.as_ref().is_some_and(|v| v.iter().all(|x| x.is_finite()));
+            if !finite {
+                return None;
+            }
+        }
+        self.t += 1;
+        let cx = AdamCtx::new(self.hp, self.t as i32, lr);
+        let precomputed = if algo == Algo::Lans { g2 } else { None };
+        let serial = ThreadPool::new(1);
+        let eff = if pool.threads() <= 1 || w < 2 || n / w < policy::POOLED_MIN_ELEMS {
+            &serial
+        } else {
+            pool
+        };
+        let mut tasks = build_shard_tasks(&self.plan, &mut self.shards, params, None);
+        Some(segmented_step(algo, &cx, self.hp, &self.table, eff, &mut tasks, precomputed))
+    }
+
     /// Serialize per-shard moments as named tensors (`optshard:m:<s>` /
     /// `optshard:v:<s>`) for embedding in a [`Checkpoint`].  Cached
     /// directions are scratch and are not persisted.
@@ -1236,6 +1412,133 @@ mod tests {
         let t = big_table();
         for name in ["adamw", "adamw_bgn", "msgd", "nag", "zilch"] {
             assert!(ShardedOptimizer::from_name(name, t.clone(), Hyper::default(), 2).is_none());
+        }
+    }
+
+    #[test]
+    fn bucket_starts_partition_on_the_grid() {
+        let t = big_table();
+        for target in [1usize, 100, 4096, 5000, 16384] {
+            let cuts = ShardPlan::bucket_starts(&t, target);
+            assert_eq!(*cuts.first().unwrap(), 0, "target={target}");
+            assert_eq!(*cuts.last().unwrap(), t.total, "target={target}");
+            assert!(cuts.windows(2).all(|p| p[0] < p[1]), "target={target}: {cuts:?}");
+            // every interior cut is a grid point: aligned within its block
+            for &c in &cuts[1..cuts.len() - 1] {
+                let b = t
+                    .blocks
+                    .iter()
+                    .find(|b| b.offset <= c && c <= b.offset + b.len)
+                    .expect("cut outside all blocks");
+                assert!(
+                    (c - b.offset) % ShardPlan::ALIGN == 0 || c == b.offset + b.len,
+                    "cut {c} off-grid"
+                );
+            }
+            // buckets meet the target except possibly the last
+            for pair in cuts.windows(2).rev().skip(1) {
+                assert!(pair[1] - pair[0] >= target, "target={target}: {cuts:?}");
+            }
+        }
+        // degenerate targets: one full-vector bucket
+        assert_eq!(ShardPlan::bucket_starts(&t, 0), vec![0, t.total]);
+        assert_eq!(ShardPlan::bucket_starts(&t, t.total + 1), vec![0, t.total]);
+    }
+
+    #[test]
+    fn bucketed_stitch_and_apply_match_step_scattered() {
+        // the sharded half of the tentpole, composed serially (no DAG):
+        // per-bucket range reduce-scatter + stitch_bucket, one
+        // apply_bucketed — bitwise equal to the phase-synchronous
+        // step_scattered_scaled, and the skip path leaves communicated
+        // buckets' moments untouched
+        use crate::collective::reduce_scatter::{
+            ring_reduce_scatter, ring_reduce_scatter_range,
+        };
+        let table = big_table();
+        let mut rng = Rng::new(71);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let pool = ThreadPool::new(4);
+        let (w, hp) = (4usize, Hyper::default());
+        let cuts = ShardPlan::bucket_starts(&table, 4096);
+        assert!(cuts.len() > 3, "want several buckets: {cuts:?}");
+        for name in ["lans", "lamb"] {
+            let mut sync = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut buck = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut xs = x0.clone();
+            let mut xb = x0.clone();
+            let ring = ring_chunk_starts(w, table.total);
+            for k in 0..2 {
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                    .collect();
+                let scale = 1.0 / w as f32;
+                let lr = 0.01 + 0.002 * k as f32;
+
+                let mut rs_sync = bufs.clone();
+                ring_reduce_scatter(&mut rs_sync);
+                let ss = sync
+                    .step_scattered_scaled(&pool, &mut xs, &rs_sync, scale, lr)
+                    .unwrap();
+
+                let mut rs_buck = bufs;
+                buck.begin_bucketed();
+                let needs_g2 = buck.bucketed_needs_g2(true);
+                let mut parts = Vec::new();
+                for b in cuts.windows(2) {
+                    ring_reduce_scatter_range(&mut rs_buck, b[0], b[1]);
+                    let views: Vec<&[f32]> =
+                        rs_buck.iter().map(|v| &v[b[0]..b[1]]).collect();
+                    parts.push(buck.stitch_bucket(&views, &ring, b[0], b[1], scale, needs_g2));
+                }
+                let sb = buck.apply_bucketed(&pool, &mut xb, lr, true, &parts).unwrap();
+                assert_eq!(ss.grad_norm, sb.grad_norm, "{name} k={k}");
+                assert_eq!(ss.mean_trust_ratio, sb.mean_trust_ratio, "{name} k={k}");
+                assert_eq!(xs, xb, "{name} k={k}: bucketed trajectory diverged");
+            }
+
+            // overflow in the *last* bucket, detected after every other
+            // bucket has already been communicated and stitched: the probe
+            // still skips before any moment or the clock is touched
+            let mut bufs: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+            .collect();
+            let last = table.total - 1;
+            // the poisoned element must sit where the stitch reads it: the
+            // owner of the last ring chunk
+            bufs[chunk_owner(w - 1, w)][last] = f32::INFINITY;
+            buck.begin_bucketed();
+            let mut parts = Vec::new();
+            for b in cuts.windows(2) {
+                ring_reduce_scatter_range(&mut bufs, b[0], b[1]);
+                let views: Vec<&[f32]> = bufs.iter().map(|v| &v[b[0]..b[1]]).collect();
+                parts.push(buck.stitch_bucket(&views, &ring, b[0], b[1], 0.25, true));
+            }
+            let t_before = buck.steps_taken();
+            assert!(
+                buck.apply_bucketed(&pool, &mut xb, 0.01, true, &parts).is_none(),
+                "{name}: overflow must skip"
+            );
+            assert_eq!(t_before, buck.steps_taken(), "{name}: skip advanced the clock");
+            assert_eq!(xs, xb, "{name}: skipped bucketed step touched params");
+            // both walk on identically after the skip
+            let bufs: Vec<Vec<f32>> = (0..w)
+                .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut rs_sync = bufs.clone();
+            ring_reduce_scatter(&mut rs_sync);
+            let scale = 1.0 / w as f32;
+            sync.step_scattered_scaled(&pool, &mut xs, &rs_sync, scale, 0.02).unwrap();
+            let mut rs_buck = bufs;
+            buck.begin_bucketed();
+            let mut parts = Vec::new();
+            for b in cuts.windows(2) {
+                ring_reduce_scatter_range(&mut rs_buck, b[0], b[1]);
+                let views: Vec<&[f32]> = rs_buck.iter().map(|v| &v[b[0]..b[1]]).collect();
+                parts.push(buck.stitch_bucket(&views, &ring, b[0], b[1], scale, true));
+            }
+            buck.apply_bucketed(&pool, &mut xb, 0.02, true, &parts).unwrap();
+            assert_eq!(xs, xb, "{name}: post-skip trajectory diverged");
         }
     }
 }

@@ -33,6 +33,9 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         grad_dtype: DType::F32,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 16,
         steps: 2,
         seed: 1,

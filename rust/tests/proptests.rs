@@ -12,10 +12,12 @@ use lans::collective::{
     ring_allreduce_half_pooled, ring_allreduce_pooled, ring_reduce_scatter,
     ring_reduce_scatter_half, ring_reduce_scatter_half_pooled, ring_reduce_scatter_pooled,
 };
+use lans::coordinator::{replicated_bucketed_step, sharded_bucketed_step};
 use lans::data::{make_shards, WithReplacementSampler};
 use lans::optim::schedule::{from_ratios, sqrt_scaled_lr, Schedule};
 use lans::optim::{
-    make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ShardPlan, ShardedOptimizer,
+    make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ParallelExecutor, ShardPlan,
+    ShardedOptimizer,
 };
 use lans::precision::DType;
 use lans::topology::{TierPrecision, Topology};
@@ -1019,5 +1021,348 @@ fn prop_json_never_panics_on_garbage() {
             .collect();
         let s = String::from_utf8_lossy(&bytes).into_owned();
         let _ = Json::parse(&s); // must return, not panic
+    });
+}
+
+// ---------------------------------------------------------------------------
+// bucketed step-DAG properties (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+/// A random wire-precision config: mostly fp32, plus half inter tiers and
+/// a uniform half wire — the trainer's full precision surface.
+fn random_prec(rng: &mut Rng) -> TierPrecision {
+    match rng.below(6) {
+        0 | 1 => TierPrecision::fp32(),
+        2 => TierPrecision::half_inter(DType::Bf16),
+        3 => TierPrecision::half_inter(DType::F16),
+        4 => TierPrecision::uniform(DType::Bf16),
+        _ => TierPrecision::uniform(DType::F16),
+    }
+}
+
+/// A random bucket grid for `table`: sometimes the single-bucket
+/// degenerate cut, otherwise a small target so several NORM_SEG grid
+/// points become cuts.
+fn random_cuts(rng: &mut Rng, table: &BlockTable) -> Vec<usize> {
+    let target = if rng.next_f64() < 0.25 {
+        0
+    } else {
+        1 + rng.below_usize(2 * ShardPlan::ALIGN)
+    };
+    ShardPlan::bucket_starts(table, target)
+}
+
+#[test]
+fn prop_bucketed_sharded_step_exact_bit_equals_phase_sync() {
+    // the tentpole contract, ZeRO-1 side: the bucketed step DAG — comm of
+    // bucket k overlapped with the stitch of bucket k-1 — walks exactly
+    // the phase-synchronous trajectory (params, stats, executed wire
+    // bytes), across optimizers × topologies × wire precisions × bucket
+    // grids, probed and unprobed, overlap on and off
+    for_cases(10, |seed, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(9000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let n = table.total;
+        let w = [1usize, 2, 4, 8][rng.below_usize(4)];
+        let topos = factorizations(w);
+        let topo = topos[rng.below_usize(topos.len())];
+        let prec = random_prec(rng);
+        let pool = ThreadPool::new(2 + rng.below_usize(6));
+        let cuts = random_cuts(rng, &table);
+        let probe = seed % 2 == 1;
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb"] {
+            let hp = Hyper::default();
+            let mut o_ref = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut o_ser = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut o_ovl = ShardedOptimizer::from_name(name, table.clone(), hp, w).unwrap();
+            let mut x_ref = x0.clone();
+            let mut x_ser = x0.clone();
+            let mut x_ovl = x0.clone();
+            for k in 0..2u32 {
+                // loss-scaled worker buffers when probing (small powers of
+                // two so a half wire rarely saturates; when it does, both
+                // paths must skip identically)
+                let ls = if probe { 2.0f32.powi(1 + rng.below(5) as i32) } else { 1.0 };
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..n).map(|_| rng.normal_f32() * ls).collect())
+                    .collect();
+                let scale = 1.0 / (w as f32 * ls);
+                let lr = 0.005 + 0.004 * k as f32;
+
+                // phase-synchronous reference: tiered reduce-scatter, then
+                // the fused scattered step (probed or not)
+                let mut r = bufs.clone();
+                hierarchical_reduce_scatter(&mut r, &topo, prec);
+                let s_ref = if probe {
+                    o_ref.step_scattered_scaled(&pool, &mut x_ref, &r, scale, lr)
+                } else {
+                    Some(o_ref.step_scattered(&pool, &mut x_ref, &r, scale, lr))
+                };
+
+                let analytic = hierarchical_phase_wire_bytes(&topo, n, prec, false);
+                for (arm, o, x, overlap) in [
+                    ("serial", &mut o_ser, &mut x_ser, false),
+                    ("overlap", &mut o_ovl, &mut x_ovl, true),
+                ] {
+                    let mut b = bufs.clone();
+                    let (s_b, wb) = sharded_bucketed_step(
+                        o, &pool, x, &mut b, &cuts, scale, lr, probe, &topo, prec, overlap,
+                    );
+                    assert_eq!(wb, analytic, "{name}/{arm} {topo}: wire bytes");
+                    match (&s_ref, &s_b) {
+                        (Some(a), Some(bs)) => {
+                            assert_eq!(a.grad_norm, bs.grad_norm, "{name}/{arm} {topo}");
+                            assert_eq!(
+                                a.mean_trust_ratio, bs.mean_trust_ratio,
+                                "{name}/{arm} {topo}"
+                            );
+                            assert_eq!(a.max_abs_param, bs.max_abs_param, "{name}/{arm} {topo}");
+                        }
+                        (None, None) => {}
+                        _ => panic!("{name}/{arm} {topo}: skip decision diverged"),
+                    }
+                    assert_eq!(
+                        &x_ref, &*x,
+                        "{name}/{arm} (w={w}, {topo}, buckets={}): params diverged",
+                        cuts.len() - 1
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bucketed_replicated_step_exact_bit_equals_phase_sync() {
+    // the tentpole contract, replicated side: per-bucket allreduce
+    // overlapped with the previous bucket's unscale/probe sweep, one
+    // prefolded step at the end — bit-identical to tiered allreduce + the
+    // trainer's replicated update, for optimizers that feed the probe's
+    // grad² into the step (lans, adamw, adamw_bgn) and ones that discard
+    // it (lamb)
+    for_cases(10, |seed, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(9000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let n = table.total;
+        let w = [1usize, 2, 4, 8][rng.below_usize(4)];
+        let topos = factorizations(w);
+        let topo = topos[rng.below_usize(topos.len())];
+        let prec = random_prec(rng);
+        let exec = ParallelExecutor::new(2 + rng.below_usize(6));
+        let cuts = random_cuts(rng, &table);
+        let probe = seed % 2 == 1;
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+        for name in ["lans", "lamb", "adamw", "adamw_bgn"] {
+            let hp = Hyper::default();
+            let mut o_ref = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut o_ser = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut o_ovl = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut x_ref = x0.clone();
+            let mut x_ser = x0.clone();
+            let mut x_ovl = x0.clone();
+            for k in 0..2u32 {
+                let ls = if probe { 2.0f32.powi(1 + rng.below(5) as i32) } else { 1.0 };
+                let bufs: Vec<Vec<f32>> = (0..w)
+                    .map(|_| (0..n).map(|_| rng.normal_f32() * ls).collect())
+                    .collect();
+                let scale = 1.0 / (w as f32 * ls);
+                let lr = 0.005 + 0.004 * k as f32;
+
+                // phase-synchronous reference: tiered allreduce, then the
+                // trainer's replicated update — the probed step_scaled, or
+                // the executor step on the scaled mean gradient
+                let mut r = bufs.clone();
+                hierarchical_allreduce(&mut r, &topo, prec);
+                let mut grad = std::mem::take(&mut r[0]);
+                let s_ref = if probe {
+                    o_ref.step_scaled(exec.pool(), &mut x_ref, &mut grad, lr, scale)
+                } else {
+                    for g in grad.iter_mut() {
+                        *g *= scale;
+                    }
+                    Some(exec.step(o_ref.as_mut(), &mut x_ref, &grad, lr))
+                };
+
+                let analytic = hierarchical_allreduce_wire_bytes(&topo, n, prec);
+                for (arm, o, x, overlap) in [
+                    ("serial", &mut o_ser, &mut x_ser, false),
+                    ("overlap", &mut o_ovl, &mut x_ovl, true),
+                ] {
+                    let mut b = bufs.clone();
+                    let (s_b, wb) = replicated_bucketed_step(
+                        o.as_mut(),
+                        &exec,
+                        x,
+                        &mut b,
+                        &cuts,
+                        scale,
+                        lr,
+                        probe,
+                        &topo,
+                        prec,
+                        overlap,
+                    );
+                    assert_eq!(wb, analytic, "{name}/{arm} {topo}: wire bytes");
+                    match (&s_ref, &s_b) {
+                        (Some(a), Some(bs)) => {
+                            assert_eq!(a.grad_norm, bs.grad_norm, "{name}/{arm} {topo}");
+                            assert_eq!(
+                                a.mean_trust_ratio, bs.mean_trust_ratio,
+                                "{name}/{arm} {topo}"
+                            );
+                            assert_eq!(a.max_abs_param, bs.max_abs_param, "{name}/{arm} {topo}");
+                        }
+                        (None, None) => {}
+                        _ => panic!("{name}/{arm} {topo}: skip decision diverged"),
+                    }
+                    assert_eq!(
+                        &x_ref, &*x,
+                        "{name}/{arm} (w={w}, {topo}, buckets={}): params diverged",
+                        cuts.len() - 1
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bucketed_step_skips_on_overflow_and_leaves_state_untouched() {
+    // the DAG pipeline's probe: a poisoned worker buffer turns the whole
+    // bucketed step into a skip — params, moments and the step clock all
+    // untouched, buckets already communicated leave no trace — and the
+    // next clean step continues exactly the never-poisoned trajectory
+    for_cases(12, |seed, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(6000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let n = table.total;
+        let w = 1 + rng.below_usize(6);
+        let topo = Topology::flat(w);
+        let prec = TierPrecision::fp32();
+        let pool = ThreadPool::new(2 + rng.below_usize(6));
+        let exec = ParallelExecutor::new(2 + rng.below_usize(6));
+        let overlap = seed % 2 == 0;
+        let cuts = random_cuts(rng, &table);
+        let scale = 1.0 / (w as f32 * 2.0);
+        let poison = if seed % 2 == 0 { f32::INFINITY } else { f32::NAN };
+        let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let fresh = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            (0..w)
+                .map(|_| (0..n).map(|_| rng.normal_f32() * 2.0).collect())
+                .collect()
+        };
+
+        // ZeRO-1 pipeline
+        let hp = Hyper::default();
+        let mut clean = ShardedOptimizer::from_name("lans", table.clone(), hp, w).unwrap();
+        let mut poked = ShardedOptimizer::from_name("lans", table.clone(), hp, w).unwrap();
+        let mut xc = x0.clone();
+        let mut xk = x0.clone();
+        let bufs = fresh(rng);
+        let mut b = bufs.clone();
+        sharded_bucketed_step(
+            &mut clean, &pool, &mut xc, &mut b, &cuts, scale, 0.01, true, &topo, prec, overlap,
+        )
+        .0
+        .expect("clean setup step skipped");
+        let mut b = bufs;
+        sharded_bucketed_step(
+            &mut poked, &pool, &mut xk, &mut b, &cuts, scale, 0.01, true, &topo, prec, overlap,
+        )
+        .0
+        .expect("clean setup step skipped");
+        assert_eq!(xc, xk, "sharded setup step diverged");
+
+        let mut bad = fresh(rng);
+        bad[rng.below_usize(w)][rng.below_usize(n)] = poison;
+        let before = xk.clone();
+        let t_before = poked.steps_taken();
+        let (st, _) = sharded_bucketed_step(
+            &mut poked, &pool, &mut xk, &mut bad, &cuts, scale, 0.01, true, &topo, prec, overlap,
+        );
+        assert!(st.is_none(), "sharded: poisoned buffer not detected");
+        assert_eq!(before, xk, "sharded: skipped step touched params");
+        assert_eq!(t_before, poked.steps_taken(), "sharded: skip advanced the clock");
+
+        let bufs = fresh(rng);
+        let mut b = bufs.clone();
+        let sc = sharded_bucketed_step(
+            &mut clean, &pool, &mut xc, &mut b, &cuts, scale, 0.02, true, &topo, prec, overlap,
+        )
+        .0
+        .unwrap();
+        let mut b = bufs;
+        let sk = sharded_bucketed_step(
+            &mut poked, &pool, &mut xk, &mut b, &cuts, scale, 0.02, true, &topo, prec, overlap,
+        )
+        .0
+        .unwrap();
+        assert_eq!(sc.grad_norm, sk.grad_norm, "sharded post-skip stats");
+        assert_eq!(xc, xk, "sharded: post-skip trajectory diverged");
+
+        // replicated pipeline — an optimizer that consumes the probe's
+        // grad² (lans) and one that discards it (lamb)
+        for name in ["lans", "lamb"] {
+            let mut clean = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut poked = make_optimizer(name, table.clone(), hp).unwrap();
+            let mut xc = x0.clone();
+            let mut xk = x0.clone();
+            let bufs = fresh(rng);
+            let mut b = bufs.clone();
+            replicated_bucketed_step(
+                clean.as_mut(), &exec, &mut xc, &mut b, &cuts, scale, 0.01, true, &topo, prec,
+                overlap,
+            )
+            .0
+            .expect("clean setup step skipped");
+            let mut b = bufs;
+            replicated_bucketed_step(
+                poked.as_mut(), &exec, &mut xk, &mut b, &cuts, scale, 0.01, true, &topo, prec,
+                overlap,
+            )
+            .0
+            .expect("clean setup step skipped");
+            assert_eq!(xc, xk, "{name}: replicated setup step diverged");
+
+            let mut bad = fresh(rng);
+            bad[rng.below_usize(w)][rng.below_usize(n)] = poison;
+            let before = xk.clone();
+            let (st, _) = replicated_bucketed_step(
+                poked.as_mut(), &exec, &mut xk, &mut bad, &cuts, scale, 0.01, true, &topo, prec,
+                overlap,
+            );
+            assert!(st.is_none(), "{name}: poisoned buffer not detected");
+            assert_eq!(before, xk, "{name}: skipped step touched params");
+
+            let bufs = fresh(rng);
+            let mut b = bufs.clone();
+            let sc = replicated_bucketed_step(
+                clean.as_mut(), &exec, &mut xc, &mut b, &cuts, scale, 0.02, true, &topo, prec,
+                overlap,
+            )
+            .0
+            .unwrap();
+            let mut b = bufs;
+            let sk = replicated_bucketed_step(
+                poked.as_mut(), &exec, &mut xk, &mut b, &cuts, scale, 0.02, true, &topo, prec,
+                overlap,
+            )
+            .0
+            .unwrap();
+            assert_eq!(sc.grad_norm, sk.grad_norm, "{name}: post-skip stats");
+            assert_eq!(xc, xk, "{name}: post-skip trajectory diverged");
+        }
     });
 }

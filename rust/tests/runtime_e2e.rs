@@ -162,6 +162,9 @@ fn trainer_loss_decreases_small_run() {
         grad_dtype: DType::F32,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 16,
         steps: 30,
         seed: 1,
@@ -211,6 +214,9 @@ fn trainer_on_declared_topology_keeps_bits_and_accounts_wire() {
         grad_dtype: inter,
         intra_dtype: DType::F32,
         loss_scale: LossScale::Off,
+        bucket_mb: 0,
+        overlap: true,
+        relaxed_collectives: false,
         global_batch: 16,
         steps: 8,
         seed: 3,

@@ -1,11 +1,13 @@
 #!/usr/bin/env python3
-"""Guard against "new bench forgot CI" drift.
+"""Guard against "new bench/example forgot CI" drift.
 
 Every bench registered in rust/Cargo.toml must either be executed by the
 bench-quick CI job (a `cargo bench --bench <name>` line in
 .github/workflows/ci.yml) or appear in the conscious allowlist below.
-The bench-quick job runs this first, so adding a [[bench]] without wiring
-it into CI fails the pipeline instead of rotting silently.
+Likewise every registered [[example]] must either be executed by the
+examples-smoke job (a `cargo run --release --example <name>` line) or be
+allowlisted as build-only.  Both jobs run this first, so adding a target
+without wiring it into CI fails the pipeline instead of rotting silently.
 
 Run from anywhere: paths resolve relative to this file.
 """
@@ -25,27 +27,58 @@ ALLOW_COMPILE_ONLY = {
     "table2_time_model",
 }
 
+# Examples that are full studies/sweeps (minutes of training) — the build
+# job compiles them (bit-rot guard) but examples-smoke does not execute
+# them.  Adding one here is a conscious decision — prefer teaching it a
+# step budget (LANS_SMOKE_STEPS) and executing it in examples-smoke.
+ALLOW_BUILD_ONLY_EXAMPLES = {
+    "calibrate_lr",
+    "finetune",
+    "pretrain_bert",
+    "scaling_study",
+    "schedule_explorer",
+    "variance_study",
+}
 
-def bench_quick_runs(ci: str) -> set[str]:
-    """Bench names actually executed by the bench-quick job: only
-    uncommented lines inside that job's block count (a mention in a YAML
-    comment or another job must not satisfy the guard)."""
-    runs: set[str] = set()
+
+def job_lines(ci: str, job: str):
+    """Uncommented lines inside one top-level job's block (a mention in a
+    YAML comment or another job must not satisfy the guards)."""
     in_job = False
     for line in ci.splitlines():
         stripped = line.strip()
-        if re.fullmatch(r"bench-quick:", stripped) and line.startswith("  "):
+        if re.fullmatch(rf"{re.escape(job)}:", stripped) and line.startswith("  "):
             in_job = True
             continue
-        # a new two-space-indented key ends the bench-quick block
+        # a new two-space-indented key ends the job's block
         if in_job and re.match(r"  \S", line) and not line.startswith("   "):
             in_job = False
-        if not in_job or stripped.startswith("#"):
-            continue
-        m = re.search(r"cargo bench --bench\s+(\S+)", stripped)
+        if in_job and not stripped.startswith("#"):
+            yield stripped
+
+
+def bench_quick_runs(ci: str) -> set[str]:
+    runs: set[str] = set()
+    for line in job_lines(ci, "bench-quick"):
+        m = re.search(r"cargo bench --bench\s+(\S+)", line)
         if m:
             runs.add(m.group(1))
     return runs
+
+
+def example_smoke_runs(ci: str) -> set[str]:
+    runs: set[str] = set()
+    for line in job_lines(ci, "examples-smoke"):
+        m = re.search(r"cargo run (?:--release )?--example\s+(\S+)", line)
+        if m:
+            runs.add(m.group(1))
+    return runs
+
+
+def report_missing(kind: str, missing: list, hint: str) -> None:
+    print(f"check_bench_ci: {kind} registered in rust/Cargo.toml but not executed by CI ({hint}):")
+    for name in missing:
+        print(f"  - {name}")
 
 
 def main() -> int:
@@ -54,39 +87,65 @@ def main() -> int:
     ci = (root / ".github" / "workflows" / "ci.yml").read_text(encoding="utf-8")
 
     registered = re.findall(r'\[\[bench\]\]\s*\nname\s*=\s*"([^"]+)"', cargo)
+    examples = re.findall(r'\[\[example\]\]\s*\nname\s*=\s*"([^"]+)"', cargo)
     if not registered:
         print("check_bench_ci: found no [[bench]] entries — parsing broke?")
+        return 1
+    if not examples:
+        print("check_bench_ci: found no [[example]] entries — parsing broke?")
         return 1
     run_in_ci = bench_quick_runs(ci)
     if not run_in_ci:
         print("check_bench_ci: found no bench runs in the bench-quick job — parsing broke?")
         return 1
-
-    missing = [b for b in registered if b not in run_in_ci and b not in ALLOW_COMPILE_ONLY]
-    stale_allow = sorted(ALLOW_COMPILE_ONLY - set(registered))
+    examples_run = example_smoke_runs(ci)
+    if not examples_run:
+        print("check_bench_ci: found no example runs in the examples-smoke job — parsing broke?")
+        return 1
 
     ok = True
+    missing = [b for b in registered if b not in run_in_ci and b not in ALLOW_COMPILE_ONLY]
     if missing:
         ok = False
-        print(
-            "check_bench_ci: benches registered in rust/Cargo.toml but not "
-            "executed by the bench-quick job (add a `cargo bench --bench "
-            "<name> -- --quick` line to .github/workflows/ci.yml, or "
-            "allowlist consciously in tools/check_bench_ci.py):"
+        report_missing(
+            "benches",
+            missing,
+            "add a `cargo bench --bench <name> -- --quick` line to the bench-quick "
+            "job, or allowlist consciously in tools/check_bench_ci.py",
         )
-        for b in missing:
-            print(f"  - {b}")
+    stale_allow = sorted(ALLOW_COMPILE_ONLY - set(registered))
     if stale_allow:
         ok = False
-        print("check_bench_ci: allowlist entries with no matching [[bench]]:")
+        print("check_bench_ci: bench allowlist entries with no matching [[bench]]:")
         for b in stale_allow:
             print(f"  - {b}")
+
+    ex_missing = [
+        e for e in examples if e not in examples_run and e not in ALLOW_BUILD_ONLY_EXAMPLES
+    ]
+    if ex_missing:
+        ok = False
+        report_missing(
+            "examples",
+            ex_missing,
+            "add a `cargo run --release --example <name>` line to the "
+            "examples-smoke job, or allowlist consciously in tools/check_bench_ci.py",
+        )
+    ex_stale = sorted(ALLOW_BUILD_ONLY_EXAMPLES - set(examples))
+    if ex_stale:
+        ok = False
+        print("check_bench_ci: example allowlist entries with no matching [[example]]:")
+        for e in ex_stale:
+            print(f"  - {e}")
+
     if ok:
         executed = [b for b in registered if b in run_in_ci]
+        ex_executed = [e for e in examples if e in examples_run]
         print(
             f"check_bench_ci: ok — {len(executed)}/{len(registered)} benches "
-            f"run in bench-quick, {len(ALLOW_COMPILE_ONLY)} allowlisted "
-            "compile-only"
+            f"run in bench-quick ({len(ALLOW_COMPILE_ONLY)} compile-only), "
+            f"{len(ex_executed)}/{len(examples)} examples run in examples-smoke "
+            f"({len(ALLOW_BUILD_ONLY_EXAMPLES)} build-only)"
         )
     return 0 if ok else 1
 

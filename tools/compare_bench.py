@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: fresh `--quick` Reporter output vs committed baselines.
+
+The bench-quick CI job runs every hot-path bench with `--quick` (each writes
+`BENCH_<name>.json` via `util::bench::Reporter`), then runs this tool.  For
+every snapshot committed under `BENCH_baseline/` it:
+
+  1. requires the matching fresh `BENCH_<name>.json` to exist (a bench
+     silently dropped from CI fails here, not months later),
+  2. evaluates the baseline's `gate` entries — hand-set bounds on metrics
+     (or `num/den` metric ratios) that are meaningful across machines:
+     speedup floors, analytic byte/time invariants — and fails the job on
+     any violation,
+  3. prints the drift vs the baseline's `observed` snapshot (informational:
+     absolute ms vary with the runner, so they inform but never gate).
+
+Gate entry schema, inside `BENCH_baseline/BENCH_<name>.json`:
+
+    "gate": {
+      "overlap_speedup_b8": {"min": 1.0, "min_threads": 4, "why": "..."},
+      "model_hier_naive_s/model_flat_s": {"max": 1.0}
+    }
+
+`min_threads` skips a bound when the runner has fewer cores than the
+contract needs (mirrors the in-bench thread guards).  After an intentional
+perf change, refresh the `observed` snapshots with:
+
+    python3 tools/compare_bench.py --update
+
+and commit `BENCH_baseline/`.  Gate bounds are deliberate floors — loosen
+them by hand, with the reasoning in the commit message.
+
+Run from anywhere: paths resolve relative to this file; fresh JSON is read
+from $BENCH_OUT_DIR (or the working directory), matching the Reporter.
+"""
+
+import json
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "BENCH_baseline"
+
+
+def fresh_dir() -> pathlib.Path:
+    return pathlib.Path(os.environ.get("BENCH_OUT_DIR", "."))
+
+
+def resolve(expr: str, metrics: dict):
+    """A gate key is a metric name or a `num/den` ratio of two metrics.
+    Returns (value, None) or (None, error-string)."""
+    parts = expr.split("/")
+    if len(parts) not in (1, 2):
+        return None, f"malformed gate expression {expr!r}"
+    vals = []
+    for name in parts:
+        if name not in metrics:
+            return None, f"metric {name!r} missing from fresh output (schema drift?)"
+        v = metrics[name]
+        if not isinstance(v, (int, float)):
+            return None, f"metric {name!r} is not a number: {v!r}"
+        vals.append(float(v))
+    if len(vals) == 1:
+        return vals[0], None
+    if vals[1] == 0.0:
+        return None, f"gate ratio {expr!r} divides by zero"
+    return vals[0] / vals[1], None
+
+
+def check_one(base_path: pathlib.Path, failures: list) -> None:
+    base = json.loads(base_path.read_text(encoding="utf-8"))
+    name = base["bench"]
+    fp = fresh_dir() / f"BENCH_{name}.json"
+    if not fp.exists():
+        failures.append(
+            f"{name}: no fresh {fp} — bench-quick no longer runs this bench "
+            "(restore the run line in .github/workflows/ci.yml or delete the baseline)"
+        )
+        return
+    fresh = json.loads(fp.read_text(encoding="utf-8"))
+    metrics = fresh.get("metrics", {})
+    threads = int(fresh.get("threads_available", 0))
+
+    if bool(fresh.get("quick")) != bool(base.get("quick", True)):
+        print(
+            f"{name}: quick={fresh.get('quick')} does not match the baseline's "
+            f"quick={base.get('quick', True)} — bounds are calibrated for the "
+            "--quick sweep, skipping gates"
+        )
+        return
+
+    for expr, spec in base.get("gate", {}).items():
+        need = int(spec.get("min_threads", 0))
+        if threads < need:
+            print(f"{name}: [{expr}] skipped ({threads} < {need} threads)")
+            continue
+        value, err = resolve(expr, metrics)
+        if err:
+            failures.append(f"{name}: [{expr}] {err}")
+            continue
+        lo, hi = spec.get("min"), spec.get("max")
+        why = f" — {spec['why']}" if "why" in spec else ""
+        if lo is not None and value < float(lo):
+            failures.append(f"{name}: [{expr}] = {value:.4g} below min {lo}{why}")
+        elif hi is not None and value > float(hi):
+            failures.append(f"{name}: [{expr}] = {value:.4g} above max {hi}{why}")
+        else:
+            print(f"{name}: [{expr}] = {value:.4g} ok")
+
+    observed = base.get("observed", {})
+    for k in sorted(set(observed) & set(metrics)):
+        old, new = observed[k], metrics[k]
+        if isinstance(old, (int, float)) and isinstance(new, (int, float)) and old:
+            print(f"{name}: {k}: {old:.4g} -> {new:.4g} ({new / old:+.1%} vs snapshot, info only)")
+
+
+def update() -> int:
+    """Refresh every baseline's `observed` snapshot (and quick flag) from the
+    fresh JSON.  Gate bounds are never touched."""
+    changed = 0
+    for base_path in sorted(BASELINE_DIR.glob("BENCH_*.json")):
+        base = json.loads(base_path.read_text(encoding="utf-8"))
+        fp = fresh_dir() / base_path.name
+        if not fp.exists():
+            print(f"update: skipping {base_path.name} (no fresh run found)")
+            continue
+        fresh = json.loads(fp.read_text(encoding="utf-8"))
+        base["quick"] = bool(fresh.get("quick"))
+        base["observed"] = fresh.get("metrics", {})
+        base_path.write_text(json.dumps(base, indent=2) + "\n", encoding="utf-8")
+        changed += 1
+        print(f"update: refreshed {base_path.name}")
+    print(f"update: {changed} baseline(s) refreshed — review and commit BENCH_baseline/")
+    return 0
+
+
+def main() -> int:
+    if "--update" in sys.argv[1:]:
+        return update()
+    baselines = sorted(BASELINE_DIR.glob("BENCH_*.json"))
+    if not baselines:
+        print("compare_bench: no baselines under BENCH_baseline/ — nothing to gate?")
+        return 1
+    failures: list = []
+    for b in baselines:
+        check_one(b, failures)
+    if failures:
+        print("\ncompare_bench: PERF REGRESSION GATE TRIPPED:")
+        for f in failures:
+            print(f"  - {f}")
+        print(
+            "\nIf the change is intentional: re-run the benches with --quick, then\n"
+            "    python3 tools/compare_bench.py --update\n"
+            "review the refreshed BENCH_baseline/*.json and commit them.  Gate\n"
+            "bounds (min/max) are hand-set contracts — adjust those only with\n"
+            "the reasoning in the commit message."
+        )
+        return 1
+    print(f"\ncompare_bench: ok — {len(baselines)} baseline(s), all gates hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
