@@ -50,6 +50,7 @@ fn main() -> Result<()> {
                 checkpoint: None,
                 resume_from: None,
                 curve_out: None,
+                trace: None,
                 stop_on_divergence: false,
             };
             let mut tr = Trainer::with_engine(cfg, engine.clone())?;

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
             checkpoint: Some(ckpt.clone()),
             resume_from: None,
             curve_out: None,
+            trace: None,
             stop_on_divergence: true,
         };
         let rep = Trainer::with_engine(cfg, engine.clone())?.run()?;
@@ -107,6 +108,7 @@ fn main() -> Result<()> {
         checkpoint: None,
         resume_from: resume,
         curve_out: None,
+        trace: None,
         stop_on_divergence: true,
     };
 

@@ -76,6 +76,7 @@ fn main() -> Result<()> {
         checkpoint: None,
         resume_from: None,
         curve_out: Some("target/mixed_precision_curve.tsv".into()),
+        trace: None,
         stop_on_divergence: true,
     };
 

@@ -65,6 +65,7 @@ fn base_cfg(meta: std::path::PathBuf, topology: Topology, inter: DType, steps: u
         checkpoint: None,
         resume_from: None,
         curve_out: None,
+        trace: None,
         stop_on_divergence: true,
     }
 }
@@ -122,6 +123,9 @@ fn main() -> Result<()> {
     println!("\n=== {topo} | sharded LANS | fp32 intra / bf16 inter wire | {steps} steps ===");
     let mut cfg2 = base_cfg(meta, topo, DType::Bf16, steps);
     cfg2.bucket_mb = 1;
+    // step-trace subsystem: record every span and export a Chrome trace —
+    // CI validates the schema with tools/check_trace.py and uploads it
+    cfg2.trace = Some("target/multi_node_trace.json".into());
     let mut trainer = Trainer::with_engine(cfg2, engine)?;
     let n_params = trainer.meta().param_count;
     let report = trainer.run()?;
@@ -154,5 +158,27 @@ fn main() -> Result<()> {
         "inter-node bytes must shrink by ~gpus_per_node ({shrink:.3})"
     );
     println!("\nexecuted bytes == analytic cost model, inter tier cut {shrink:.2}x ✔");
+
+    // ---- step-trace: the overlapped pipeline must actually hide comm ------
+    let trace_path = std::path::Path::new("target/multi_node_trace.json");
+    assert!(trace_path.exists(), "trace knob set but no Chrome trace written");
+    let avail = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let best_eff = report
+        .recorder
+        .records
+        .iter()
+        .map(|r| r.overlap_eff)
+        .fold(0.0f64, f64::max);
+    println!(
+        "trace written to {} | best per-step overlap efficiency {:.1}% ({avail} threads)",
+        trace_path.display(),
+        best_eff * 100.0
+    );
+    if avail >= 4 {
+        assert!(
+            best_eff > 0.0,
+            "overlap on with {avail} threads but no step hid any comm behind compute"
+        );
+    }
     Ok(())
 }

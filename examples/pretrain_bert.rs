@@ -75,6 +75,7 @@ fn main() -> Result<()> {
         checkpoint: Some(ckpt.clone()),
         resume_from: None,
         curve_out: Some("target/pretrain_phase1.tsv".into()),
+        trace: None,
         stop_on_divergence: true,
     };
     let mut t1 = Trainer::with_engine(cfg1, engine.clone())?;
@@ -131,6 +132,7 @@ fn main() -> Result<()> {
         checkpoint: None,
         resume_from: Some(ckpt),
         curve_out: Some("target/pretrain_phase2.tsv".into()),
+        trace: None,
         stop_on_divergence: true,
     };
     let mut t2 = Trainer::with_engine(cfg2, engine)?;

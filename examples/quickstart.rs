@@ -61,6 +61,7 @@ fn main() -> Result<()> {
         checkpoint: None,
         resume_from: None,
         curve_out: Some("target/quickstart_curve.tsv".into()),
+        trace: None,
         stop_on_divergence: true,
     };
 

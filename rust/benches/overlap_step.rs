@@ -19,14 +19,16 @@
 //! `--quick` (CI smoke): fewer reps, one bucket count, smaller model,
 //! same assertions.  Numbers land in `BENCH_overlap_step.json`.
 
+use lans::cluster::pipelined_overlap_time_s;
 use lans::collective::{
     hierarchical_phase_wire_bytes, hierarchical_phase_wire_bytes_range,
     hierarchical_reduce_scatter, hierarchical_reduce_scatter_views,
 };
 use lans::coordinator::sharded_bucketed_step;
-use lans::optim::{Block, BlockTable, Hyper, ShardPlan, ShardedOptimizer};
+use lans::optim::{BlockTable, Hyper, ShardPlan, ShardedOptimizer};
 use lans::precision::DType;
 use lans::topology::{TierPrecision, Topology, WireBytes};
+use lans::trace;
 use lans::util::bench::{quick_mode, BenchResult, Reporter, Table};
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
@@ -56,13 +58,9 @@ fn prefix_table(min_total: usize) -> BlockTable {
 /// the wire-byte accounting is exercised on ragged bucket boundaries.
 fn lumpy_table() -> BlockTable {
     let lens = [4096 * 3 + 7, 2048, 4096 * 5, 133, 9000, 4096 * 2, 77, 30000];
-    let mut blocks = Vec::new();
-    let mut off = 0usize;
-    for &l in &lens {
-        blocks.push(Block { offset: off, len: l });
-        off += l;
-    }
-    BlockTable { blocks, total: off }
+    let specs: Vec<(String, usize, bool)> =
+        lens.iter().enumerate().map(|(i, &l)| (format!("lump{i}"), l, true)).collect();
+    BlockTable::new(&specs)
 }
 
 fn fresh_bufs(rng: &mut Rng, n: usize) -> Vec<Vec<f32>> {
@@ -307,6 +305,85 @@ fn main() {
     rep.metric("wire_intra_mb", wb_phase.intra as f64 / 1e6);
     rep.metric("wire_inter_mb", wb_phase.inter as f64 / 1e6);
     rep.metric("threads", avail as f64);
+
+    // --- traced calibration: the span timeline against the analytic model ---
+    // A single-purpose process, so the global trace switch is safe to flip:
+    // one serial and one overlapped bucketed step run with spans on, then the
+    // StepTrace aggregates are checked against the wire-byte counters and the
+    // `pipelined_overlap_time_s` prediction (informational).
+    let cuts8 = ShardPlan::bucket_starts(&table, n / 8);
+    let analytic_rs = hierarchical_phase_wire_bytes(&topo, n, prec, false);
+    let mut run_traced = |overlap: bool| {
+        let mut so =
+            ShardedOptimizer::from_name("lans", table.clone(), Hyper::default(), W).unwrap();
+        let mut x = x0.clone();
+        for (d, s) in scratch.iter_mut().zip(&master) {
+            d.copy_from_slice(s);
+        }
+        trace::enable();
+        let t0 = std::time::Instant::now();
+        let (stats, _) = sharded_bucketed_step(
+            &mut so, &pool, &mut x, &mut scratch, &cuts8, scale, LR, false, &topo, prec,
+            overlap,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        trace::disable();
+        assert!(stats.is_some());
+        (trace::collect(1), wall)
+    };
+    let (st_serial, wall_serial) = run_traced(false);
+    let (st_overlap, wall_overlap) = run_traced(true);
+    for (st, label) in [(&st_serial, "serial"), (&st_overlap, "overlapped")] {
+        // per-span wire-byte counters must reproduce the analytic
+        // reduce-scatter volume exactly — the DAG's comm stages all enter
+        // through hierarchical_reduce_scatter_views
+        let span_bytes = st.detail_sum(trace::CAT_COMM, "hier_reduce_scatter_views");
+        assert_eq!(
+            span_bytes,
+            analytic_rs.total(),
+            "{label}: traced wire bytes != analytic reduce-scatter counter"
+        );
+        // stage spans (runs + queue-waits) must tile the scheduler's window:
+        // the DAG keeps at least one stage in flight, so only scheduler
+        // hand-off slack may be uncovered
+        let cov = st.stage_coverage();
+        assert!(cov > 0.80, "{label}: stage spans cover only {cov:.3} of their window");
+    }
+    let eff = st_overlap.overlap_efficiency();
+    rep.metric("overlap_efficiency_b8", eff);
+    let b8 = cuts8.len() - 1;
+    println!("\n=== traced calibration (B={b8}) ===");
+    println!(
+        "serial:     wall {:7.2} ms  comm {:7.2} ms  compute {:7.2} ms  coverage {:.3}",
+        wall_serial * 1e3,
+        st_serial.comm_s() * 1e3,
+        st_serial.compute_s() * 1e3,
+        st_serial.stage_coverage()
+    );
+    println!(
+        "overlapped: wall {:7.2} ms  comm {:7.2} ms  compute {:7.2} ms  overlap_eff {:.3}",
+        wall_overlap * 1e3,
+        st_overlap.comm_s() * 1e3,
+        st_overlap.compute_s() * 1e3,
+        eff
+    );
+    // feed the serial arm's measured phase times to the pipeline model and
+    // compare its prediction with the overlapped wall time (informational:
+    // the model assumes perfectly balanced buckets)
+    let predicted = pipelined_overlap_time_s(st_serial.compute_s(), st_serial.comm_s(), b8);
+    println!(
+        "pipelined_overlap_time_s(measured C/M, B={b8}) = {:.2} ms vs measured {:.2} ms \
+         ({:+.1}%)",
+        predicted * 1e3,
+        wall_overlap * 1e3,
+        (wall_overlap - predicted) / predicted * 100.0
+    );
+    if avail >= 4 {
+        assert!(
+            eff > 0.0,
+            "overlapped DAG on {avail} threads hid no communication under compute"
+        );
+    }
 
     // persist numbers before the acceptance assertions
     rep.write().expect("writing BENCH_overlap_step.json");

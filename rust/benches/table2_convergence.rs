@@ -88,6 +88,7 @@ fn main() {
             curve_out: Some(
                 format!("target/table2_{}_{}x.tsv", opt, mult).into(),
             ),
+            trace: None,
             stop_on_divergence: false,
         };
         let mut tr = Trainer::with_engine(cfg, engine.clone()).expect("trainer");

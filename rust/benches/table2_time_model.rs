@@ -3,15 +3,21 @@
 //! 54-minute number comes from, and the allreduce-vs-sharded collective
 //! comparison (what `shard_optimizer = true` buys on the wire).
 
-use lans::cluster::{table2_runs, ClusterSpec, Phase, Run, BERT_LARGE};
+use lans::cluster::{pipelined_overlap_time_s, table2_runs, ClusterSpec, Phase, Run, BERT_LARGE};
 use lans::collective::cost::{
     flat_gpu_ring_time_s, hierarchical_allreduce_shard_aware_time_s,
     hierarchical_allreduce_time_s, hierarchical_allreduce_time_tiered_s,
     tiered_ring_allreduce_wire_bytes,
 };
 use lans::collective::Collective;
+use lans::coordinator::sharded_bucketed_step;
+use lans::optim::{BlockTable, Hyper, ShardPlan, ShardedOptimizer};
 use lans::precision::DType;
+use lans::topology::{TierPrecision, Topology};
+use lans::trace;
 use lans::util::bench::Table;
+use lans::util::pool::ThreadPool;
+use lans::util::rng::Rng;
 
 fn main() {
     println!("=== Table 2: modeled time-to-train (BERT-Large) ===\n");
@@ -196,5 +202,87 @@ fn main() {
         "algorithmic speedup (same hardware): {:.2}x — the paper's \
          contribution isolated from the TPU→GPU change",
         a / b
+    );
+
+    println!("\n=== bucketed overlap: modeled step time vs bucket count (LANS p1) ===\n");
+    // `step_time_bucketed` at paper scale: the comm term hides behind
+    // compute as the bucket count grows (DESIGN.md §9's pipeline model)
+    let lans_run = &table2_runs()[1];
+    let p = &lans_run.phases[0];
+    let mut t6 = Table::new(&["buckets", "modeled step", "vs B=1"]);
+    let base = lans_run.cluster.step_time_bucketed(
+        &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::ReduceScatterGather, 4.0, 4.0, 1,
+    );
+    for buckets in [1usize, 4, 8, 32] {
+        let s = lans_run.cluster.step_time_bucketed(
+            &BERT_LARGE, p.batch_seqs, p.seq, p.slots, Collective::ReduceScatterGather, 4.0,
+            4.0, buckets,
+        );
+        t6.row(&[
+            buckets.to_string(),
+            format!("{s:.3}s"),
+            format!("{:.1}%", (1.0 - s / base) * 100.0),
+        ]);
+    }
+    t6.print();
+
+    println!("\n=== executed calibration: traced bucketed step vs the pipeline model ===\n");
+    // a small in-process bucketed step with the step-trace subsystem on:
+    // measured comm/compute phase times from the spans are fed to
+    // `pipelined_overlap_time_s`, whose prediction is compared with the
+    // measured overlapped wall time (informational — the model assumes
+    // perfectly balanced buckets and zero scheduler slack)
+    let lens = [1usize << 16, 1 << 18, 3 << 16, 1 << 17];
+    let specs: Vec<(String, usize, bool)> =
+        lens.iter().enumerate().map(|(i, &l)| (format!("blk{i}"), l, true)).collect();
+    let btable = BlockTable::new(&specs);
+    let workers = 4;
+    let topo_x = Topology::grid(2, 2);
+    let prec = TierPrecision::fp32();
+    let pool = ThreadPool::new(ThreadPool::available());
+    let cuts = ShardPlan::bucket_starts(&btable, btable.total / 8);
+    let nb = cuts.len() - 1;
+    let mut rng = Rng::new(11);
+    let master: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..btable.total).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let mut traced_step = |overlap: bool| {
+        let mut so =
+            ShardedOptimizer::from_name("lans", btable.clone(), Hyper::default(), workers)
+                .unwrap();
+        let mut x = vec![0.01f32; btable.total];
+        let mut bufs = master.clone();
+        trace::enable();
+        let t0 = std::time::Instant::now();
+        let (stats, _) = sharded_bucketed_step(
+            &mut so, &pool, &mut x, &mut bufs, &cuts, 0.25, 1e-3, false, &topo_x, prec,
+            overlap,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        trace::disable();
+        assert!(stats.is_some(), "unprobed bucketed step never skips");
+        (trace::collect(0), wall)
+    };
+    let (st_serial, wall_serial) = traced_step(false);
+    let (st_overlap, wall_overlap) = traced_step(true);
+    let predicted =
+        pipelined_overlap_time_s(st_serial.compute_s(), st_serial.comm_s(), nb);
+    println!(
+        "serial:     wall {:7.3} ms  comm {:7.3} ms  compute {:7.3} ms",
+        wall_serial * 1e3,
+        st_serial.comm_s() * 1e3,
+        st_serial.compute_s() * 1e3
+    );
+    println!(
+        "overlapped: wall {:7.3} ms  overlap_eff {:.3}",
+        wall_overlap * 1e3,
+        st_overlap.overlap_efficiency()
+    );
+    println!(
+        "pipelined_overlap_time_s(measured C/M, B={nb}) = {:.3} ms vs measured \
+         {:.3} ms ({:+.1}%)",
+        predicted * 1e3,
+        wall_overlap * 1e3,
+        (wall_overlap - predicted) / predicted * 100.0
     );
 }

@@ -28,6 +28,7 @@
 //! fp32 bytes without re-deriving the schedule.
 
 use crate::precision::{DType, HalfVec};
+use crate::trace;
 use crate::util::pool::ThreadPool;
 
 use super::reduce_scatter::{
@@ -58,6 +59,7 @@ pub fn ring_allreduce_wire_bytes(w: usize, n: usize, wire: DType) -> u64 {
 pub fn ring_reduce_scatter_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
     let (w, n) = check_bufs(bufs);
     let bytes = ring_phase_wire_bytes(w, n, wire);
+    let _sp = trace::span_detail(trace::CAT_COMM, "ring_reduce_scatter_half", bytes);
     if !wire.is_half() {
         ring_reduce_scatter(bufs);
         return bytes;
@@ -96,6 +98,11 @@ pub fn ring_reduce_scatter_half_pooled(
     pool: &ThreadPool,
 ) -> u64 {
     let (w, n) = check_bufs(bufs);
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_reduce_scatter_half_pooled",
+        ring_phase_wire_bytes(w, n, wire),
+    );
     if !wire.is_half() {
         ring_reduce_scatter_pooled(bufs, pool);
         return ring_phase_wire_bytes(w, n, wire);
@@ -123,6 +130,7 @@ pub fn ring_reduce_scatter_half_pooled(
 pub fn ring_all_gather_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
     let (w, n) = check_bufs(bufs);
     let bytes = ring_phase_wire_bytes(w, n, wire);
+    let _sp = trace::span_detail(trace::CAT_COMM, "ring_all_gather_half", bytes);
     if !wire.is_half() {
         ring_all_gather(bufs);
         return bytes;
@@ -139,6 +147,11 @@ pub fn ring_all_gather_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
 /// Pooled [`ring_all_gather_half`]; bit-identical to the serial path.
 pub fn ring_all_gather_half_pooled(bufs: &mut [Vec<f32>], wire: DType, pool: &ThreadPool) -> u64 {
     let (w, n) = check_bufs(bufs);
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_all_gather_half_pooled",
+        ring_phase_wire_bytes(w, n, wire),
+    );
     if !wire.is_half() {
         ring_all_gather_pooled(bufs, pool);
         return ring_phase_wire_bytes(w, n, wire);

@@ -45,6 +45,7 @@
 
 use crate::precision::{DType, HalfVec};
 use crate::topology::{TierPrecision, Topology, WireBytes};
+use crate::trace;
 use crate::util::pool::ThreadPool;
 
 use super::cost::{tiered_ring_phase_wire_bytes, tiered_ring_phase_wire_bytes_range};
@@ -122,6 +123,17 @@ fn check_topology(topo: &Topology, prec: TierPrecision, w: usize) {
 /// with both tiers fp32 it *is* that function, bit for bit.  Returns the
 /// executed wire bytes split by tier.
 pub fn hierarchical_reduce_scatter(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "hier_reduce_scatter");
+    let wire = hierarchical_reduce_scatter_inner(bufs, topo, prec);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn hierarchical_reduce_scatter_inner(
     bufs: &mut [Vec<f32>],
     topo: &Topology,
     prec: TierPrecision,
@@ -206,6 +218,19 @@ pub fn hierarchical_reduce_scatter_views(
     topo: &Topology,
     prec: TierPrecision,
 ) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "hier_reduce_scatter_views");
+    let wire = hierarchical_reduce_scatter_views_inner(views, n, lo, topo, prec);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn hierarchical_reduce_scatter_views_inner(
+    views: &mut [&mut [f32]],
+    n: usize,
+    lo: usize,
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
     let w = views.len();
     assert!(w > 0, "no workers");
     let len = views[0].len();
@@ -256,6 +281,18 @@ struct TieredTask<'a> {
 /// Chunk-parallel [`hierarchical_reduce_scatter`]; bit-identical to the
 /// serial path (falls back to it for width-1 pools / small buffers).
 pub fn hierarchical_reduce_scatter_pooled(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    pool: &ThreadPool,
+) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "hier_reduce_scatter_pooled");
+    let wire = hierarchical_reduce_scatter_pooled_inner(bufs, topo, prec, pool);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn hierarchical_reduce_scatter_pooled_inner(
     bufs: &mut [Vec<f32>],
     topo: &Topology,
     prec: TierPrecision,
@@ -343,6 +380,17 @@ pub fn hierarchical_all_gather(
     topo: &Topology,
     prec: TierPrecision,
 ) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "hier_all_gather");
+    let wire = hierarchical_all_gather_inner(bufs, topo, prec);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn hierarchical_all_gather_inner(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
     let (w, n) = check_bufs(bufs);
     check_topology(topo, prec, w);
     let bytes = hierarchical_phase_wire_bytes(topo, n, prec, true);
@@ -395,6 +443,19 @@ pub fn hierarchical_all_gather_range(
 /// image of its clipped chunk, then the clipped pure-copy schedule
 /// circulates it.
 pub fn hierarchical_all_gather_views(
+    views: &mut [&mut [f32]],
+    n: usize,
+    lo: usize,
+    topo: &Topology,
+    prec: TierPrecision,
+) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "hier_all_gather_views");
+    let wire = hierarchical_all_gather_views_inner(views, n, lo, topo, prec);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn hierarchical_all_gather_views_inner(
     views: &mut [&mut [f32]],
     n: usize,
     lo: usize,
@@ -467,6 +528,18 @@ struct OwnedChunk<'a> {
 
 /// Pooled [`hierarchical_all_gather`]; bit-identical to the serial path.
 pub fn hierarchical_all_gather_pooled(
+    bufs: &mut [Vec<f32>],
+    topo: &Topology,
+    prec: TierPrecision,
+    pool: &ThreadPool,
+) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "hier_all_gather_pooled");
+    let wire = hierarchical_all_gather_pooled_inner(bufs, topo, prec, pool);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn hierarchical_all_gather_pooled_inner(
     bufs: &mut [Vec<f32>],
     topo: &Topology,
     prec: TierPrecision,
@@ -546,6 +619,13 @@ pub fn hierarchical_allreduce_pooled(
 /// each other, and the result is a deterministic function of the inputs.
 /// Returns the executed wire bytes ([`leader_allreduce_wire_bytes`]).
 pub fn leader_allreduce(bufs: &mut [Vec<f32>], topo: &Topology) -> WireBytes {
+    let mut sp = trace::span(trace::CAT_COMM, "leader_allreduce");
+    let wire = leader_allreduce_inner(bufs, topo);
+    sp.set_detail(wire.total());
+    wire
+}
+
+fn leader_allreduce_inner(bufs: &mut [Vec<f32>], topo: &Topology) -> WireBytes {
     let (w, n) = check_bufs(bufs);
     assert_eq!(topo.world(), w, "topology {topo} does not describe {w} buffers");
     if w == 1 || n == 0 {

@@ -20,7 +20,11 @@
 //! gradients are always reduced on the default ring grid, keeping the
 //! summation order identical to the replicated path's allreduce.
 
+use crate::precision::DType;
+use crate::trace;
 use crate::util::pool::ThreadPool;
+
+use super::half::ring_phase_wire_bytes;
 
 // The serial-fallback floor lives in the shared `util::pool::policy`
 // module (one home for every such threshold); re-exported here so the
@@ -62,6 +66,11 @@ fn check_starts(starts: &[usize], w: usize, n: usize) {
 /// buffer (other workers hold partial sums there — do not read them).
 pub fn ring_reduce_scatter(bufs: &mut [Vec<f32>]) {
     let (w, n) = check_bufs(bufs);
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_reduce_scatter",
+        ring_phase_wire_bytes(w, n, DType::F32),
+    );
     let starts = ring_chunk_starts(w, n);
     ring_reduce_scatter_at(bufs, &starts);
 }
@@ -155,6 +164,11 @@ pub fn ring_all_gather_range(bufs: &mut [Vec<f32>], lo: usize, hi: usize) {
 /// circulates it until every buffer holds every chunk.
 pub fn ring_all_gather(bufs: &mut [Vec<f32>]) {
     let (w, n) = check_bufs(bufs);
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_all_gather",
+        ring_phase_wire_bytes(w, n, DType::F32),
+    );
     let starts = ring_chunk_starts(w, n);
     ring_all_gather_at(bufs, &starts);
 }
@@ -185,6 +199,11 @@ pub fn ring_all_gather_at(bufs: &mut [Vec<f32>], starts: &[usize]) {
 /// small buffers or degenerate inputs.
 pub fn ring_reduce_scatter_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
     let (w, n) = check_bufs(bufs);
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_reduce_scatter_pooled",
+        ring_phase_wire_bytes(w, n, DType::F32),
+    );
     if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
         ring_reduce_scatter(bufs);
         return;
@@ -203,6 +222,11 @@ pub fn ring_reduce_scatter_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
 /// Chunk-parallel all-gather; see [`ring_reduce_scatter_pooled`].
 pub fn ring_all_gather_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
     let (w, n) = check_bufs(bufs);
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_all_gather_pooled",
+        ring_phase_wire_bytes(w, n, DType::F32),
+    );
     if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
         ring_all_gather(bufs);
         return;

@@ -23,8 +23,11 @@
 //! chunk is unchanged, so the pooled result is bit-identical to the serial
 //! one (asserted by tests here and in `tests/proptests.rs`).
 
+use crate::precision::DType;
+use crate::trace;
 use crate::util::pool::ThreadPool;
 
+use super::half::ring_allreduce_wire_bytes;
 use super::reduce_scatter::{
     ring_all_gather_at, ring_all_gather_pooled, ring_chunk_starts,
     ring_reduce_scatter_at, ring_reduce_scatter_pooled,
@@ -40,6 +43,11 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
     assert!(w > 0, "no workers");
     let n = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == n), "buffer length mismatch");
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_allreduce",
+        ring_allreduce_wire_bytes(w, n, DType::F32),
+    );
     if w == 1 || n == 0 {
         return;
     }
@@ -54,6 +62,13 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) {
 /// width-1 pool, small buffers or degenerate inputs; results are
 /// bit-identical either way.
 pub fn ring_allreduce_pooled(bufs: &mut [Vec<f32>], pool: &ThreadPool) {
+    let w = bufs.len();
+    let n = bufs.first().map_or(0, |b| b.len());
+    let _sp = trace::span_detail(
+        trace::CAT_COMM,
+        "ring_allreduce_pooled",
+        ring_allreduce_wire_bytes(w, n, DType::F32),
+    );
     ring_reduce_scatter_pooled(bufs, pool);
     ring_all_gather_pooled(bufs, pool);
 }

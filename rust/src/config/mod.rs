@@ -101,6 +101,14 @@ pub struct TrainConfig {
     /// as in the reference two-phase BERT implementations)
     pub resume_from: Option<PathBuf>,
     pub curve_out: Option<PathBuf>,
+    /// write a Chrome-trace/Perfetto JSON span timeline of the run here
+    /// (open in `chrome://tracing` or `ui.perfetto.dev`): one lane per
+    /// pool worker plus the coordinator lane, per-step `comm`/`compute`/
+    /// stage spans, and wire-byte counters.  Also switches on the
+    /// per-step `comm_s`/`compute_s`/`overlap_eff` Recorder TSV columns.
+    /// `None` (default) keeps tracing compiled out of the hot path — one
+    /// relaxed atomic load per instrumented seam (DESIGN.md §10)
+    pub trace: Option<PathBuf>,
     /// stop as soon as the EMA loss exceeds ceiling×initial (divergence)
     pub stop_on_divergence: bool,
 }
@@ -252,6 +260,10 @@ impl TrainConfig {
                 .get("train", "curve_out")
                 .and_then(Value::as_str)
                 .map(|s| base.join(s)),
+            trace: doc
+                .get("train", "trace")
+                .and_then(Value::as_str)
+                .map(|s| base.join(s)),
             stop_on_divergence: doc.bool_or("train", "stop_on_divergence", true),
         })
     }
@@ -384,6 +396,20 @@ mod tests {
         )
         .unwrap();
         assert!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().relaxed_collectives);
+    }
+
+    #[test]
+    fn trace_knob_parses_like_curve_out() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\ntrace = \"out/trace.json\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new("/base")).unwrap();
+        assert_eq!(c.trace.as_deref(), Some(Path::new("/base/out/trace.json")));
+
+        // default: off — the no-overhead contract path
+        let doc = Document::parse("[model]\nmeta = \"m.json\"").unwrap();
+        assert_eq!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().trace, None);
     }
 
     #[test]

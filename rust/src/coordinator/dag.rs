@@ -32,6 +32,7 @@ use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use crate::collective::{
     hierarchical_all_gather_views, hierarchical_reduce_scatter_views, ring_chunk_starts,
@@ -39,6 +40,7 @@ use crate::collective::{
 use crate::optim::native::unscale_grad_sq_segments;
 use crate::optim::{Optimizer, ParallelExecutor, ShardedOptimizer, StepStats};
 use crate::topology::{TierPrecision, Topology, WireBytes};
+use crate::trace;
 use crate::util::pool::ThreadPool;
 
 // ------------------------------------------------------------ executor ----
@@ -62,6 +64,9 @@ pub struct StepDag<'scope> {
 struct Sched {
     deps_left: Vec<usize>,
     ready: VecDeque<usize>,
+    /// When tracing: the instant each stage entered `ready`, so the driver
+    /// that claims it can emit a queue-wait span (`None` when disabled).
+    ready_at: Vec<Option<Instant>>,
     done: usize,
     poisoned: bool,
 }
@@ -115,7 +120,8 @@ impl<'scope> StepDag<'scope> {
             return;
         }
         if !overlap || pool.threads() <= 1 || total <= 1 {
-            for st in self.stages.iter_mut() {
+            for (id, st) in self.stages.iter_mut().enumerate() {
+                let _run = trace::span_detail(trace::CAT_SCHED, st.label, id as u64);
                 match st.run.take() {
                     Some(f) => f(),
                     None => panic!("stage {:?} ran twice", st.label),
@@ -133,12 +139,21 @@ impl<'scope> StepDag<'scope> {
         }
         let ready: VecDeque<usize> = (0..total).filter(|&i| deps_left[i] == 0).collect();
         assert!(!ready.is_empty(), "no root stage");
+        let mut ready_at: Vec<Option<Instant>> = vec![None; total];
+        if trace::enabled() {
+            let now = Instant::now();
+            for &i in &ready {
+                ready_at[i] = Some(now);
+            }
+        }
+        let labels: Vec<&'static str> = self.stages.iter().map(|s| s.label).collect();
+        let labels = &labels;
         let runs: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 'scope>>>> = self
             .stages
             .iter_mut()
             .map(|s| Mutex::new(s.run.take()))
             .collect();
-        let sched = Mutex::new(Sched { deps_left, ready, done: 0, poisoned: false });
+        let sched = Mutex::new(Sched { deps_left, ready, ready_at, done: 0, poisoned: false });
         let cv = Condvar::new();
         let payload: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
 
@@ -146,31 +161,40 @@ impl<'scope> StepDag<'scope> {
         let mut tokens: Vec<usize> = (0..width).collect();
         pool.map_mut(&mut tokens, |_| loop {
             // claim a ready stage, or wait for one to be released
-            let id = {
+            let claimed = {
                 let mut s = sched.lock().unwrap();
                 loop {
                     if s.poisoned || s.done == total {
                         break None;
                     }
                     if let Some(id) = s.ready.pop_front() {
-                        break Some(id);
+                        break Some((id, s.ready_at[id].take()));
                     }
                     s = cv.wait(s).unwrap();
                 }
             };
-            let Some(id) = id else {
+            let Some((id, queued_at)) = claimed else {
                 cv.notify_all();
                 return;
             };
+            if let Some(t) = queued_at {
+                // queue-wait: released-by-last-dependency → claimed-by-a-driver
+                trace::record_span(trace::CAT_WAIT, labels[id], t, Instant::now(), id as u64);
+            }
             let f = runs[id].lock().unwrap().take().expect("stage scheduled twice");
-            match catch_unwind(AssertUnwindSafe(f)) {
+            let run_span = trace::span_detail(trace::CAT_SCHED, labels[id], id as u64);
+            let outcome = catch_unwind(AssertUnwindSafe(f));
+            drop(run_span);
+            match outcome {
                 Ok(()) => {
                     let mut s = sched.lock().unwrap();
                     s.done += 1;
+                    let now = trace::enabled().then(Instant::now);
                     for &d in &dependents[id] {
                         s.deps_left[d] -= 1;
                         if s.deps_left[d] == 0 {
                             s.ready.push_back(d);
+                            s.ready_at[d] = now;
                         }
                     }
                 }
@@ -376,6 +400,7 @@ pub fn replicated_bucketed_step(
             let parts_k = &parts[k];
             let deps: Vec<usize> = prev_sweep.into_iter().chain([comm]).collect();
             let sweep = dag.stage("unscale", &deps, move || {
+                let _sp = trace::span_detail(trace::CAT_COMPUTE, "bucket_unscale", k as u64);
                 let mut views = slot.lock().unwrap().take().expect("bucket views taken");
                 let mine = &mut views[0];
                 if probe {
@@ -530,6 +555,33 @@ mod tests {
     #[test]
     fn empty_dag_is_a_noop() {
         StepDag::new().run(&ThreadPool::new(4), true);
+    }
+
+    #[test]
+    fn traced_run_emits_one_sched_span_per_stage() {
+        // label-prefixed and tolerant of concurrent tests' spans: the trace
+        // switch is process-global, so other lanes may be live while we are
+        let _guard = trace::test_lock();
+        trace::enable();
+        let pool = ThreadPool::new(4);
+        let mut dag = StepDag::new();
+        let a = dag.stage("dagtr_a", &[], || {});
+        let b = dag.stage("dagtr_b", &[a], || {});
+        dag.stage("dagtr_c", &[a, b], || {});
+        dag.run(&pool, true);
+        trace::disable();
+        let st = trace::collect(0);
+        let mine: Vec<&trace::TraceSpan> = st
+            .lanes
+            .iter()
+            .flat_map(|l| l.spans.iter())
+            .filter(|s| s.label.starts_with("dagtr_"))
+            .collect();
+        let sched = mine.iter().filter(|s| s.cat == trace::CAT_SCHED).count();
+        assert_eq!(sched, 3, "one sched span per stage");
+        // released stages (b, c) must each carry a queue-wait span
+        let waits = mine.iter().filter(|s| s.cat == trace::CAT_WAIT).count();
+        assert!(waits >= 2, "released stages record queue-wait, got {waits}");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::precision::scaler::LOSS_SCALE_TENSOR;
 use crate::precision::DynamicLossScaler;
 use crate::runtime::{Engine, ModelRuntime, TensorF32};
 use crate::topology::{TierPrecision, WireBytes};
+use crate::trace;
 
 use super::dag::{replicated_bucketed_step, sharded_bucketed_step};
 use super::source::DataSource;
@@ -324,7 +325,16 @@ impl Trainer {
         let mut status = TrainStatus::Completed;
         let mut steps_run = 0;
 
+        // step tracing: flip the global switch for the whole run, collect
+        // each step's spans into a StepTrace (feeding the per-step TSV
+        // aggregates), and write the Chrome-trace timeline at the end
+        if cfg.trace.is_some() {
+            trace::enable();
+        }
+        let mut step_traces: Vec<trace::StepTrace> = Vec::new();
+
         for t in 1..=cfg.steps {
+            let step_span = trace::span_detail(trace::CAT_STEP, "step", t);
             let lr = cfg.schedule.lr(t);
             let scale_s = scaler.as_ref().map_or(1.0, |s| s.scale());
             let snapshot = Arc::new(params.clone());
@@ -335,8 +345,10 @@ impl Trainer {
                     loss_scale: scale_s,
                 });
             }
+            let wait_grads = trace::span(trace::CAT_WAIT, "worker_grads");
             let replies: Vec<WorkerReply> =
                 workers.iter().map(|w| w.recv()).collect::<Result<_>>()?;
+            drop(wait_grads);
             let mut loss_sum = 0.0;
             let mut total_micros = 0usize;
             let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(replies.len());
@@ -562,6 +574,12 @@ impl Trainer {
                 }
             }
             steps_run = t;
+            drop(step_span);
+            if trace::enabled() {
+                let st = trace::collect(t);
+                recorder.set_step_timing(st.comm_s(), st.compute_s(), st.overlap_efficiency());
+                step_traces.push(st);
+            }
 
             if cfg.stop_on_divergence && recorder.diverged() {
                 status = TrainStatus::Diverged { at_step: t };
@@ -602,6 +620,11 @@ impl Trainer {
                 tensors.push(sc.export_tensor());
             }
             Checkpoint::new(steps_run, tensors).save(path)?;
+        }
+        if let Some(path) = &cfg.trace {
+            trace::disable();
+            trace::write_chrome_trace(path, &step_traces)
+                .with_context(|| format!("writing Chrome trace to {}", path.display()))?;
         }
         if let Some(path) = &cfg.curve_out {
             recorder.write_tsv(path)?;

@@ -22,5 +22,6 @@ pub mod optim;
 pub mod precision;
 pub mod runtime;
 pub mod topology;
+pub mod trace;
 pub mod util;
 pub mod variance;

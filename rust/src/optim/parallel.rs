@@ -148,6 +148,7 @@ pub(crate) fn unscale_probe_pooled(
     grads: &mut [f32],
     inv_scale: f32,
 ) -> Option<Vec<f64>> {
+    let _sp = crate::trace::span(crate::trace::CAT_COMPUTE, "unscale_probe");
     let nb = table.blocks.len();
     let parts: Vec<Vec<(usize, Vec<f64>)>> =
         if pool.threads() <= 1 || table.total < policy::POOLED_MIN_ELEMS {

@@ -38,6 +38,7 @@ use anyhow::{bail, Context, Result};
 use crate::checkpoint::Checkpoint;
 use crate::collective::reduce_scatter::{chunk_owner, ring_chunk_starts};
 use crate::runtime::tensor::TensorF32;
+use crate::trace;
 use crate::util::pool::{policy, ThreadPool};
 use crate::util::stats::Welford;
 
@@ -455,6 +456,7 @@ pub(crate) fn segmented_step(
         }
         (Algo::Lamb, None) => vec![0.0f64; nb],
         (Algo::Lans, None) => {
+            let _sp = trace::span(trace::CAT_COMPUTE, "optim_grad_sq");
             let parts = pool.map_mut(&mut *tasks, |t| {
                 let t0 = Instant::now();
                 let out = frag_grad_sq_parts(t.g, t.base, t.frags);
@@ -467,6 +469,7 @@ pub(crate) fn segmented_step(
     let inv_gnorm: Vec<f32> = block_g2.iter().map(|&g2| lans_inv_gnorm(g2)).collect();
 
     // --- phase B: moments + cached directions + norm partials ---
+    let sp_b = trace::span(trace::CAT_COMPUTE, "optim_moments");
     let parts = pool.map_mut(&mut *tasks, |t| {
         let t0 = Instant::now();
         let mut out: Vec<(usize, Vec<(f64, f64, f64)>)> = Vec::with_capacity(t.frags.len());
@@ -536,8 +539,10 @@ pub(crate) fn segmented_step(
             }
         })
         .collect();
+    drop(sp_b);
 
     // --- phase C: apply from the cached directions ---
+    let sp_c = trace::span(trace::CAT_COMPUTE, "optim_apply");
     let maxes = pool.map_mut(&mut *tasks, |t| {
         let t0 = Instant::now();
         let mut mx = 0.0f32;
@@ -560,6 +565,7 @@ pub(crate) fn segmented_step(
         t.secs += t0.elapsed().as_secs_f64();
         mx
     });
+    drop(sp_c);
 
     // stats fold in block order — the serial loop's order
     let mut trust = Welford::default();
@@ -803,6 +809,7 @@ impl ShardedOptimizer {
                 hi: plan.starts[s + 1],
             })
             .collect();
+        let sp = trace::span(trace::CAT_COMPUTE, "stitch_probe");
         let parts = eff.map_mut(&mut stitch, |t| {
             t.grad.resize(t.hi - t.lo, 0.0);
             stitch_range(bufs, &ring, t.lo, t.hi, scale, t.grad);
@@ -812,6 +819,7 @@ impl ShardedOptimizer {
             frag_grad_sq_parts(t.grad, t.lo, t.frags)
         });
         drop(stitch);
+        drop(sp);
         let g2 = if needs_g2 {
             Some(combine_block_g2(table.blocks.len(), &parts))
         } else {
@@ -874,6 +882,7 @@ impl ShardedOptimizer {
         scale: f32,
         needs_g2: bool,
     ) -> Vec<Vec<(usize, Vec<f64>)>> {
+        let _sp = trace::span_detail(trace::CAT_COMPUTE, "stitch_bucket", lo as u64);
         let plan = &self.plan;
         self.shards
             .iter_mut()

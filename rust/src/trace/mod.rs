@@ -1,0 +1,659 @@
+//! Step-trace subsystem: a low-overhead span/counter tracing layer over
+//! the training step.
+//!
+//! Every instrumented seam — DAG stage execution, pool regions, the
+//! tiered collectives, the segmented optimizer phases — opens a [`Span`]
+//! guard.  When tracing is disabled (the default) the guard costs one
+//! relaxed atomic load and a predictable branch: no `Instant::now`, no
+//! allocation, no lock — the **overhead contract** (DESIGN.md §10) that
+//! keeps the traced hot paths bit-identical *and* time-identical to the
+//! untraced build.  When enabled, spans land in a thread-local buffer
+//! (start/end [`Instant`] pairs + static category/label + a `u64` detail
+//! such as wire bytes or a stage index) registered once per thread in a
+//! global lane registry; [`collect`] drains every lane into a per-step
+//! [`StepTrace`].
+//!
+//! Three consumers sit on top:
+//!
+//! 1. [`write_chrome_trace`] renders a run's `StepTrace`s as
+//!    Chrome-trace/Perfetto JSON (`chrome://tracing`, `ui.perfetto.dev`)
+//!    — one lane per pool worker plus the coordinator lane, validated in
+//!    CI by `tools/check_trace.py` and round-tripped through
+//!    [`util::json`](crate::util::json) in tests.
+//! 2. The trainer appends per-step aggregates ([`StepTrace::comm_s`],
+//!    [`StepTrace::compute_s`], [`StepTrace::overlap_efficiency`]) to the
+//!    Recorder TSV.
+//! 3. The `overlap_step` / `table2_time_model` benches calibrate the α-β
+//!    cost model against measured phase times, and assert in `--quick`
+//!    CI that traced wire-byte counters equal the analytic
+//!    `cost::tiered_ring_phase_wire_bytes` values and that stage spans
+//!    tile the step.
+//!
+//! Aggregates are computed on **interval unions**, never naive sums, so
+//! nested spans (a pooled collective inside a DAG stage) are counted
+//! once: `comm_s` is the measure of the union of all `comm` intervals
+//! across lanes, and `overlap_efficiency` is the fraction of that union
+//! covered by the `compute` union — the hidden-comm fraction.
+
+use std::cell::RefCell;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One whole optimizer step (coordinator lane; detail = step number).
+pub const CAT_STEP: &str = "step";
+/// A DAG stage actually running (detail = stage index).
+pub const CAT_SCHED: &str = "sched";
+/// Time spent waiting: DAG queue-wait (ready → claimed) and the pool's
+/// region close barrier.
+pub const CAT_WAIT: &str = "wait";
+/// Collective communication (detail = executed wire bytes).
+pub const CAT_COMM: &str = "comm";
+/// Optimizer arithmetic: grad², moments/coefficients, apply, stitch,
+/// unscale/probe.
+pub const CAT_COMPUTE: &str = "compute";
+/// Pool region mechanics: dispatch, caller drain, per-worker busy time.
+pub const CAT_POOL: &str = "pool";
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+struct RawSpan {
+    cat: &'static str,
+    label: &'static str,
+    start: Instant,
+    end: Instant,
+    detail: u64,
+}
+
+struct LaneBuf {
+    name: String,
+    spans: Vec<RawSpan>,
+}
+
+struct Global {
+    /// Set once, at the first [`enable`], and kept for the process
+    /// lifetime so timestamps stay monotonic across enable/disable
+    /// cycles.
+    origin: Option<Instant>,
+    lanes: Vec<Arc<Mutex<LaneBuf>>>,
+}
+
+static GLOBAL: Mutex<Global> = Mutex::new(Global { origin: None, lanes: Vec::new() });
+
+thread_local! {
+    static LANE: RefCell<Option<Arc<Mutex<LaneBuf>>>> = RefCell::new(None);
+}
+
+/// Whether spans are currently being recorded.  One relaxed load — the
+/// only cost the disabled hot path ever pays.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start recording spans.  Idempotent; the time origin is pinned at the
+/// first call and shared by every later session.
+pub fn enable() {
+    let mut g = GLOBAL.lock().unwrap();
+    if g.origin.is_none() {
+        g.origin = Some(Instant::now());
+    }
+    drop(g);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording spans.  Buffered spans stay until the next [`collect`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// An RAII span guard: opened by [`span`]/[`span_detail`], recorded on
+/// drop.  Disabled tracing makes both construction and drop a no-op.
+#[must_use = "a span measures the scope it is bound to; bind it to a variable"]
+pub struct Span {
+    active: Option<(Instant, &'static str, &'static str, u64)>,
+}
+
+impl Span {
+    /// Attach/overwrite the detail value (e.g. wire bytes known only
+    /// after the traced call returns).
+    #[inline]
+    pub fn set_detail(&mut self, detail: u64) {
+        if let Some(a) = &mut self.active {
+            a.3 = detail;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((start, cat, label, detail)) = self.active.take() {
+            record_span(cat, label, start, Instant::now(), detail);
+        }
+    }
+}
+
+/// Open a span with detail 0.
+#[inline]
+pub fn span(cat: &'static str, label: &'static str) -> Span {
+    span_detail(cat, label, 0)
+}
+
+/// Open a span carrying a `u64` detail (bucket index, wire bytes, …).
+#[inline]
+pub fn span_detail(cat: &'static str, label: &'static str, detail: u64) -> Span {
+    if !enabled() {
+        return Span { active: None };
+    }
+    Span { active: Some((Instant::now(), cat, label, detail)) }
+}
+
+/// Record a span from explicit instants — for callers that measure a wait
+/// whose start predates the recording scope (e.g. DAG queue-wait, whose
+/// clock starts when the stage becomes ready on another thread).
+pub fn record_span(
+    cat: &'static str,
+    label: &'static str,
+    start: Instant,
+    end: Instant,
+    detail: u64,
+) {
+    if !enabled() {
+        return;
+    }
+    LANE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let arc = slot.get_or_insert_with(|| {
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| "anon".to_string());
+            let arc = Arc::new(Mutex::new(LaneBuf { name, spans: Vec::new() }));
+            GLOBAL.lock().unwrap().lanes.push(arc.clone());
+            arc
+        });
+        arc.lock().unwrap().spans.push(RawSpan { cat, label, start, end, detail });
+    });
+}
+
+/// One recorded span, times in seconds relative to the trace origin.
+#[derive(Debug, Clone)]
+pub struct TraceSpan {
+    pub cat: &'static str,
+    pub label: &'static str,
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub detail: u64,
+}
+
+impl TraceSpan {
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.dur_s
+    }
+}
+
+/// One thread's timeline: the coordinator, or one `lans-pool-{i}` worker.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    pub name: String,
+    pub spans: Vec<TraceSpan>,
+}
+
+/// Every lane's spans for one step, drained by [`collect`].
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    pub step: u64,
+    pub lanes: Vec<Lane>,
+}
+
+/// Sort key putting the coordinator (any non-pool thread) before the pool
+/// workers, and the workers in index order.
+fn lane_sort_key(name: &str) -> (u8, usize) {
+    match name.strip_prefix("lans-pool-").and_then(|s| s.parse().ok()) {
+        Some(i) => (1, i),
+        None => (0, 0),
+    }
+}
+
+/// Drain every lane's buffered spans into a [`StepTrace`].  Call between
+/// steps, when no instrumented region is open (the trainer collects after
+/// each step; benches after each timed iteration).
+pub fn collect(step: u64) -> StepTrace {
+    let g = GLOBAL.lock().unwrap();
+    let origin = match g.origin {
+        Some(o) => o,
+        None => return StepTrace { step, lanes: Vec::new() },
+    };
+    let mut lanes = Vec::new();
+    for arc in &g.lanes {
+        let mut buf = arc.lock().unwrap();
+        if buf.spans.is_empty() {
+            continue;
+        }
+        let mut spans: Vec<TraceSpan> = buf
+            .spans
+            .drain(..)
+            .map(|r| TraceSpan {
+                cat: r.cat,
+                label: r.label,
+                start_s: r.start.saturating_duration_since(origin).as_secs_f64(),
+                dur_s: r.end.saturating_duration_since(r.start).as_secs_f64(),
+                detail: r.detail,
+            })
+            .collect();
+        spans.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+        lanes.push(Lane { name: buf.name.clone(), spans });
+    }
+    lanes.sort_by(|a, b| {
+        (lane_sort_key(&a.name), a.name.as_str()).cmp(&(lane_sort_key(&b.name), b.name.as_str()))
+    });
+    StepTrace { step, lanes }
+}
+
+/// Merge sorted-or-not intervals into a disjoint ascending list.
+fn merge(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+fn measure(iv: &[(f64, f64)]) -> f64 {
+    iv.iter().map(|(s, e)| e - s).sum()
+}
+
+/// Measure of the intersection of two disjoint ascending interval lists.
+fn intersect_measure(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0f64);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            acc += hi - lo;
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    acc
+}
+
+impl StepTrace {
+    fn intervals(&self, cat: &str) -> Vec<(f64, f64)> {
+        let mut iv = Vec::new();
+        for l in &self.lanes {
+            for s in &l.spans {
+                if s.cat == cat {
+                    iv.push((s.start_s, s.end_s()));
+                }
+            }
+        }
+        iv
+    }
+
+    /// Wall time with communication in flight: the measure of the union
+    /// of every `comm` span across all lanes (nested spans count once).
+    pub fn comm_s(&self) -> f64 {
+        measure(&merge(self.intervals(CAT_COMM)))
+    }
+
+    /// Wall time with optimizer arithmetic in flight (union measure of
+    /// the `compute` category).
+    pub fn compute_s(&self) -> f64 {
+        measure(&merge(self.intervals(CAT_COMPUTE)))
+    }
+
+    /// Hidden-comm fraction: of the wall time communication was in
+    /// flight, how much was simultaneously covered by compute.  1.0 means
+    /// communication is fully hidden behind the optimizer; 0.0 means the
+    /// phases ran back-to-back (overlap off, or a serial pool).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let comm = merge(self.intervals(CAT_COMM));
+        let total = measure(&comm);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let compute = merge(self.intervals(CAT_COMPUTE));
+        intersect_measure(&comm, &compute) / total
+    }
+
+    /// Sum of the `detail` payloads over spans matching `cat`/`label` —
+    /// e.g. executed wire bytes over the DAG's per-bucket comm spans,
+    /// which the benches check against the analytic
+    /// `cost::tiered_ring_phase_wire_bytes` values.
+    pub fn detail_sum(&self, cat: &str, label: &str) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| &l.spans)
+            .filter(|s| s.cat == cat && s.label == label)
+            .map(|s| s.detail)
+            .sum()
+    }
+
+    pub fn span_count(&self, cat: &str) -> usize {
+        self.lanes.iter().flat_map(|l| &l.spans).filter(|s| s.cat == cat).count()
+    }
+
+    /// How completely the DAG stage spans (runs + queue-waits) tile their
+    /// own window `[first ready/run start, last run end]`: the union
+    /// measure over that window's length.  1.0 = no gaps; scheduler
+    /// bookkeeping (mutex hops, condvar wakeups) keeps real runs slightly
+    /// below it, which is the "scheduler slack" the bench assertions
+    /// allow for.
+    pub fn stage_coverage(&self) -> f64 {
+        let mut iv = self.intervals(CAT_SCHED);
+        iv.extend(self.intervals(CAT_WAIT));
+        let merged = merge(iv);
+        let (Some(first), Some(last)) = (merged.first(), merged.last()) else {
+            return 1.0;
+        };
+        let window = last.1 - first.0;
+        if window <= 0.0 {
+            return 1.0;
+        }
+        measure(&merged) / window
+    }
+
+    /// The step span's duration when present, else the envelope of every
+    /// recorded span.
+    pub fn duration_s(&self) -> f64 {
+        for l in &self.lanes {
+            if let Some(s) = l.spans.iter().find(|s| s.cat == CAT_STEP) {
+                return s.dur_s;
+            }
+        }
+        let all: Vec<(f64, f64)> =
+            self.lanes.iter().flat_map(|l| &l.spans).map(|s| (s.start_s, s.end_s())).collect();
+        let merged = merge(all);
+        match (merged.first(), merged.last()) {
+            (Some(f), Some(l)) => l.1 - f.0,
+            _ => 0.0,
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a run's step traces as Chrome-trace/Perfetto JSON ("X" complete
+/// events, µs timestamps) and write them to `path` (parent directories
+/// are created).  Lane → tid mapping is stable across steps: tid 0 is the
+/// coordinator lane, pool workers follow in index order; each tid gets a
+/// thread-name metadata ("M") event and its events are sorted by `ts` —
+/// the schema `tools/check_trace.py` validates in CI.
+pub fn write_chrome_trace(path: &Path, traces: &[StepTrace]) -> std::io::Result<()> {
+    // stable lane-name → tid assignment across the whole run
+    let mut names: Vec<String> = Vec::new();
+    for t in traces {
+        for l in &t.lanes {
+            if !names.contains(&l.name) {
+                names.push(l.name.clone());
+            }
+        }
+    }
+    names.sort_by(|a, b| {
+        (lane_sort_key(a), a.as_str()).cmp(&(lane_sort_key(b), b.as_str()))
+    });
+
+    struct Ev {
+        ts_us: f64,
+        dur_us: f64,
+        name: &'static str,
+        cat: &'static str,
+        step: u64,
+        detail: u64,
+    }
+    let mut per_tid: Vec<Vec<Ev>> = (0..names.len()).map(|_| Vec::new()).collect();
+    for t in traces {
+        for l in &t.lanes {
+            let tid = names.iter().position(|n| n == &l.name).unwrap();
+            for s in &l.spans {
+                per_tid[tid].push(Ev {
+                    ts_us: s.start_s * 1e6,
+                    dur_us: s.dur_s * 1e6,
+                    name: s.label,
+                    cat: s.cat,
+                    step: t.step,
+                    detail: s.detail,
+                });
+            }
+        }
+    }
+    for evs in &mut per_tid {
+        evs.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    }
+
+    let mut out = String::new();
+    out.push_str("{\n  \"displayTimeUnit\": \"ms\",\n  \"traceEvents\": [\n");
+    let mut first = true;
+    let mut push_event = |out: &mut String, body: String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str("    ");
+        out.push_str(&body);
+    };
+    for (tid, name) in names.iter().enumerate() {
+        push_event(
+            &mut out,
+            format!(
+                "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": {}, \
+                 \"args\": {{\"name\": \"{}\"}}}}",
+                tid,
+                json_escape(name)
+            ),
+        );
+    }
+    for (tid, evs) in per_tid.iter().enumerate() {
+        for e in evs {
+            push_event(
+                &mut out,
+                format!(
+                    "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {:.3}, \
+                     \"dur\": {:.3}, \"pid\": 0, \"tid\": {}, \
+                     \"args\": {{\"step\": {}, \"detail\": {}}}}}",
+                    json_escape(e.name),
+                    json_escape(e.cat),
+                    e.ts_us,
+                    e.dur_us,
+                    tid,
+                    e.step,
+                    e.detail
+                ),
+            );
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+/// Serializes tests (here and in other modules) that flip the global
+/// enable flag, so concurrently running tests don't interleave spans.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic() -> StepTrace {
+        // comm [0,2)∪[3,4), compute [1,5): comm total 3, hidden [1,2)∪[3,4) = 2
+        let spans = vec![
+            TraceSpan { cat: CAT_STEP, label: "step", start_s: 0.0, dur_s: 5.0, detail: 7 },
+            TraceSpan { cat: CAT_COMM, label: "rs", start_s: 0.0, dur_s: 2.0, detail: 100 },
+            TraceSpan { cat: CAT_COMM, label: "rs", start_s: 3.0, dur_s: 1.0, detail: 50 },
+            TraceSpan { cat: CAT_COMPUTE, label: "apply", start_s: 1.0, dur_s: 4.0, detail: 0 },
+        ];
+        StepTrace { step: 7, lanes: vec![Lane { name: "main".into(), spans }] }
+    }
+
+    #[test]
+    fn union_aggregates_are_exact_on_synthetic_spans() {
+        let t = synthetic();
+        assert!((t.comm_s() - 3.0).abs() < 1e-12);
+        assert!((t.compute_s() - 4.0).abs() < 1e-12);
+        assert!((t.overlap_efficiency() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(t.detail_sum(CAT_COMM, "rs"), 150);
+        assert!((t.duration_s() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nested_spans_count_once() {
+        // a pooled collective span nested inside a wider comm span must
+        // not double the comm measure
+        let spans = vec![
+            TraceSpan { cat: CAT_COMM, label: "outer", start_s: 0.0, dur_s: 4.0, detail: 0 },
+            TraceSpan { cat: CAT_COMM, label: "inner", start_s: 1.0, dur_s: 1.0, detail: 0 },
+        ];
+        let t = StepTrace { step: 0, lanes: vec![Lane { name: "main".into(), spans }] };
+        assert!((t.comm_s() - 4.0).abs() < 1e-12);
+        assert_eq!(t.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn stage_coverage_sees_gaps() {
+        let spans = vec![
+            TraceSpan { cat: CAT_SCHED, label: "a", start_s: 0.0, dur_s: 1.0, detail: 0 },
+            TraceSpan { cat: CAT_SCHED, label: "b", start_s: 3.0, dur_s: 1.0, detail: 1 },
+        ];
+        let t = StepTrace { step: 0, lanes: vec![Lane { name: "main".into(), spans }] };
+        assert!((t.stage_coverage() - 0.5).abs() < 1e-12);
+        // waits filling the gap restore full coverage
+        let mut t2 = t.clone();
+        t2.lanes[0].spans.push(TraceSpan {
+            cat: CAT_WAIT,
+            label: "b",
+            start_s: 1.0,
+            dur_s: 2.0,
+            detail: 1,
+        });
+        assert!((t2.stage_coverage() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_lock();
+        disable();
+        {
+            let mut sp = span_detail(CAT_COMM, "noop", 3);
+            sp.set_detail(9);
+        }
+        let t = collect(0);
+        assert_eq!(t.detail_sum(CAT_COMM, "noop"), 0);
+    }
+
+    #[test]
+    fn spans_round_trip_through_collect() {
+        let _g = test_lock();
+        enable();
+        {
+            let mut sp = span(CAT_COMM, "rt_comm");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            sp.set_detail(4096);
+        }
+        {
+            let _sp = span_detail(CAT_COMPUTE, "rt_apply", 1);
+        }
+        disable();
+        let t = collect(11);
+        // other tests may contribute lanes while enabled; assert only on
+        // the spans this thread emitted
+        assert_eq!(t.detail_sum(CAT_COMM, "rt_comm"), 4096);
+        let me: Vec<&TraceSpan> = t
+            .lanes
+            .iter()
+            .flat_map(|l| &l.spans)
+            .filter(|s| s.label.starts_with("rt_"))
+            .collect();
+        assert_eq!(me.len(), 2);
+        assert!(me.iter().all(|s| s.dur_s >= 0.0 && s.start_s >= 0.0));
+        let comm = me.iter().find(|s| s.label == "rt_comm").unwrap();
+        assert!(comm.dur_s >= 0.002, "slept 2ms inside the span, got {}", comm.dur_s);
+        // drained: a second collect starts empty
+        assert_eq!(collect(12).detail_sum(CAT_COMM, "rt_comm"), 0);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_util_json() {
+        let dir = std::env::temp_dir().join("lans_trace_test");
+        let path = dir.join("trace.json");
+        let mut t = synthetic();
+        t.lanes.push(Lane {
+            name: "lans-pool-0".into(),
+            spans: vec![TraceSpan {
+                cat: CAT_POOL,
+                label: "worker_busy",
+                start_s: 0.5,
+                dur_s: 0.25,
+                detail: 0,
+            }],
+        });
+        write_chrome_trace(&path, &[t]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::Json::parse(&text).expect("trace JSON must parse");
+        let events = v.expect("traceEvents").as_arr().unwrap();
+        // 2 thread-name metadata + 5 spans
+        assert_eq!(events.len(), 7);
+        let metas: Vec<_> =
+            events.iter().filter(|e| e.expect("ph").as_str() == Some("M")).collect();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].expect("args").expect("name").as_str(), Some("main"));
+        assert_eq!(metas[1].expect("args").expect("name").as_str(), Some("lans-pool-0"));
+        let xs: Vec<_> =
+            events.iter().filter(|e| e.expect("ph").as_str() == Some("X")).collect();
+        assert_eq!(xs.len(), 5);
+        for e in &xs {
+            assert!(e.expect("ts").as_f64().unwrap() >= 0.0);
+            assert!(e.expect("dur").as_f64().unwrap() >= 0.0);
+            assert_eq!(e.expect("pid").as_usize(), Some(0));
+            assert!(e.expect("tid").as_usize().is_some());
+            assert!(e.expect("cat").as_str().is_some());
+            assert!(e.expect("args").expect("step").as_usize().is_some());
+        }
+        // the step span landed on the coordinator tid with its detail
+        let step_ev = xs
+            .iter()
+            .find(|e| e.expect("cat").as_str() == Some(CAT_STEP))
+            .expect("step span present");
+        assert_eq!(step_ev.expect("tid").as_usize(), Some(0));
+        assert_eq!(step_ev.expect("args").expect("detail").as_usize(), Some(7));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lane_ordering_puts_coordinator_first() {
+        assert!(lane_sort_key("main") < lane_sort_key("lans-pool-0"));
+        assert!(lane_sort_key("lans-pool-1") < lane_sort_key("lans-pool-2"));
+        assert!(lane_sort_key("lans-pool-9") < lane_sort_key("lans-pool-10"));
+    }
+}

@@ -200,6 +200,7 @@ fn worker_loop(shared: Arc<Shared>) {
         // drain tasks: one fetch_add per claim, body runs lock-free
         let r = unsafe { &*region.0 };
         IN_REGION.with(|c| c.set(true));
+        let busy = crate::trace::span(crate::trace::CAT_POOL, "worker_busy");
         loop {
             let i = r.cursor.fetch_add(1, Ordering::Relaxed);
             if i >= r.count {
@@ -214,6 +215,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 }
             }
         }
+        drop(busy);
         IN_REGION.with(|c| c.set(false));
         // check out under the lock; the closing caller waits for 0 and
         // frees the region only after, so `r` is never touched again
@@ -400,6 +402,7 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
     // publish: one mutex pass + wakeups.  If another thread's region is
     // still open (pools are shared), queue behind it.
     {
+        let _sp = crate::trace::span(crate::trace::CAT_POOL, "region_dispatch");
         let mut st = shared.state.lock().unwrap();
         while st.region.is_some() {
             st = shared.done_cv.wait(st).unwrap();
@@ -411,6 +414,7 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
 
     // the caller is a worker too: claim and run tasks until none remain
     IN_REGION.with(|c| c.set(true));
+    let drain = crate::trace::span(crate::trace::CAT_POOL, "region_drain");
     let caller_panic = loop {
         let i = region.cursor.fetch_add(1, Ordering::Relaxed);
         if i >= count {
@@ -421,6 +425,7 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
             break Some(payload);
         }
     };
+    drop(drain);
     IN_REGION.with(|c| c.set(false));
 
     // close: retract the region so no new worker joins (and the slot
@@ -428,6 +433,7 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
     // workers to check out.  After this, no thread can touch `region` (or
     // the caller's borrows inside `run`) again.
     {
+        let _sp = crate::trace::span(crate::trace::CAT_WAIT, "region_close");
         let mut st = shared.state.lock().unwrap();
         st.region = None;
         shared.done_cv.notify_all();

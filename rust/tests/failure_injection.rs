@@ -52,6 +52,7 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         checkpoint: None,
         resume_from: None,
         curve_out: None,
+        trace: None,
         stop_on_divergence: true,
     }
 }

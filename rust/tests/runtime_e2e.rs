@@ -176,6 +176,7 @@ fn trainer_loss_decreases_small_run() {
         checkpoint: None,
         resume_from: None,
         curve_out: None,
+        trace: None,
         stop_on_divergence: true,
     };
     let mut tr = Trainer::new(cfg).unwrap();
@@ -228,6 +229,7 @@ fn trainer_on_declared_topology_keeps_bits_and_accounts_wire() {
         checkpoint: None,
         resume_from: None,
         curve_out: None,
+        trace: None,
         stop_on_divergence: true,
     };
     let grid = Topology::grid(2, 2);

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-trace JSON file emitted by the step-trace subsystem.
+
+Usage: check_trace.py TRACE.json
+
+Checks the schema contract DESIGN.md §10 documents and CI relies on:
+
+  * top level is an object with a non-empty ``traceEvents`` list and
+    ``displayTimeUnit`` set to ``ms``;
+  * every complete ("X") event carries name/cat/ph/ts/dur/pid/tid with
+    numeric, non-negative ts and dur (microseconds);
+  * every tid that appears in an X event is named by an "M"
+    (``thread_name``) metadata event — one lane per pool worker plus the
+    coordinator lane;
+  * within each tid, X events are sorted by start time (the writer's
+    contract, and what keeps Perfetto's ingestion linear);
+  * "step"-category spans — one per training step, on the coordinator
+    lane — do not overlap (small scheduler slack allowed) and carry
+    strictly increasing ``args.step`` numbers.
+
+Exit code 0 when the trace passes, 1 with a diagnostic otherwise.
+"""
+
+import json
+import sys
+
+# allowed overlap between consecutive step spans: max(50 µs, 1% of the
+# earlier span) — Instant-based span edges on different threads can
+# straddle each other by scheduler latency without the tiling being wrong
+SLACK_US = 50.0
+SLACK_FRAC = 0.01
+
+REQUIRED_X_FIELDS = ("name", "cat", "ph", "ts", "dur", "pid", "tid")
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: check_trace.py TRACE.json")
+    path = sys.argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"displayTimeUnit is {doc.get('displayTimeUnit')!r}, want 'ms'")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty list")
+
+    named_tids = set()
+    spans_by_tid = {}
+    step_spans = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {i} is not an object")
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") != "thread_name":
+                fail(f"event {i}: metadata event named {ev.get('name')!r}")
+            if not isinstance(ev.get("args", {}).get("name"), str):
+                fail(f"event {i}: thread_name without args.name")
+            named_tids.add(ev.get("tid"))
+        elif ph == "X":
+            for field in REQUIRED_X_FIELDS:
+                if field not in ev:
+                    fail(f"event {i}: X event missing {field!r}")
+            if not is_num(ev["ts"]) or ev["ts"] < 0:
+                fail(f"event {i}: bad ts {ev['ts']!r}")
+            if not is_num(ev["dur"]) or ev["dur"] < 0:
+                fail(f"event {i}: bad dur {ev['dur']!r}")
+            spans_by_tid.setdefault(ev["tid"], []).append(ev)
+            if ev["cat"] == "step":
+                step_spans.append(ev)
+        else:
+            fail(f"event {i}: unexpected ph {ph!r}")
+
+    if not spans_by_tid:
+        fail("no X (complete) events in the trace")
+    for tid, spans in sorted(spans_by_tid.items()):
+        if tid not in named_tids:
+            fail(f"tid {tid} has spans but no thread_name metadata event")
+        for a, b in zip(spans, spans[1:]):
+            if b["ts"] < a["ts"]:
+                fail(f"tid {tid}: spans not sorted by ts ({b['ts']} after {a['ts']})")
+
+    if not step_spans:
+        fail("no 'step'-category spans (the per-step timeline anchor)")
+    step_spans.sort(key=lambda ev: ev["ts"])
+    prev_step = None
+    for ev in step_spans:
+        step = ev.get("args", {}).get("step")
+        if not is_num(step):
+            fail(f"step span at ts={ev['ts']} has no numeric args.step")
+        if prev_step is not None and step <= prev_step:
+            fail(f"step numbers not increasing: {step} after {prev_step}")
+        prev_step = step
+    for a, b in zip(step_spans, step_spans[1:]):
+        slack = max(SLACK_US, SLACK_FRAC * a["dur"])
+        if b["ts"] < a["ts"] + a["dur"] - slack:
+            fail(
+                f"step spans overlap: step {b['args']['step']} starts at "
+                f"{b['ts']:.1f} inside step {a['args']['step']} "
+                f"[{a['ts']:.1f}, {a['ts'] + a['dur']:.1f}]"
+            )
+
+    n_x = sum(len(s) for s in spans_by_tid.values())
+    print(
+        f"check_trace: OK: {n_x} spans on {len(spans_by_tid)} lanes, "
+        f"{len(step_spans)} steps, schema valid"
+    )
+
+
+if __name__ == "__main__":
+    main()
