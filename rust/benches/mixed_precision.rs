@@ -18,6 +18,7 @@ use lans::collective::{
     ring_allreduce_wire_bytes, Collective,
 };
 use lans::precision::{DType, HalfVec};
+use lans::simd::{self, Backend};
 use lans::util::bench::{bench, quick_mode, Reporter, Table};
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
@@ -71,6 +72,74 @@ fn main() {
     t.row(&["bf16 -> f32".into(), format!("{:.3}", r.mean_ms()), format!("{:.1}", melems(&r))]);
     rep.result(&r);
     t.print();
+
+    // ---- SIMD vs portable-scalar conversion kernels ----------------------
+    // Direct calls: the dispatched entry points (whatever backend()
+    // detected) against the canonical portable module in the same process.
+    // `simd_active` guards the speedup-floor gate in BENCH_baseline/ —
+    // a scalar-only runner (or LANS_FORCE_SCALAR=1) reports 0 and the
+    // gate skips instead of failing.
+    let backend = simd::backend();
+    println!(
+        "\n=== SIMD vs scalar conversion kernels (dispatch backend: {}) ===\n",
+        backend.name()
+    );
+    let mut ts = Table::new(&["kernel", "simd GB/s", "scalar GB/s", "speedup"]);
+    let mut bits = vec![0u16; n_conv];
+    // bytes touched per element: 4 (f32 side) + 2 (half side)
+    let gbs = |r: &lans::util::bench::BenchResult| {
+        6.0 * n_conv as f64 / (r.mean_ns * 1e-9) / 1e9
+    };
+    let mut speedup = |rep: &mut Reporter,
+                       ts: &mut Table,
+                       name: &str,
+                       key: &str,
+                       run: &mut dyn FnMut(bool)| {
+        let rs = bench(&format!("{name} (simd)"), 1, iters, || run(true));
+        let rp = bench(&format!("{name} (scalar)"), 1, iters, || run(false));
+        let ratio = rp.mean_ns / rs.mean_ns;
+        ts.row(&[
+            name.into(),
+            format!("{:.2}", gbs(&rs)),
+            format!("{:.2}", gbs(&rp)),
+            format!("{ratio:.2}x"),
+        ]);
+        rep.metric(key, ratio);
+        rep.result(&rs);
+        rep.result(&rp);
+    };
+    speedup(&mut rep, &mut ts, "f32->f16 narrow", "f16_narrow_speedup", &mut |s| {
+        if s {
+            simd::narrow_f16(std::hint::black_box(&data), &mut bits);
+        } else {
+            simd::portable::narrow_f16(std::hint::black_box(&data), &mut bits);
+        }
+    });
+    simd::narrow_f16(&data, &mut bits);
+    speedup(&mut rep, &mut ts, "f16->f32 widen", "f16_widen_speedup", &mut |s| {
+        if s {
+            simd::widen_f16(std::hint::black_box(&bits), &mut out);
+        } else {
+            simd::portable::widen_f16(std::hint::black_box(&bits), &mut out);
+        }
+    });
+    speedup(&mut rep, &mut ts, "f32->bf16 narrow", "bf16_narrow_speedup", &mut |s| {
+        if s {
+            simd::narrow_bf16(std::hint::black_box(&data), &mut bits);
+        } else {
+            simd::portable::narrow_bf16(std::hint::black_box(&data), &mut bits);
+        }
+    });
+    let mut acc = vec![0.0f32; n_conv];
+    speedup(&mut rep, &mut ts, "fused hop (q+dq+add)", "f16_hop_speedup", &mut |s| {
+        if s {
+            simd::accum_quantized_f16(std::hint::black_box(&data), &mut acc);
+        } else {
+            simd::portable::accum_quantized_f16(std::hint::black_box(&data), &mut acc);
+        }
+    });
+    ts.print();
+    rep.metric("simd_active", if backend == Backend::Scalar { 0.0 } else { 1.0 });
 
     // ---- fp32 vs half wire allreduce -------------------------------------
     println!("\n=== wire allreduce: fp32 vs fp16/bf16 chunks (W workers, N floats) ===\n");

@@ -16,6 +16,7 @@ use lans::optim::{
     ShardPlan,
 };
 use lans::runtime::{Engine, ModelRuntime};
+use lans::simd::{self, AdamK};
 use lans::util::bench::{bench, quick_mode, Reporter, Table};
 use lans::util::pool::ThreadPool;
 use lans::util::rng::Rng;
@@ -55,6 +56,108 @@ fn main() {
         rep.result(&r);
     }
     t.print();
+
+    // ---- SIMD vs portable-scalar segment sweeps --------------------------
+    // Direct kernel calls at production segment granularity (NORM_SEG=4096
+    // chunks), dispatched backend vs the canonical portable module in the
+    // same process.  The speedup-floor gate for these lives with the
+    // conversion kernels in BENCH_baseline/BENCH_mixed_precision.json
+    // (guarded by `simd_active`); here the ratios are informational.
+    let backend = simd::backend();
+    println!(
+        "\n=== SIMD vs scalar segment sweeps (dispatch backend: {}) ===\n",
+        backend.name()
+    );
+    let n_sweep = if quick { 1 << 18 } else { 1 << 22 };
+    const SEG: usize = 4096;
+    let gs: Vec<f32> = (0..n_sweep).map(|_| rng.normal_f32()).collect();
+    let mut ts = Table::new(&["kernel", "simd GB/s", "scalar GB/s", "speedup"]);
+    let mut sweep = |rep: &mut Reporter,
+                     ts: &mut Table,
+                     name: &str,
+                     key: &str,
+                     bytes_per_elem: f64,
+                     run: &mut dyn FnMut(bool)| {
+        let rs = bench(&format!("{name} (simd)"), 1, iters, || run(true));
+        let rp = bench(&format!("{name} (scalar)"), 1, iters, || run(false));
+        let gbs = |r: &lans::util::bench::BenchResult| {
+            bytes_per_elem * n_sweep as f64 / (r.mean_ns * 1e-9) / 1e9
+        };
+        let ratio = rp.mean_ns / rs.mean_ns;
+        ts.row(&[
+            name.into(),
+            format!("{:.2}", gbs(&rs)),
+            format!("{:.2}", gbs(&rp)),
+            format!("{ratio:.2}x"),
+        ]);
+        rep.metric(key, ratio);
+        rep.result(&rs);
+        rep.result(&rp);
+    };
+    sweep(&mut rep, &mut ts, "grad_sq (per-seg)", "grad_sq_speedup", 4.0, &mut |s| {
+        let f: fn(&[f32]) -> f64 = if s { simd::sum_sq } else { simd::portable::sum_sq };
+        let mut acc = 0.0f64;
+        for c in std::hint::black_box(&gs[..]).chunks(SEG) {
+            acc += f(c);
+        }
+        std::hint::black_box(acc);
+    });
+    let mut gu = gs.clone();
+    sweep(&mut rep, &mut ts, "unscale+grad_sq", "unscale_grad_sq_speedup", 8.0, &mut |s| {
+        let f: fn(&mut [f32], f32) -> f64 =
+            if s { simd::unscale_sum_sq } else { simd::portable::unscale_sum_sq };
+        let mut acc = 0.0f64;
+        for c in std::hint::black_box(&mut gu[..]).chunks_mut(SEG) {
+            acc += f(c, 1.0); // inv_scale = 1 keeps the buffer fixed across iters
+        }
+        std::hint::black_box(acc);
+    });
+    let k = AdamK {
+        beta1: 0.9,
+        beta2: 0.999,
+        eps: 1e-6,
+        inv_bc1: 1.0,
+        inv_bc2: 1.0,
+        lr: 1e-3,
+        wd: 0.01,
+        inv_gnorm: 1.0,
+    };
+    let xb = &x0[..n_sweep];
+    let (mut m, mut v) = (vec![0.0f32; n_sweep], vec![0.0f32; n_sweep]);
+    let (mut rf, mut cf) = (vec![0.0f32; n_sweep], vec![0.0f32; n_sweep]);
+    // x,g,m,v read + m,v,rf,cf written = 8 arrays
+    sweep(&mut rep, &mut ts, "lans moment sweep", "lans_sweep_speedup", 32.0, &mut |s| {
+        type LansFn = fn(
+            &AdamK,
+            &[f32],
+            &[f32],
+            &mut [f32],
+            &mut [f32],
+            &mut [f32],
+            &mut [f32],
+        ) -> (f64, f64, f64);
+        let f: LansFn = if s { simd::lans_segment } else { simd::portable::lans_segment };
+        let mut acc = (0.0f64, 0.0f64, 0.0f64);
+        let mut lo = 0usize;
+        while lo < n_sweep {
+            let hi = (lo + SEG).min(n_sweep);
+            let (a, b, c) = f(
+                &k,
+                std::hint::black_box(&xb[lo..hi]),
+                &gs[lo..hi],
+                &mut m[lo..hi],
+                &mut v[lo..hi],
+                &mut rf[lo..hi],
+                &mut cf[lo..hi],
+            );
+            acc.0 += a;
+            acc.1 += b;
+            acc.2 += c;
+            lo = hi;
+        }
+        std::hint::black_box(acc);
+    });
+    ts.print();
 
     // thread sweep shared by the sections below
     let avail = ThreadPool::available();

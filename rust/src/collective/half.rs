@@ -6,9 +6,11 @@
 //! ([`ring_chunk_starts`], same `W-1`-step phases); only what crosses the
 //! wire changes:
 //!
-//! * **reduce-scatter** — every hop's outgoing chunk is quantized into a
-//!   packed [`HalfVec`] (2 bytes/element on the wire), and the receiver
-//!   *accumulates in f32*: `dst[i] += dq(wire[i])`.  Chunk `c` is still
+//! * **reduce-scatter** — every hop's outgoing chunk crosses the wire as
+//!   packed half data (2 bytes/element), and the receiver *accumulates in
+//!   f32*: `dst[i] += dq(wire[i])`.  In process both halves run as one
+//!   fused SIMD kernel ([`quantize_accumulate`]) — quantize and widen stay
+//!   in registers, a hop allocates nothing.  Chunk `c` is still
 //!   reduced in worker order `c, c+1, …` regardless of schedule, so for
 //!   fixed inputs the result is a deterministic function — the pooled
 //!   variant is bit-identical to the serial one (property-tested).
@@ -27,7 +29,7 @@
 //! the `mixed_precision` bench can assert the fp16 wire moves half the
 //! fp32 bytes without re-deriving the schedule.
 
-use crate::precision::{DType, HalfVec};
+use crate::precision::{quantize_accumulate, round_trip_slice, DType};
 use crate::trace;
 use crate::util::pool::ThreadPool;
 
@@ -77,12 +79,10 @@ pub fn ring_reduce_scatter_half(bufs: &mut [Vec<f32>], wire: DType) -> u64 {
                 continue;
             }
             let (a, b) = split_two(bufs, src, dst);
-            // wire boundary: the outgoing chunk is packed half data; the
-            // receiver widens and accumulates in f32
-            let packed = HalfVec::from_f32(wire, &a[lo..hi]);
-            for (d, q) in b[lo..hi].iter_mut().zip(packed.iter_f32()) {
-                *d += q;
-            }
+            // wire boundary: the outgoing chunk is quantized to half and
+            // the receiver accumulates the widened image in f32 — one
+            // fused batch kernel, no packed intermediate
+            quantize_accumulate(wire, &a[lo..hi], &mut b[lo..hi]);
         }
     }
     bytes
@@ -113,12 +113,7 @@ pub fn ring_reduce_scatter_half_pooled(
     let starts = ring_chunk_starts(w, n);
     for s in 0..w - 1 {
         let mut tasks = ring_step_tasks(bufs, &starts, s, true);
-        pool.map_mut(&mut tasks, |t| {
-            let packed = HalfVec::from_f32(wire, t.src);
-            for (d, q) in t.dst.iter_mut().zip(packed.iter_f32()) {
-                *d += q;
-            }
-        });
+        pool.map_mut(&mut tasks, |t| quantize_accumulate(wire, t.src, t.dst));
     }
     ring_phase_wire_bytes(w, n, wire)
 }
@@ -184,11 +179,7 @@ struct OwnedChunk<'a> {
 /// Quantize a segment to the wire format and adopt the dequantized image —
 /// the owner-side half of the gather's wire boundary.
 fn round_segment(seg: &mut [f32], wire: DType) {
-    if seg.is_empty() {
-        return;
-    }
-    let packed = HalfVec::from_f32(wire, seg);
-    packed.to_f32_into(seg);
+    round_trip_slice(wire, seg);
 }
 
 fn round_owner_chunks(bufs: &mut [Vec<f32>], starts: &[usize], wire: DType) {

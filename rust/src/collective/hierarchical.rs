@@ -25,9 +25,10 @@
 //!
 //! Wire-precision semantics extend `collective::half` per tier:
 //!
-//! * **reduce-scatter** — a hop whose tier has a half wire format packs
-//!   its outgoing chunk into a [`HalfVec`] and the receiver accumulates in
-//!   f32; fp32-tier hops add exactly.  Deterministic, so serial == pooled
+//! * **reduce-scatter** — a hop whose tier has a half wire format sends
+//!   its chunk as packed half data and the receiver accumulates in f32
+//!   (in process: one fused [`quantize_accumulate`] kernel per hop);
+//!   fp32-tier hops add exactly.  Deterministic, so serial == pooled
 //!   bit-for-bit, and the postcondition matches [`ring_reduce_scatter`]:
 //!   chunk `c`'s sum sits at `chunk_owner(c, w)` — the sharded optimizer's
 //!   `step_scattered` consumes the buffers unchanged.
@@ -43,7 +44,7 @@
 //! and the `hierarchical_collectives` bench assert they equal the analytic
 //! `cost.rs` terms.
 
-use crate::precision::{DType, HalfVec};
+use crate::precision::{quantize_accumulate, round_trip_slice, DType};
 use crate::topology::{TierPrecision, Topology, WireBytes};
 use crate::trace;
 use crate::util::pool::ThreadPool;
@@ -166,10 +167,7 @@ fn hierarchical_reduce_scatter_inner(
             if dtype.is_half() {
                 // wire boundary: pack at the hop's tier format, widen and
                 // accumulate in f32 at the receiver
-                let packed = HalfVec::from_f32(dtype, &a[lo..hi]);
-                for (d, q) in b[lo..hi].iter_mut().zip(packed.iter_f32()) {
-                    *d += q;
-                }
+                quantize_accumulate(dtype, &a[lo..hi], &mut b[lo..hi]);
             } else {
                 for i in lo..hi {
                     b[i] += a[i];
@@ -257,10 +255,7 @@ fn hierarchical_reduce_scatter_views_inner(
             let (a, b) = split_two(views, src, dst);
             let (vlo, vhi) = (clo - lo, chi - lo);
             if dtype.is_half() {
-                let packed = HalfVec::from_f32(dtype, &a[vlo..vhi]);
-                for (d, q) in b[vlo..vhi].iter_mut().zip(packed.iter_f32()) {
-                    *d += q;
-                }
+                quantize_accumulate(dtype, &a[vlo..vhi], &mut b[vlo..vhi]);
             } else {
                 for i in vlo..vhi {
                     b[i] += a[i];
@@ -327,10 +322,7 @@ fn hierarchical_reduce_scatter_pooled_inner(
             .collect();
         pool.map_mut(&mut tasks, |t| {
             if t.dtype.is_half() {
-                let packed = HalfVec::from_f32(t.dtype, t.task.src);
-                for (d, q) in t.task.dst.iter_mut().zip(packed.iter_f32()) {
-                    *d += q;
-                }
+                quantize_accumulate(t.dtype, t.task.src, t.task.dst);
             } else {
                 for (d, x) in t.task.dst.iter_mut().zip(t.task.src.iter()) {
                     *d += *x;
@@ -363,11 +355,7 @@ fn owner_roundings(
 /// Quantize a segment through `dtype` and adopt the dequantized image —
 /// the owner-side half of the gather's wire boundary.
 fn round_segment(seg: &mut [f32], dtype: DType) {
-    if seg.is_empty() || !dtype.is_half() {
-        return;
-    }
-    let packed = HalfVec::from_f32(dtype, seg);
-    packed.to_f32_into(seg);
+    round_trip_slice(dtype, seg);
 }
 
 /// Tiered-ring all-gather: assumes the [`hierarchical_reduce_scatter`]

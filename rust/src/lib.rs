@@ -21,6 +21,7 @@ pub mod metrics;
 pub mod optim;
 pub mod precision;
 pub mod runtime;
+pub mod simd;
 pub mod topology;
 pub mod trace;
 pub mod util;

@@ -22,13 +22,18 @@
 //! Canonical reduction order: every cross-element LANS/LAMB reduction
 //! (block gradient norm, ‖x‖/‖r‖/‖c‖/‖u‖ — and AdamW's block grad²)
 //! accumulates within [`NORM_SEG`]-element sub-chunks of a *block-local*
-//! grid and combines the sub-chunk partials in f64, in order.  The segment
-//! loops live in `grad_sq_segments` / `lans_update_segments` /
-//! `lamb_update_segments` and are shared verbatim by the serial path, the
-//! plan-granularity replicated path (`optim::parallel`) and the sharded
-//! path (`optim::sharded`) — both of which cut the flat vector only on the
-//! segment grid, which is what makes all three bit-identical.
+//! grid and combines the sub-chunk partials in f64, in order.  Within a
+//! sub-chunk the fold runs on [`crate::simd`]'s 8-lane grid (element `i`
+//! into lane `i % 8`, lanes combined sequentially at segment end) — the
+//! order every backend of the runtime-dispatched kernels reproduces
+//! bit-exactly.  The segment loops live in `grad_sq_segments` /
+//! `lans_update_segments` / `lamb_update_segments` and are shared verbatim
+//! by the serial path, the plan-granularity replicated path
+//! (`optim::parallel`) and the sharded path (`optim::sharded`) — both of
+//! which cut the flat vector only on the segment grid, which is what makes
+//! all three bit-identical.
 
+use crate::simd::{self, AdamK};
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Welford;
 
@@ -52,11 +57,7 @@ pub(crate) fn grad_sq_segments(g: &[f32], mut sink: impl FnMut(f64)) {
     let mut lo = 0;
     while lo < g.len() {
         let hi = (lo + NORM_SEG).min(g.len());
-        let mut s = 0.0f64;
-        for &gi in &g[lo..hi] {
-            s += (gi as f64) * (gi as f64);
-        }
-        sink(s);
+        sink(simd::sum_sq(&g[lo..hi]));
         lo = hi;
     }
 }
@@ -77,12 +78,7 @@ pub(crate) fn unscale_grad_sq_segments(
     let mut lo = 0;
     while lo < g.len() {
         let hi = (lo + NORM_SEG).min(g.len());
-        let mut s = 0.0f64;
-        for gi in &mut g[lo..hi] {
-            *gi *= inv_scale;
-            s += (*gi as f64) * (*gi as f64);
-        }
-        sink(s);
+        sink(simd::unscale_sum_sq(&mut g[lo..hi], inv_scale));
         lo = hi;
     }
 }
@@ -203,6 +199,21 @@ impl AdamCtx {
             lr,
         }
     }
+
+    /// Bundle the per-block factors with the per-step constants into the
+    /// flat kernel-constant struct the [`crate::simd`] sweeps take.
+    pub(crate) fn kernel(&self, wd: f32, inv_gnorm: f32) -> AdamK {
+        AdamK {
+            beta1: self.hp.beta1,
+            beta2: self.hp.beta2,
+            eps: self.hp.eps,
+            inv_bc1: self.inv_bc1,
+            inv_bc2: self.inv_bc2,
+            lr: self.lr,
+            wd,
+            inv_gnorm,
+        }
+    }
 }
 
 // ---------------------------------------------------------------- LANS ----
@@ -263,12 +274,13 @@ pub(crate) struct LansCoef {
 /// updates, cached full directions, and the (Σx², Σr², Σc²) partial of every
 /// segment emitted in order via `sink`.
 ///
-/// Reductions accumulate in f32 within [`NORM_SEG`] sub-chunks
-/// (vectorizable) and the caller combines the partials in f64 — same
-/// accuracy class as pairwise summation, lets LLVM keep the lane loop in
-/// f32 (§Perf iteration 3).  The serial path folds the partials directly;
-/// the sharded path collects them per shard and folds after the exchange —
-/// same values, same order, so the two are bit-identical.
+/// Reductions accumulate in f32 on [`crate::simd`]'s lane grid within
+/// [`NORM_SEG`] sub-chunks and the caller combines the partials in f64 —
+/// same accuracy class as pairwise summation, and the dispatched kernel
+/// holds the grid in registers (§Perf iteration 3, vectorized by PR 8).
+/// The serial path folds the partials directly; the sharded path collects
+/// them per shard and folds after the exchange — same values, same order,
+/// so the two are bit-identical.
 pub(crate) fn lans_update_segments(
     cx: &AdamCtx,
     x: &[f32],
@@ -276,34 +288,21 @@ pub(crate) fn lans_update_segments(
     inv_gnorm: f32,
     mut sink: impl FnMut(f64, f64, f64),
 ) {
-    let hp = cx.hp;
+    let k = cx.kernel(b.wd, inv_gnorm);
     let n = x.len();
     let mut lo = 0;
     while lo < n {
         let hi = (lo + NORM_SEG).min(n);
-        let (mut fx, mut fr, mut fc) = (0.0f32, 0.0f32, 0.0f32);
-        for ((((xi, gi), mi), vi), (rfi, cfi)) in x[lo..hi]
-            .iter()
-            .zip(b.g[lo..hi].iter())
-            .zip(b.m[lo..hi].iter_mut())
-            .zip(b.v[lo..hi].iter_mut())
-            .zip(b.rf[lo..hi].iter_mut().zip(b.cf[lo..hi].iter_mut()))
-        {
-            let gt = gi * inv_gnorm;
-            let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gt;
-            let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gt * gt;
-            *mi = mn;
-            *vi = vn;
-            let inv_denom = 1.0 / ((vn * cx.inv_bc2).sqrt() + hp.eps);
-            let r = mn * cx.inv_bc1 * inv_denom + b.wd * xi;
-            let c = gt * inv_denom + b.wd * xi;
-            *rfi = r;
-            *cfi = c;
-            fx += xi * xi;
-            fr += r * r;
-            fc += c * c;
-        }
-        sink(fx as f64, fr as f64, fc as f64);
+        let (fx, fr, fc) = simd::lans_segment(
+            &k,
+            &x[lo..hi],
+            &b.g[lo..hi],
+            &mut b.m[lo..hi],
+            &mut b.v[lo..hi],
+            &mut b.rf[lo..hi],
+            &mut b.cf[lo..hi],
+        );
+        sink(fx, fr, fc);
         lo = hi;
     }
 }
@@ -352,12 +351,7 @@ pub(crate) fn lans_pass2_block(
     rf: &[f32],
     cf: &[f32],
 ) -> f32 {
-    let mut max_abs = 0.0f32;
-    for (xi, (rfi, cfi)) in x.iter_mut().zip(rf.iter().zip(cf.iter())) {
-        *xi -= coef_r * rfi + coef_c * cfi;
-        max_abs = max_abs.max(xi.abs());
-    }
-    max_abs
+    simd::lans_apply(coef_r, coef_c, x, rf, cf)
 }
 
 impl Optimizer for Lans {
@@ -462,10 +456,10 @@ pub(crate) struct LambCoef {
 
 /// LAMB moment/direction update over a segment-aligned range of one block,
 /// emitting the (Σx², Σu², Σg²) partial of every [`NORM_SEG`] segment in
-/// order via `sink`.  Accumulation is per-element f64 within a segment
-/// (LAMB's norms are not pre-normalized, so the f64 lanes stay) and the
-/// caller combines partials in f64 — the canonical order shared by the
-/// serial, block-parallel and sharded paths.
+/// order via `sink`.  Accumulation is per-element f64 on [`crate::simd`]'s
+/// lane grid within a segment (LAMB's norms are not pre-normalized, so the
+/// f64 lanes stay) and the caller combines partials in f64 — the canonical
+/// order shared by the serial, block-parallel and sharded paths.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn lamb_update_segments(
     cx: &AdamCtx,
@@ -477,29 +471,19 @@ pub(crate) fn lamb_update_segments(
     wd: f32,
     mut sink: impl FnMut(f64, f64, f64),
 ) {
-    let hp = cx.hp;
+    let k = cx.kernel(wd, 1.0);
     let n = x.len();
     let mut lo = 0;
     while lo < n {
         let hi = (lo + NORM_SEG).min(n);
-        let (mut sx2, mut su2, mut sg2) = (0.0f64, 0.0f64, 0.0f64);
-        for ((((xi, gi), mi), vi), ui) in x[lo..hi]
-            .iter()
-            .zip(g[lo..hi].iter())
-            .zip(m[lo..hi].iter_mut())
-            .zip(v[lo..hi].iter_mut())
-            .zip(u[lo..hi].iter_mut())
-        {
-            let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gi;
-            let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gi * gi;
-            *mi = mn;
-            *vi = vn;
-            let un = mn * cx.inv_bc1 / ((vn * cx.inv_bc2).sqrt() + hp.eps) + wd * xi;
-            *ui = un;
-            sg2 += (*gi as f64) * (*gi as f64);
-            sx2 += (*xi as f64) * (*xi as f64);
-            su2 += (un as f64) * (un as f64);
-        }
+        let (sx2, su2, sg2) = simd::lamb_segment(
+            &k,
+            &x[lo..hi],
+            &g[lo..hi],
+            &mut m[lo..hi],
+            &mut v[lo..hi],
+            &mut u[lo..hi],
+        );
         sink(sx2, su2, sg2);
         lo = hi;
     }
@@ -538,12 +522,7 @@ pub(crate) fn lamb_pass1_block(
 
 /// LAMB apply for one block; returns the block's max |param|.
 pub(crate) fn lamb_apply_block(coef: f32, x: &mut [f32], u: &[f32]) -> f32 {
-    let mut max_abs = 0.0f32;
-    for (xi, ui) in x.iter_mut().zip(u.iter()) {
-        *xi -= coef * ui;
-        max_abs = max_abs.max(xi.abs());
-    }
-    max_abs
+    simd::axpy_max(coef, x, u)
 }
 
 impl Optimizer for Lamb {
@@ -628,21 +607,8 @@ pub(crate) fn adamw_apply(
     m: &mut [f32],
     v: &mut [f32],
 ) -> f32 {
-    let hp = cx.hp;
-    let mut max_abs = 0.0f32;
-    for (((xi, gi), mi), vi) in
-        x.iter_mut().zip(g.iter()).zip(m.iter_mut()).zip(v.iter_mut())
-    {
-        let gn = gi * inv_gnorm;
-        let mn = hp.beta1 * *mi + (1.0 - hp.beta1) * gn;
-        let vn = hp.beta2 * *vi + (1.0 - hp.beta2) * gn * gn;
-        *mi = mn;
-        *vi = vn;
-        let upd = mn * cx.inv_bc1 / ((vn * cx.inv_bc2).sqrt() + hp.eps) + wd * *xi;
-        *xi -= cx.lr * upd;
-        max_abs = max_abs.max(xi.abs());
-    }
-    max_abs
+    let k = cx.kernel(wd, inv_gnorm);
+    simd::adamw_segment(&k, x, g, m, v)
 }
 
 /// AdamW single-pass block update; returns (max |param|, block grad²).

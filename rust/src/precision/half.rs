@@ -19,8 +19,24 @@
 //! Golden-vector tests below pin known bit patterns (normals, subnormals,
 //! inf/nan, round-to-nearest-even ties); `tests/proptests.rs` adds the
 //! determinism / monotonicity / bounded-error properties.
+//!
+//! The scalar functions here are the *bit reference*; every batch entry
+//! point ([`HalfVec::from_f32`], [`HalfVec::to_f32_into`], and the fused
+//! hop helpers [`quantize_accumulate`] / [`round_trip_slice`]) routes
+//! through the runtime-dispatched kernels in [`crate::simd`], which are
+//! differentially tested against these scalars (exhaustive 2^16 widen +
+//! lane-remainder sweeps).  Batch calls record a `trace::CAT_CONVERT`
+//! span whose detail counts converted bytes on the half side.
 
 use super::DType;
+use crate::{simd, trace};
+
+/// Open a `convert` trace span for a batch conversion touching `n` half
+/// elements (detail = bytes on the half side of the conversion).
+#[inline]
+fn convert_span(n: usize) -> trace::Span {
+    trace::span_detail(trace::CAT_CONVERT, "wire_convert", 2 * n as u64)
+}
 
 // ------------------------------------------------------------------ f16 ----
 
@@ -140,11 +156,13 @@ impl HalfVec {
     /// `dtype` must be a half format — an f32 "HalfVec" has no packed form.
     pub fn from_f32(dtype: DType, data: &[f32]) -> HalfVec {
         assert!(dtype.is_half(), "HalfVec needs a half dtype, got {}", dtype.name());
-        let bits = match dtype {
-            DType::F16 => data.iter().map(|&x| f32_to_f16_bits(x)).collect(),
-            DType::Bf16 => data.iter().map(|&x| f32_to_bf16_bits(x)).collect(),
+        let _sp = convert_span(data.len());
+        let mut bits = vec![0u16; data.len()];
+        match dtype {
+            DType::F16 => simd::narrow_f16(data, &mut bits),
+            DType::Bf16 => simd::narrow_bf16(data, &mut bits),
             DType::F32 => unreachable!(),
-        };
+        }
         HalfVec { dtype, bits }
     }
 
@@ -170,7 +188,10 @@ impl HalfVec {
         &self.bits
     }
 
-    /// Element `i` widened back to f32 (exact).
+    /// Element `i` widened back to f32 (exact).  Cold path: this
+    /// dispatches on `dtype` *per element* — hot loops must use the batch
+    /// [`to_f32_into`](Self::to_f32_into) / [`accum_into`](Self::accum_into)
+    /// kernels instead.
     #[inline]
     pub fn get(&self, i: usize) -> f32 {
         match self.dtype {
@@ -183,22 +204,28 @@ impl HalfVec {
     /// Dequantize the whole buffer into `out` (exact widening).
     pub fn to_f32_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.bits.len(), "length mismatch");
+        let _sp = convert_span(self.bits.len());
         match self.dtype {
-            DType::F16 => {
-                for (o, &b) in out.iter_mut().zip(&self.bits) {
-                    *o = f16_bits_to_f32(b);
-                }
-            }
-            DType::Bf16 => {
-                for (o, &b) in out.iter_mut().zip(&self.bits) {
-                    *o = bf16_bits_to_f32(b);
-                }
-            }
+            DType::F16 => simd::widen_f16(&self.bits, out),
+            DType::Bf16 => simd::widen_bf16(&self.bits, out),
             DType::F32 => unreachable!(),
         }
     }
 
-    /// Iterate the elements widened to f32.
+    /// Fused receive: `dst[i] += widen(self[i])` — the batch form of the
+    /// old `iter_f32` accumulate loop, one pass and no f32 scratch.
+    pub fn accum_into(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.bits.len(), "length mismatch");
+        let _sp = convert_span(self.bits.len());
+        match self.dtype {
+            DType::F16 => simd::accum_widened_f16(&self.bits, dst),
+            DType::Bf16 => simd::accum_widened_bf16(&self.bits, dst),
+            DType::F32 => unreachable!(),
+        }
+    }
+
+    /// Iterate the elements widened to f32.  Cold path — dispatches per
+    /// element; hot loops use the batch kernels above.
     pub fn iter_f32(&self) -> impl Iterator<Item = f32> + '_ {
         let dtype = self.dtype;
         self.bits.iter().map(move |&b| match dtype {
@@ -206,6 +233,40 @@ impl HalfVec {
             DType::Bf16 => bf16_bits_to_f32(b),
             DType::F32 => unreachable!(),
         })
+    }
+}
+
+// ------------------------------------------------- fused hop helpers ----
+
+/// One in-process ring hop at half precision: `dst[i] += dq(q(src[i]))`.
+/// Exactly what constructing a [`HalfVec`] from `src` and accumulating it
+/// into `dst` computes, but quantize and widen stay in registers — a hop
+/// allocates nothing and reads/writes each slice once.  `dtype` must be a
+/// half format.
+pub fn quantize_accumulate(dtype: DType, src: &[f32], dst: &mut [f32]) {
+    assert!(dtype.is_half(), "quantize_accumulate needs a half dtype");
+    assert_eq!(src.len(), dst.len(), "length mismatch");
+    let _sp = convert_span(src.len());
+    match dtype {
+        DType::F16 => simd::accum_quantized_f16(src, dst),
+        DType::Bf16 => simd::accum_quantized_bf16(src, dst),
+        DType::F32 => unreachable!(),
+    }
+}
+
+/// In-place `x[i] = dq(q(x[i]))` over a slice — the owner-segment adoption
+/// of the wire value in the all-gather phase.  Identity on `DType::F32`.
+pub fn round_trip_slice(dtype: DType, seg: &mut [f32]) {
+    match dtype {
+        DType::F32 => {}
+        DType::F16 => {
+            let _sp = convert_span(seg.len());
+            simd::round_f16(seg);
+        }
+        DType::Bf16 => {
+            let _sp = convert_span(seg.len());
+            simd::round_bf16(seg);
+        }
     }
 }
 
@@ -385,5 +446,48 @@ mod tests {
     #[should_panic(expected = "half dtype")]
     fn halfvec_rejects_f32() {
         let _ = HalfVec::from_f32(DType::F32, &[1.0]);
+    }
+
+    #[test]
+    fn fused_helpers_match_halfvec_composition() {
+        let src = [0.0f32, 1.0, -2.5, 0.1, 65504.0, 1.0e9, 1.5e-25, -0.0, 3.7];
+        let base = [1.0f32, -0.5, 2.0, 0.25, -1.0, 0.125, 4.0, -8.0, 0.0];
+        for dtype in [DType::F16, DType::Bf16] {
+            let hv = HalfVec::from_f32(dtype, &src);
+
+            // quantize_accumulate == from_f32 + accumulate, bitwise
+            let mut fused = base;
+            quantize_accumulate(dtype, &src, &mut fused);
+            let mut composed = base;
+            for (d, q) in composed.iter_mut().zip(hv.iter_f32()) {
+                *d += q;
+            }
+            for (i, (a, b)) in fused.iter().zip(&composed).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} qacc {i}", dtype.name());
+            }
+
+            // accum_into == iter_f32 accumulate, bitwise
+            let mut fused = base;
+            hv.accum_into(&mut fused);
+            for (i, (a, b)) in fused.iter().zip(&composed).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} accum {i}", dtype.name());
+            }
+
+            // round_trip_slice == per-element round_trip
+            let mut seg = src;
+            round_trip_slice(dtype, &mut seg);
+            for (i, (a, &x)) in seg.iter().zip(&src).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    dtype.round_trip(x).to_bits(),
+                    "{} round {i}",
+                    dtype.name()
+                );
+            }
+        }
+        // F32 round trip is the identity on the slice form too
+        let mut seg = [1.0f32, f32::INFINITY, 1e-42];
+        round_trip_slice(DType::F32, &mut seg);
+        assert_eq!(seg, [1.0f32, f32::INFINITY, 1e-42]);
     }
 }

@@ -29,7 +29,8 @@ pub mod half;
 pub mod scaler;
 
 pub use half::{
-    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, HalfVec,
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+    quantize_accumulate, round_trip_slice, HalfVec,
 };
 pub use scaler::{DynamicLossScaler, LossScale};
 

@@ -1,0 +1,573 @@
+//! AVX2 backend (x86_64).  Every function is a bit-exact transcription of
+//! the portable canonical kernels — see the module docs on `simd` for the
+//! contract and `portable` for the reference arithmetic.
+//!
+//! Conversions are *pure integer* SIMD: the scalar branch ladder of
+//! `precision::half` becomes unconditional computation of every class
+//! (normal / subnormal / inf / nan / zero) followed by mask blends.  The
+//! hardware F16C instructions are deliberately not used — `vcvtph2ps`
+//! quiets signaling NaNs, while the scalar widen preserves the payload
+//! bit-exactly, and the exhaustive 2^16 differential test would catch the
+//! difference.  Round-to-nearest-even is computed branch-free:
+//! `kept += (rem + (kept & 1)) > half` is equivalent to the scalar
+//! `rem > half || (rem == half && odd)` ladder.
+//!
+//! Float kernels replicate the scalar operation order exactly (separate
+//! mul/add — rustc emits no FMA without fast-math — and `vsqrtps` /
+//! `vdivps` are IEEE correctly rounded), so elementwise results are
+//! bit-identical.  Reductions keep the canonical 8-lane grid in registers
+//! (f32 grids in one `__m256`, f64 grids as a lo/hi `__m256d` pair) and
+//! tails fall through to the shared `portable::*_span` helpers — a tail
+//! starts on a multiple of 8, so its lane offset is 0.
+//!
+//! Max folds use `cmp(GT) + blendv` rather than `vmaxps` so the NaN /
+//! signed-zero semantics equal `portable::max2` exactly.
+//!
+//! Safety: every `fn` here is `#[target_feature(enable = "avx2")]` and
+//! must only be called after AVX2 has been detected (`simd::backend()`
+//! guarantees it for the dispatch wrappers).
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+use super::portable;
+use super::{fold_f32, fold_f64, fold_max, AdamK, LANES};
+
+// --------------------------------------------------- register helpers ----
+
+/// 8 × f32 → 8 × u16-valued i32 lanes, IEEE f16 narrow with RNE.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn narrow8_f16(x: __m256) -> __m256i {
+    let bits = _mm256_castps_si256(x);
+    let sign =
+        _mm256_srli_epi32::<16>(_mm256_and_si256(bits, _mm256_set1_epi32(0x8000_0000u32 as i32)));
+    let exp = _mm256_and_si256(_mm256_srli_epi32::<23>(bits), _mm256_set1_epi32(0xFF));
+    let man = _mm256_and_si256(bits, _mm256_set1_epi32(0x007F_FFFF));
+    let abs = _mm256_and_si256(bits, _mm256_set1_epi32(0x7FFF_FFFF));
+
+    // normal range (unbiased e in [-14, 15] ⇔ exp in [113, 142]):
+    // out = ((e+15) << 10) | (man >> 13), then RNE on the dropped 13 bits;
+    // the carry of a round-up past 0x7BFF lands on 0x7C00 = inf exactly
+    let base = _mm256_or_si256(
+        _mm256_slli_epi32::<10>(_mm256_sub_epi32(exp, _mm256_set1_epi32(112))),
+        _mm256_srli_epi32::<13>(man),
+    );
+    let rem = _mm256_and_si256(man, _mm256_set1_epi32(0x1FFF));
+    let odd = _mm256_and_si256(base, _mm256_set1_epi32(1));
+    let round =
+        _mm256_cmpgt_epi32(_mm256_add_epi32(rem, odd), _mm256_set1_epi32(0x1000));
+    let out_norm = _mm256_sub_epi32(base, round); // mask is -1 ⇒ +1
+
+    // subnormal range (e in [-25, -15] ⇔ exp in [102, 112]): shift the
+    // explicit significand by 126 - exp ∈ [14, 24] with RNE on the low
+    // bits.  Lanes outside the range produce garbage (variable shifts ≥ 32
+    // yield 0) and are blended away.
+    let full = _mm256_or_si256(man, _mm256_set1_epi32(0x0080_0000));
+    let shift = _mm256_sub_epi32(_mm256_set1_epi32(126), exp);
+    let kept = _mm256_srlv_epi32(full, shift);
+    let low_mask =
+        _mm256_sub_epi32(_mm256_sllv_epi32(_mm256_set1_epi32(1), shift), _mm256_set1_epi32(1));
+    let rem_s = _mm256_and_si256(full, low_mask);
+    let half =
+        _mm256_sllv_epi32(_mm256_set1_epi32(1), _mm256_sub_epi32(shift, _mm256_set1_epi32(1)));
+    let odd_s = _mm256_and_si256(kept, _mm256_set1_epi32(1));
+    let round_s = _mm256_cmpgt_epi32(_mm256_add_epi32(rem_s, odd_s), half);
+    let out_sub = _mm256_sub_epi32(kept, round_s);
+
+    // nan: top payload bits, quiet bit forced (matches f32_to_f16_bits)
+    let out_nan = _mm256_or_si256(
+        _mm256_set1_epi32(0x7E00),
+        _mm256_and_si256(_mm256_srli_epi32::<13>(man), _mm256_set1_epi32(0x01FF)),
+    );
+
+    // classify (all operands < 2^31, so signed compares are exact)
+    let is_nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7F80_0000));
+    let lt_102 = _mm256_cmpgt_epi32(_mm256_set1_epi32(102), exp);
+    let lt_113 = _mm256_cmpgt_epi32(_mm256_set1_epi32(113), exp);
+    let lt_143 = _mm256_cmpgt_epi32(_mm256_set1_epi32(143), exp);
+    let is_norm = _mm256_andnot_si256(lt_113, lt_143); // 113 <= exp < 143
+    let is_sub = _mm256_andnot_si256(lt_102, lt_113); // 102 <= exp < 113
+
+    // default inf (exp >= 143: finite overflow and real infinities)
+    let mut r = _mm256_set1_epi32(0x7C00);
+    r = _mm256_blendv_epi8(r, out_norm, is_norm);
+    r = _mm256_blendv_epi8(r, out_sub, is_sub);
+    r = _mm256_andnot_si256(lt_102, r); // exp < 102: underflow to zero
+    r = _mm256_blendv_epi8(r, out_nan, is_nan);
+    _mm256_or_si256(sign, r)
+}
+
+/// 8 × u16-valued i32 lanes → 8 × f32 bit patterns, exact f16 widen.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn widen8_f16(v: __m256i) -> __m256i {
+    let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(v, _mm256_set1_epi32(0x8000)));
+    let em = _mm256_and_si256(v, _mm256_set1_epi32(0x7FFF));
+    let shifted = _mm256_slli_epi32::<13>(em);
+    // normal: rebias +112 exponents; inf/nan: push the exponent to 255
+    // keeping the payload (SNaN-ness preserved, same as the scalar widen)
+    let norm = _mm256_add_epi32(shifted, _mm256_set1_epi32(0x3800_0000));
+    let infnan = _mm256_add_epi32(shifted, _mm256_set1_epi32(0x7000_0000));
+    // subnormal (em < 0x400, zero included): man * 2^-24 exactly — the
+    // int→float convert is exact for man <= 1023 and the power-of-two
+    // scale is exact, reproducing the scalar normalization loop
+    let man = _mm256_and_si256(v, _mm256_set1_epi32(0x03FF));
+    let subf = _mm256_mul_ps(_mm256_cvtepi32_ps(man), _mm256_set1_ps(5.960_464_5e-8)); // 2^-24
+    let sub_bits = _mm256_castps_si256(subf);
+    let is_infnan = _mm256_cmpgt_epi32(em, _mm256_set1_epi32(0x7BFF));
+    let is_sub = _mm256_cmpgt_epi32(_mm256_set1_epi32(0x0400), em);
+    let mut r = _mm256_blendv_epi8(norm, infnan, is_infnan);
+    r = _mm256_blendv_epi8(r, sub_bits, is_sub);
+    _mm256_or_si256(sign, r)
+}
+
+/// 8 × f32 → 8 × u16-valued i32 lanes, bf16 narrow with RNE.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn narrow8_bf16(x: __m256) -> __m256i {
+    let bits = _mm256_castps_si256(x);
+    let abs = _mm256_and_si256(bits, _mm256_set1_epi32(0x7FFF_FFFF));
+    let is_nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7F80_0000));
+    // RNE on the dropped 16 bits; wrap-around on NaN lanes is harmless
+    // (they are blended away), matching the scalar's early NaN return
+    let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+    let rounded = _mm256_srli_epi32::<16>(_mm256_add_epi32(
+        _mm256_add_epi32(bits, _mm256_set1_epi32(0x7FFF)),
+        lsb,
+    ));
+    let nan_out =
+        _mm256_or_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(0x0040));
+    _mm256_blendv_epi8(rounded, nan_out, is_nan)
+}
+
+/// 8 × u16-valued i32 lanes → 8 × f32 bit patterns (bf16 is f32's top half).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn widen8_bf16(v: __m256i) -> __m256i {
+    _mm256_slli_epi32::<16>(v)
+}
+
+/// Pack 8 u16-valued i32 lanes into 8 contiguous u16s (order preserved;
+/// all values are <= 0xFFFF so the saturation never fires).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn pack8_u16(v: __m256i) -> __m128i {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    _mm_packus_epi32(lo, hi)
+}
+
+/// Load 8 contiguous u16s as zero-extended i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn load8_u16(p: *const u16) -> __m256i {
+    _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i))
+}
+
+/// `portable::max2` in registers: strictly-greater replaces (NaN never
+/// wins, ties keep the accumulator) — NOT `vmaxps`, whose NaN semantics
+/// differ.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn max8(acc: __m256, v: __m256) -> __m256 {
+    _mm256_blendv_ps(acc, v, _mm256_cmp_ps::<_CMP_GT_OQ>(v, acc))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn abs8(x: __m256) -> __m256 {
+    _mm256_and_ps(x, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)))
+}
+
+// ------------------------------------------------------ conversions ------
+
+macro_rules! conv_loops {
+    ($narrow:ident, $widen:ident, $accw:ident, $accq:ident, $round:ident,
+     $n8:ident, $w8:ident) => {
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $narrow(src: &[f32], out: &mut [u16]) {
+            let n = src.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let x = _mm256_loadu_ps(src.as_ptr().add(i));
+                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, pack8_u16($n8(x)));
+                i += LANES;
+            }
+            portable::$narrow(&src[i..], &mut out[i..]);
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $widen(bits: &[u16], out: &mut [f32]) {
+            let n = bits.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let v = load8_u16(bits.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_castsi256_ps($w8(v)));
+                i += LANES;
+            }
+            portable::$widen(&bits[i..], &mut out[i..]);
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $accw(bits: &[u16], dst: &mut [f32]) {
+            let n = bits.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let q = _mm256_castsi256_ps($w8(load8_u16(bits.as_ptr().add(i))));
+                let d = _mm256_add_ps(_mm256_loadu_ps(dst.as_ptr().add(i)), q);
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), d);
+                i += LANES;
+            }
+            portable::$accw(&bits[i..], &mut dst[i..]);
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $accq(src: &[f32], dst: &mut [f32]) {
+            let n = src.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let x = _mm256_loadu_ps(src.as_ptr().add(i));
+                let q = _mm256_castsi256_ps($w8($n8(x)));
+                let d = _mm256_add_ps(_mm256_loadu_ps(dst.as_ptr().add(i)), q);
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), d);
+                i += LANES;
+            }
+            portable::$accq(&src[i..], &mut dst[i..]);
+        }
+
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $round(seg: &mut [f32]) {
+            let n = seg.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let x = _mm256_loadu_ps(seg.as_ptr().add(i));
+                let q = _mm256_castsi256_ps($w8($n8(x)));
+                _mm256_storeu_ps(seg.as_mut_ptr().add(i), q);
+                i += LANES;
+            }
+            portable::$round(&mut seg[i..]);
+        }
+    };
+}
+
+// The five f16 slice kernels…
+conv_loops!(
+    narrow_f16,
+    widen_f16,
+    accum_widened_f16,
+    accum_quantized_f16,
+    round_f16,
+    narrow8_f16,
+    widen8_f16
+);
+// …and the five bf16 ones.
+conv_loops!(
+    narrow_bf16,
+    widen_bf16,
+    accum_widened_bf16,
+    accum_quantized_bf16,
+    round_bf16,
+    narrow8_bf16,
+    widen8_bf16
+);
+
+// ------------------------------------------------------- reductions ------
+
+/// Convert an 8-lane f32 vector into the (lanes 0-3, lanes 4-7) f64 pair
+/// of the canonical grid.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn to_pd_pair(v: __m256) -> (__m256d, __m256d) {
+    (
+        _mm256_cvtps_pd(_mm256_castps256_ps128(v)),
+        _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v)),
+    )
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn store_pd_grid(lo: __m256d, hi: __m256d) -> [f64; LANES] {
+    let mut acc = [0.0f64; LANES];
+    _mm256_storeu_pd(acc.as_mut_ptr(), lo);
+    _mm256_storeu_pd(acc.as_mut_ptr().add(4), hi);
+    acc
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn sum_sq(g: &[f32]) -> f64 {
+    let n = g.len();
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + LANES <= n {
+        let (lo, hi) = to_pd_pair(_mm256_loadu_ps(g.as_ptr().add(i)));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+        i += LANES;
+    }
+    let mut acc = store_pd_grid(acc_lo, acc_hi);
+    portable::sum_sq_span(&g[i..], 0, &mut acc);
+    fold_f64(acc)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn unscale_sum_sq(g: &mut [f32], inv_scale: f32) -> f64 {
+    let n = g.len();
+    let inv = _mm256_set1_ps(inv_scale);
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + LANES <= n {
+        // square the *stored* unscaled f32, exactly like the fused scalar
+        let v = _mm256_mul_ps(_mm256_loadu_ps(g.as_ptr().add(i)), inv);
+        _mm256_storeu_ps(g.as_mut_ptr().add(i), v);
+        let (lo, hi) = to_pd_pair(v);
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+        i += LANES;
+    }
+    let mut acc = store_pd_grid(acc_lo, acc_hi);
+    portable::unscale_sum_sq_span(&mut g[i..], inv_scale, 0, &mut acc);
+    fold_f64(acc)
+}
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn lans_segment(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    rf: &mut [f32],
+    cf: &mut [f32],
+) -> (f64, f64, f64) {
+    let n = x.len();
+    let b1 = _mm256_set1_ps(k.beta1);
+    let omb1 = _mm256_set1_ps(1.0 - k.beta1);
+    let b2 = _mm256_set1_ps(k.beta2);
+    let omb2 = _mm256_set1_ps(1.0 - k.beta2);
+    let eps = _mm256_set1_ps(k.eps);
+    let ibc1 = _mm256_set1_ps(k.inv_bc1);
+    let ibc2 = _mm256_set1_ps(k.inv_bc2);
+    let wd = _mm256_set1_ps(k.wd);
+    let ign = _mm256_set1_ps(k.inv_gnorm);
+    let one = _mm256_set1_ps(1.0);
+    let mut afx = _mm256_setzero_ps();
+    let mut afr = _mm256_setzero_ps();
+    let mut afc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+        // same op order as the scalar: gt = g·ign; mn = β1·m + (1-β1)·gt;
+        // vn = β2·v + ((1-β2)·gt)·gt  (left-assoc, matching Rust parsing)
+        let gt = _mm256_mul_ps(gv, ign);
+        let mn = _mm256_add_ps(_mm256_mul_ps(b1, mv), _mm256_mul_ps(omb1, gt));
+        let vn =
+            _mm256_add_ps(_mm256_mul_ps(b2, vv), _mm256_mul_ps(_mm256_mul_ps(omb2, gt), gt));
+        _mm256_storeu_ps(m.as_mut_ptr().add(i), mn);
+        _mm256_storeu_ps(v.as_mut_ptr().add(i), vn);
+        let inv_denom =
+            _mm256_div_ps(one, _mm256_add_ps(_mm256_sqrt_ps(_mm256_mul_ps(vn, ibc2)), eps));
+        let wx = _mm256_mul_ps(wd, xv);
+        let r = _mm256_add_ps(_mm256_mul_ps(_mm256_mul_ps(mn, ibc1), inv_denom), wx);
+        let c = _mm256_add_ps(_mm256_mul_ps(gt, inv_denom), wx);
+        _mm256_storeu_ps(rf.as_mut_ptr().add(i), r);
+        _mm256_storeu_ps(cf.as_mut_ptr().add(i), c);
+        afx = _mm256_add_ps(afx, _mm256_mul_ps(xv, xv));
+        afr = _mm256_add_ps(afr, _mm256_mul_ps(r, r));
+        afc = _mm256_add_ps(afc, _mm256_mul_ps(c, c));
+        i += LANES;
+    }
+    let (mut fx, mut fr, mut fc) = ([0.0f32; LANES], [0.0f32; LANES], [0.0f32; LANES]);
+    _mm256_storeu_ps(fx.as_mut_ptr(), afx);
+    _mm256_storeu_ps(fr.as_mut_ptr(), afr);
+    _mm256_storeu_ps(fc.as_mut_ptr(), afc);
+    portable::lans_span(
+        k,
+        &x[i..],
+        &g[i..],
+        &mut m[i..],
+        &mut v[i..],
+        &mut rf[i..],
+        &mut cf[i..],
+        0,
+        &mut fx,
+        &mut fr,
+        &mut fc,
+    );
+    (fold_f32(fx) as f64, fold_f32(fr) as f64, fold_f32(fc) as f64)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn lamb_segment(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    u: &mut [f32],
+) -> (f64, f64, f64) {
+    let n = x.len();
+    let b1 = _mm256_set1_ps(k.beta1);
+    let omb1 = _mm256_set1_ps(1.0 - k.beta1);
+    let b2 = _mm256_set1_ps(k.beta2);
+    let omb2 = _mm256_set1_ps(1.0 - k.beta2);
+    let eps = _mm256_set1_ps(k.eps);
+    let ibc1 = _mm256_set1_ps(k.inv_bc1);
+    let ibc2 = _mm256_set1_ps(k.inv_bc2);
+    let wd = _mm256_set1_ps(k.wd);
+    let (mut ax_lo, mut ax_hi) = (_mm256_setzero_pd(), _mm256_setzero_pd());
+    let (mut au_lo, mut au_hi) = (_mm256_setzero_pd(), _mm256_setzero_pd());
+    let (mut ag_lo, mut ag_hi) = (_mm256_setzero_pd(), _mm256_setzero_pd());
+    let mut i = 0;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+        let mn = _mm256_add_ps(_mm256_mul_ps(b1, mv), _mm256_mul_ps(omb1, gv));
+        let vn =
+            _mm256_add_ps(_mm256_mul_ps(b2, vv), _mm256_mul_ps(_mm256_mul_ps(omb2, gv), gv));
+        _mm256_storeu_ps(m.as_mut_ptr().add(i), mn);
+        _mm256_storeu_ps(v.as_mut_ptr().add(i), vn);
+        // un = (mn·ibc1) / (sqrt(vn·ibc2) + eps) + wd·x — a real divide,
+        // matching the scalar (no reciprocal-multiply rewrite)
+        let denom = _mm256_add_ps(_mm256_sqrt_ps(_mm256_mul_ps(vn, ibc2)), eps);
+        let un = _mm256_add_ps(
+            _mm256_div_ps(_mm256_mul_ps(mn, ibc1), denom),
+            _mm256_mul_ps(wd, xv),
+        );
+        _mm256_storeu_ps(u.as_mut_ptr().add(i), un);
+        let (glo, ghi) = to_pd_pair(gv);
+        ag_lo = _mm256_add_pd(ag_lo, _mm256_mul_pd(glo, glo));
+        ag_hi = _mm256_add_pd(ag_hi, _mm256_mul_pd(ghi, ghi));
+        let (xlo, xhi) = to_pd_pair(xv);
+        ax_lo = _mm256_add_pd(ax_lo, _mm256_mul_pd(xlo, xlo));
+        ax_hi = _mm256_add_pd(ax_hi, _mm256_mul_pd(xhi, xhi));
+        let (ulo, uhi) = to_pd_pair(un);
+        au_lo = _mm256_add_pd(au_lo, _mm256_mul_pd(ulo, ulo));
+        au_hi = _mm256_add_pd(au_hi, _mm256_mul_pd(uhi, uhi));
+        i += LANES;
+    }
+    let mut sx2 = store_pd_grid(ax_lo, ax_hi);
+    let mut su2 = store_pd_grid(au_lo, au_hi);
+    let mut sg2 = store_pd_grid(ag_lo, ag_hi);
+    portable::lamb_span(
+        k,
+        &x[i..],
+        &g[i..],
+        &mut m[i..],
+        &mut v[i..],
+        &mut u[i..],
+        0,
+        &mut sx2,
+        &mut su2,
+        &mut sg2,
+    );
+    (fold_f64(sx2), fold_f64(su2), fold_f64(sg2))
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn adamw_segment(
+    k: &AdamK,
+    x: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> f32 {
+    let n = x.len();
+    let b1 = _mm256_set1_ps(k.beta1);
+    let omb1 = _mm256_set1_ps(1.0 - k.beta1);
+    let b2 = _mm256_set1_ps(k.beta2);
+    let omb2 = _mm256_set1_ps(1.0 - k.beta2);
+    let eps = _mm256_set1_ps(k.eps);
+    let ibc1 = _mm256_set1_ps(k.inv_bc1);
+    let ibc2 = _mm256_set1_ps(k.inv_bc2);
+    let wd = _mm256_set1_ps(k.wd);
+    let ign = _mm256_set1_ps(k.inv_gnorm);
+    let lr = _mm256_set1_ps(k.lr);
+    let mut amax = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+        let gn = _mm256_mul_ps(gv, ign);
+        let mn = _mm256_add_ps(_mm256_mul_ps(b1, mv), _mm256_mul_ps(omb1, gn));
+        let vn =
+            _mm256_add_ps(_mm256_mul_ps(b2, vv), _mm256_mul_ps(_mm256_mul_ps(omb2, gn), gn));
+        _mm256_storeu_ps(m.as_mut_ptr().add(i), mn);
+        _mm256_storeu_ps(v.as_mut_ptr().add(i), vn);
+        let denom = _mm256_add_ps(_mm256_sqrt_ps(_mm256_mul_ps(vn, ibc2)), eps);
+        let upd = _mm256_add_ps(
+            _mm256_div_ps(_mm256_mul_ps(mn, ibc1), denom),
+            _mm256_mul_ps(wd, xv),
+        );
+        let xn = _mm256_sub_ps(xv, _mm256_mul_ps(lr, upd));
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), xn);
+        amax = max8(amax, abs8(xn));
+        i += LANES;
+    }
+    let mut ma = [0.0f32; LANES];
+    _mm256_storeu_ps(ma.as_mut_ptr(), amax);
+    portable::adamw_span(k, &mut x[i..], &g[i..], &mut m[i..], &mut v[i..], 0, &mut ma);
+    fold_max(ma)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn lans_apply(
+    coef_r: f32,
+    coef_c: f32,
+    x: &mut [f32],
+    rf: &[f32],
+    cf: &[f32],
+) -> f32 {
+    let n = x.len();
+    let cr = _mm256_set1_ps(coef_r);
+    let cc = _mm256_set1_ps(coef_c);
+    let mut amax = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let rv = _mm256_loadu_ps(rf.as_ptr().add(i));
+        let cv = _mm256_loadu_ps(cf.as_ptr().add(i));
+        let xn = _mm256_sub_ps(
+            xv,
+            _mm256_add_ps(_mm256_mul_ps(cr, rv), _mm256_mul_ps(cc, cv)),
+        );
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), xn);
+        amax = max8(amax, abs8(xn));
+        i += LANES;
+    }
+    let mut ma = [0.0f32; LANES];
+    _mm256_storeu_ps(ma.as_mut_ptr(), amax);
+    portable::lans_apply_span(coef_r, coef_c, &mut x[i..], &rf[i..], &cf[i..], 0, &mut ma);
+    fold_max(ma)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_max(coef: f32, x: &mut [f32], u: &[f32]) -> f32 {
+    let n = x.len();
+    let cv = _mm256_set1_ps(coef);
+    let mut amax = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let uv = _mm256_loadu_ps(u.as_ptr().add(i));
+        let xn = _mm256_sub_ps(xv, _mm256_mul_ps(cv, uv));
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), xn);
+        amax = max8(amax, abs8(xn));
+        i += LANES;
+    }
+    let mut ma = [0.0f32; LANES];
+    _mm256_storeu_ps(ma.as_mut_ptr(), amax);
+    portable::axpy_max_span(coef, &mut x[i..], &u[i..], 0, &mut ma);
+    fold_max(ma)
+}

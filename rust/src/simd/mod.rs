@@ -1,0 +1,697 @@
+//! Runtime-dispatched SIMD kernels for the byte-level hot loops: batch
+//! `f32 ↔ f16/bf16` wire conversion, the fused quantize-accumulate /
+//! round-trip hop kernels, and the segmented grad²/moment/apply sweeps
+//! behind `optim::native` (ROADMAP item: conversion and grad² at memory
+//! bandwidth; DESIGN.md §11).
+//!
+//! Three backends, one contract:
+//!
+//! * [`portable`] — safe scalar Rust, and the **canonical definition** of
+//!   every kernel.  The other backends must reproduce its bits exactly.
+//! * `avx2` (x86_64) — 8-lane integer/float vectors.  Conversions are
+//!   pure integer SIMD transcribing the scalar algorithms in
+//!   `precision::half` branch-free (hardware `vcvtps2ph` would quiet
+//!   signaling NaNs and break the exhaustive widen test, so it is *not*
+//!   used).  Float kernels replicate the scalar operation order — no FMA,
+//!   and `sqrt`/`div` are IEEE correctly rounded — so every elementwise
+//!   result is bit-identical.
+//! * `neon` (aarch64) — conversions and the grad² sweeps (the byte-level
+//!   loops); the moment/apply sweeps fall back to [`portable`] there.
+//!
+//! The backend is detected once (`is_x86_feature_detected!("avx2")` on
+//! x86_64; NEON is baseline on aarch64) and cached in an atomic, so
+//! dispatch costs one relaxed load per *batch* call — never per element.
+//! Setting `LANS_FORCE_SCALAR=1` in the environment forces [`portable`]
+//! everywhere (the CI fallback leg runs the whole suite this way).
+//!
+//! ## The lane-grid reduction contract
+//!
+//! A sequential `acc += x[i]²` fold cannot be vectorized bit-identically,
+//! so the *canonical in-segment fold order* is defined lane-strided: every
+//! reduction keeps [`LANES`] = 8 accumulators, element `i` folds into lane
+//! `i % 8`, and the lanes combine sequentially (lane 0 first) when the
+//! segment ends.  [`portable`] implements exactly that with plain arrays;
+//! AVX2 holds the same lanes in registers (two `__m256d` for f64 grids,
+//! one `__m256` for f32 grids) and NEON in four `float64x2_t` — same
+//! grid, same fold, same bits.  Cross-path bit-identity (serial ==
+//! parallel == sharded == bucketed) is untouched because every path calls
+//! these kernels through their single home in `optim::native`; the
+//! SIMD == portable equality is what the exhaustive and lane-remainder
+//! differential tests in this module pin.
+//!
+//! Max-folds (`|param|` after apply) use the same lane grid with
+//! `if v > acc { acc = v }` semantics (what `maxps` computes) — identical
+//! to the old sequential `f32::max` fold on the finite values the
+//! optimizer produces.
+
+pub mod portable;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Width of the canonical reduction lane grid (elements `i` fold into
+/// accumulator lane `i % LANES` within a segment).
+pub const LANES: usize = 8;
+
+/// Which kernel implementation the process dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Safe scalar Rust — the canonical reference (and the
+    /// `LANS_FORCE_SCALAR=1` path).
+    Scalar,
+    /// x86_64 with AVX2 detected at runtime.
+    Avx2,
+    /// aarch64 (NEON is baseline); moment/apply sweeps still run
+    /// [`portable`].
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+const B_UNKNOWN: u8 = 0;
+const B_SCALAR: u8 = 1;
+const B_AVX2: u8 = 2;
+const B_NEON: u8 = 3;
+
+static BACKEND: AtomicU8 = AtomicU8::new(B_UNKNOWN);
+
+fn force_scalar_env() -> bool {
+    std::env::var("LANS_FORCE_SCALAR")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+fn detect() -> u8 {
+    if force_scalar_env() {
+        return B_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return B_AVX2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    return B_NEON;
+    #[allow(unreachable_code)]
+    B_SCALAR
+}
+
+/// The dispatched backend, detected once per process and cached.
+#[inline]
+pub fn backend() -> Backend {
+    let mut b = BACKEND.load(Ordering::Relaxed);
+    if b == B_UNKNOWN {
+        b = detect();
+        BACKEND.store(b, Ordering::Relaxed);
+    }
+    match b {
+        B_AVX2 => Backend::Avx2,
+        B_NEON => Backend::Neon,
+        _ => Backend::Scalar,
+    }
+}
+
+// ------------------------------------------------------------- folds ------
+
+/// Sequential (lane 0 first) combine of an f64 lane grid — the one fold
+/// order every backend shares.
+#[inline]
+pub(crate) fn fold_f64(acc: [f64; LANES]) -> f64 {
+    let mut s = acc[0];
+    for &a in &acc[1..] {
+        s += a;
+    }
+    s
+}
+
+/// Sequential combine of an f32 lane grid.
+#[inline]
+pub(crate) fn fold_f32(acc: [f32; LANES]) -> f32 {
+    let mut s = acc[0];
+    for &a in &acc[1..] {
+        s += a;
+    }
+    s
+}
+
+/// Sequential max-combine of an f32 lane grid (`maxps` semantics:
+/// `if v > acc { acc = v }`).
+#[inline]
+pub(crate) fn fold_max(acc: [f32; LANES]) -> f32 {
+    let mut s = acc[0];
+    for &a in &acc[1..] {
+        if a > s {
+            s = a;
+        }
+    }
+    s
+}
+
+// ------------------------------------------------- per-step constants ----
+
+/// Per-segment constants of the Adam-family sweeps, hoisted once per step
+/// (`optim::native::AdamCtx` plus the per-block factors).  One struct
+/// serves LANS (`inv_gnorm`, `wd`), LAMB (`wd`) and AdamW (`inv_gnorm`,
+/// `wd`, `lr`).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamK {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub inv_bc1: f32,
+    pub inv_bc2: f32,
+    pub lr: f32,
+    pub wd: f32,
+    pub inv_gnorm: f32,
+}
+
+// ------------------------------------------------------ conversions ------
+
+macro_rules! dispatch_conv {
+    ($name:ident, $($arg:expr),*) => {
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 is only returned when
+            // is_x86_feature_detected!("avx2") held at detection.
+            Backend::Avx2 => unsafe { avx2::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is a baseline feature of every aarch64 target.
+            Backend::Neon => unsafe { neon::$name($($arg),*) },
+            _ => portable::$name($($arg),*),
+        }
+    };
+}
+
+/// Batch `f32 → f16` (round-to-nearest-even, overflow → ±inf) —
+/// bit-identical to `precision::half::f32_to_f16_bits` per element.
+#[inline]
+pub fn narrow_f16(src: &[f32], out: &mut [u16]) {
+    assert_eq!(src.len(), out.len(), "narrow_f16 length mismatch");
+    dispatch_conv!(narrow_f16, src, out)
+}
+
+/// Batch `f32 → bf16` — bit-identical to
+/// `precision::half::f32_to_bf16_bits` per element.
+#[inline]
+pub fn narrow_bf16(src: &[f32], out: &mut [u16]) {
+    assert_eq!(src.len(), out.len(), "narrow_bf16 length mismatch");
+    dispatch_conv!(narrow_bf16, src, out)
+}
+
+/// Batch `f16 → f32` widening (exact; NaN payloads preserved bit-exactly).
+#[inline]
+pub fn widen_f16(bits: &[u16], out: &mut [f32]) {
+    assert_eq!(bits.len(), out.len(), "widen_f16 length mismatch");
+    dispatch_conv!(widen_f16, bits, out)
+}
+
+/// Batch `bf16 → f32` widening (exact).
+#[inline]
+pub fn widen_bf16(bits: &[u16], out: &mut [f32]) {
+    assert_eq!(bits.len(), out.len(), "widen_bf16 length mismatch");
+    dispatch_conv!(widen_bf16, bits, out)
+}
+
+/// Fused ring-hop receive: `dst[i] += widen(bits[i])` — the batch form of
+/// the `iter_f32` accumulate loop, no intermediate f32 buffer.
+#[inline]
+pub fn accum_widened_f16(bits: &[u16], dst: &mut [f32]) {
+    assert_eq!(bits.len(), dst.len(), "accum_widened_f16 length mismatch");
+    dispatch_conv!(accum_widened_f16, bits, dst)
+}
+
+/// Fused ring-hop receive for bf16 wires.
+#[inline]
+pub fn accum_widened_bf16(bits: &[u16], dst: &mut [f32]) {
+    assert_eq!(bits.len(), dst.len(), "accum_widened_bf16 length mismatch");
+    dispatch_conv!(accum_widened_bf16, bits, dst)
+}
+
+/// Fused in-process ring hop: `dst[i] += dq(q(src[i]))` at f16 — quantize
+/// and widen stay in registers, so a hop allocates nothing.
+#[inline]
+pub fn accum_quantized_f16(src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "accum_quantized_f16 length mismatch");
+    dispatch_conv!(accum_quantized_f16, src, dst)
+}
+
+/// Fused in-process ring hop at bf16.
+#[inline]
+pub fn accum_quantized_bf16(src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "accum_quantized_bf16 length mismatch");
+    dispatch_conv!(accum_quantized_bf16, src, dst)
+}
+
+/// In-place `x[i] = dq(q(x[i]))` at f16 — the all-gather owner adoption.
+#[inline]
+pub fn round_f16(seg: &mut [f32]) {
+    dispatch_conv!(round_f16, seg)
+}
+
+/// In-place round trip at bf16.
+#[inline]
+pub fn round_bf16(seg: &mut [f32]) {
+    dispatch_conv!(round_bf16, seg)
+}
+
+// ------------------------------------------------------- reductions ------
+
+/// Σ g² of one segment on the canonical lane grid, folded to f64.
+#[inline]
+pub fn sum_sq(g: &[f32]) -> f64 {
+    dispatch_conv!(sum_sq, g)
+}
+
+/// Fused `g[i] *= inv_scale` + Σ g² of the *unscaled* values — one pass
+/// serves the overflow probe and the block norms.
+#[inline]
+pub fn unscale_sum_sq(g: &mut [f32], inv_scale: f32) -> f64 {
+    dispatch_conv!(unscale_sum_sq, g, inv_scale)
+}
+
+macro_rules! dispatch_x86 {
+    ($name:ident, $($arg:expr),*) => {
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 implies AVX2 was detected.
+            Backend::Avx2 => unsafe { avx2::$name($($arg),*) },
+            _ => portable::$name($($arg),*),
+        }
+    };
+}
+
+/// LANS moment/direction sweep of one segment (eq. 4 normalization,
+/// moment update, cached r/c directions); returns the segment's
+/// (Σx², Σr², Σc²) lane-grid partials folded to f64.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn lans_segment(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    rf: &mut [f32],
+    cf: &mut [f32],
+) -> (f64, f64, f64) {
+    dispatch_x86!(lans_segment, k, x, g, m, v, rf, cf)
+}
+
+/// LAMB moment/direction sweep of one segment; returns (Σx², Σu², Σg²)
+/// accumulated per element in f64 on the lane grid.
+#[inline]
+pub fn lamb_segment(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    u: &mut [f32],
+) -> (f64, f64, f64) {
+    dispatch_x86!(lamb_segment, k, x, g, m, v, u)
+}
+
+/// AdamW fused moment+apply sweep over any range; returns max |param|.
+#[inline]
+pub fn adamw_segment(
+    k: &AdamK,
+    x: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> f32 {
+    dispatch_x86!(adamw_segment, k, x, g, m, v)
+}
+
+/// LANS apply: `x -= coef_r·rf + coef_c·cf`; returns max |param|.
+#[inline]
+pub fn lans_apply(coef_r: f32, coef_c: f32, x: &mut [f32], rf: &[f32], cf: &[f32]) -> f32 {
+    dispatch_x86!(lans_apply, coef_r, coef_c, x, rf, cf)
+}
+
+/// LAMB apply: `x -= coef·u`; returns max |param|.
+#[inline]
+pub fn axpy_max(coef: f32, x: &mut [f32], u: &[f32]) -> f32 {
+    dispatch_x86!(axpy_max, coef, x, u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::half::{
+        bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+    };
+    use crate::util::rng::Rng;
+
+    // The differential harness: run `f` against the live dispatched
+    // backend AND (on x86_64 with AVX2) explicitly against the avx2
+    // module, so the SIMD == portable assertions hold even when the
+    // force-scalar knob redirects the dispatcher.
+
+    fn interesting_f32(rng: &mut Rng) -> f32 {
+        match rng.next_u64() % 10 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::INFINITY,
+            3 => f32::NEG_INFINITY,
+            4 => f32::NAN,
+            5 => f32::from_bits(rng.next_u64() as u32), // arbitrary bits
+            6 => (rng.next_u64() % 131072) as f32 - 65536.0, // f16 overflow edge
+            7 => rng.normal_f32() * 1e-6,               // subnormal-ish after narrow
+            8 => rng.normal_f32() * 1e38,
+            _ => rng.normal_f32(),
+        }
+    }
+
+    #[test]
+    fn backend_is_cached_and_named() {
+        let b = backend();
+        assert_eq!(b, backend(), "detection must be stable");
+        assert!(["scalar", "avx2", "neon"].contains(&b.name()));
+    }
+
+    #[test]
+    fn exhaustive_widen_f16_matches_scalar_all_patterns() {
+        // all 2^16 bit patterns in one batch call (main loop, no tail) …
+        let bits: Vec<u16> = (0..=u16::MAX).collect();
+        let mut out = vec![0.0f32; bits.len()];
+        widen_f16(&bits, &mut out);
+        for (h, o) in bits.iter().zip(&out) {
+            assert_eq!(
+                o.to_bits(),
+                f16_bits_to_f32(*h).to_bits(),
+                "f16 widen pattern {h:#06x}"
+            );
+        }
+        // … and through the portable reference explicitly
+        let mut port = vec![0.0f32; bits.len()];
+        portable::widen_f16(&bits, &mut port);
+        for (h, (a, b)) in bits.iter().zip(out.iter().zip(&port)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f16 widen pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_widen_bf16_matches_scalar_all_patterns() {
+        let bits: Vec<u16> = (0..=u16::MAX).collect();
+        let mut out = vec![0.0f32; bits.len()];
+        widen_bf16(&bits, &mut out);
+        for (h, o) in bits.iter().zip(&out) {
+            assert_eq!(
+                o.to_bits(),
+                bf16_bits_to_f32(*h).to_bits(),
+                "bf16 widen pattern {h:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn exhaustive_narrow_roundtrip_all_half_patterns() {
+        // every representable half value is a fixed point of the SIMD
+        // narrow — covers all normal/subnormal/inf/nan narrow classes
+        let bits: Vec<u16> = (0..=u16::MAX).collect();
+        let mut wide = vec![0.0f32; bits.len()];
+        let mut back = vec![0u16; bits.len()];
+        widen_f16(&bits, &mut wide);
+        narrow_f16(&wide, &mut back);
+        for (h, b) in bits.iter().zip(&back) {
+            assert_eq!(*b, f32_to_f16_bits(f16_bits_to_f32(*h)), "f16 {h:#06x}");
+        }
+        widen_bf16(&bits, &mut wide);
+        narrow_bf16(&wide, &mut back);
+        for (h, b) in bits.iter().zip(&back) {
+            assert_eq!(*b, f32_to_bf16_bits(bf16_bits_to_f32(*h)), "bf16 {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn narrow_matches_scalar_every_lane_remainder_and_offset() {
+        // n mod LANES ∈ 0..LANES and unaligned slice offsets 0..LANES —
+        // the tail path and misaligned loads must agree with the scalar
+        let mut rng = Rng::new(0x51D0);
+        let buf: Vec<f32> = (0..4 * LANES + LANES).map(|_| interesting_f32(&mut rng)).collect();
+        for off in 0..LANES {
+            for rem in 0..LANES {
+                let n = 3 * LANES + rem;
+                let src = &buf[off..off + n];
+                let mut got = vec![0u16; n];
+                narrow_f16(src, &mut got);
+                for (i, (&x, &b)) in src.iter().zip(&got).enumerate() {
+                    assert_eq!(b, f32_to_f16_bits(x), "f16 off={off} rem={rem} i={i}");
+                }
+                narrow_bf16(src, &mut got);
+                for (i, (&x, &b)) in src.iter().zip(&got).enumerate() {
+                    assert_eq!(b, f32_to_bf16_bits(x), "bf16 off={off} rem={rem} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_hop_kernels_match_their_composition() {
+        let mut rng = Rng::new(0xACC0);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let src: Vec<f32> = (0..n).map(|_| interesting_f32(&mut rng)).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+            // accum_quantized == narrow → widen → add, elementwise
+            let mut dst = base.clone();
+            accum_quantized_f16(&src, &mut dst);
+            for i in 0..n {
+                let want = base[i] + f16_bits_to_f32(f32_to_f16_bits(src[i]));
+                assert_eq!(dst[i].to_bits(), want.to_bits(), "aq f16 n={n} i={i}");
+            }
+            let mut dst = base.clone();
+            accum_quantized_bf16(&src, &mut dst);
+            for i in 0..n {
+                let want = base[i] + bf16_bits_to_f32(f32_to_bf16_bits(src[i]));
+                assert_eq!(dst[i].to_bits(), want.to_bits(), "aq bf16 n={n} i={i}");
+            }
+
+            // accum_widened == widen → add
+            let bits: Vec<u16> = src.iter().map(|&x| f32_to_f16_bits(x)).collect();
+            let mut dst = base.clone();
+            accum_widened_f16(&bits, &mut dst);
+            for i in 0..n {
+                let want = base[i] + f16_bits_to_f32(bits[i]);
+                assert_eq!(dst[i].to_bits(), want.to_bits(), "aw f16 n={n} i={i}");
+            }
+
+            // round == narrow → widen in place
+            let mut seg = src.clone();
+            round_f16(&mut seg);
+            for i in 0..n {
+                let want = f16_bits_to_f32(f32_to_f16_bits(src[i]));
+                assert_eq!(seg[i].to_bits(), want.to_bits(), "round f16 n={n} i={i}");
+            }
+            let mut seg = src.clone();
+            round_bf16(&mut seg);
+            for i in 0..n {
+                let want = bf16_bits_to_f32(f32_to_bf16_bits(src[i]));
+                assert_eq!(seg[i].to_bits(), want.to_bits(), "round bf16 n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_sq_matches_portable_every_remainder() {
+        let mut rng = Rng::new(0x5E6);
+        let buf: Vec<f32> = (0..6 * LANES).map(|_| rng.normal_f32() * 3.0).collect();
+        for off in 0..LANES {
+            for n in 0..4 * LANES {
+                let g = &buf[off..off + n];
+                let got = sum_sq(g);
+                let want = portable::sum_sq(g);
+                assert_eq!(got.to_bits(), want.to_bits(), "off={off} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn unscale_sum_sq_matches_portable_and_unscales_in_place() {
+        let mut rng = Rng::new(0xD15);
+        for n in [0usize, 5, 8, 17, 4096, 4100] {
+            let g0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let inv = 0.25f32; // exact power of two
+            let mut a = g0.clone();
+            let mut b = g0.clone();
+            let sa = unscale_sum_sq(&mut a, inv);
+            let sb = portable::unscale_sum_sq(&mut b, inv);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "n={n}");
+            assert_eq!(a, b, "n={n}");
+            for (x, x0) in a.iter().zip(&g0) {
+                assert_eq!(x.to_bits(), (x0 * inv).to_bits());
+            }
+        }
+    }
+
+    fn test_k() -> AdamK {
+        AdamK {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            inv_bc1: 1.0 / (1.0 - 0.9f32),
+            inv_bc2: 1.0 / (1.0 - 0.999f32),
+            lr: 0.01,
+            wd: 0.01,
+            inv_gnorm: 0.37,
+        }
+    }
+
+    #[test]
+    fn lans_segment_matches_portable_every_remainder() {
+        let k = test_k();
+        let mut rng = Rng::new(0x1A45);
+        for n in [0usize, 1, 7, 8, 9, 31, 32, 100, 4096] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let m0: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+            let v0: Vec<f32> = (0..n).map(|_| rng.normal_f32().abs() * 0.1).collect();
+            let (mut m1, mut v1) = (m0.clone(), v0.clone());
+            let (mut m2, mut v2) = (m0, v0);
+            let (mut rf1, mut cf1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut rf2, mut cf2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let a = lans_segment(&k, &x, &g, &mut m1, &mut v1, &mut rf1, &mut cf1);
+            let b = portable::lans_segment(&k, &x, &g, &mut m2, &mut v2, &mut rf2, &mut cf2);
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "n={n} sx");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "n={n} sr");
+            assert_eq!(a.2.to_bits(), b.2.to_bits(), "n={n} sc");
+            assert_eq!(m1, m2, "n={n}");
+            assert_eq!(v1, v2, "n={n}");
+            assert_eq!(rf1, rf2, "n={n}");
+            assert_eq!(cf1, cf2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lamb_and_adamw_and_applies_match_portable() {
+        let k = test_k();
+        let mut rng = Rng::new(0x1A3B);
+        for n in [0usize, 3, 8, 13, 64, 257, 4096] {
+            let x0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let m0: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+            let v0: Vec<f32> = (0..n).map(|_| rng.normal_f32().abs() * 0.1).collect();
+
+            let (mut m1, mut v1, mut u1) = (m0.clone(), v0.clone(), vec![0.0f32; n]);
+            let (mut m2, mut v2, mut u2) = (m0.clone(), v0.clone(), vec![0.0f32; n]);
+            let a = lamb_segment(&k, &x0, &g, &mut m1, &mut v1, &mut u1);
+            let b = portable::lamb_segment(&k, &x0, &g, &mut m2, &mut v2, &mut u2);
+            assert_eq!(
+                (a.0.to_bits(), a.1.to_bits(), a.2.to_bits()),
+                (b.0.to_bits(), b.1.to_bits(), b.2.to_bits()),
+                "lamb n={n}"
+            );
+            assert_eq!((m1, v1, u1), (m2, v2, u2.clone()), "lamb n={n}");
+
+            let (mut xa, mut ma, mut va) = (x0.clone(), m0.clone(), v0.clone());
+            let (mut xb, mut mb, mut vb) = (x0.clone(), m0, v0);
+            let a = adamw_segment(&k, &mut xa, &g, &mut ma, &mut va);
+            let b = portable::adamw_segment(&k, &mut xb, &g, &mut mb, &mut vb);
+            assert_eq!(a.to_bits(), b.to_bits(), "adamw n={n}");
+            assert_eq!((xa, ma, va), (xb, mb, vb), "adamw n={n}");
+
+            let (mut xa, mut xb) = (x0.clone(), x0.clone());
+            let a = lans_apply(0.01, 0.002, &mut xa, &g, &u2);
+            let b = portable::lans_apply(0.01, 0.002, &mut xb, &g, &u2);
+            assert_eq!(a.to_bits(), b.to_bits(), "lans_apply n={n}");
+            assert_eq!(xa, xb, "lans_apply n={n}");
+
+            let (mut xa, mut xb) = (x0.clone(), x0);
+            let a = axpy_max(0.01, &mut xa, &u2);
+            let b = portable::axpy_max(0.01, &mut xb, &u2);
+            assert_eq!(a.to_bits(), b.to_bits(), "axpy n={n}");
+            assert_eq!(xa, xb, "axpy n={n}");
+        }
+    }
+
+    // ---- explicit AVX2-vs-portable differentials (run whenever the CPU
+    // has AVX2, independent of the LANS_FORCE_SCALAR dispatcher state) ----
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_exhaustive_conversions_match_portable() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let bits: Vec<u16> = (0..=u16::MAX).collect();
+        let (mut a, mut b) = (vec![0.0f32; bits.len()], vec![0.0f32; bits.len()]);
+        unsafe { avx2::widen_f16(&bits, &mut a) };
+        portable::widen_f16(&bits, &mut b);
+        for (h, (x, y)) in bits.iter().zip(a.iter().zip(&b)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "avx2 f16 widen {h:#06x}");
+        }
+        unsafe { avx2::widen_bf16(&bits, &mut a) };
+        portable::widen_bf16(&bits, &mut b);
+        for (h, (x, y)) in bits.iter().zip(a.iter().zip(&b)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "avx2 bf16 widen {h:#06x}");
+        }
+        // narrow over every widened half value plus a dense f32 sweep
+        // around the f16 subnormal/overflow boundaries
+        let mut rng = Rng::new(7);
+        let mut xs: Vec<f32> = Vec::with_capacity(1 << 17);
+        unsafe { avx2::widen_f16(&bits, &mut a) };
+        xs.extend_from_slice(&a);
+        for _ in 0..(1 << 16) {
+            xs.push(interesting_f32(&mut rng));
+        }
+        let (mut na, mut nb) = (vec![0u16; xs.len()], vec![0u16; xs.len()]);
+        unsafe { avx2::narrow_f16(&xs, &mut na) };
+        portable::narrow_f16(&xs, &mut nb);
+        assert_eq!(na, nb, "avx2 f16 narrow");
+        unsafe { avx2::narrow_bf16(&xs, &mut na) };
+        portable::narrow_bf16(&xs, &mut nb);
+        assert_eq!(na, nb, "avx2 bf16 narrow");
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_reductions_match_portable() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let k = test_k();
+        let mut rng = Rng::new(0xAB2D);
+        for n in [0usize, 1, 7, 8, 9, 100, 4095, 4096] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            assert_eq!(
+                unsafe { avx2::sum_sq(&g) }.to_bits(),
+                portable::sum_sq(&g).to_bits(),
+                "sum_sq n={n}"
+            );
+            let (mut ga, mut gb) = (g.clone(), g.clone());
+            let sa = unsafe { avx2::unscale_sum_sq(&mut ga, 0.5) };
+            let sb = portable::unscale_sum_sq(&mut gb, 0.5);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "unscale n={n}");
+            assert_eq!(ga, gb, "unscale n={n}");
+
+            let m0: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+            let v0: Vec<f32> = (0..n).map(|_| rng.normal_f32().abs() * 0.1).collect();
+            let (mut m1, mut v1) = (m0.clone(), v0.clone());
+            let (mut m2, mut v2) = (m0, v0);
+            let (mut rf1, mut cf1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut rf2, mut cf2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let a = unsafe { avx2::lans_segment(&k, &x, &g, &mut m1, &mut v1, &mut rf1, &mut cf1) };
+            let b = portable::lans_segment(&k, &x, &g, &mut m2, &mut v2, &mut rf2, &mut cf2);
+            assert_eq!(
+                (a.0.to_bits(), a.1.to_bits(), a.2.to_bits()),
+                (b.0.to_bits(), b.1.to_bits(), b.2.to_bits()),
+                "lans n={n}"
+            );
+            assert_eq!((m1, v1, rf1, cf1), (m2, v2, rf2, cf2), "lans n={n}");
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! NEON backend (aarch64).  Covers the byte-level loops — the ten batch
+//! conversion kernels and the two grad² sweeps; the moment/apply sweeps
+//! dispatch to [`portable`](super::portable) on aarch64 (see the policy
+//! note in the `simd` module docs).
+//!
+//! The conversion algorithms are the same branch-free integer transcriptions
+//! of `precision::half` as the AVX2 backend, on 4-lane `u32x4` vectors:
+//! compute every class (normal / subnormal / inf / nan / zero), then
+//! `vbslq` the right one in.  Variable shifts use `vshlq_u32` with negated
+//! signed counts (USHL: negative = right shift; out-of-range counts yield
+//! 0 on lanes that are blended away anyway).  RNE is the same branch-free
+//! `(rem + odd) > half` comparison.
+//!
+//! The grad² sweeps keep the canonical 8-lane f64 grid in four
+//! `float64x2_t` (lanes 0-1, 2-3, 4-5, 6-7) with separate mul/add — no
+//! `vfmaq`, which would fuse the rounding — and tails fall through to the
+//! shared `portable::*_span` helpers.
+//!
+//! Safety: NEON is a baseline feature of every aarch64 target; the
+//! `#[target_feature]` + `unsafe fn` shape only mirrors the AVX2 module so
+//! the dispatch macro treats both alike.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use super::portable;
+use super::{fold_f64, LANES};
+
+// --------------------------------------------------- register helpers ----
+
+/// 4 × f32 → 4 × u16-valued u32 lanes, IEEE f16 narrow with RNE.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn narrow4_f16(x: float32x4_t) -> uint32x4_t {
+    let bits = vreinterpretq_u32_f32(x);
+    let sign = vshrq_n_u32::<16>(vandq_u32(bits, vdupq_n_u32(0x8000_0000)));
+    let exp = vandq_u32(vshrq_n_u32::<23>(bits), vdupq_n_u32(0xFF));
+    let man = vandq_u32(bits, vdupq_n_u32(0x007F_FFFF));
+    let abs = vandq_u32(bits, vdupq_n_u32(0x7FFF_FFFF));
+
+    // normal range (exp in [113, 142]): rebias, drop 13 bits with RNE
+    // (subtracting the all-ones compare mask adds the round increment)
+    let base = vorrq_u32(
+        vshlq_n_u32::<10>(vsubq_u32(exp, vdupq_n_u32(112))),
+        vshrq_n_u32::<13>(man),
+    );
+    let rem = vandq_u32(man, vdupq_n_u32(0x1FFF));
+    let odd = vandq_u32(base, vdupq_n_u32(1));
+    let round = vcgtq_u32(vaddq_u32(rem, odd), vdupq_n_u32(0x1000));
+    let out_norm = vsubq_u32(base, round);
+
+    // subnormal range (exp in [102, 112]): shift by 126 - exp ∈ [14, 24]
+    // with RNE on the dropped bits; other lanes produce garbage that the
+    // blends discard
+    let full = vorrq_u32(man, vdupq_n_u32(0x0080_0000));
+    let shift = vsubq_u32(vdupq_n_u32(126), exp);
+    let shift_s = vreinterpretq_s32_u32(shift);
+    let kept = vshlq_u32(full, vnegq_s32(shift_s));
+    let low_mask = vsubq_u32(vshlq_u32(vdupq_n_u32(1), shift_s), vdupq_n_u32(1));
+    let rem_s = vandq_u32(full, low_mask);
+    let half = vshlq_u32(
+        vdupq_n_u32(1),
+        vreinterpretq_s32_u32(vsubq_u32(shift, vdupq_n_u32(1))),
+    );
+    let odd_s = vandq_u32(kept, vdupq_n_u32(1));
+    let round_s = vcgtq_u32(vaddq_u32(rem_s, odd_s), half);
+    let out_sub = vsubq_u32(kept, round_s);
+
+    let out_nan = vorrq_u32(
+        vdupq_n_u32(0x7E00),
+        vandq_u32(vshrq_n_u32::<13>(man), vdupq_n_u32(0x01FF)),
+    );
+
+    let is_nan = vcgtq_u32(abs, vdupq_n_u32(0x7F80_0000));
+    let lt_102 = vcltq_u32(exp, vdupq_n_u32(102));
+    let lt_113 = vcltq_u32(exp, vdupq_n_u32(113));
+    let lt_143 = vcltq_u32(exp, vdupq_n_u32(143));
+    let is_norm = vbicq_u32(lt_143, lt_113);
+    let is_sub = vbicq_u32(lt_113, lt_102);
+
+    let mut r = vdupq_n_u32(0x7C00); // default: exp >= 143 overflows to inf
+    r = vbslq_u32(is_norm, out_norm, r);
+    r = vbslq_u32(is_sub, out_sub, r);
+    r = vbicq_u32(r, lt_102); // exp < 102: underflow to signed zero
+    r = vbslq_u32(is_nan, out_nan, r);
+    vorrq_u32(sign, r)
+}
+
+/// 4 × u16-valued u32 lanes → 4 × f32 bit patterns, exact f16 widen.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn widen4_f16(v: uint32x4_t) -> uint32x4_t {
+    let sign = vshlq_n_u32::<16>(vandq_u32(v, vdupq_n_u32(0x8000)));
+    let em = vandq_u32(v, vdupq_n_u32(0x7FFF));
+    let shifted = vshlq_n_u32::<13>(em);
+    let norm = vaddq_u32(shifted, vdupq_n_u32(0x3800_0000));
+    let infnan = vaddq_u32(shifted, vdupq_n_u32(0x7000_0000));
+    // subnormals: man * 2^-24 exactly (convert is exact for man <= 1023)
+    let man = vandq_u32(v, vdupq_n_u32(0x03FF));
+    let subf = vmulq_f32(vcvtq_f32_u32(man), vdupq_n_f32(5.960_464_5e-8)); // 2^-24
+    let sub_bits = vreinterpretq_u32_f32(subf);
+    let is_infnan = vcgtq_u32(em, vdupq_n_u32(0x7BFF));
+    let is_sub = vcltq_u32(em, vdupq_n_u32(0x0400));
+    let mut r = vbslq_u32(is_infnan, infnan, norm);
+    r = vbslq_u32(is_sub, sub_bits, r);
+    vorrq_u32(sign, r)
+}
+
+/// 4 × f32 → 4 × u16-valued u32 lanes, bf16 narrow with RNE.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn narrow4_bf16(x: float32x4_t) -> uint32x4_t {
+    let bits = vreinterpretq_u32_f32(x);
+    let abs = vandq_u32(bits, vdupq_n_u32(0x7FFF_FFFF));
+    let is_nan = vcgtq_u32(abs, vdupq_n_u32(0x7F80_0000));
+    let lsb = vandq_u32(vshrq_n_u32::<16>(bits), vdupq_n_u32(1));
+    let rounded =
+        vshrq_n_u32::<16>(vaddq_u32(vaddq_u32(bits, vdupq_n_u32(0x7FFF)), lsb));
+    let nan_out = vorrq_u32(vshrq_n_u32::<16>(bits), vdupq_n_u32(0x0040));
+    vbslq_u32(is_nan, nan_out, rounded)
+}
+
+/// 4 × u16-valued u32 lanes → 4 × f32 bit patterns (bf16 widen).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn widen4_bf16(v: uint32x4_t) -> uint32x4_t {
+    vshlq_n_u32::<16>(v)
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn load4_u16(p: *const u16) -> uint32x4_t {
+    vmovl_u16(vld1_u16(p))
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn store4_u16(p: *mut u16, v: uint32x4_t) {
+    vst1_u16(p, vmovn_u32(v));
+}
+
+// ------------------------------------------------------ conversions ------
+
+macro_rules! conv_loops {
+    ($narrow:ident, $widen:ident, $accw:ident, $accq:ident, $round:ident,
+     $n4:ident, $w4:ident) => {
+        #[target_feature(enable = "neon")]
+        pub unsafe fn $narrow(src: &[f32], out: &mut [u16]) {
+            let n = src.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                store4_u16(out.as_mut_ptr().add(i), $n4(vld1q_f32(src.as_ptr().add(i))));
+                i += 4;
+            }
+            portable::$narrow(&src[i..], &mut out[i..]);
+        }
+
+        #[target_feature(enable = "neon")]
+        pub unsafe fn $widen(bits: &[u16], out: &mut [f32]) {
+            let n = bits.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let w = vreinterpretq_f32_u32($w4(load4_u16(bits.as_ptr().add(i))));
+                vst1q_f32(out.as_mut_ptr().add(i), w);
+                i += 4;
+            }
+            portable::$widen(&bits[i..], &mut out[i..]);
+        }
+
+        #[target_feature(enable = "neon")]
+        pub unsafe fn $accw(bits: &[u16], dst: &mut [f32]) {
+            let n = bits.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let q = vreinterpretq_f32_u32($w4(load4_u16(bits.as_ptr().add(i))));
+                let d = vaddq_f32(vld1q_f32(dst.as_ptr().add(i)), q);
+                vst1q_f32(dst.as_mut_ptr().add(i), d);
+                i += 4;
+            }
+            portable::$accw(&bits[i..], &mut dst[i..]);
+        }
+
+        #[target_feature(enable = "neon")]
+        pub unsafe fn $accq(src: &[f32], dst: &mut [f32]) {
+            let n = src.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = vld1q_f32(src.as_ptr().add(i));
+                let q = vreinterpretq_f32_u32($w4($n4(x)));
+                let d = vaddq_f32(vld1q_f32(dst.as_ptr().add(i)), q);
+                vst1q_f32(dst.as_mut_ptr().add(i), d);
+                i += 4;
+            }
+            portable::$accq(&src[i..], &mut dst[i..]);
+        }
+
+        #[target_feature(enable = "neon")]
+        pub unsafe fn $round(seg: &mut [f32]) {
+            let n = seg.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = vld1q_f32(seg.as_ptr().add(i));
+                let q = vreinterpretq_f32_u32($w4($n4(x)));
+                vst1q_f32(seg.as_mut_ptr().add(i), q);
+                i += 4;
+            }
+            portable::$round(&mut seg[i..]);
+        }
+    };
+}
+
+conv_loops!(
+    narrow_f16,
+    widen_f16,
+    accum_widened_f16,
+    accum_quantized_f16,
+    round_f16,
+    narrow4_f16,
+    widen4_f16
+);
+conv_loops!(
+    narrow_bf16,
+    widen_bf16,
+    accum_widened_bf16,
+    accum_quantized_bf16,
+    round_bf16,
+    narrow4_bf16,
+    widen4_bf16
+);
+
+// ------------------------------------------------------- reductions ------
+
+/// The canonical 8-lane f64 grid as four 2-lane vectors: `(lanes 0-1,
+/// 2-3, 4-5, 6-7)` from two consecutive f32x4 loads.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn sq_acc(
+    acc: &mut [float64x2_t; 4],
+    v0: float32x4_t,
+    v1: float32x4_t,
+) {
+    let d0 = vcvt_f64_f32(vget_low_f32(v0));
+    let d1 = vcvt_high_f64_f32(v0);
+    let d2 = vcvt_f64_f32(vget_low_f32(v1));
+    let d3 = vcvt_high_f64_f32(v1);
+    acc[0] = vaddq_f64(acc[0], vmulq_f64(d0, d0));
+    acc[1] = vaddq_f64(acc[1], vmulq_f64(d1, d1));
+    acc[2] = vaddq_f64(acc[2], vmulq_f64(d2, d2));
+    acc[3] = vaddq_f64(acc[3], vmulq_f64(d3, d3));
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn store_grid(acc: [float64x2_t; 4]) -> [f64; LANES] {
+    let mut out = [0.0f64; LANES];
+    for (j, a) in acc.iter().enumerate() {
+        vst1q_f64(out.as_mut_ptr().add(2 * j), *a);
+    }
+    out
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn sum_sq(g: &[f32]) -> f64 {
+    let n = g.len();
+    let mut acc = [vdupq_n_f64(0.0); 4];
+    let mut i = 0;
+    while i + LANES <= n {
+        sq_acc(
+            &mut acc,
+            vld1q_f32(g.as_ptr().add(i)),
+            vld1q_f32(g.as_ptr().add(i + 4)),
+        );
+        i += LANES;
+    }
+    let mut grid = store_grid(acc);
+    portable::sum_sq_span(&g[i..], 0, &mut grid);
+    fold_f64(grid)
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn unscale_sum_sq(g: &mut [f32], inv_scale: f32) -> f64 {
+    let n = g.len();
+    let inv = vdupq_n_f32(inv_scale);
+    let mut acc = [vdupq_n_f64(0.0); 4];
+    let mut i = 0;
+    while i + LANES <= n {
+        // square the *stored* unscaled value, like the fused scalar sweep
+        let v0 = vmulq_f32(vld1q_f32(g.as_ptr().add(i)), inv);
+        let v1 = vmulq_f32(vld1q_f32(g.as_ptr().add(i + 4)), inv);
+        vst1q_f32(g.as_mut_ptr().add(i), v0);
+        vst1q_f32(g.as_mut_ptr().add(i + 4), v1);
+        sq_acc(&mut acc, v0, v1);
+        i += LANES;
+    }
+    let mut grid = store_grid(acc);
+    portable::unscale_sum_sq_span(&mut g[i..], inv_scale, 0, &mut grid);
+    fold_f64(grid)
+}

@@ -1,0 +1,319 @@
+//! Portable scalar backend — the **canonical definition** of every SIMD
+//! kernel (DESIGN.md §11).  The AVX2/NEON modules must reproduce these
+//! bits exactly; the differential tests in `simd::tests` and
+//! `tests/proptests.rs` assert it.
+//!
+//! Conversions delegate per element to the scalar bit algorithms in
+//! `precision::half` (their golden-vector tests are the ground truth).
+//! Reductions implement the lane-grid fold: element `i` accumulates into
+//! lane `i % LANES`, lanes combine sequentially at the end — see the
+//! module docs on `simd` for why the canonical order is lane-strided.
+//!
+//! The `*_span` helpers run the elementwise body over a sub-range while
+//! folding into caller-owned lane accumulators.  They are the single home
+//! of the scalar arithmetic: the vector backends call them for tail
+//! elements (tails start at a multiple of [`LANES`], so the lane a tail
+//! element lands in is just its offset from the tail start), which keeps
+//! the scalar and vector paths literally the same code wherever a loop
+//! doesn't fill a register.
+
+use crate::precision::half::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+};
+
+use super::{fold_f32, fold_f64, fold_max, AdamK, LANES};
+
+/// `maxps` semantics: strictly-greater replaces, so a NaN candidate never
+/// wins.  Identical to `f32::max` on finite values.
+#[inline]
+pub(crate) fn max2(acc: f32, v: f32) -> f32 {
+    if v > acc {
+        v
+    } else {
+        acc
+    }
+}
+
+// ------------------------------------------------------ conversions ------
+
+pub fn narrow_f16(src: &[f32], out: &mut [u16]) {
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = f32_to_f16_bits(x);
+    }
+}
+
+pub fn narrow_bf16(src: &[f32], out: &mut [u16]) {
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = f32_to_bf16_bits(x);
+    }
+}
+
+pub fn widen_f16(bits: &[u16], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = f16_bits_to_f32(b);
+    }
+}
+
+pub fn widen_bf16(bits: &[u16], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = bf16_bits_to_f32(b);
+    }
+}
+
+pub fn accum_widened_f16(bits: &[u16], dst: &mut [f32]) {
+    for (d, &b) in dst.iter_mut().zip(bits) {
+        *d += f16_bits_to_f32(b);
+    }
+}
+
+pub fn accum_widened_bf16(bits: &[u16], dst: &mut [f32]) {
+    for (d, &b) in dst.iter_mut().zip(bits) {
+        *d += bf16_bits_to_f32(b);
+    }
+}
+
+pub fn accum_quantized_f16(src: &[f32], dst: &mut [f32]) {
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d += f16_bits_to_f32(f32_to_f16_bits(x));
+    }
+}
+
+pub fn accum_quantized_bf16(src: &[f32], dst: &mut [f32]) {
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d += bf16_bits_to_f32(f32_to_bf16_bits(x));
+    }
+}
+
+pub fn round_f16(seg: &mut [f32]) {
+    for x in seg.iter_mut() {
+        *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+    }
+}
+
+pub fn round_bf16(seg: &mut [f32]) {
+    for x in seg.iter_mut() {
+        *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+    }
+}
+
+// ------------------------------------------------------- reductions ------
+
+/// Lane-grid Σ g² over `g`, folding into `acc` starting at lane
+/// `lane0 % LANES` — the tail continuation the vector backends share.
+#[inline]
+pub(crate) fn sum_sq_span(g: &[f32], lane0: usize, acc: &mut [f64; LANES]) {
+    for (i, &gi) in g.iter().enumerate() {
+        let v = gi as f64;
+        acc[(lane0 + i) % LANES] += v * v;
+    }
+}
+
+pub fn sum_sq(g: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    sum_sq_span(g, 0, &mut acc);
+    fold_f64(acc)
+}
+
+/// Fused unscale + Σ g² span (squares the *stored* unscaled f32 value,
+/// exactly like the old fused scalar sweep).
+#[inline]
+pub(crate) fn unscale_sum_sq_span(
+    g: &mut [f32],
+    inv_scale: f32,
+    lane0: usize,
+    acc: &mut [f64; LANES],
+) {
+    for (i, gi) in g.iter_mut().enumerate() {
+        *gi *= inv_scale;
+        let v = *gi as f64;
+        acc[(lane0 + i) % LANES] += v * v;
+    }
+}
+
+pub fn unscale_sum_sq(g: &mut [f32], inv_scale: f32) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    unscale_sum_sq_span(g, inv_scale, 0, &mut acc);
+    fold_f64(acc)
+}
+
+// ------------------------------------------------- optimizer sweeps ------
+
+/// LANS elementwise body + lane-grid norm accumulation over a sub-range.
+/// The operation order transcribes `optim::native`'s historical scalar
+/// loop exactly (two muls + add for each moment, `sqrt` then `+eps` then
+/// one reciprocal shared by r and c).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lans_span(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    rf: &mut [f32],
+    cf: &mut [f32],
+    lane0: usize,
+    fx: &mut [f32; LANES],
+    fr: &mut [f32; LANES],
+    fc: &mut [f32; LANES],
+) {
+    for i in 0..x.len() {
+        let j = (lane0 + i) % LANES;
+        let xi = x[i];
+        let gt = g[i] * k.inv_gnorm;
+        let mn = k.beta1 * m[i] + (1.0 - k.beta1) * gt;
+        let vn = k.beta2 * v[i] + (1.0 - k.beta2) * gt * gt;
+        m[i] = mn;
+        v[i] = vn;
+        let inv_denom = 1.0 / ((vn * k.inv_bc2).sqrt() + k.eps);
+        let r = mn * k.inv_bc1 * inv_denom + k.wd * xi;
+        let c = gt * inv_denom + k.wd * xi;
+        rf[i] = r;
+        cf[i] = c;
+        fx[j] += xi * xi;
+        fr[j] += r * r;
+        fc[j] += c * c;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn lans_segment(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    rf: &mut [f32],
+    cf: &mut [f32],
+) -> (f64, f64, f64) {
+    let (mut fx, mut fr, mut fc) = ([0.0f32; LANES], [0.0f32; LANES], [0.0f32; LANES]);
+    lans_span(k, x, g, m, v, rf, cf, 0, &mut fx, &mut fr, &mut fc);
+    (fold_f32(fx) as f64, fold_f32(fr) as f64, fold_f32(fc) as f64)
+}
+
+/// LAMB elementwise body + per-element f64 lane accumulation.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lamb_span(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    u: &mut [f32],
+    lane0: usize,
+    sx2: &mut [f64; LANES],
+    su2: &mut [f64; LANES],
+    sg2: &mut [f64; LANES],
+) {
+    for i in 0..x.len() {
+        let j = (lane0 + i) % LANES;
+        let gi = g[i];
+        let xi = x[i];
+        let mn = k.beta1 * m[i] + (1.0 - k.beta1) * gi;
+        let vn = k.beta2 * v[i] + (1.0 - k.beta2) * gi * gi;
+        m[i] = mn;
+        v[i] = vn;
+        let un = mn * k.inv_bc1 / ((vn * k.inv_bc2).sqrt() + k.eps) + k.wd * xi;
+        u[i] = un;
+        sg2[j] += (gi as f64) * (gi as f64);
+        sx2[j] += (xi as f64) * (xi as f64);
+        su2[j] += (un as f64) * (un as f64);
+    }
+}
+
+pub fn lamb_segment(
+    k: &AdamK,
+    x: &[f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    u: &mut [f32],
+) -> (f64, f64, f64) {
+    let (mut sx2, mut su2, mut sg2) =
+        ([0.0f64; LANES], [0.0f64; LANES], [0.0f64; LANES]);
+    lamb_span(k, x, g, m, v, u, 0, &mut sx2, &mut su2, &mut sg2);
+    (fold_f64(sx2), fold_f64(su2), fold_f64(sg2))
+}
+
+/// AdamW fused moment+apply body with the lane-grid max fold.
+#[inline]
+pub(crate) fn adamw_span(
+    k: &AdamK,
+    x: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lane0: usize,
+    ma: &mut [f32; LANES],
+) {
+    for i in 0..x.len() {
+        let j = (lane0 + i) % LANES;
+        let gn = g[i] * k.inv_gnorm;
+        let mn = k.beta1 * m[i] + (1.0 - k.beta1) * gn;
+        let vn = k.beta2 * v[i] + (1.0 - k.beta2) * gn * gn;
+        m[i] = mn;
+        v[i] = vn;
+        let upd = mn * k.inv_bc1 / ((vn * k.inv_bc2).sqrt() + k.eps) + k.wd * x[i];
+        x[i] -= k.lr * upd;
+        ma[j] = max2(ma[j], x[i].abs());
+    }
+}
+
+pub fn adamw_segment(
+    k: &AdamK,
+    x: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> f32 {
+    let mut ma = [0.0f32; LANES];
+    adamw_span(k, x, g, m, v, 0, &mut ma);
+    fold_max(ma)
+}
+
+/// LANS apply body with the lane-grid max fold.
+#[inline]
+pub(crate) fn lans_apply_span(
+    coef_r: f32,
+    coef_c: f32,
+    x: &mut [f32],
+    rf: &[f32],
+    cf: &[f32],
+    lane0: usize,
+    ma: &mut [f32; LANES],
+) {
+    for i in 0..x.len() {
+        let j = (lane0 + i) % LANES;
+        x[i] -= coef_r * rf[i] + coef_c * cf[i];
+        ma[j] = max2(ma[j], x[i].abs());
+    }
+}
+
+pub fn lans_apply(coef_r: f32, coef_c: f32, x: &mut [f32], rf: &[f32], cf: &[f32]) -> f32 {
+    let mut ma = [0.0f32; LANES];
+    lans_apply_span(coef_r, coef_c, x, rf, cf, 0, &mut ma);
+    fold_max(ma)
+}
+
+/// LAMB apply body with the lane-grid max fold.
+#[inline]
+pub(crate) fn axpy_max_span(
+    coef: f32,
+    x: &mut [f32],
+    u: &[f32],
+    lane0: usize,
+    ma: &mut [f32; LANES],
+) {
+    for i in 0..x.len() {
+        let j = (lane0 + i) % LANES;
+        x[i] -= coef * u[i];
+        ma[j] = max2(ma[j], x[i].abs());
+    }
+}
+
+pub fn axpy_max(coef: f32, x: &mut [f32], u: &[f32]) -> f32 {
+    let mut ma = [0.0f32; LANES];
+    axpy_max_span(coef, x, u, 0, &mut ma);
+    fold_max(ma)
+}

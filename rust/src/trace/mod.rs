@@ -56,6 +56,11 @@ pub const CAT_COMM: &str = "comm";
 pub const CAT_COMPUTE: &str = "compute";
 /// Pool region mechanics: dispatch, caller drain, per-worker busy time.
 pub const CAT_POOL: &str = "pool";
+/// Wire precision conversion (batch f32↔f16/bf16; detail = converted
+/// bytes on the half side).  Deliberately its *own* category — these
+/// spans nest inside `comm` spans, and charging them to `compute` would
+/// corrupt `overlap_efficiency`'s comm∩compute measure.
+pub const CAT_CONVERT: &str = "convert";
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 

@@ -19,7 +19,11 @@ use lans::optim::{
     make_optimizer, scatter_to_plan, BlockTable, Hyper, Optimizer, ParallelExecutor, ShardPlan,
     ShardedOptimizer,
 };
+use lans::precision::half::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+};
 use lans::precision::DType;
+use lans::simd::{self, AdamK};
 use lans::topology::{TierPrecision, Topology};
 use lans::util::json::Json;
 use lans::util::pool::ThreadPool;
@@ -993,6 +997,213 @@ fn prop_zero_gradient_keeps_params_finite() {
                 "{name} produced non-finite params on zero gradient"
             );
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// simd kernel properties (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+//
+// Each property runs the *dispatched* entry points against the scalar
+// reference in the same process.  On an AVX2/NEON runner that is a real
+// vector-vs-scalar differential; under LANS_FORCE_SCALAR=1 it degenerates
+// to scalar-vs-scalar — which is why CI runs the suite once per backend.
+
+/// An f32 from the half-conversion "interesting" set: normals across many
+/// magnitudes, the f16-subnormal and overflow ranges, ±0, ±inf, and NaNs
+/// with payloads.
+fn interesting_f32(rng: &mut Rng) -> f32 {
+    match rng.below(10) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::INFINITY,
+        3 => f32::NEG_INFINITY,
+        4 => {
+            let sign = (rng.below(2) as u32) << 31;
+            f32::from_bits(0x7FC0_1234 | sign)
+        }
+        5 => f32::from_bits(rng.below(1 << 23) as u32), // f32-subnormal / tiny
+        6 => rng.normal_f32() * 1e-6,                   // f16-subnormal range
+        7 => rng.normal_f32() * 7e4,                    // f16 overflow boundary
+        _ => rng.normal_f32() * 10f32.powi(rng.below(8) as i32 - 4),
+    }
+}
+
+#[test]
+fn prop_simd_narrow_and_widen_match_scalar_any_length_and_offset() {
+    // satellite: SIMD f32→half == scalar per element for every
+    // lane-remainder length and unaligned slice offset, on data covering
+    // all rounding/class branches; widening back is bit-exact including
+    // NaN payloads
+    for_cases(120, |_, rng| {
+        let pad = rng.below_usize(8); // shifts 32-byte alignment of the slice
+        let n = rng.below_usize(530); // every remainder mod 8 across cases
+        let src: Vec<f32> = (0..pad + n).map(|_| interesting_f32(rng)).collect();
+        let s = &src[pad..];
+        for wire in [DType::F16, DType::Bf16] {
+            let (narrow, widen): (fn(f32) -> u16, fn(u16) -> f32) = match wire {
+                DType::F16 => (f32_to_f16_bits, f16_bits_to_f32),
+                _ => (f32_to_bf16_bits, bf16_bits_to_f32),
+            };
+            let mut bits = vec![0u16; n];
+            match wire {
+                DType::F16 => simd::narrow_f16(s, &mut bits),
+                _ => simd::narrow_bf16(s, &mut bits),
+            }
+            for (i, (&b, &x)) in bits.iter().zip(s).enumerate() {
+                assert_eq!(b, narrow(x), "{} narrow[{i}] of {x:?}", wire.name());
+            }
+            let mut back = vec![0.0f32; n];
+            match wire {
+                DType::F16 => simd::widen_f16(&bits, &mut back),
+                _ => simd::widen_bf16(&bits, &mut back),
+            }
+            for (i, (&f, &b)) in back.iter().zip(&bits).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    widen(b).to_bits(),
+                    "{} widen[{i}] of {b:#06x}",
+                    wire.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simd_fused_hop_kernels_match_their_composition() {
+    // the collectives' per-hop kernels (quantize+dequantize+accumulate,
+    // widen+accumulate, in-place round-trip) are bit-identical to the
+    // three-step composition they replace
+    for_cases(80, |_, rng| {
+        let n = rng.below_usize(530);
+        let src: Vec<f32> = (0..n).map(|_| interesting_f32(rng)).collect();
+        let dst0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        for wire in [DType::F16, DType::Bf16] {
+            let mut bits = vec![0u16; n];
+            let mut wide = vec![0.0f32; n];
+            let mut want = dst0.clone();
+            let mut got_q = dst0.clone();
+            let mut got_w = dst0.clone();
+            let mut rt = src.clone();
+            match wire {
+                DType::F16 => {
+                    simd::narrow_f16(&src, &mut bits);
+                    simd::widen_f16(&bits, &mut wide);
+                    simd::accum_quantized_f16(&src, &mut got_q);
+                    simd::accum_widened_f16(&bits, &mut got_w);
+                    simd::round_f16(&mut rt);
+                }
+                _ => {
+                    simd::narrow_bf16(&src, &mut bits);
+                    simd::widen_bf16(&bits, &mut wide);
+                    simd::accum_quantized_bf16(&src, &mut got_q);
+                    simd::accum_widened_bf16(&bits, &mut got_w);
+                    simd::round_bf16(&mut rt);
+                }
+            }
+            for (d, w) in want.iter_mut().zip(&wide) {
+                *d += *w;
+            }
+            for i in 0..n {
+                assert_eq!(got_q[i].to_bits(), want[i].to_bits(), "{} q[{i}]", wire.name());
+                assert_eq!(got_w[i].to_bits(), want[i].to_bits(), "{} w[{i}]", wire.name());
+                assert_eq!(rt[i].to_bits(), wide[i].to_bits(), "{} rt[{i}]", wire.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simd_reductions_and_sweeps_match_portable_bitwise() {
+    // the optimizer's segment kernels: the dispatched backend reproduces
+    // the canonical portable lane-grid fold bit for bit — sums, updated
+    // moments, cached directions and max-|param| alike — at every
+    // remainder length (n mod 8 sweeps all tail shapes across cases)
+    for_cases(60, |_, rng| {
+        let n = rng.below_usize(5000);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+        assert_eq!(
+            simd::sum_sq(&g).to_bits(),
+            simd::portable::sum_sq(&g).to_bits(),
+            "sum_sq (n={n})"
+        );
+
+        let inv = 2.0f32.powi(rng.below(8) as i32 - 4);
+        let mut gd = g.clone();
+        let mut gp = g.clone();
+        let sd = simd::unscale_sum_sq(&mut gd, inv);
+        let sp = simd::portable::unscale_sum_sq(&mut gp, inv);
+        assert_eq!(sd.to_bits(), sp.to_bits(), "unscale_sum_sq (n={n})");
+        assert_eq!(gd, gp, "unscaled gradient bytes (n={n})");
+
+        let k = AdamK {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            inv_bc1: 1.0 / (1.0 - 0.9f32.powi(3)),
+            inv_bc2: 1.0 / (1.0 - 0.999f32.powi(3)),
+            lr: 0.01,
+            wd: 0.01,
+            inv_gnorm: 0.5,
+        };
+        let m0: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+        let v0: Vec<f32> = (0..n).map(|_| rng.normal_f32().abs() * 0.01).collect();
+
+        // LANS moment/direction sweep + apply
+        let (mut md, mut vd) = (m0.clone(), v0.clone());
+        let (mut mp, mut vp) = (m0.clone(), v0.clone());
+        let (mut rd, mut cd) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut rp, mut cp) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let a = simd::lans_segment(&k, &x, &g, &mut md, &mut vd, &mut rd, &mut cd);
+        let b = simd::portable::lans_segment(&k, &x, &g, &mut mp, &mut vp, &mut rp, &mut cp);
+        assert_eq!(
+            (a.0.to_bits(), a.1.to_bits(), a.2.to_bits()),
+            (b.0.to_bits(), b.1.to_bits(), b.2.to_bits()),
+            "lans_segment partials (n={n})"
+        );
+        assert_eq!(md, mp, "lans m");
+        assert_eq!(vd, vp, "lans v");
+        assert_eq!(rd, rp, "lans r");
+        assert_eq!(cd, cp, "lans c");
+        let (mut xd, mut xp) = (x.clone(), x.clone());
+        let ad = simd::lans_apply(0.01, 0.02, &mut xd, &rd, &cd);
+        let ap = simd::portable::lans_apply(0.01, 0.02, &mut xp, &rp, &cp);
+        assert_eq!(ad.to_bits(), ap.to_bits(), "lans_apply max");
+        assert_eq!(xd, xp, "lans_apply params");
+
+        // LAMB sweep + apply
+        let (mut md, mut vd) = (m0.clone(), v0.clone());
+        let (mut mp, mut vp) = (m0.clone(), v0.clone());
+        let (mut ud, mut up) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let a = simd::lamb_segment(&k, &x, &g, &mut md, &mut vd, &mut ud);
+        let b = simd::portable::lamb_segment(&k, &x, &g, &mut mp, &mut vp, &mut up);
+        assert_eq!(
+            (a.0.to_bits(), a.1.to_bits(), a.2.to_bits()),
+            (b.0.to_bits(), b.1.to_bits(), b.2.to_bits()),
+            "lamb_segment partials (n={n})"
+        );
+        assert_eq!(md, mp, "lamb m");
+        assert_eq!(vd, vp, "lamb v");
+        assert_eq!(ud, up, "lamb u");
+        let (mut xd, mut xp) = (x.clone(), x.clone());
+        let ad = simd::axpy_max(0.003, &mut xd, &ud);
+        let ap = simd::portable::axpy_max(0.003, &mut xp, &up);
+        assert_eq!(ad.to_bits(), ap.to_bits(), "axpy_max max");
+        assert_eq!(xd, xp, "axpy_max params");
+
+        // AdamW fused sweep
+        let (mut md, mut vd) = (m0.clone(), v0.clone());
+        let (mut mp, mut vp) = (m0, v0);
+        let (mut xd, mut xp) = (x.clone(), x.clone());
+        let ad = simd::adamw_segment(&k, &mut xd, &g, &mut md, &mut vd);
+        let ap = simd::portable::adamw_segment(&k, &mut xp, &g, &mut mp, &mut vp);
+        assert_eq!(ad.to_bits(), ap.to_bits(), "adamw max");
+        assert_eq!(md, mp, "adamw m");
+        assert_eq!(vd, vp, "adamw v");
+        assert_eq!(xd, xp, "adamw params");
     });
 }
 

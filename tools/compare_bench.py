@@ -18,11 +18,17 @@ Gate entry schema, inside `BENCH_baseline/BENCH_<name>.json`:
 
     "gate": {
       "overlap_speedup_b8": {"min": 1.0, "min_threads": 4, "why": "..."},
+      "f16_narrow_speedup": {"min": 2.0, "requires": "simd_active"},
       "model_hier_naive_s/model_flat_s": {"max": 1.0}
     }
 
 `min_threads` skips a bound when the runner has fewer cores than the
-contract needs (mirrors the in-bench thread guards).  After an intentional
+contract needs (mirrors the in-bench thread guards).  `requires` names a
+feature-flag metric the bench reports (e.g. `simd_active`): when it is
+missing or falsy in the fresh output the bound is skipped with a printed
+note instead of failing — so a runner without the hardware feature (or a
+LANS_FORCE_SCALAR=1 leg) passes the job without diluting the contract on
+runners that do have it.  After an intentional
 perf change, refresh the `observed` snapshots with:
 
     python3 tools/compare_bench.py --update
@@ -94,6 +100,10 @@ def check_one(base_path: pathlib.Path, failures: list) -> None:
         need = int(spec.get("min_threads", 0))
         if threads < need:
             print(f"{name}: [{expr}] skipped ({threads} < {need} threads)")
+            continue
+        flag = spec.get("requires")
+        if flag is not None and not metrics.get(flag):
+            print(f"{name}: [{expr}] skipped (requires {flag!r}, runner reports it off)")
             continue
         value, err = resolve(expr, metrics)
         if err:
