@@ -3,7 +3,7 @@
 //! the constants in benches/table2_convergence.rs).
 
 use anyhow::Result;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{from_ratios, Hyper};
 use lans::precision::{DType, LossScale};
@@ -51,6 +51,7 @@ fn main() -> Result<()> {
                 resume_from: None,
                 curve_out: None,
                 trace: None,
+                metrics: MetricsConfig::default(),
                 stop_on_divergence: false,
             };
             let mut tr = Trainer::with_engine(cfg, engine.clone())?;

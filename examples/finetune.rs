@@ -11,7 +11,7 @@
 //!     cargo run --release --example finetune
 
 use anyhow::Result;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -63,6 +63,7 @@ fn main() -> Result<()> {
             resume_from: None,
             curve_out: None,
             trace: None,
+            metrics: MetricsConfig::default(),
             stop_on_divergence: true,
         };
         let rep = Trainer::with_engine(cfg, engine.clone())?.run()?;
@@ -109,6 +110,7 @@ fn main() -> Result<()> {
         resume_from: resume,
         curve_out: None,
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     };
 

@@ -12,7 +12,7 @@
 //!     make artifacts && cargo run --release --example mixed_precision
 
 use anyhow::Result;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -77,6 +77,7 @@ fn main() -> Result<()> {
         resume_from: None,
         curve_out: Some("target/mixed_precision_curve.tsv".into()),
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     };
 

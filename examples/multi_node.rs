@@ -18,7 +18,7 @@
 
 use anyhow::Result;
 use lans::collective::hierarchical_phase_wire_bytes;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -66,6 +66,7 @@ fn base_cfg(meta: std::path::PathBuf, topology: Topology, inter: DType, steps: u
         resume_from: None,
         curve_out: None,
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     }
 }
@@ -126,6 +127,17 @@ fn main() -> Result<()> {
     // step-trace subsystem: record every span and export a Chrome trace —
     // CI validates the schema with tools/check_trace.py and uploads it
     cfg2.trace = Some("target/multi_node_trace.json".into());
+    // run-health telemetry (DESIGN.md §12): per-step JSONL + end-of-run
+    // report — CI validates both with tools/check_metrics.py.  The fp32
+    // bucketed run above walks the same topology and schedule, so its
+    // median step time is the report's measured-vs-model reference.
+    cfg2.metrics.jsonl = Some("target/multi_node_metrics.jsonl".into());
+    cfg2.metrics.report = Some("target/multi_node_report.json".into());
+    cfg2.metrics.model_step_time_s = {
+        let deltas = lans::metrics::export::step_wall_deltas(&r_bkt.recorder);
+        let m = lans::util::stats::median(&deltas);
+        (m > 0.0).then_some(m)
+    };
     let mut trainer = Trainer::with_engine(cfg2, engine)?;
     let n_params = trainer.meta().param_count;
     let report = trainer.run()?;
@@ -180,5 +192,31 @@ fn main() -> Result<()> {
             "overlap on with {avail} threads but no step hid any comm behind compute"
         );
     }
+
+    // ---- run-health telemetry: files written, report internally consistent -
+    let rep = report.metrics.as_ref().expect("metrics knobs set but no report");
+    assert!(
+        std::path::Path::new("target/multi_node_metrics.jsonl").exists(),
+        "metrics jsonl knob set but no file written"
+    );
+    assert!(
+        std::path::Path::new("target/multi_node_report.json").exists(),
+        "metrics report knob set but no file written"
+    );
+    assert_eq!(rep.steps, steps, "report step count vs run");
+    assert_eq!(rep.skipped_steps, 0, "no scaler configured, nothing to skip");
+    // the tiered collectives report their wire split into the registry too;
+    // it must agree with the trainer's own executed-bytes ledger
+    assert_eq!(
+        rep.snapshot.counter("wire.intra_bytes"),
+        report.wire.intra,
+        "registry intra bytes vs ledger"
+    );
+    assert_eq!(
+        rep.snapshot.counter("wire.inter_bytes"),
+        report.wire.inter,
+        "registry inter bytes vs ledger"
+    );
+    println!("\n{}", lans::metrics::export::render_summary(rep));
     Ok(())
 }

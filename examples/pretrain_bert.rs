@@ -16,7 +16,7 @@
 //!     # optional: pretrain_bert <phase1_steps> (default 150)
 
 use anyhow::Result;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::Hyper;
 use lans::precision::{DType, LossScale};
@@ -76,6 +76,13 @@ fn main() -> Result<()> {
         resume_from: None,
         curve_out: Some("target/pretrain_phase1.tsv".into()),
         trace: None,
+        // run-health telemetry (DESIGN.md §12): phase 1 writes the per-step
+        // JSONL + report and prints the human summary below
+        metrics: MetricsConfig {
+            jsonl: Some("target/pretrain_phase1_metrics.jsonl".into()),
+            report: Some("target/pretrain_phase1_report.json".into()),
+            ..MetricsConfig::default()
+        },
         stop_on_divergence: true,
     };
     let mut t1 = Trainer::with_engine(cfg1, engine.clone())?;
@@ -95,6 +102,9 @@ fn main() -> Result<()> {
         r1.final_eval_loss.unwrap(),
         r1.recorder.tokens_per_second()
     );
+    let p1_rep = r1.metrics.as_ref().expect("phase-1 metrics knobs set");
+    assert_eq!(p1_rep.steps, phase1_steps, "report step count vs run");
+    println!("{}", lans::metrics::export::render_summary(p1_rep));
 
     // ---- phase 2 ----------------------------------------------------------
     if !p2_meta.exists() {
@@ -133,6 +143,7 @@ fn main() -> Result<()> {
         resume_from: Some(ckpt),
         curve_out: Some("target/pretrain_phase2.tsv".into()),
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     };
     let mut t2 = Trainer::with_engine(cfg2, engine)?;

@@ -7,7 +7,7 @@
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         resume_from: None,
         curve_out: Some("target/quickstart_curve.tsv".into()),
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     };
 

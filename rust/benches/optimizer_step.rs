@@ -60,10 +60,16 @@ fn main() {
     // ---- SIMD vs portable-scalar segment sweeps --------------------------
     // Direct kernel calls at production segment granularity (NORM_SEG=4096
     // chunks), dispatched backend vs the canonical portable module in the
-    // same process.  The speedup-floor gate for these lives with the
-    // conversion kernels in BENCH_baseline/BENCH_mixed_precision.json
-    // (guarded by `simd_active`); here the ratios are informational.
+    // same process.  Speedup floors for these ratios are gated in
+    // BENCH_baseline/BENCH_optimizer_step.json, guarded by `simd_active`
+    // (same convention as the conversion kernels in
+    // BENCH_baseline/BENCH_mixed_precision.json): on a scalar-dispatch
+    // machine the floors are skipped instead of failing vacuously.
     let backend = simd::backend();
+    rep.metric(
+        "simd_active",
+        if backend == simd::Backend::Scalar { 0.0 } else { 1.0 },
+    );
     println!(
         "\n=== SIMD vs scalar segment sweeps (dispatch backend: {}) ===\n",
         backend.name()

@@ -17,7 +17,7 @@
 
 use std::path::PathBuf;
 
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{sqrt_scaled_lr, Hyper};
 use lans::precision::{DType, LossScale};
@@ -89,6 +89,7 @@ fn main() {
                 format!("target/table2_{}_{}x.tsv", opt, mult).into(),
             ),
             trace: None,
+            metrics: MetricsConfig::default(),
             stop_on_divergence: false,
         };
         let mut tr = Trainer::with_engine(cfg, engine.clone()).expect("trainer");

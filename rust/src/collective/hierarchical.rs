@@ -131,7 +131,22 @@ pub fn hierarchical_reduce_scatter(
     let mut sp = trace::span(trace::CAT_COMM, "hier_reduce_scatter");
     let wire = hierarchical_reduce_scatter_inner(bufs, topo, prec);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
+}
+
+/// Metrics seam: executed wire bytes by tier, one `collective.calls` tick
+/// per tiered primitive.  Lives only in the public wrappers that directly
+/// wrap an `_inner` (plus [`leader_allreduce`]) — compositions such as
+/// `hierarchical_allreduce` and the `_range` variants call those wrappers
+/// and therefore count once per primitive they execute, never double.
+fn record_wire_metrics(wire: &WireBytes) {
+    use crate::metrics::registry;
+    if registry::enabled() {
+        registry::COLLECTIVE_CALLS.add(1);
+        registry::WIRE_INTRA_BYTES.add(wire.intra);
+        registry::WIRE_INTER_BYTES.add(wire.inter);
+    }
 }
 
 fn hierarchical_reduce_scatter_inner(
@@ -219,6 +234,7 @@ pub fn hierarchical_reduce_scatter_views(
     let mut sp = trace::span(trace::CAT_COMM, "hier_reduce_scatter_views");
     let wire = hierarchical_reduce_scatter_views_inner(views, n, lo, topo, prec);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
 }
 
@@ -284,6 +300,7 @@ pub fn hierarchical_reduce_scatter_pooled(
     let mut sp = trace::span(trace::CAT_COMM, "hier_reduce_scatter_pooled");
     let wire = hierarchical_reduce_scatter_pooled_inner(bufs, topo, prec, pool);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
 }
 
@@ -300,7 +317,9 @@ fn hierarchical_reduce_scatter_pooled_inner(
         return hierarchical_phase_wire_bytes(topo, n, prec, false);
     }
     if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
-        return hierarchical_reduce_scatter(bufs, topo, prec);
+        // `_inner`, not the public wrapper: the pooled wrapper already
+        // recorded this call's trace span and will record its wire metrics
+        return hierarchical_reduce_scatter_inner(bufs, topo, prec);
     }
     let starts = ring_chunk_starts(w, n);
     let mut wire = WireBytes::default();
@@ -371,6 +390,7 @@ pub fn hierarchical_all_gather(
     let mut sp = trace::span(trace::CAT_COMM, "hier_all_gather");
     let wire = hierarchical_all_gather_inner(bufs, topo, prec);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
 }
 
@@ -440,6 +460,7 @@ pub fn hierarchical_all_gather_views(
     let mut sp = trace::span(trace::CAT_COMM, "hier_all_gather_views");
     let wire = hierarchical_all_gather_views_inner(views, n, lo, topo, prec);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
 }
 
@@ -524,6 +545,7 @@ pub fn hierarchical_all_gather_pooled(
     let mut sp = trace::span(trace::CAT_COMM, "hier_all_gather_pooled");
     let wire = hierarchical_all_gather_pooled_inner(bufs, topo, prec, pool);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
 }
 
@@ -540,7 +562,9 @@ fn hierarchical_all_gather_pooled_inner(
         return hierarchical_phase_wire_bytes(topo, n, prec, true);
     }
     if pool.threads() <= 1 || w < 2 || n < POOLED_MIN_ELEMS {
-        return hierarchical_all_gather(bufs, topo, prec);
+        // `_inner`, not the public wrapper — same single-count rule as the
+        // reduce-scatter fallback above
+        return hierarchical_all_gather_inner(bufs, topo, prec);
     }
     let starts = ring_chunk_starts(w, n);
     // one region rounds every owner's chunk (disjoint: one owned chunk per
@@ -610,6 +634,7 @@ pub fn leader_allreduce(bufs: &mut [Vec<f32>], topo: &Topology) -> WireBytes {
     let mut sp = trace::span(trace::CAT_COMM, "leader_allreduce");
     let wire = leader_allreduce_inner(bufs, topo);
     sp.set_detail(wire.total());
+    record_wire_metrics(&wire);
     wire
 }
 

@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::metrics::log::LogLevel;
 use crate::optim::schedule::{from_ratios, Schedule};
 use crate::optim::Hyper;
 use crate::precision::{DType, DynamicLossScaler, LossScale};
@@ -111,6 +112,51 @@ pub struct TrainConfig {
     pub trace: Option<PathBuf>,
     /// stop as soon as the EMA loss exceeds ceiling×initial (divergence)
     pub stop_on_divergence: bool,
+    /// run-health telemetry knobs (`[metrics]` section, DESIGN.md §12)
+    pub metrics: MetricsConfig,
+}
+
+/// Run-telemetry knobs (`[metrics]` section).  All off by default — the
+/// registry then costs one relaxed atomic load per seam and the trainer's
+/// output is bit-identical to a build without the subsystem.
+#[derive(Debug, Clone)]
+pub struct MetricsConfig {
+    /// write the per-step JSONL time-series here (enables the registry)
+    pub jsonl: Option<PathBuf>,
+    /// write the end-of-run `lans-metrics-report-v1` JSON here (enables
+    /// the registry)
+    pub report: Option<PathBuf>,
+    /// turn the registry + health monitor on without writing files — the
+    /// in-memory report still lands on `TrainReport::metrics`
+    pub enabled: bool,
+    /// rolling-window length (steps) for the health monitor's robust
+    /// statistics
+    pub window: usize,
+    /// diagnostic verbosity of the trainer's leveled log sink
+    pub log_level: LogLevel,
+    /// caller-supplied `cluster::timemodel` step-time prediction (seconds);
+    /// the report prints measured-vs-model deltas when set
+    pub model_step_time_s: Option<f64>,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> MetricsConfig {
+        MetricsConfig {
+            jsonl: None,
+            report: None,
+            enabled: false,
+            window: 32,
+            log_level: LogLevel::Normal,
+            model_step_time_s: None,
+        }
+    }
+}
+
+impl MetricsConfig {
+    /// Whether the trainer should switch the registry/health monitor on.
+    pub fn active(&self) -> bool {
+        self.enabled || self.jsonl.is_some() || self.report.is_some()
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -220,6 +266,29 @@ impl TrainConfig {
             other => bail!("unknown schedule kind {other:?}"),
         };
 
+        let log_level_s = doc.str_or("metrics", "log_level", "normal");
+        let log_level = LogLevel::parse(log_level_s).ok_or_else(|| {
+            anyhow::anyhow!("unknown log_level {log_level_s:?} (quiet|normal|verbose)")
+        })?;
+        let model_step_time_s = match doc.get("metrics", "model_step_time_s") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(x) if x.is_finite() && x > 0.0 => Some(x),
+                _ => bail!("model_step_time_s must be a positive number, got {v:?}"),
+            },
+        };
+        let metrics = MetricsConfig {
+            jsonl: doc.get("metrics", "jsonl").and_then(Value::as_str).map(|s| base.join(s)),
+            report: doc
+                .get("metrics", "report")
+                .and_then(Value::as_str)
+                .map(|s| base.join(s)),
+            enabled: doc.bool_or("metrics", "enabled", false),
+            window: doc.usize_or("metrics", "window", 32).max(4),
+            log_level,
+            model_step_time_s,
+        };
+
         Ok(TrainConfig {
             meta_path,
             optimizer: doc.str_or("train", "optimizer", "lans").to_string(),
@@ -265,6 +334,7 @@ impl TrainConfig {
                 .and_then(Value::as_str)
                 .map(|s| base.join(s)),
             stop_on_divergence: doc.bool_or("train", "stop_on_divergence", true),
+            metrics,
         })
     }
 
@@ -410,6 +480,50 @@ mod tests {
         // default: off — the no-overhead contract path
         let doc = Document::parse("[model]\nmeta = \"m.json\"").unwrap();
         assert_eq!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().trace, None);
+    }
+
+    #[test]
+    fn metrics_knobs_parse() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[metrics]\njsonl = \"out/run.jsonl\"\n\
+             report = \"out/report.json\"\nwindow = 16\nlog_level = \"verbose\"\n\
+             model_step_time_s = 0.0125",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new("/base")).unwrap();
+        assert_eq!(c.metrics.jsonl.as_deref(), Some(Path::new("/base/out/run.jsonl")));
+        assert_eq!(c.metrics.report.as_deref(), Some(Path::new("/base/out/report.json")));
+        assert_eq!(c.metrics.window, 16);
+        assert_eq!(c.metrics.log_level, LogLevel::Verbose);
+        assert_eq!(c.metrics.model_step_time_s, Some(0.0125));
+        assert!(c.metrics.active());
+
+        // default: everything off — the no-overhead contract path
+        let doc = Document::parse("[model]\nmeta = \"m.json\"").unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert!(!c.metrics.active());
+        assert_eq!(c.metrics.window, 32);
+        assert_eq!(c.metrics.log_level, LogLevel::Normal);
+        assert!(c.metrics.jsonl.is_none() && c.metrics.report.is_none());
+
+        // `enabled` arms the registry without file outputs
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[metrics]\nenabled = true",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().metrics.active());
+
+        // bad knobs are contextual config errors
+        for body in ["log_level = \"loud\"", "model_step_time_s = -1", "model_step_time_s = \"fast\""] {
+            let doc = Document::parse(&format!(
+                "[model]\nmeta = \"m.json\"\n[metrics]\n{body}"
+            ))
+            .unwrap();
+            assert!(
+                TrainConfig::from_doc(&doc, Path::new(".")).is_err(),
+                "{body} should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -139,8 +139,11 @@ impl<'scope> StepDag<'scope> {
         }
         let ready: VecDeque<usize> = (0..total).filter(|&i| deps_left[i] == 0).collect();
         assert!(!ready.is_empty(), "no root stage");
+        // queue-wait stamps feed both the step trace and the metrics
+        // registry — populate them if either consumer is on
+        let observing = trace::enabled() || crate::metrics::registry::enabled();
         let mut ready_at: Vec<Option<Instant>> = vec![None; total];
-        if trace::enabled() {
+        if observing {
             let now = Instant::now();
             for &i in &ready {
                 ready_at[i] = Some(now);
@@ -179,7 +182,12 @@ impl<'scope> StepDag<'scope> {
             };
             if let Some(t) = queued_at {
                 // queue-wait: released-by-last-dependency → claimed-by-a-driver
-                trace::record_span(trace::CAT_WAIT, labels[id], t, Instant::now(), id as u64);
+                let now = Instant::now();
+                if trace::enabled() {
+                    trace::record_span(trace::CAT_WAIT, labels[id], t, now, id as u64);
+                }
+                crate::metrics::registry::QUEUE_WAIT_US
+                    .observe(now.duration_since(t).as_micros() as f64);
             }
             let f = runs[id].lock().unwrap().take().expect("stage scheduled twice");
             let run_span = trace::span_detail(trace::CAT_SCHED, labels[id], id as u64);
@@ -189,7 +197,7 @@ impl<'scope> StepDag<'scope> {
                 Ok(()) => {
                     let mut s = sched.lock().unwrap();
                     s.done += 1;
-                    let now = trace::enabled().then(Instant::now);
+                    let now = observing.then(Instant::now);
                     for &d in &dependents[id] {
                         s.deps_left[d] -= 1;
                         if s.deps_left[d] == 0 {

@@ -20,7 +20,9 @@ use crate::collective::{
     hierarchical_allreduce_pooled, hierarchical_reduce_scatter_pooled, leader_allreduce,
 };
 use crate::config::{OptBackend, TrainConfig};
-use crate::metrics::Recorder;
+use crate::metrics::export::{self, RunReport};
+use crate::metrics::health::{HealthConfig, HealthMonitor};
+use crate::metrics::{log as mlog, registry, Recorder};
 use crate::optim::{
     make_optimizer, BlockTable, Optimizer, ParallelExecutor, ShardPlan, ShardedOptimizer,
 };
@@ -52,6 +54,9 @@ pub struct TrainReport {
     /// the full allreduce) — `examples/multi_node.rs` and the e2e tests
     /// assert this equals the analytic `collective::cost` terms × steps
     pub wire: WireBytes,
+    /// run-health report (DESIGN.md §12) — `Some` whenever any `[metrics]`
+    /// knob was active for the run, `None` otherwise
+    pub metrics: Option<RunReport>,
 }
 
 pub struct Trainer {
@@ -333,6 +338,26 @@ impl Trainer {
         }
         let mut step_traces: Vec<trace::StepTrace> = Vec::new();
 
+        // run-health telemetry (DESIGN.md §12): arm the registry for the
+        // whole run when any `[metrics]` knob is active.  Disabled, every
+        // seam is one relaxed atomic load; enabled, the registry only
+        // observes values the hot path already computed, so the training
+        // trajectory is bit-identical either way (property-tested).
+        let metrics_on = cfg.metrics.active();
+        if metrics_on {
+            registry::reset();
+            registry::enable();
+        }
+        mlog::set_level(cfg.metrics.log_level);
+        mlog::reset_rate_limits();
+        let mut health = metrics_on.then(|| {
+            HealthMonitor::new(HealthConfig {
+                window: cfg.metrics.window,
+                ..Default::default()
+            })
+        });
+        let mut prev_wall = 0.0f64;
+
         for t in 1..=cfg.steps {
             let step_span = trace::span_detail(trace::CAT_STEP, "step", t);
             let lr = cfg.schedule.lr(t);
@@ -530,6 +555,9 @@ impl Trainer {
                 }
             };
 
+            // a skipped step with a scaler attached is a loss-scale backoff
+            // event — health.rs counts these per window to flag thrash
+            let backoff = outcome.is_none() && scaler.is_some();
             match outcome {
                 Some((grad_norm, trust)) => {
                     if let Some(sc) = scaler.as_mut() {
@@ -570,7 +598,7 @@ impl Trainer {
                         ),
                     };
                     recorder.push_skipped(t, lr, loss, tokens_per_step, scale_s as f64, &note);
-                    eprintln!("step {t:>6}  {note}");
+                    mlog::warn("skip", &format!("step {t:>6}  {note}"));
                 }
             }
             steps_run = t;
@@ -581,6 +609,25 @@ impl Trainer {
                 step_traces.push(st);
             }
 
+            // feed the anomaly detector AFTER the trace collect so the
+            // record carries this step's comm/compute split.  wall_s is a
+            // cumulative clock — health wants per-step durations, so diff.
+            if let Some(h) = health.as_mut() {
+                if let Some(r) = recorder.records.last() {
+                    let wall = (r.wall_s - prev_wall).max(0.0);
+                    prev_wall = r.wall_s;
+                    h.observe_step(
+                        t,
+                        wall,
+                        r.comm_s,
+                        r.compute_s,
+                        r.loss_ema,
+                        backoff,
+                        recorder.divergence_ceiling,
+                    );
+                }
+            }
+
             if cfg.stop_on_divergence && recorder.diverged() {
                 status = TrainStatus::Diverged { at_step: t };
                 break;
@@ -588,8 +635,9 @@ impl Trainer {
 
             if cfg.eval_every > 0 && t % cfg.eval_every == 0 {
                 let ev = self.eval(&params)?;
-                eprintln!(
-                    "step {t:>6}  lr {lr:.3e}  loss {loss:.4}  eval {ev:.4}"
+                mlog::info(
+                    "eval",
+                    &format!("step {t:>6}  lr {lr:.3e}  loss {loss:.4}  eval {ev:.4}"),
                 );
             }
         }
@@ -630,7 +678,37 @@ impl Trainer {
             recorder.write_tsv(path)?;
         }
 
-        Ok(TrainReport { status, recorder, final_eval_loss, steps_run, params, wire: wire_bytes })
+        // seal the telemetry run: snapshot before disabling so late worker
+        // teardown can't race new observations into the report
+        let metrics_report: Option<RunReport> = if metrics_on {
+            let snap = registry::snapshot();
+            registry::disable();
+            let h = health.take().expect("armed with metrics_on");
+            let rep = export::build_report(&recorder, snap, &h, cfg.metrics.model_step_time_s);
+            if let Some(path) = &cfg.metrics.jsonl {
+                export::write_jsonl(path, &recorder).with_context(|| {
+                    format!("writing per-step metrics JSONL to {}", path.display())
+                })?;
+            }
+            if let Some(path) = &cfg.metrics.report {
+                export::write_report(path, &rep).with_context(|| {
+                    format!("writing run-health report to {}", path.display())
+                })?;
+            }
+            Some(rep)
+        } else {
+            None
+        };
+
+        Ok(TrainReport {
+            status,
+            recorder,
+            final_eval_loss,
+            steps_run,
+            params,
+            wire: wire_bytes,
+            metrics: metrics_report,
+        })
     }
 
     /// Mean eval loss over the held-out shard.

@@ -1,0 +1,558 @@
+//! Metrics export: per-step JSONL time-series and the end-of-run report.
+//!
+//! Two machine-readable artifacts (both validated by `tools/check_metrics.py`
+//! in CI) plus one human-readable summary:
+//!
+//! - **JSONL** (`[metrics] jsonl` knob): one JSON object per recorded step,
+//!   mirroring [`StepRecord`].  Non-finite numbers serialize as `null` so
+//!   every line is strict JSON.
+//! - **report** (`[metrics] report` knob): a single `lans-metrics-report-v1`
+//!   JSON document — run totals, exact step/comm/compute time percentiles
+//!   (over the raw series, via [`crate::util::stats::percentile`]),
+//!   registry counters/gauges/histograms (approximate p50/p90/p99 at bucket
+//!   resolution), health verdicts, and the measured-vs-model step-time
+//!   delta when the caller supplies a `cluster::timemodel` prediction.
+//! - [`render_summary`]: the same report as indented text for the terminal.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::health::{HealthMonitor, Verdict};
+use crate::metrics::recorder::{Recorder, StepRecord};
+use crate::metrics::registry::Snapshot;
+use crate::util::stats;
+
+pub const REPORT_SCHEMA: &str = "lans-metrics-report-v1";
+
+/// Exact percentile summary over one raw per-step time series.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSummary {
+    pub samples: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl TimeSummary {
+    pub fn from_series(xs: &[f64]) -> TimeSummary {
+        if xs.is_empty() {
+            return TimeSummary::default();
+        }
+        TimeSummary {
+            samples: xs.len() as u64,
+            mean_s: stats::mean(xs),
+            p50_s: stats::percentile(xs, 50.0),
+            p90_s: stats::percentile(xs, 90.0),
+            p99_s: stats::percentile(xs, 99.0),
+            max_s: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+/// The end-of-run report: everything the run knows about itself.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub steps: u64,
+    pub skipped_steps: u64,
+    pub tokens: u64,
+    pub tokens_per_second: f64,
+    pub final_loss: Option<f64>,
+    pub final_loss_ema: Option<f64>,
+    pub diverged: bool,
+    pub step_time: TimeSummary,
+    pub comm_time: TimeSummary,
+    pub compute_time: TimeSummary,
+    /// registry state at run end (counters / gauges / histograms)
+    pub snapshot: Snapshot,
+    pub healthy: bool,
+    pub verdicts: Vec<Verdict>,
+    /// caller-supplied `cluster::timemodel` step-time prediction (seconds)
+    pub model_step_time_s: Option<f64>,
+}
+
+impl RunReport {
+    /// Median measured step time — the number the model delta compares to.
+    pub fn measured_step_time_s(&self) -> f64 {
+        self.step_time.p50_s
+    }
+
+    /// (measured − model) / model, when a model prediction was supplied and
+    /// at least one step ran.
+    pub fn model_delta_frac(&self) -> Option<f64> {
+        let model = self.model_step_time_s?;
+        if model <= 0.0 || self.step_time.samples == 0 {
+            return None;
+        }
+        Some((self.measured_step_time_s() - model) / model)
+    }
+}
+
+/// Per-step wall time: the recorder's `wall_s` is cumulative (elapsed since
+/// run start), so step `i`'s own time is the delta from step `i - 1`.
+pub fn step_wall_deltas(rec: &Recorder) -> Vec<f64> {
+    let mut out = Vec::with_capacity(rec.records.len());
+    let mut prev = 0.0;
+    for r in &rec.records {
+        out.push((r.wall_s - prev).max(0.0));
+        prev = r.wall_s;
+    }
+    out
+}
+
+/// Assemble the report from the run's three sources of truth.
+pub fn build_report(
+    rec: &Recorder,
+    snapshot: Snapshot,
+    health: &HealthMonitor,
+    model_step_time_s: Option<f64>,
+) -> RunReport {
+    let comm: Vec<f64> = rec.records.iter().map(|r| r.comm_s).collect();
+    let compute: Vec<f64> = rec.records.iter().map(|r| r.compute_s).collect();
+    RunReport {
+        steps: rec.records.len() as u64,
+        skipped_steps: rec.skipped_steps(),
+        tokens: rec.records.last().map_or(0, |r| r.tokens),
+        tokens_per_second: rec.tokens_per_second(),
+        final_loss: rec.last_loss(),
+        final_loss_ema: rec.ema_loss(),
+        diverged: rec.diverged(),
+        step_time: TimeSummary::from_series(&step_wall_deltas(rec)),
+        comm_time: TimeSummary::from_series(&comm),
+        compute_time: TimeSummary::from_series(&compute),
+        snapshot,
+        healthy: health.healthy(),
+        verdicts: health.verdicts().to_vec(),
+        model_step_time_s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON rendering.  `util::json` is a parser only and `util::bench`'s writer
+// helpers are private to the Reporter, so the (small) escaping/number logic
+// lives here too: JSON output must be strict, so non-finite f64s become null.
+// ---------------------------------------------------------------------------
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// f64 → strict-JSON number, or `null` for NaN/inf (skipped steps record
+/// NaN grad norms by design).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        // `{}` prints integral f64s without a dot; that is still valid JSON
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jsonl_line(r: &StepRecord) -> String {
+    format!(
+        "{{\"step\":{},\"lr\":{},\"loss\":{},\"loss_ema\":{},\"grad_norm\":{},\
+         \"trust_ratio\":{},\"tokens\":{},\"wall_s\":{},\"loss_scale\":{},\
+         \"skipped\":{},\"comm_s\":{},\"compute_s\":{},\"overlap_eff\":{},\
+         \"note\":\"{}\"}}",
+        r.step,
+        num(r.lr),
+        num(r.loss),
+        num(r.loss_ema),
+        num(r.grad_norm),
+        num(r.trust_ratio),
+        r.tokens,
+        num(r.wall_s),
+        num(r.loss_scale),
+        r.skipped,
+        num(r.comm_s),
+        num(r.compute_s),
+        num(r.overlap_eff),
+        esc(&r.note)
+    )
+}
+
+fn create_with_parents(path: &Path) -> Result<std::fs::File> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating parent directory {}", dir.display()))?;
+    }
+    std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))
+}
+
+/// Write the per-step time series as JSONL (one object per recorded step;
+/// an empty run writes an empty file, which the checker accepts).
+pub fn write_jsonl(path: &Path, rec: &Recorder) -> Result<()> {
+    let mut f = create_with_parents(path)?;
+    for r in &rec.records {
+        writeln!(f, "{}", jsonl_line(r))?;
+    }
+    Ok(())
+}
+
+fn time_summary_json(t: &TimeSummary) -> String {
+    format!(
+        "{{\"samples\":{},\"mean_s\":{},\"p50_s\":{},\"p90_s\":{},\"p99_s\":{},\"max_s\":{}}}",
+        t.samples,
+        num(t.mean_s),
+        num(t.p50_s),
+        num(t.p90_s),
+        num(t.p99_s),
+        num(if t.samples == 0 { 0.0 } else { t.max_s })
+    )
+}
+
+fn verdict_json(v: &Verdict) -> String {
+    format!(
+        "{{\"kind\":\"{}\",\"severity\":\"{}\",\"step\":{},\"value\":{},\
+         \"threshold\":{},\"message\":\"{}\"}}",
+        esc(v.kind),
+        v.severity.as_str(),
+        v.step,
+        num(v.value),
+        num(v.threshold),
+        esc(&v.message)
+    )
+}
+
+/// Serialize the report as one `lans-metrics-report-v1` JSON document.
+pub fn report_json(rep: &RunReport) -> String {
+    let mut s = String::with_capacity(4096);
+    s.push_str(&format!(
+        "{{\n  \"schema\": \"{REPORT_SCHEMA}\",\n  \"steps\": {},\n  \
+         \"skipped_steps\": {},\n  \"tokens\": {},\n  \"tokens_per_second\": {},\n",
+        rep.steps,
+        rep.skipped_steps,
+        rep.tokens,
+        num(rep.tokens_per_second)
+    ));
+    s.push_str(&format!(
+        "  \"final_loss\": {},\n  \"final_loss_ema\": {},\n  \"diverged\": {},\n",
+        rep.final_loss.map_or("null".into(), num),
+        rep.final_loss_ema.map_or("null".into(), num),
+        rep.diverged
+    ));
+    s.push_str(&format!("  \"step_time\": {},\n", time_summary_json(&rep.step_time)));
+    s.push_str(&format!("  \"comm_time\": {},\n", time_summary_json(&rep.comm_time)));
+    s.push_str(&format!(
+        "  \"compute_time\": {},\n",
+        time_summary_json(&rep.compute_time)
+    ));
+
+    s.push_str("  \"counters\": {");
+    for (i, (name, v)) in rep.snapshot.counters.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\n    \"{}\": {}", esc(name), v));
+    }
+    s.push_str("\n  },\n  \"gauges\": {");
+    for (i, (name, v)) in rep.snapshot.gauges.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\n    \"{}\": {}", esc(name), num(*v)));
+    }
+    s.push_str("\n  },\n  \"histograms\": {");
+    for (i, h) in rep.snapshot.histograms.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        // sparse [bucket-index, count] pairs: 64 mostly-zero buckets would
+        // drown the report
+        let buckets: Vec<String> = h
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(idx, &n)| format!("[{idx},{n}]"))
+            .collect();
+        s.push_str(&format!(
+            "\n    \"{}\": {{\"count\":{},\"sum\":{},\"mean\":{},\"p50\":{},\
+             \"p90\":{},\"p99\":{},\"buckets\":[{}]}}",
+            esc(h.name),
+            h.count,
+            num(h.sum),
+            num(h.mean()),
+            num(h.percentile(50.0)),
+            num(h.percentile(90.0)),
+            num(h.percentile(99.0)),
+            buckets.join(",")
+        ));
+    }
+    s.push_str("\n  },\n");
+
+    s.push_str(&format!(
+        "  \"health\": {{\"healthy\": {}, \"verdicts\": [",
+        rep.healthy
+    ));
+    for (i, v) in rep.verdicts.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    ");
+        s.push_str(&verdict_json(v));
+    }
+    if !rep.verdicts.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]},\n");
+
+    match rep.model_step_time_s {
+        Some(model) => s.push_str(&format!(
+            "  \"model\": {{\"model_step_time_s\": {}, \"measured_step_time_s\": {}, \
+             \"delta_frac\": {}}}\n",
+            num(model),
+            num(rep.measured_step_time_s()),
+            rep.model_delta_frac().map_or("null".into(), num)
+        )),
+        None => s.push_str("  \"model\": null\n"),
+    }
+    s.push('}');
+    s
+}
+
+/// Write the report JSON to disk.
+pub fn write_report(path: &Path, rep: &RunReport) -> Result<()> {
+    let mut f = create_with_parents(path)?;
+    writeln!(f, "{}", report_json(rep))?;
+    Ok(())
+}
+
+/// Human-readable report for the terminal.
+pub fn render_summary(rep: &RunReport) -> String {
+    let ms = |s: f64| format!("{:.2}ms", s * 1e3);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "run-health report — {} steps ({} skipped), {} tokens, {:.0} tok/s\n",
+        rep.steps, rep.skipped_steps, rep.tokens, rep.tokens_per_second
+    ));
+    if let (Some(l), Some(e)) = (rep.final_loss, rep.final_loss_ema) {
+        out.push_str(&format!(
+            "  final loss {l:.6} (ema {e:.6}){}\n",
+            if rep.diverged { "  [DIVERGED]" } else { "" }
+        ));
+    }
+    for (label, t) in [
+        ("step", &rep.step_time),
+        ("comm", &rep.comm_time),
+        ("compute", &rep.compute_time),
+    ] {
+        if t.samples > 0 {
+            out.push_str(&format!(
+                "  {label:<8} p50 {}  p90 {}  p99 {}  max {}\n",
+                ms(t.p50_s),
+                ms(t.p90_s),
+                ms(t.p99_s),
+                ms(t.max_s)
+            ));
+        }
+    }
+    for (name, v) in &rep.snapshot.counters {
+        if *v > 0 {
+            out.push_str(&format!("  {name} = {v}\n"));
+        }
+    }
+    for (name, v) in &rep.snapshot.gauges {
+        out.push_str(&format!("  {name} = {v}\n"));
+    }
+    for h in &rep.snapshot.histograms {
+        if h.count > 0 {
+            out.push_str(&format!(
+                "  {} n={} mean={:.4e} p50~{:.4e} p99~{:.4e}\n",
+                h.name,
+                h.count,
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(99.0)
+            ));
+        }
+    }
+    if let (Some(model), Some(delta)) = (rep.model_step_time_s, rep.model_delta_frac()) {
+        out.push_str(&format!(
+            "  model step time {} vs measured {} ({:+.1}%)\n",
+            ms(model),
+            ms(rep.measured_step_time_s()),
+            delta * 100.0
+        ));
+    }
+    out.push_str(&format!(
+        "  health: {}",
+        if rep.healthy { "HEALTHY" } else { "UNHEALTHY" }
+    ));
+    if rep.verdicts.is_empty() {
+        out.push_str(" (no verdicts)\n");
+    } else {
+        out.push('\n');
+        for v in &rep.verdicts {
+            out.push_str(&format!(
+                "    [{}] {} @ step {}: {}\n",
+                v.severity.as_str(),
+                v.kind,
+                v.step,
+                v.message
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::health::HealthConfig;
+    use crate::metrics::registry;
+    use crate::util::json::Json;
+
+    fn empty_snapshot() -> Snapshot {
+        // build through the registry while disabled: all zeros
+        let _g = registry::test_lock();
+        registry::disable();
+        registry::reset();
+        registry::snapshot()
+    }
+
+    fn quiet_health() -> HealthMonitor {
+        HealthMonitor::new(HealthConfig::default())
+    }
+
+    #[test]
+    fn empty_run_exports_cleanly() {
+        let rec = Recorder::new(0.5);
+        let rep = build_report(&rec, empty_snapshot(), &quiet_health(), None);
+        assert_eq!(rep.steps, 0);
+        assert_eq!(rep.step_time.samples, 0);
+        assert_eq!(rep.step_time.p99_s, 0.0);
+        assert!(rep.healthy);
+        assert!(rep.final_loss.is_none());
+        assert!(rep.model_delta_frac().is_none());
+
+        let dir = std::env::temp_dir();
+        let jl = dir.join("lans_test_export_empty.jsonl");
+        let rp = dir.join("lans_test_export_empty.json");
+        write_jsonl(&jl, &rec).unwrap();
+        write_report(&rp, &rep).unwrap();
+        assert_eq!(std::fs::read_to_string(&jl).unwrap(), "");
+        let parsed = Json::parse(&std::fs::read_to_string(&rp).unwrap()).unwrap();
+        assert_eq!(parsed.expect("schema").as_str(), Some(REPORT_SCHEMA));
+        assert_eq!(parsed.expect("steps").as_usize(), Some(0));
+        assert_eq!(parsed.expect("model"), &Json::Null);
+        assert_eq!(parsed.expect("final_loss"), &Json::Null);
+        std::fs::remove_file(&jl).ok();
+        std::fs::remove_file(&rp).ok();
+    }
+
+    #[test]
+    fn single_step_percentiles_collapse_to_the_value() {
+        let mut rec = Recorder::new(0.5);
+        rec.push(1, 1e-3, 4.0, 1.0, 1.0, 64);
+        rec.set_step_timing(0.25, 0.5, 0.1);
+        let rep = build_report(&rec, empty_snapshot(), &quiet_health(), None);
+        assert_eq!(rep.step_time.samples, 1);
+        assert_eq!(rep.comm_time.p50_s, 0.25);
+        assert_eq!(rep.comm_time.p90_s, 0.25);
+        assert_eq!(rep.comm_time.p99_s, 0.25);
+        assert_eq!(rep.comm_time.max_s, 0.25);
+        assert_eq!(rep.compute_time.p99_s, 0.5);
+        // one step: its wall delta is the whole series
+        assert_eq!(rep.step_time.p50_s, rep.step_time.max_s);
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_util_json() {
+        let mut rec = Recorder::new(0.5);
+        rec.push_scaled(1, 1e-3, 4.0, 2.0, 0.9, 64, 65536.0);
+        rec.push_skipped(2, 1e-3, 4.1, 64, 65536.0, "overflow, scale -> 32768 \"half\"");
+        rec.push_scaled(3, 1e-3, 3.9, 1.5, 0.8, 64, 32768.0);
+        let p = std::env::temp_dir().join("lans_test_export_roundtrip.jsonl");
+        write_jsonl(&p, &rec).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}\n{line}"));
+            assert_eq!(j.expect("step").as_usize(), Some(i + 1));
+            assert!(j.expect("loss").as_f64().is_some());
+        }
+        // skipped line: NaN grad norm serialized as null, note escaped
+        let skipped = Json::parse(lines[1]).unwrap();
+        assert_eq!(skipped.expect("skipped").as_bool(), Some(true));
+        assert_eq!(skipped.expect("grad_norm"), &Json::Null);
+        assert_eq!(skipped.expect("trust_ratio"), &Json::Null);
+        assert_eq!(
+            skipped.expect("note").as_str(),
+            Some("overflow, scale -> 32768 \"half\"")
+        );
+        // applied line keeps real numbers
+        let applied = Json::parse(lines[2]).unwrap();
+        assert_eq!(applied.expect("grad_norm").as_f64(), Some(1.5));
+        assert_eq!(applied.expect("loss_scale").as_f64(), Some(32768.0));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn report_json_parses_and_orders_percentiles() {
+        let mut rec = Recorder::new(0.5);
+        for t in 1..=20u64 {
+            rec.push(t, 1e-3, 5.0 - 0.1 * t as f64, 1.0, 1.0, 64);
+            rec.set_step_timing(0.002 * t as f64, 0.003, 0.5);
+        }
+        let mut health = quiet_health();
+        // force one verdict so the verdict array is exercised
+        for t in 1..=100u64 {
+            let wall = if t == 60 { 0.5 } else { 0.01 };
+            health.observe_step(t, wall, 0.0, 0.0, 5.0, false, f64::INFINITY);
+        }
+        assert!(!health.healthy());
+        let rep = build_report(&rec, empty_snapshot(), &health, Some(0.010));
+        let doc = report_json(&rep);
+        let j = Json::parse(&doc).unwrap_or_else(|e| panic!("{e}\n{doc}"));
+        let ct = j.expect("comm_time");
+        let (p50, p90, p99) = (
+            ct.expect("p50_s").as_f64().unwrap(),
+            ct.expect("p90_s").as_f64().unwrap(),
+            ct.expect("p99_s").as_f64().unwrap(),
+        );
+        assert!(p50 <= p90 && p90 <= p99, "percentiles out of order: {p50} {p90} {p99}");
+        let health_j = j.expect("health");
+        assert_eq!(health_j.expect("healthy").as_bool(), Some(false));
+        let verdicts = health_j.expect("verdicts").as_arr().unwrap();
+        assert!(!verdicts.is_empty());
+        assert_eq!(verdicts[0].expect("severity").as_str(), Some("warn"));
+        let model = j.expect("model");
+        assert_eq!(model.expect("model_step_time_s").as_f64(), Some(0.010));
+        assert!(model.expect("delta_frac").as_f64().is_some());
+        // the human rendering mentions the verdict and the model delta
+        let text = render_summary(&rep);
+        assert!(text.contains("UNHEALTHY"), "{text}");
+        assert!(text.contains("straggler"), "{text}");
+        assert!(text.contains("model step time"), "{text}");
+    }
+
+    #[test]
+    fn step_wall_deltas_diff_the_cumulative_clock() {
+        let mut rec = Recorder::new(0.5);
+        rec.push(1, 1e-3, 5.0, 1.0, 1.0, 64);
+        rec.push(2, 1e-3, 4.9, 1.0, 1.0, 64);
+        rec.push(3, 1e-3, 4.8, 1.0, 1.0, 64);
+        // overwrite the wall clocks with known values
+        rec.records[0].wall_s = 1.0;
+        rec.records[1].wall_s = 1.5;
+        rec.records[2].wall_s = 3.5;
+        assert_eq!(step_wall_deltas(&rec), vec![1.0, 0.5, 2.0]);
+    }
+}

@@ -1,0 +1,471 @@
+//! Run-health anomaly detection over the per-step time series.
+//!
+//! The [`HealthMonitor`] consumes one observation per training step (wall /
+//! comm / compute seconds, smoothed loss, loss-scale events) and flags:
+//!
+//! - **stragglers** — a single step whose wall/comm/compute time is a
+//!   robust-z outlier against the trailing window (median/MAD, DESIGN.md §12);
+//! - **step-time regressions** — a sustained shift: a later window's median
+//!   step time exceeding a ratio of the first full window's median;
+//! - **loss-scale thrash** — more than `k` backoffs inside one trailing
+//!   window (the scaler is oscillating instead of settling);
+//! - **loss plateaus** — the smoothed loss has not improved for a long
+//!   stretch (informational, not a failure);
+//! - **divergence early-warning** — the smoothed loss climbed past a
+//!   fraction of the recorder's divergence ceiling *before* the run is
+//!   formally diverged.
+//!
+//! Thresholds are deliberately conservative: the acceptance bar is zero
+//! false positives on clean runs (proptested across trainer configs), so
+//! every detector demands both a large robust z **and** a material absolute
+//! ratio before it speaks.  The verdict list feeds the end-of-run report
+//! and is the seed of the ROADMAP item 4 regression gate.
+
+use std::collections::VecDeque;
+
+use crate::util::stats::{robust_z, RollingWindow};
+
+/// Detector thresholds.  Defaults are tuned to stay silent on healthy runs.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// trailing window length (steps) for robust statistics
+    pub window: usize,
+    /// robust z-score a single step must exceed to be a straggler
+    pub straggler_z: f64,
+    /// ...and the minimum ratio vs the trailing median (guards against
+    /// flagging microsecond jitter on near-constant series)
+    pub straggler_ratio: f64,
+    /// a window median above `regression_ratio`× the baseline window's
+    /// median is a step-time regression
+    pub regression_ratio: f64,
+    /// more than this many backoffs inside one window is thrash
+    pub thrash_backoffs: u64,
+    /// steps without smoothed-loss improvement before a plateau verdict
+    pub plateau_window: usize,
+    /// smoothed loss above this fraction of the divergence ceiling warns
+    pub divergence_warn_frac: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            window: 32,
+            straggler_z: 8.0,
+            straggler_ratio: 1.5,
+            regression_ratio: 2.0,
+            thrash_backoffs: 3,
+            plateau_window: 200,
+            divergence_warn_frac: 0.5,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// worth a look, not a failure (plateau)
+    Info,
+    /// the run is unhealthy (straggler, regression, thrash, divergence risk)
+    Warn,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// One health finding, self-describing enough for the JSON report.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    /// `straggler` | `step_time_regression` | `loss_scale_thrash` |
+    /// `loss_plateau` | `divergence_warning`
+    pub kind: &'static str,
+    pub severity: Severity,
+    /// training step at which the detector fired
+    pub step: u64,
+    /// the measured value that tripped the detector
+    pub value: f64,
+    /// the threshold it tripped against
+    pub threshold: f64,
+    pub message: String,
+}
+
+/// Rolling anomaly detector; feed it once per recorded step.
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    wall: RollingWindow,
+    comm: RollingWindow,
+    compute: RollingWindow,
+    /// steps at which a loss-scale backoff happened (pruned to the window)
+    backoff_steps: VecDeque<u64>,
+    /// median of the first full wall window — the regression baseline
+    baseline_wall_median: Option<f64>,
+    /// last step a straggler fired per lane (wall/comm/compute) — one
+    /// verdict per incident, re-armed after a full window refresh
+    last_straggler: [Option<u64>; 3],
+    best_ema: Option<f64>,
+    steps_since_best: usize,
+    steps_seen: u64,
+    regression_flagged: bool,
+    plateau_flagged: bool,
+    divergence_flagged: bool,
+    verdicts: Vec<Verdict>,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig) -> HealthMonitor {
+        let w = cfg.window.max(4);
+        HealthMonitor {
+            wall: RollingWindow::new(w),
+            comm: RollingWindow::new(w),
+            compute: RollingWindow::new(w),
+            backoff_steps: VecDeque::new(),
+            baseline_wall_median: None,
+            last_straggler: [None; 3],
+            best_ema: None,
+            steps_since_best: 0,
+            steps_seen: 0,
+            regression_flagged: false,
+            plateau_flagged: false,
+            divergence_flagged: false,
+            cfg,
+        }
+    }
+
+    /// One observation per training step.  `wall_s` is this step's wall
+    /// time (the caller diffs the recorder's cumulative clock); `comm_s` /
+    /// `compute_s` may be 0.0 when tracing is off; `backoff` marks a
+    /// loss-scale halving this step; `divergence_ceiling` is the recorder's
+    /// (possibly infinite) ceiling.
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe_step(
+        &mut self,
+        step: u64,
+        wall_s: f64,
+        comm_s: f64,
+        compute_s: f64,
+        loss_ema: f64,
+        backoff: bool,
+        divergence_ceiling: f64,
+    ) {
+        self.steps_seen += 1;
+
+        self.check_straggler(step, 0, "wall", wall_s, self.wall.values());
+        self.check_straggler(step, 1, "comm", comm_s, self.comm.values());
+        self.check_straggler(step, 2, "compute", compute_s, self.compute.values());
+
+        // regression: first full window fixes the baseline; later full
+        // windows compare their median against it (flag once)
+        if self.wall.is_full() {
+            let med = self.wall.median();
+            match self.baseline_wall_median {
+                None => self.baseline_wall_median = Some(med),
+                Some(base) => {
+                    let threshold = self.cfg.regression_ratio * base;
+                    if !self.regression_flagged && base > 0.0 && med > threshold {
+                        self.regression_flagged = true;
+                        self.verdicts.push(Verdict {
+                            kind: "step_time_regression",
+                            severity: Severity::Warn,
+                            step,
+                            value: med,
+                            threshold,
+                            message: format!(
+                                "median step time {:.3e}s is {:.2}x the baseline \
+                                 window's {:.3e}s",
+                                med,
+                                med / base,
+                                base
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
+        self.wall.push(wall_s);
+        self.comm.push(comm_s);
+        self.compute.push(compute_s);
+
+        // loss-scale thrash: count backoffs inside the trailing window
+        if backoff {
+            self.backoff_steps.push_back(step);
+        }
+        let horizon = step.saturating_sub(self.cfg.window as u64);
+        while self.backoff_steps.front().is_some_and(|&s| s < horizon) {
+            self.backoff_steps.pop_front();
+        }
+        if self.backoff_steps.len() as u64 > self.cfg.thrash_backoffs {
+            let n = self.backoff_steps.len();
+            self.verdicts.push(Verdict {
+                kind: "loss_scale_thrash",
+                severity: Severity::Warn,
+                step,
+                value: n as f64,
+                threshold: self.cfg.thrash_backoffs as f64,
+                message: format!(
+                    "{n} loss-scale backoffs within {} steps — the scaler is \
+                     oscillating, not settling",
+                    self.cfg.window
+                ),
+            });
+            // re-arm instead of firing every subsequent step
+            self.backoff_steps.clear();
+        }
+
+        // plateau: smoothed loss has not made a new low for plateau_window
+        if loss_ema.is_finite() {
+            match self.best_ema {
+                Some(best) if loss_ema < best => {
+                    self.best_ema = Some(loss_ema);
+                    self.steps_since_best = 0;
+                }
+                Some(_) => self.steps_since_best += 1,
+                None => self.best_ema = Some(loss_ema),
+            }
+            if !self.plateau_flagged && self.steps_since_best >= self.cfg.plateau_window {
+                self.plateau_flagged = true;
+                self.verdicts.push(Verdict {
+                    kind: "loss_plateau",
+                    severity: Severity::Info,
+                    step,
+                    value: self.steps_since_best as f64,
+                    threshold: self.cfg.plateau_window as f64,
+                    message: format!(
+                        "smoothed loss has not improved on {:.6} for {} steps",
+                        self.best_ema.unwrap_or(f64::NAN),
+                        self.steps_since_best
+                    ),
+                });
+            }
+        }
+
+        // divergence early-warning: smoothed loss climbing toward the
+        // ceiling (only meaningful when the recorder fixed a finite one)
+        if divergence_ceiling.is_finite() {
+            let threshold = self.cfg.divergence_warn_frac * divergence_ceiling;
+            if !self.divergence_flagged && loss_ema.is_finite() && loss_ema > threshold {
+                self.divergence_flagged = true;
+                self.verdicts.push(Verdict {
+                    kind: "divergence_warning",
+                    severity: Severity::Warn,
+                    step,
+                    value: loss_ema,
+                    threshold,
+                    message: format!(
+                        "smoothed loss {loss_ema:.6} is past {:.0}% of the \
+                         divergence ceiling {divergence_ceiling:.6}",
+                        self.cfg.divergence_warn_frac * 100.0
+                    ),
+                });
+            }
+        }
+    }
+
+    fn check_straggler(
+        &mut self,
+        step: u64,
+        lane_idx: usize,
+        lane: &'static str,
+        x: f64,
+        vals: Vec<f64>,
+    ) {
+        // need a populated window before an "outlier" means anything
+        if vals.len() < 8 || !(x > 0.0) {
+            return;
+        }
+        // one verdict per incident: a regime change would otherwise flag
+        // every step until the trailing median catches up
+        if self.last_straggler[lane_idx]
+            .is_some_and(|last| step < last + self.cfg.window as u64)
+        {
+            return;
+        }
+        let med = crate::util::stats::median(&vals);
+        if med <= 0.0 {
+            return;
+        }
+        let mad = crate::util::stats::mad(&vals, med);
+        // floor the MAD at 5% of the median: a near-constant series must
+        // not turn scheduler jitter into a verdict
+        let z = robust_z(x, med, mad, 0.05 * med);
+        if z > self.cfg.straggler_z && x > self.cfg.straggler_ratio * med {
+            self.last_straggler[lane_idx] = Some(step);
+            let kind = match lane {
+                "comm" => "straggler_comm",
+                "compute" => "straggler_compute",
+                _ => "straggler",
+            };
+            self.verdicts.push(Verdict {
+                kind,
+                severity: Severity::Warn,
+                step,
+                value: x,
+                threshold: med,
+                message: format!(
+                    "step {step} {lane} time {x:.3e}s vs trailing median {med:.3e}s \
+                     (robust z = {z:.1})"
+                ),
+            });
+        }
+    }
+
+    pub fn verdicts(&self) -> &[Verdict] {
+        &self.verdicts
+    }
+
+    /// Healthy ⇔ no warn-severity verdicts (info verdicts don't fail a run).
+    pub fn healthy(&self) -> bool {
+        self.verdicts.iter().all(|v| v.severity != Severity::Warn)
+    }
+
+    pub fn steps_seen(&self) -> u64 {
+        self.steps_seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_clean(mon: &mut HealthMonitor, steps: u64) {
+        for t in 1..=steps {
+            // mild deterministic jitter around 10ms, loss decaying from 8
+            let jitter = 1.0 + 0.04 * ((t % 7) as f64 - 3.0) / 3.0;
+            let wall = 0.010 * jitter;
+            let loss = 8.0 * (-(t as f64) / 400.0).exp();
+            mon.observe_step(t, wall, wall * 0.4, wall * 0.5, loss, false, 24.0);
+        }
+    }
+
+    #[test]
+    fn clean_run_is_healthy() {
+        let mut mon = HealthMonitor::new(HealthConfig::default());
+        feed_clean(&mut mon, 500);
+        assert!(mon.healthy(), "false positives on a clean run: {:?}", mon.verdicts());
+        assert!(mon.verdicts().is_empty());
+        assert_eq!(mon.steps_seen(), 500);
+    }
+
+    #[test]
+    fn injected_straggler_is_flagged_once_at_the_right_step() {
+        let mut mon = HealthMonitor::new(HealthConfig::default());
+        for t in 1..=100u64 {
+            let wall = if t == 60 { 0.200 } else { 0.010 };
+            mon.observe_step(t, wall, 0.0, 0.0, 5.0, false, f64::INFINITY);
+        }
+        let stragglers: Vec<_> =
+            mon.verdicts().iter().filter(|v| v.kind == "straggler").collect();
+        assert_eq!(stragglers.len(), 1, "{:?}", mon.verdicts());
+        assert_eq!(stragglers[0].step, 60);
+        assert_eq!(stragglers[0].severity, Severity::Warn);
+        assert!(!mon.healthy());
+    }
+
+    #[test]
+    fn comm_straggler_uses_its_own_lane() {
+        let mut mon = HealthMonitor::new(HealthConfig::default());
+        for t in 1..=60u64 {
+            let comm = if t == 40 { 0.080 } else { 0.004 };
+            mon.observe_step(t, 0.010, comm, 0.005, 5.0, false, f64::INFINITY);
+        }
+        assert!(mon.verdicts().iter().any(|v| v.kind == "straggler_comm"));
+        assert!(!mon.verdicts().iter().any(|v| v.kind == "straggler"));
+    }
+
+    #[test]
+    fn sustained_slowdown_is_a_regression_flagged_once() {
+        let mut mon = HealthMonitor::new(HealthConfig::default());
+        for t in 1..=200u64 {
+            // step time 2.5x after step 100 and staying there
+            let wall = if t <= 100 { 0.010 } else { 0.025 };
+            mon.observe_step(t, wall, 0.0, 0.0, 5.0, false, f64::INFINITY);
+        }
+        let regs: Vec<_> = mon
+            .verdicts()
+            .iter()
+            .filter(|v| v.kind == "step_time_regression")
+            .collect();
+        assert_eq!(regs.len(), 1, "flag once, not per-step: {:?}", mon.verdicts());
+        assert!(regs[0].step > 100);
+        // the regime-change onset may read as one straggler, never a storm
+        let stragglers = mon.verdicts().iter().filter(|v| v.kind == "straggler").count();
+        assert!(stragglers <= 1, "straggler storm: {:?}", mon.verdicts());
+        assert!(!mon.healthy());
+    }
+
+    #[test]
+    fn loss_scale_thrash_is_flagged_and_rearmed() {
+        let mut mon = HealthMonitor::new(HealthConfig::default());
+        // 6 backoffs inside one 32-step window: one thrash verdict (>3),
+        // then the counter re-arms
+        for t in 1..=40u64 {
+            let backoff = t % 5 == 0 && t <= 30;
+            mon.observe_step(t, 0.010, 0.0, 0.0, 5.0, backoff, f64::INFINITY);
+        }
+        let thrash: Vec<_> =
+            mon.verdicts().iter().filter(|v| v.kind == "loss_scale_thrash").collect();
+        assert_eq!(thrash.len(), 1, "{:?}", mon.verdicts());
+        assert!(!mon.healthy());
+
+        // sparse backoffs (normal scale walk-down) stay silent
+        let mut calm = HealthMonitor::new(HealthConfig::default());
+        for t in 1..=300u64 {
+            calm.observe_step(t, 0.010, 0.0, 0.0, 5.0, t % 100 == 0, f64::INFINITY);
+        }
+        assert!(calm.healthy(), "{:?}", calm.verdicts());
+    }
+
+    #[test]
+    fn plateau_is_info_severity_and_flagged_once() {
+        let cfg = HealthConfig { plateau_window: 50, ..HealthConfig::default() };
+        let mut mon = HealthMonitor::new(cfg);
+        for t in 1..=200u64 {
+            mon.observe_step(t, 0.010, 0.0, 0.0, 5.0, false, f64::INFINITY);
+        }
+        let plateaus: Vec<_> =
+            mon.verdicts().iter().filter(|v| v.kind == "loss_plateau").collect();
+        assert_eq!(plateaus.len(), 1);
+        assert_eq!(plateaus[0].severity, Severity::Info);
+        assert!(mon.healthy(), "info verdicts must not fail the run");
+    }
+
+    #[test]
+    fn divergence_warning_fires_before_the_ceiling() {
+        let mut mon = HealthMonitor::new(HealthConfig::default());
+        let ceiling = 15.0; // recorder default for first loss 5.0
+        for t in 1..=50u64 {
+            let ema = 5.0 + 0.1 * t as f64; // climbing toward 10 > 7.5
+            mon.observe_step(t, 0.010, 0.0, 0.0, ema, false, ceiling);
+        }
+        let divs: Vec<_> =
+            mon.verdicts().iter().filter(|v| v.kind == "divergence_warning").collect();
+        assert_eq!(divs.len(), 1);
+        assert!(divs[0].value > 7.5 && divs[0].value < ceiling);
+        assert!(!mon.healthy());
+
+        // infinite ceiling (opt-out): never warns no matter the loss
+        let mut free = HealthMonitor::new(HealthConfig::default());
+        for t in 1..=50u64 {
+            free.observe_step(t, 0.010, 0.0, 0.0, 1e12, false, f64::INFINITY);
+        }
+        assert!(free.verdicts().iter().all(|v| v.kind != "divergence_warning"));
+    }
+
+    #[test]
+    fn nan_ema_does_not_poison_the_plateau_tracker() {
+        let mut mon = HealthMonitor::new(HealthConfig {
+            plateau_window: 20,
+            ..HealthConfig::default()
+        });
+        for t in 1..=60u64 {
+            let ema = if t % 2 == 0 { f64::NAN } else { 6.0 - 0.05 * t as f64 };
+            mon.observe_step(t, 0.010, 0.0, 0.0, ema, false, f64::INFINITY);
+        }
+        // improving on the finite samples: no plateau
+        assert!(mon.verdicts().iter().all(|v| v.kind != "loss_plateau"));
+    }
+}

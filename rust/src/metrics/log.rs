@@ -1,0 +1,202 @@
+//! Leveled, rate-limited diagnostic sink for the trainer.
+//!
+//! Replaces the trainer's raw `eprintln!` calls: messages carry a level and
+//! a label, the level knob (`[metrics] log_level` → quiet/normal/verbose)
+//! decides what reaches stderr, each label is rate-limited so a pathological
+//! run (hundreds of skipped steps) cannot flood the terminal, and tests can
+//! capture the stream instead of scraping stderr.  This is operator I/O, not
+//! hot-path instrumentation — a mutex on the emit path is fine; the trainer
+//! logs a handful of lines per run.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    /// nothing reaches stderr (records still land in the Recorder/TSV)
+    Quiet = 0,
+    /// skip/divergence diagnostics and eval lines (the default)
+    Normal = 1,
+    /// everything, including per-step chatter from future callers
+    Verbose = 2,
+}
+
+impl LogLevel {
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s {
+            "quiet" => Some(LogLevel::Quiet),
+            "normal" => Some(LogLevel::Normal),
+            "verbose" => Some(LogLevel::Verbose),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LogLevel::Quiet => "quiet",
+            LogLevel::Normal => "normal",
+            LogLevel::Verbose => "verbose",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Normal as u8);
+
+pub fn set_level(l: LogLevel) {
+    LEVEL.store(l as u8, Ordering::SeqCst);
+}
+
+pub fn level() -> LogLevel {
+    match LEVEL.load(Ordering::SeqCst) {
+        0 => LogLevel::Quiet,
+        2 => LogLevel::Verbose,
+        _ => LogLevel::Normal,
+    }
+}
+
+/// Max lines per label per run before suppression kicks in.
+const LABEL_LIMIT: u64 = 50;
+
+struct SinkState {
+    /// (label, emitted-count) — labels are a small fixed set, linear scan
+    counts: Vec<(&'static str, u64)>,
+    /// when Some, lines are captured here instead of reaching stderr
+    capture: Option<Vec<String>>,
+}
+
+static SINK: Mutex<SinkState> = Mutex::new(SinkState { counts: Vec::new(), capture: None });
+
+/// Reset rate-limit counters (call at run start so limits are per-run).
+pub fn reset_rate_limits() {
+    let mut s = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    s.counts.clear();
+}
+
+/// Begin capturing emitted lines (tests); ends with [`capture_end`].
+pub fn capture_begin() {
+    let mut s = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    s.capture = Some(Vec::new());
+}
+
+/// Stop capturing and return everything emitted since [`capture_begin`].
+pub fn capture_end() -> Vec<String> {
+    let mut s = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    s.capture.take().unwrap_or_default()
+}
+
+fn emit(min: LogLevel, label: &'static str, msg: &str) {
+    if level() < min {
+        return;
+    }
+    let mut s = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    let count = match s.counts.iter_mut().find(|(l, _)| *l == label) {
+        Some((_, c)) => {
+            *c += 1;
+            *c
+        }
+        None => {
+            s.counts.push((label, 1));
+            1
+        }
+    };
+    let line = match count.cmp(&(LABEL_LIMIT + 1)) {
+        std::cmp::Ordering::Less => format!("[{label}] {msg}"),
+        std::cmp::Ordering::Equal => format!(
+            "[{label}] {msg}\n[{label}] further '{label}' messages suppressed \
+             (limit {LABEL_LIMIT}/run; the full history is in the curve TSV/JSONL)"
+        ),
+        std::cmp::Ordering::Greater => return,
+    };
+    match &mut s.capture {
+        Some(buf) => buf.push(line),
+        None => eprintln!("{line}"),
+    }
+}
+
+/// Normal-level diagnostic (skip notes, eval lines).
+pub fn info(label: &'static str, msg: &str) {
+    emit(LogLevel::Normal, label, msg);
+}
+
+/// Verbose-only chatter.
+pub fn verbose(label: &'static str, msg: &str) {
+    emit(LogLevel::Verbose, label, msg);
+}
+
+/// Warnings follow the same knob as info: quiet mode silences everything
+/// (the data still lands in the recorder), so an operator who opted out of
+/// terminal output is never second-guessed.
+pub fn warn(label: &'static str, msg: &str) {
+    emit(LogLevel::Normal, label, msg);
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_gate_emission() {
+        let _g = test_lock();
+        reset_rate_limits();
+        set_level(LogLevel::Quiet);
+        capture_begin();
+        info("skip", "dropped");
+        warn("skip", "dropped");
+        verbose("chat", "dropped");
+        assert!(capture_end().is_empty());
+
+        reset_rate_limits();
+        set_level(LogLevel::Normal);
+        capture_begin();
+        info("skip", "kept");
+        verbose("chat", "dropped");
+        let lines = capture_end();
+        assert_eq!(lines, vec!["[skip] kept".to_string()]);
+
+        reset_rate_limits();
+        set_level(LogLevel::Verbose);
+        capture_begin();
+        verbose("chat", "kept");
+        let lines = capture_end();
+        assert_eq!(lines, vec!["[chat] kept".to_string()]);
+        set_level(LogLevel::Normal);
+    }
+
+    #[test]
+    fn rate_limit_is_per_label_and_announced() {
+        let _g = test_lock();
+        set_level(LogLevel::Normal);
+        reset_rate_limits();
+        capture_begin();
+        for i in 0..(LABEL_LIMIT + 10) {
+            info("skip", &format!("overflow {i}"));
+        }
+        info("eval", "other label unaffected");
+        let lines = capture_end();
+        // LIMIT plain lines + 1 suppression notice + the other label
+        assert_eq!(lines.len() as u64, LABEL_LIMIT + 2);
+        assert!(lines[LABEL_LIMIT as usize].contains("suppressed"));
+        assert_eq!(lines.last().unwrap(), "[eval] other label unaffected");
+        // a new run re-arms the limit
+        reset_rate_limits();
+        capture_begin();
+        info("skip", "fresh run");
+        assert_eq!(capture_end(), vec!["[skip] fresh run".to_string()]);
+    }
+
+    #[test]
+    fn log_level_parses() {
+        assert_eq!(LogLevel::parse("quiet"), Some(LogLevel::Quiet));
+        assert_eq!(LogLevel::parse("normal"), Some(LogLevel::Normal));
+        assert_eq!(LogLevel::parse("verbose"), Some(LogLevel::Verbose));
+        assert_eq!(LogLevel::parse("loud"), None);
+        assert_eq!(LogLevel::Verbose.as_str(), "verbose");
+        assert!(LogLevel::Quiet < LogLevel::Normal && LogLevel::Normal < LogLevel::Verbose);
+    }
+}

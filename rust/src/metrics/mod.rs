@@ -1,430 +1,29 @@
-//! Training metrics: loss-curve recording, throughput counters, TSV export.
+//! Run-level telemetry: loss-curve recording, a counters/gauges/histograms
+//! registry, anomaly detection, leveled logging, and end-of-run reports.
+//!
+//! Layout (DESIGN.md §12):
+//!
+//! - [`recorder`] — the per-step loss-curve [`Recorder`] (EMA smoothing,
+//!   divergence ceiling, TSV export).  Always on; it is the trainer's own
+//!   bookkeeping, not an instrumentation seam.
+//! - [`registry`] — process-wide counters, gauges, and log2-bucketed
+//!   histograms fed from hot-path seams (optimizer coefficients, collective
+//!   wire bytes, pool/DAG lanes, loss-scaler events).  Same hard overhead
+//!   contract as [`crate::trace`]: disabled (the default) costs one relaxed
+//!   atomic load per seam, same binary, bit-identical runs either way.
+//! - [`health`] — rolling robust statistics (median/MAD z-scores) over the
+//!   step time series; flags stragglers, step-time regressions, loss-scale
+//!   thrash, loss plateaus, and divergence early-warning as [`health::Verdict`]s.
+//! - [`export`] — per-step JSONL time-series and the end-of-run
+//!   [`export::RunReport`] (JSON + human-readable summary), validated in CI
+//!   by `tools/check_metrics.py`.
+//! - [`log`] — a leveled, rate-limited stderr sink for trainer diagnostics
+//!   (quiet/normal/verbose), capturable in tests.
 
-use std::io::Write;
-use std::path::Path;
-use std::time::Instant;
+pub mod export;
+pub mod health;
+pub mod log;
+pub mod recorder;
+pub mod registry;
 
-use anyhow::{Context, Result};
-
-use crate::util::stats::Ema;
-
-/// One recorded training step.
-#[derive(Debug, Clone)]
-pub struct StepRecord {
-    pub step: u64,
-    pub lr: f64,
-    pub loss: f64,
-    pub loss_ema: f64,
-    pub grad_norm: f64,
-    pub trust_ratio: f64,
-    pub tokens: u64,
-    pub wall_s: f64,
-    /// loss scale in effect this step (1.0 when loss scaling is off)
-    pub loss_scale: f64,
-    /// true when the update was skipped (gradient overflow under loss
-    /// scaling) — the data was still consumed, the parameters untouched
-    pub skipped: bool,
-    /// wall time with communication in flight this step (union of the
-    /// step's `comm` trace spans); 0.0 when tracing is off
-    pub comm_s: f64,
-    /// wall time with optimizer arithmetic in flight; 0.0 when tracing
-    /// is off
-    pub compute_s: f64,
-    /// hidden-comm fraction: how much of `comm_s` was simultaneously
-    /// covered by compute ([`trace::StepTrace::overlap_efficiency`]);
-    /// 0.0 when tracing is off or the phases ran back-to-back
-    ///
-    /// [`trace::StepTrace::overlap_efficiency`]:
-    /// crate::trace::StepTrace::overlap_efficiency
-    pub overlap_eff: f64,
-    /// skip diagnostic ("overflow at loss scale 2^15, scale -> 16384");
-    /// empty for applied steps.  Lands in the TSV `note` column so a run's
-    /// skip history survives in the curve file, not just on stderr.
-    pub note: String,
-}
-
-/// Loss-curve recorder with EMA smoothing and divergence detection.
-pub struct Recorder {
-    pub records: Vec<StepRecord>,
-    ema: Ema,
-    start: Instant,
-    tokens_seen: u64,
-    skipped: u64,
-    /// loss above this, or non-finite, counts as diverged
-    pub divergence_ceiling: f64,
-    initial_loss: Option<f64>,
-}
-
-impl Recorder {
-    pub fn new(ema_alpha: f64) -> Recorder {
-        Recorder {
-            records: Vec::new(),
-            ema: Ema::new(ema_alpha),
-            start: Instant::now(),
-            tokens_seen: 0,
-            skipped: 0,
-            divergence_ceiling: f64::INFINITY,
-            initial_loss: None,
-        }
-    }
-
-    pub fn push(
-        &mut self,
-        step: u64,
-        lr: f64,
-        loss: f64,
-        grad_norm: f64,
-        trust_ratio: f64,
-        tokens: u64,
-    ) -> &StepRecord {
-        self.push_scaled(step, lr, loss, grad_norm, trust_ratio, tokens, 1.0)
-    }
-
-    /// [`push`](Recorder::push) with the loss scale in effect recorded.
-    #[allow(clippy::too_many_arguments)]
-    pub fn push_scaled(
-        &mut self,
-        step: u64,
-        lr: f64,
-        loss: f64,
-        grad_norm: f64,
-        trust_ratio: f64,
-        tokens: u64,
-        loss_scale: f64,
-    ) -> &StepRecord {
-        self.push_record(step, lr, loss, grad_norm, trust_ratio, tokens, loss_scale, false)
-    }
-
-    /// Record a *skipped* step: the gradient overflowed under loss scaling
-    /// and the update was dropped.  The batch was still consumed (tokens
-    /// advance), grad norm / trust ratio are not meaningful (NaN).  The
-    /// `note` diagnostic is persisted on the record (and in the TSV) so
-    /// skip forensics do not depend on captured stderr.
-    pub fn push_skipped(
-        &mut self,
-        step: u64,
-        lr: f64,
-        loss: f64,
-        tokens: u64,
-        loss_scale: f64,
-        note: &str,
-    ) -> &StepRecord {
-        self.skipped += 1;
-        let r =
-            self.push_record(step, lr, loss, f64::NAN, f64::NAN, tokens, loss_scale, true);
-        r.note = note.to_string();
-        &*r
-    }
-
-    /// Updates skipped so far (overflow under loss scaling).
-    pub fn skipped_steps(&self) -> u64 {
-        self.skipped
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn push_record(
-        &mut self,
-        step: u64,
-        lr: f64,
-        loss: f64,
-        grad_norm: f64,
-        trust_ratio: f64,
-        tokens: u64,
-        loss_scale: f64,
-        skipped: bool,
-    ) -> &mut StepRecord {
-        self.tokens_seen += tokens;
-        if self.initial_loss.is_none() {
-            self.initial_loss = Some(loss);
-            // default ceiling: 3x the initial loss (a diverged MLM run blows
-            // far past this; a healthy one never revisits it).  Only a
-            // positive, finite first loss defines a meaningful ceiling —
-            // for a zero/negative one, loss×3 sits at or below the loss
-            // itself and would flag a healthy run as diverged, so the
-            // ceiling stays at the explicit-opt-in infinity.
-            if self.divergence_ceiling.is_infinite() && loss.is_finite() && loss > 0.0 {
-                self.divergence_ceiling = loss * 3.0;
-            }
-        }
-        let ema = self.ema.push(loss);
-        self.records.push(StepRecord {
-            step,
-            lr,
-            loss,
-            loss_ema: ema,
-            grad_norm,
-            trust_ratio,
-            tokens: self.tokens_seen,
-            wall_s: self.start.elapsed().as_secs_f64(),
-            loss_scale,
-            skipped,
-            comm_s: 0.0,
-            compute_s: 0.0,
-            overlap_eff: 0.0,
-            note: String::new(),
-        });
-        self.records.last_mut().unwrap()
-    }
-
-    /// Attach the traced per-step timing aggregates to the most recent
-    /// record (the trainer collects the step's trace right after pushing
-    /// it).  No-op before the first push.
-    pub fn set_step_timing(&mut self, comm_s: f64, compute_s: f64, overlap_eff: f64) {
-        if let Some(r) = self.records.last_mut() {
-            r.comm_s = comm_s;
-            r.compute_s = compute_s;
-            r.overlap_eff = overlap_eff;
-        }
-    }
-
-    pub fn last_loss(&self) -> Option<f64> {
-        self.records.last().map(|r| r.loss)
-    }
-
-    pub fn ema_loss(&self) -> Option<f64> {
-        self.ema.value()
-    }
-
-    /// True once the smoothed loss is non-finite or past the ceiling.
-    pub fn diverged(&self) -> bool {
-        match self.ema.value() {
-            Some(v) => !v.is_finite() || v > self.divergence_ceiling,
-            None => false,
-        }
-    }
-
-    pub fn tokens_per_second(&self) -> f64 {
-        let el = self.start.elapsed().as_secs_f64();
-        if el > 0.0 {
-            self.tokens_seen as f64 / el
-        } else {
-            0.0
-        }
-    }
-
-    /// Write the curve as TSV (step, lr, loss, ema, grad_norm, trust, tokens,
-    /// wall seconds, loss scale, skipped flag, traced comm/compute seconds,
-    /// overlap efficiency, skip note) — consumed by EXPERIMENTS.md plots.
-    pub fn write_tsv(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
-            std::fs::create_dir_all(dir).with_context(|| {
-                format!("creating parent directory {} for the curve TSV", dir.display())
-            })?;
-        }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        writeln!(
-            f,
-            "step\tlr\tloss\tloss_ema\tgrad_norm\ttrust_ratio\ttokens\twall_s\
-             \tloss_scale\tskipped\tcomm_s\tcompute_s\toverlap_eff\tnote"
-        )?;
-        for r in &self.records {
-            // the note is free text: keep the row parseable
-            let note = r.note.replace(['\t', '\n'], " ");
-            writeln!(
-                f,
-                "{}\t{:.6e}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3}\t{}\t{}\t{:.6}\t{:.6}\t{:.4}\t{}",
-                r.step,
-                r.lr,
-                r.loss,
-                r.loss_ema,
-                r.grad_norm,
-                r.trust_ratio,
-                r.tokens,
-                r.wall_s,
-                r.loss_scale,
-                r.skipped as u8,
-                r.comm_s,
-                r.compute_s,
-                r.overlap_eff,
-                note
-            )?;
-        }
-        Ok(())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn records_and_smooths() {
-        let mut r = Recorder::new(0.5);
-        r.push(1, 0.01, 10.0, 1.0, 1.0, 100);
-        r.push(2, 0.01, 8.0, 1.0, 1.0, 100);
-        assert_eq!(r.records.len(), 2);
-        assert!((r.ema_loss().unwrap() - 9.0).abs() < 1e-9);
-        assert_eq!(r.records[1].tokens, 200);
-        assert!(!r.diverged());
-    }
-
-    #[test]
-    fn detects_divergence() {
-        let mut r = Recorder::new(0.9);
-        r.push(1, 0.01, 5.0, 1.0, 1.0, 1);
-        for s in 2..10 {
-            r.push(s, 0.01, 100.0, 1.0, 1.0, 1);
-        }
-        assert!(r.diverged());
-        let mut r2 = Recorder::new(0.9);
-        r2.push(1, 0.01, 5.0, 1.0, 1.0, 1);
-        r2.push(2, 0.01, f64::NAN, 1.0, 1.0, 1);
-        assert!(r2.diverged());
-    }
-
-    #[test]
-    fn tsv_roundtrip() {
-        let mut r = Recorder::new(0.5);
-        r.push(1, 0.01, 3.0, 0.5, 1.0, 64);
-        let p = std::env::temp_dir().join("lans_test_metrics.tsv");
-        r.write_tsv(&p).unwrap();
-        let body = std::fs::read_to_string(&p).unwrap();
-        assert!(body.starts_with("step\t"));
-        let header = body.lines().next().unwrap();
-        assert!(
-            header.ends_with("skipped\tcomm_s\tcompute_s\toverlap_eff\tnote"),
-            "header: {header}"
-        );
-        assert_eq!(body.lines().count(), 2);
-        std::fs::remove_file(&p).ok();
-    }
-
-    #[test]
-    fn step_timing_lands_in_the_tsv() {
-        let mut r = Recorder::new(0.5);
-        r.push(1, 0.01, 3.0, 0.5, 1.0, 64);
-        r.set_step_timing(0.25, 0.5, 0.75);
-        assert_eq!(r.records[0].comm_s, 0.25);
-        assert_eq!(r.records[0].compute_s, 0.5);
-        assert_eq!(r.records[0].overlap_eff, 0.75);
-        let p = std::env::temp_dir().join("lans_test_metrics_timing.tsv");
-        r.write_tsv(&p).unwrap();
-        let body = std::fs::read_to_string(&p).unwrap();
-        let row = body.lines().nth(1).unwrap();
-        let cells: Vec<&str> = row.split('\t').collect();
-        assert_eq!(cells.len(), 14, "row: {row}");
-        assert_eq!(cells[10], "0.250000");
-        assert_eq!(cells[11], "0.500000");
-        assert_eq!(cells[12], "0.7500");
-        std::fs::remove_file(&p).ok();
-    }
-
-    #[test]
-    fn tsv_parent_dir_failure_is_a_contextual_error() {
-        // a *file* where the parent directory should go: create_dir_all
-        // fails, and the error must surface (it used to be swallowed by
-        // `.ok()` and resurface as a confusing File::create failure)
-        let blocker = std::env::temp_dir().join("lans_test_metrics_blocker");
-        std::fs::write(&blocker, b"not a directory").unwrap();
-        let mut r = Recorder::new(0.5);
-        r.push(1, 0.01, 3.0, 0.5, 1.0, 64);
-        let err = r.write_tsv(&blocker.join("sub").join("curve.tsv")).unwrap_err();
-        let msg = format!("{err:#}");
-        assert!(msg.contains("creating parent directory"), "unhelpful error: {msg}");
-        std::fs::remove_file(&blocker).ok();
-    }
-
-    #[test]
-    fn skip_notes_land_in_the_tsv() {
-        let mut r = Recorder::new(0.5);
-        r.push_scaled(1, 0.01, 5.0, 1.0, 1.0, 64, 65536.0);
-        r.push_skipped(2, 0.01, 5.1, 64, 65536.0, "overflow\tat scale 65536");
-        assert_eq!(r.records[1].note, "overflow\tat scale 65536");
-        assert!(r.records[0].note.is_empty());
-        let p = std::env::temp_dir().join("lans_test_metrics_note.tsv");
-        r.write_tsv(&p).unwrap();
-        let body = std::fs::read_to_string(&p).unwrap();
-        let skipped_row = body.lines().nth(2).unwrap();
-        // tabs inside the note are flattened so the column count is stable
-        assert_eq!(skipped_row.split('\t').count(), 14, "row: {skipped_row}");
-        assert!(skipped_row.ends_with("overflow at scale 65536"), "row: {skipped_row}");
-        let applied_row = body.lines().nth(1).unwrap();
-        assert_eq!(applied_row.split('\t').count(), 14, "row: {applied_row}");
-        std::fs::remove_file(&p).ok();
-    }
-
-    #[test]
-    fn skipped_steps_are_counted_and_flagged() {
-        let mut r = Recorder::new(0.5);
-        r.push_scaled(1, 0.01, 5.0, 1.0, 1.0, 64, 65536.0);
-        r.push_skipped(2, 0.01, 5.1, 64, 65536.0, "overflow");
-        r.push_scaled(3, 0.01, 4.9, 1.0, 1.0, 64, 32768.0);
-        assert_eq!(r.skipped_steps(), 1);
-        assert!(!r.records[0].skipped);
-        assert!(r.records[1].skipped);
-        assert!(r.records[1].grad_norm.is_nan());
-        assert_eq!(r.records[1].loss_scale, 65536.0);
-        assert_eq!(r.records[2].loss_scale, 32768.0);
-        // skipped batches still consume data
-        assert_eq!(r.records[2].tokens, 192);
-        // plain push records unit scale
-        r.push(4, 0.01, 4.8, 1.0, 1.0, 64);
-        assert_eq!(r.records[3].loss_scale, 1.0);
-        assert!(!r.diverged());
-    }
-
-    #[test]
-    fn non_positive_initial_loss_never_auto_diverges() {
-        // regression: initial_loss * 3.0 put the ceiling at or below a
-        // loss ≤ 0, flagging a healthy (e.g. reward-style) run as
-        // diverged on its own first value
-        let mut neg = Recorder::new(0.9);
-        neg.push(1, 0.01, -2.0, 1.0, 1.0, 1);
-        assert!(neg.divergence_ceiling.is_infinite(), "ceiling must stay opt-in");
-        assert!(!neg.diverged());
-        neg.push(2, 0.01, -1.5, 1.0, 1.0, 1);
-        assert!(!neg.diverged(), "improving negative-loss run flagged as diverged");
-
-        let mut zero = Recorder::new(0.9);
-        zero.push(1, 0.01, 0.0, 1.0, 1.0, 1);
-        assert!(zero.divergence_ceiling.is_infinite());
-        assert!(!zero.diverged());
-
-        // a NaN first loss must not poison the ceiling either — NaN
-        // comparisons would make `diverged` silently always-false
-        let mut nan = Recorder::new(0.9);
-        nan.push(1, 0.01, f64::NAN, 1.0, 1.0, 1);
-        assert!(nan.divergence_ceiling.is_infinite());
-        assert!(nan.diverged(), "non-finite EMA is still divergence");
-
-        // positive first loss keeps the historical 3x auto-ceiling
-        let mut pos = Recorder::new(0.9);
-        pos.push(1, 0.01, 5.0, 1.0, 1.0, 1);
-        assert_eq!(pos.divergence_ceiling, 15.0);
-
-        // an explicit ceiling set before the first push is never clobbered
-        let mut explicit = Recorder::new(0.9);
-        explicit.divergence_ceiling = 100.0;
-        explicit.push(1, 0.01, 5.0, 1.0, 1.0, 1);
-        assert_eq!(explicit.divergence_ceiling, 100.0);
-    }
-
-    #[test]
-    fn wall_and_tokens_are_monotone_across_mixed_pushes() {
-        let mut r = Recorder::new(0.5);
-        r.push(1, 0.01, 5.0, 1.0, 1.0, 64);
-        r.push_skipped(2, 0.01, 5.1, 64, 65536.0, "overflow");
-        r.push_scaled(3, 0.01, 4.9, 1.0, 1.0, 64, 32768.0);
-        r.push_skipped(4, 0.01, 4.8, 64, 32768.0, "overflow");
-        r.push(5, 0.01, 4.7, 1.0, 1.0, 64);
-        assert_eq!(r.records.len(), 5);
-        for w in r.records.windows(2) {
-            assert!(
-                w[1].wall_s >= w[0].wall_s,
-                "wall clock went backwards: {} -> {}",
-                w[0].wall_s,
-                w[1].wall_s
-            );
-            assert!(
-                w[1].tokens >= w[0].tokens,
-                "token counter went backwards: {} -> {}",
-                w[0].tokens,
-                w[1].tokens
-            );
-        }
-        // skipped batches still consume data: strictly increasing here
-        let toks: Vec<u64> = r.records.iter().map(|r| r.tokens).collect();
-        assert_eq!(toks, vec![64, 128, 192, 256, 320]);
-    }
-}
+pub use recorder::{Recorder, StepRecord};

@@ -1,0 +1,497 @@
+//! Process-wide metrics registry: counters, gauges, log2-bucketed histograms.
+//!
+//! Same hard overhead contract as [`crate::trace`]: the registry ships in
+//! every binary and is **off by default**.  Disabled, each instrumentation
+//! seam costs exactly one relaxed atomic load and a predictable branch — no
+//! clock reads, no allocation, no locks — and training output is
+//! bit-identical whether the seam exists or not (the registry only ever
+//! *observes* values the hot path already computed).  Enabled, updates are
+//! lock-free atomics: counters `fetch_add`, gauges store f64 bits, histogram
+//! observations bump one of 64 power-of-two buckets chosen straight from the
+//! value's exponent bits (no float `log2` on the hot path).
+//!
+//! Metrics are **statically declared** (`static` items below, enumerated in
+//! one registry list) rather than looked up in a dynamic map: a map would
+//! need a lock or hash on every update, which the contract forbids.  Adding
+//! a metric means adding a static and one line to the registry list —
+//! `snapshot()` and `reset()` then cover it automatically.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// One relaxed load: the only cost an instrumentation seam pays when the
+/// registry is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the registry on (idempotent).  Callers normally also [`reset`] at
+/// run start so one process can host several isolated runs.
+pub fn enable() {
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Zero every registered metric.  Not atomic as a whole — call it between
+/// runs, not while workers are mid-step.
+pub fn reset() {
+    for c in COUNTERS {
+        c.v.store(0, Ordering::SeqCst);
+    }
+    for g in GAUGES {
+        g.bits.store(0.0f64.to_bits(), Ordering::SeqCst);
+        g.set_flag.store(false, Ordering::SeqCst);
+    }
+    for h in HISTOGRAMS {
+        h.count.store(0, Ordering::SeqCst);
+        h.sum_bits.store(0.0f64.to_bits(), Ordering::SeqCst);
+        for b in &h.buckets {
+            b.store(0, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Monotone event/byte counter.
+pub struct Counter {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str) -> Counter {
+        Counter { name, v: AtomicU64::new(0) }
+    }
+
+    /// Hot-path add: one relaxed load when disabled.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::SeqCst)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an atomic).
+pub struct Gauge {
+    name: &'static str,
+    bits: AtomicU64,
+    /// distinguishes "never set" from "set to 0.0" in snapshots
+    set_flag: AtomicBool,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str) -> Gauge {
+        Gauge {
+            name,
+            bits: AtomicU64::new(0),
+            set_flag: AtomicBool::new(false),
+        }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+            self.set_flag.store(true, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        if self.set_flag.load(Ordering::SeqCst) {
+            Some(f64::from_bits(self.bits.load(Ordering::SeqCst)))
+        } else {
+            None
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Number of histogram buckets.  Bucket 0 catches non-positive and NaN
+/// observations; buckets 1..=63 cover powers of two from 2^-32 up — wide
+/// enough for microseconds-as-integers, byte counts, trust ratios, and
+/// gradient norms alike.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Exponent offset: bucket `i` (for `i >= 1`) holds values in
+/// `[2^(i - EXP_OFFSET), 2^(i + 1 - EXP_OFFSET))`.
+const EXP_OFFSET: i32 = 33;
+
+/// Log2-bucketed histogram: count, sum, and 64 power-of-two buckets.
+pub struct Histogram {
+    name: &'static str,
+    count: AtomicU64,
+    /// running sum of the *finite* observations, f64 bits, CAS-updated
+    sum_bits: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Bucket index from the IEEE-754 exponent field — no float `log2` on the
+/// hot path.  Non-positive and NaN land in bucket 0; +inf clamps to the top
+/// bucket; subnormals clamp to bucket 1.
+#[inline]
+fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let biased = ((v.to_bits() >> 52) & 0x7ff) as i32;
+    if biased == 0 {
+        return 1; // subnormal: below every bucket boundary
+    }
+    let e = biased - 1023; // floor(log2(v)), or 1024 for +inf
+    (e + EXP_OFFSET).clamp(1, HIST_BUCKETS as i32 - 1) as usize
+}
+
+/// Lower edge of bucket `i` (0.0 for the catch-all bucket 0).
+fn bucket_lo(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        (2.0f64).powi(i as i32 - EXP_OFFSET)
+    }
+}
+
+fn f64_fetch_add(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + x).to_bits();
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str) -> Histogram {
+        // `const` item so the array-repeat initializer is allowed to copy it
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0x0), // 0.0f64.to_bits()
+            buckets: [ZERO; HIST_BUCKETS],
+        }
+    }
+
+    /// Hot-path observation: one relaxed load when disabled; two relaxed
+    /// `fetch_add`s plus a CAS loop on the sum when enabled.
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() {
+            f64_fetch_add(&self.sum_bits, v);
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            name: self.name,
+            count: self.count.load(Ordering::SeqCst),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::SeqCst)),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::SeqCst)).collect(),
+        }
+    }
+}
+
+/// Owned copy of a histogram's state, safe to merge/summarize offline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum: f64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    pub fn empty(name: &'static str) -> HistogramSnapshot {
+        HistogramSnapshot { name, count: 0, sum: 0.0, buckets: vec![0; HIST_BUCKETS] }
+    }
+
+    /// Merge another snapshot in (counts and sums add bucket-wise).
+    /// Associative and commutative — shard-local histograms can be combined
+    /// in any grouping and agree with a single global histogram.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+    }
+
+    /// Approximate percentile (`p` in [0, 100]): walks the buckets to the
+    /// one holding the rank and returns its geometric midpoint.  Resolution
+    /// is the bucket width (a factor of 2); exact percentiles over raw
+    /// series live in `util::stats::percentile`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0 * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen > rank {
+                if i == 0 {
+                    return 0.0;
+                }
+                let lo = bucket_lo(i);
+                return lo * std::f64::consts::SQRT_2; // sqrt(lo * 2lo)
+            }
+        }
+        bucket_lo(self.buckets.len() - 1) * std::f64::consts::SQRT_2
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry: every metric the seams feed, declared once, listed once.
+// ---------------------------------------------------------------------------
+
+/// Per-block LANS/LAMB trust ratio, observed where the coefficient is
+/// computed (`optim::native::lans_coef`/`lamb_coef` — the single home every
+/// serial/parallel/sharded path funnels through).
+pub static TRUST_RATIO: Histogram = Histogram::new("optim.trust_ratio");
+/// Per-block gradient L2 norm, same seam as [`TRUST_RATIO`].
+pub static BLOCK_GRAD_NORM: Histogram = Histogram::new("optim.block_grad_norm");
+/// DAG stage queue-wait (ready → launched), microseconds.
+pub static QUEUE_WAIT_US: Histogram = Histogram::new("dag.queue_wait_us");
+
+/// Intra-node (NVLink-tier) wire bytes from the hierarchical collectives.
+pub static WIRE_INTRA_BYTES: Counter = Counter::new("wire.intra_bytes");
+/// Inter-node (network-tier) wire bytes from the hierarchical collectives.
+pub static WIRE_INTER_BYTES: Counter = Counter::new("wire.inter_bytes");
+/// Top-level collective invocations (compositions count once per tiered
+/// primitive they execute, never double).
+pub static COLLECTIVE_CALLS: Counter = Counter::new("collective.calls");
+/// Pool regions opened (dispatch→close cycles).
+pub static POOL_REGIONS: Counter = Counter::new("pool.regions");
+/// Microseconds pool workers spent busy (per-worker busy spans summed).
+pub static POOL_BUSY_US: Counter = Counter::new("pool.busy_us");
+/// Microseconds of open pool-region wall time (dispatch→close).  Utilization
+/// = busy / (region * workers).
+pub static POOL_REGION_US: Counter = Counter::new("pool.region_us");
+/// Loss-scale backoffs (overflow → scale halved).
+pub static SCALER_BACKOFFS: Counter = Counter::new("scaler.backoffs");
+/// Loss-scale growths (clean interval → scale doubled).
+pub static SCALER_GROWTHS: Counter = Counter::new("scaler.growths");
+
+/// Current loss scale.
+pub static SCALER_SCALE: Gauge = Gauge::new("scaler.scale");
+
+static COUNTERS: &[&Counter] = &[
+    &WIRE_INTRA_BYTES,
+    &WIRE_INTER_BYTES,
+    &COLLECTIVE_CALLS,
+    &POOL_REGIONS,
+    &POOL_BUSY_US,
+    &POOL_REGION_US,
+    &SCALER_BACKOFFS,
+    &SCALER_GROWTHS,
+];
+
+static GAUGES: &[&Gauge] = &[&SCALER_SCALE];
+
+static HISTOGRAMS: &[&Histogram] = &[&TRUST_RATIO, &BLOCK_GRAD_NORM, &QUEUE_WAIT_US];
+
+/// Owned copy of the whole registry at one moment.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    /// gauges that were actually set during the run
+    pub gauges: Vec<(&'static str, f64)>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        counters: COUNTERS.iter().map(|c| (c.name, c.get())).collect(),
+        gauges: GAUGES.iter().filter_map(|g| g.get().map(|v| (g.name, v))).collect(),
+        histograms: HISTOGRAMS.iter().map(|h| h.snapshot()).collect(),
+    }
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| *n == name).map_or(0, |(_, v)| *v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_observes_nothing() {
+        let _g = test_lock();
+        disable();
+        reset();
+        TRUST_RATIO.observe(1.0);
+        WIRE_INTRA_BYTES.add(100);
+        SCALER_SCALE.set(2.0);
+        let s = snapshot();
+        assert_eq!(s.counter("wire.intra_bytes"), 0);
+        assert!(s.gauges.is_empty());
+        assert_eq!(s.histogram("optim.trust_ratio").unwrap().count, 0);
+    }
+
+    #[test]
+    fn enabled_registry_counts_and_buckets() {
+        let _g = test_lock();
+        reset();
+        enable();
+        WIRE_INTRA_BYTES.add(100);
+        WIRE_INTRA_BYTES.add(28);
+        SCALER_SCALE.set(65536.0);
+        for v in [0.5, 0.5, 1.0, 2.0] {
+            TRUST_RATIO.observe(v);
+        }
+        let s = snapshot();
+        disable();
+        assert_eq!(s.counter("wire.intra_bytes"), 128);
+        assert_eq!(s.gauges, vec![("scaler.scale", 65536.0)]);
+        let h = s.histogram("optim.trust_ratio").unwrap();
+        assert_eq!(h.count, 4);
+        assert!((h.sum - 4.0).abs() < 1e-12);
+        // 0.5 and 1.0 and 2.0 land in distinct adjacent buckets
+        let nonzero: Vec<usize> =
+            (0..h.buckets.len()).filter(|&i| h.buckets[i] > 0).collect();
+        assert_eq!(nonzero.len(), 3);
+        assert_eq!(nonzero[1], nonzero[0] + 1);
+        assert_eq!(nonzero[2], nonzero[1] + 1);
+        assert_eq!(h.buckets[nonzero[0]], 2);
+        reset();
+    }
+
+    #[test]
+    fn bucket_index_covers_edge_values() {
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(f64::NEG_INFINITY), 0);
+        assert_eq!(bucket_index(f64::INFINITY), HIST_BUCKETS - 1);
+        assert_eq!(bucket_index(f64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_index(f64::MIN_POSITIVE / 2.0), 1, "subnormal clamps low");
+        assert_eq!(bucket_index(1e-300), 1);
+        // exact powers of two sit at bucket lower edges
+        assert_eq!(bucket_index(1.0), (EXP_OFFSET) as usize);
+        assert_eq!(bucket_index(2.0), (EXP_OFFSET + 1) as usize);
+        assert_eq!(bucket_index(1.999_999), (EXP_OFFSET) as usize);
+        // and bucket_lo inverts the mapping on the covered range
+        for i in 2..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_lo(i)), i);
+            assert_eq!(bucket_index(bucket_lo(i) * 1.5), i);
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_are_bucket_resolution() {
+        let _g = test_lock();
+        reset();
+        enable();
+        for _ in 0..90 {
+            QUEUE_WAIT_US.observe(100.0);
+        }
+        for _ in 0..10 {
+            QUEUE_WAIT_US.observe(10_000.0);
+        }
+        let h = QUEUE_WAIT_US.snapshot();
+        disable();
+        reset();
+        // p50 within a factor of 2 of 100, p99 within a factor of 2 of 10k
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 >= 50.0 && p50 <= 200.0, "p50 = {p50}");
+        assert!(p99 >= 5_000.0 && p99 <= 20_000.0, "p99 = {p99}");
+        assert!(h.percentile(0.0) <= p50);
+        // empty histogram: percentile defined as 0
+        assert_eq!(HistogramSnapshot::empty("x").percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_global() {
+        let mk = |vals: &[f64]| {
+            let mut s = HistogramSnapshot::empty("m");
+            for &v in vals {
+                s.count += 1;
+                s.buckets[bucket_index(v)] += 1;
+                if v.is_finite() {
+                    s.sum += v;
+                }
+            }
+            s
+        };
+        let (a, b, c) = (mk(&[0.1, 1.0]), mk(&[2.0, 4.0, 8.0]), mk(&[1e6]));
+        // (a + b) + c == a + (b + c)
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+        // and both equal the single global histogram over all values
+        let global = mk(&[0.1, 1.0, 2.0, 4.0, 8.0, 1e6]);
+        assert_eq!(ab_c, global);
+        assert_eq!(ab_c.count, 6);
+    }
+
+    #[test]
+    fn reset_isolates_runs() {
+        let _g = test_lock();
+        reset();
+        enable();
+        POOL_REGIONS.add(5);
+        SCALER_SCALE.set(1.0);
+        TRUST_RATIO.observe(1.0);
+        reset();
+        let s = snapshot();
+        disable();
+        assert_eq!(s.counter("pool.regions"), 0);
+        assert!(s.gauges.is_empty(), "reset must clear the gauge set-flag");
+        assert_eq!(s.histogram("optim.trust_ratio").unwrap().count, 0);
+    }
+}

@@ -313,16 +313,25 @@ pub(crate) fn lans_inv_gnorm(grad_sq: f64) -> f32 {
 }
 
 /// Apply coefficients from the combined block norms — shared by every path
-/// so the trust-ratio arithmetic has exactly one home.
+/// so the trust-ratio arithmetic has exactly one home.  That single home is
+/// also the metrics seam: every serial/parallel/sharded step funnels each
+/// block through here exactly once, so observing the per-block trust ratio
+/// and gradient norm costs one relaxed load when the registry is off and
+/// never perturbs the update arithmetic.
 pub(crate) fn lans_coef(cx: &AdamCtx, sx: f64, sr: f64, sc: f64, grad_sq: f64) -> LansCoef {
     let hp = cx.hp;
     let x_norm = sx.sqrt() as f32;
     let r_norm = (sr.sqrt() as f32).max(NORM_EPS);
     let c_norm = (sc.sqrt() as f32).max(NORM_EPS);
+    let trust = (x_norm / r_norm) as f64;
+    if crate::metrics::registry::enabled() {
+        crate::metrics::registry::TRUST_RATIO.observe(trust);
+        crate::metrics::registry::BLOCK_GRAD_NORM.observe(grad_sq.sqrt());
+    }
     LansCoef {
         coef_r: cx.lr * x_norm * hp.beta1 / r_norm,
         coef_c: cx.lr * x_norm * (1.0 - hp.beta1) / c_norm,
-        trust: (x_norm / r_norm) as f64,
+        trust,
         grad_sq,
     }
 }
@@ -489,15 +498,18 @@ pub(crate) fn lamb_update_segments(
     }
 }
 
-/// Apply coefficient from the combined block norms.
+/// Apply coefficient from the combined block norms.  Like [`lans_coef`],
+/// the single home every path shares — and therefore the per-block
+/// trust-ratio/grad-norm metrics seam.
 pub(crate) fn lamb_coef(cx: &AdamCtx, sx2: f64, su2: f64, grad_sq: f64) -> LambCoef {
     let x_norm = sx2.sqrt() as f32;
     let u_norm = (su2.sqrt() as f32).max(NORM_EPS);
-    LambCoef {
-        coef: cx.lr * x_norm / u_norm,
-        trust: (x_norm / u_norm) as f64,
-        grad_sq,
+    let trust = (x_norm / u_norm) as f64;
+    if crate::metrics::registry::enabled() {
+        crate::metrics::registry::TRUST_RATIO.observe(trust);
+        crate::metrics::registry::BLOCK_GRAD_NORM.observe(grad_sq.sqrt());
     }
+    LambCoef { coef: cx.lr * x_norm / u_norm, trust, grad_sq }
 }
 
 /// LAMB pass 1 for one whole block: moments, cached update direction,

@@ -117,11 +117,14 @@ impl DynamicLossScaler {
     /// after `growth_interval` consecutive clean steps (dynamic only; a
     /// fixed scaler only counts overflows).
     pub fn update(&mut self, overflow: bool) {
+        use crate::metrics::registry;
         if overflow {
             self.overflows += 1;
             self.good_steps = 0;
             if self.dynamic {
                 self.scale = (self.scale * 0.5).max(Self::MIN_SCALE);
+                registry::SCALER_BACKOFFS.add(1);
+                registry::SCALER_SCALE.set(self.scale as f64);
             }
             return;
         }
@@ -132,6 +135,8 @@ impl DynamicLossScaler {
         if self.good_steps >= self.growth_interval {
             self.scale = (self.scale * 2.0).min(Self::MAX_SCALE);
             self.good_steps = 0;
+            registry::SCALER_GROWTHS.add(1);
+            registry::SCALER_SCALE.set(self.scale as f64);
         }
     }
 

@@ -201,6 +201,7 @@ fn worker_loop(shared: Arc<Shared>) {
         let r = unsafe { &*region.0 };
         IN_REGION.with(|c| c.set(true));
         let busy = crate::trace::span(crate::trace::CAT_POOL, "worker_busy");
+        let busy_t0 = crate::metrics::registry::enabled().then(std::time::Instant::now);
         loop {
             let i = r.cursor.fetch_add(1, Ordering::Relaxed);
             if i >= r.count {
@@ -216,6 +217,9 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         }
         drop(busy);
+        if let Some(t0) = busy_t0 {
+            crate::metrics::registry::POOL_BUSY_US.add(t0.elapsed().as_micros() as u64);
+        }
         IN_REGION.with(|c| c.set(false));
         // check out under the lock; the closing caller waits for 0 and
         // frees the region only after, so `r` is never touched again
@@ -390,6 +394,9 @@ unsafe impl<T> Sync for SendSyncPtr<T> {}
 /// have the caller drain tasks alongside the workers, close (sync point
 /// 2: wait for engaged workers to check out).
 fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
+    // metrics seam: region count + open-region wall time (dispatch→close);
+    // utilization = pool.busy_us / (pool.region_us × workers)
+    let region_t0 = crate::metrics::registry::enabled().then(std::time::Instant::now);
     let region = Region {
         run: erase(run),
         count,
@@ -415,6 +422,7 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
     // the caller is a worker too: claim and run tasks until none remain
     IN_REGION.with(|c| c.set(true));
     let drain = crate::trace::span(crate::trace::CAT_POOL, "region_drain");
+    let drain_t0 = crate::metrics::registry::enabled().then(std::time::Instant::now);
     let caller_panic = loop {
         let i = region.cursor.fetch_add(1, Ordering::Relaxed);
         if i >= count {
@@ -426,6 +434,10 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
         }
     };
     drop(drain);
+    if let Some(t0) = drain_t0 {
+        // the caller's drain is busy time too — it is the w-th worker
+        crate::metrics::registry::POOL_BUSY_US.add(t0.elapsed().as_micros() as u64);
+    }
     IN_REGION.with(|c| c.set(false));
 
     // close: retract the region so no new worker joins (and the slot
@@ -441,6 +453,11 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
             st = shared.done_cv.wait(st).unwrap();
         }
         drop(st);
+    }
+
+    if let Some(t0) = region_t0 {
+        crate::metrics::registry::POOL_REGIONS.add(1);
+        crate::metrics::registry::POOL_REGION_US.add(t0.elapsed().as_micros() as u64);
     }
 
     if let Some(payload) = caller_panic {

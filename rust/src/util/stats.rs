@@ -109,6 +109,83 @@ pub fn auc_unit_spacing(ys: &[f64]) -> f64 {
     a
 }
 
+/// Median over a copy of the data (0.0 for an empty slice).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    percentile(xs, 50.0)
+}
+
+/// Median absolute deviation around a precomputed median.
+pub fn mad(xs: &[f64], med: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    median(&devs)
+}
+
+/// Robust z-score: deviation from the median in units of
+/// 1.4826·MAD (the MAD-to-σ factor for a normal distribution).  The MAD is
+/// floored at `mad_floor` so near-constant windows (MAD ≈ 0) don't turn
+/// measurement noise into huge z-scores.
+pub fn robust_z(x: f64, med: f64, mad: f64, mad_floor: f64) -> f64 {
+    let scale = 1.4826 * mad.max(mad_floor);
+    if scale <= 0.0 {
+        return 0.0;
+    }
+    (x - med) / scale
+}
+
+/// Fixed-capacity rolling window over a scalar time series (health
+/// monitoring: trailing medians/MADs over step times).
+#[derive(Debug, Clone)]
+pub struct RollingWindow {
+    cap: usize,
+    buf: std::collections::VecDeque<f64>,
+}
+
+impl RollingWindow {
+    pub fn new(cap: usize) -> RollingWindow {
+        assert!(cap > 0, "rolling window needs capacity >= 1");
+        RollingWindow { cap, buf: std::collections::VecDeque::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    /// Oldest-to-newest copy of the current contents.
+    pub fn values(&self) -> Vec<f64> {
+        self.buf.iter().copied().collect()
+    }
+
+    pub fn median(&self) -> f64 {
+        median(&self.values())
+    }
+
+    pub fn mad(&self) -> f64 {
+        let v = self.values();
+        mad(&v, median(&v))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +218,48 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 50.0), 50.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn median_and_mad_are_robust_to_one_outlier() {
+        let xs = [1.0, 1.1, 0.9, 1.0, 1.2, 0.8, 100.0];
+        let med = median(&xs);
+        assert!((med - 1.0).abs() < 1e-9, "median dragged by outlier: {med}");
+        let m = mad(&xs, med);
+        assert!((m - 0.1).abs() < 1e-9, "mad: {m}");
+        // the outlier itself scores a huge robust z, the inliers do not
+        assert!(robust_z(100.0, med, m, 1e-9) > 100.0);
+        assert!(robust_z(1.2, med, m, 1e-9).abs() < 2.0);
+        // empty-slice conventions
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mad(&[], 0.0), 0.0);
+    }
+
+    #[test]
+    fn robust_z_mad_floor_prevents_blowup() {
+        // constant window: MAD = 0 — without the floor any deviation would
+        // be an infinite z-score
+        let xs = [1.0; 10];
+        let med = median(&xs);
+        let m = mad(&xs, med);
+        assert_eq!(m, 0.0);
+        let z = robust_z(1.01, med, m, 0.05 * med);
+        assert!(z < 1.0, "noise-level deviation must stay small: {z}");
+        assert_eq!(robust_z(2.0, 1.0, 0.0, 0.0), 0.0, "zero scale yields 0, not inf");
+    }
+
+    #[test]
+    fn rolling_window_evicts_oldest() {
+        let mut w = RollingWindow::new(3);
+        assert!(w.is_empty());
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert!(w.is_full());
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.values(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(w.median(), 3.0);
+        assert_eq!(w.mad(), 1.0);
     }
 
     #[test]

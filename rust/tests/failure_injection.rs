@@ -4,7 +4,7 @@
 use std::path::{Path, PathBuf};
 
 use lans::checkpoint::Checkpoint;
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{BlockTable, Hyper, Schedule, ShardedOptimizer};
 use lans::precision::{DType, LossScale};
@@ -53,6 +53,7 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         resume_from: None,
         curve_out: None,
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     }
 }

@@ -1577,3 +1577,161 @@ fn prop_bucketed_step_skips_on_overflow_and_leaves_state_untouched() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// run-health telemetry properties (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// The registry is process-global, so the three tests below serialize on
+/// this lock; everything else in this binary leaves the registry disabled,
+/// which is exactly the state these tests restore on exit.
+static METRICS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn prop_metrics_registry_toggle_is_bit_invisible() {
+    // the overhead contract's strong half: arming the registry must not
+    // change a single bit of training state.  Same seeds, same tables,
+    // same pools — one leg with the registry observing trust ratios,
+    // block norms, wire bytes and pool busy-time, one leg with the seams
+    // compiled down to a relaxed load.  Params, step stats and collective
+    // outputs must agree exactly.
+    let _g = METRICS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for_cases(15, |_, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(6000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let w = 2 + rng.below_usize(4);
+        let pool = ThreadPool::new(4);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let grads: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+            .collect();
+
+        let run_leg = |observed: bool| -> (Vec<f32>, Vec<Vec<f32>>, Vec<(f64, f64)>) {
+            lans::metrics::registry::reset();
+            if observed {
+                lans::metrics::registry::enable();
+            } else {
+                lans::metrics::registry::disable();
+            }
+            let mut opt = make_optimizer("lans", table.clone(), Hyper::default()).unwrap();
+            let mut x = x0.clone();
+            let mut stats = Vec::new();
+            for g in &grads {
+                let s = opt.step_parallel(&pool, &mut x, g, 0.003);
+                stats.push((s.grad_norm, s.mean_trust_ratio));
+            }
+            let mut b = bufs.clone();
+            hierarchical_allreduce_pooled(
+                &mut b,
+                &Topology::flat(w),
+                TierPrecision::fp32(),
+                &pool,
+            );
+            lans::metrics::registry::disable();
+            (x, b, stats)
+        };
+
+        let (x_off, b_off, s_off) = run_leg(false);
+        let (x_on, b_on, s_on) = run_leg(true);
+        assert_eq!(x_off, x_on, "arming the registry changed the parameter bits");
+        assert_eq!(b_off, b_on, "arming the registry changed the collective bits");
+        assert_eq!(s_off, s_on, "arming the registry changed the step stats");
+
+        // and the observed leg actually observed (disable() froze, not
+        // cleared, its counts): the optimizer seam fed the trust-ratio
+        // histogram, the collective seam counted calls
+        let snap = lans::metrics::registry::snapshot();
+        assert!(
+            snap.histogram("optim.trust_ratio").unwrap().count > 0,
+            "enabled leg recorded no trust ratios"
+        );
+        assert!(
+            snap.counter("collective.calls") > 0,
+            "enabled leg counted no collectives"
+        );
+        lans::metrics::registry::reset();
+    });
+}
+
+#[test]
+fn prop_health_clean_runs_raise_no_verdicts() {
+    // zero-false-positive contract: across random but *healthy* trainer
+    // shapes — window size, base step time, bounded jitter, steadily
+    // improving loss — the monitor must
+    // stay silent.  A detector that cries wolf on clean runs is worse
+    // than no detector (it would gate CI, ROADMAP item 4).
+    let _g = METRICS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for_cases(60, |seed, rng| {
+        let window = 8 + rng.below_usize(56);
+        let base = 0.002 + rng.next_f64() * 0.05;
+        // jitter stays well under the straggler gate (z > 8 AND 1.5x median)
+        let jitter = 0.02 + rng.next_f64() * 0.15;
+        let steps = 100 + rng.below(300);
+        let mut mon = lans::metrics::health::HealthMonitor::new(
+            lans::metrics::health::HealthConfig { window, ..Default::default() },
+        );
+        let mut loss = 8.0 + rng.next_f64() * 4.0;
+        for t in 1..=steps {
+            let wobble = 1.0 + jitter * (rng.next_f64() - 0.5);
+            let wall = base * wobble;
+            let comm = wall * 0.3;
+            let compute = wall * 0.6;
+            loss *= 0.995;
+            mon.observe_step(t, wall, comm, compute, loss, false, loss * 10.0);
+        }
+        assert!(
+            mon.verdicts().is_empty(),
+            "clean run (seed {seed}, window {window}, base {base:.4}s, \
+             jitter {jitter:.2}) raised {:?}",
+            mon.verdicts()
+        );
+        assert!(mon.healthy());
+    });
+}
+
+#[test]
+fn prop_health_seeded_faults_are_flagged() {
+    // the detection half: the same clean-run generator with ONE seeded
+    // fault — a straggler spike or a loss-scale thrash burst at a random
+    // step — must produce exactly the matching verdict kind.
+    let _g = METRICS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for_cases(60, |seed, rng| {
+        let window = 8 + rng.below_usize(24);
+        let base = 0.005 + rng.next_f64() * 0.02;
+        let steps = 150 + rng.below(150);
+        let inject_thrash = rng.next_f64() < 0.5;
+        let fault_at = (window as u64 * 2) + 5 + rng.below(steps / 2);
+        let mut mon = lans::metrics::health::HealthMonitor::new(
+            lans::metrics::health::HealthConfig { window, ..Default::default() },
+        );
+        let mut loss = 10.0;
+        for t in 1..=steps {
+            let wobble = 1.0 + 0.05 * (rng.next_f64() - 0.5);
+            let mut wall = base * wobble;
+            let mut backoff = false;
+            if inject_thrash {
+                // a burst of scale backoffs inside one window
+                backoff = t >= fault_at && t < fault_at + 5;
+            } else if t == fault_at {
+                // one step 20x the median: an unambiguous straggler
+                wall = base * 20.0;
+            }
+            loss *= 0.997;
+            mon.observe_step(t, wall, wall * 0.3, wall * 0.6, loss, backoff, loss * 10.0);
+        }
+        let want = if inject_thrash { "loss_scale_thrash" } else { "straggler" };
+        assert!(
+            mon.verdicts().iter().any(|v| v.kind == want),
+            "seeded {want} at step {fault_at} (seed {seed}) not flagged; \
+             verdicts: {:?}",
+            mon.verdicts()
+        );
+        assert!(!mon.healthy(), "fault flagged but run still called healthy");
+    });
+}

@@ -8,7 +8,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use lans::config::{DataConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{DataSource, TrainStatus, Trainer};
 use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer, Schedule};
 use lans::precision::{DType, LossScale};
@@ -177,6 +177,7 @@ fn trainer_loss_decreases_small_run() {
         resume_from: None,
         curve_out: None,
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     };
     let mut tr = Trainer::new(cfg).unwrap();
@@ -230,6 +231,7 @@ fn trainer_on_declared_topology_keeps_bits_and_accounts_wire() {
         resume_from: None,
         curve_out: None,
         trace: None,
+        metrics: MetricsConfig::default(),
         stop_on_divergence: true,
     };
     let grid = Topology::grid(2, 2);

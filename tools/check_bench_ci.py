@@ -9,6 +9,11 @@ examples-smoke job (a `cargo run --release --example <name>` line) or be
 allowlisted as build-only.  Both jobs run this first, so adding a target
 without wiring it into CI fails the pipeline instead of rotting silently.
 
+The examples-smoke job must also keep invoking the artifact validators —
+tools/check_trace.py against the smoke run's Chrome trace and
+tools/check_metrics.py (both `--self-test` and against the smoke run's
+JSONL + report) — so the exporters cannot drift away from their checkers.
+
 Run from anywhere: paths resolve relative to this file.
 """
 
@@ -75,6 +80,24 @@ def example_smoke_runs(ci: str) -> set[str]:
     return runs
 
 
+# every validator the examples-smoke job must invoke, with the substring
+# that proves it (checked against uncommented job lines only)
+REQUIRED_SMOKE_VALIDATORS = [
+    ("tools/check_trace.py", "tools/check_trace.py"),
+    ("tools/check_metrics.py --self-test", "check_metrics.py --self-test"),
+    ("tools/check_metrics.py (smoke artifacts)", "check_metrics.py target/"),
+]
+
+
+def missing_smoke_validators(ci: str) -> list[str]:
+    lines = list(job_lines(ci, "examples-smoke"))
+    return [
+        label
+        for label, needle in REQUIRED_SMOKE_VALIDATORS
+        if not any(needle in line for line in lines)
+    ]
+
+
 def report_missing(kind: str, missing: list, hint: str) -> None:
     print(f"check_bench_ci: {kind} registered in rust/Cargo.toml but not executed by CI ({hint}):")
     for name in missing:
@@ -138,6 +161,16 @@ def main() -> int:
         for e in ex_stale:
             print(f"  - {e}")
 
+    lost_validators = missing_smoke_validators(ci)
+    if lost_validators:
+        ok = False
+        print(
+            "check_bench_ci: examples-smoke no longer invokes required artifact "
+            "validators:"
+        )
+        for v in lost_validators:
+            print(f"  - {v}")
+
     if ok:
         executed = [b for b in registered if b in run_in_ci]
         ex_executed = [e for e in examples if e in examples_run]
@@ -145,7 +178,8 @@ def main() -> int:
             f"check_bench_ci: ok — {len(executed)}/{len(registered)} benches "
             f"run in bench-quick ({len(ALLOW_COMPILE_ONLY)} compile-only), "
             f"{len(ex_executed)}/{len(examples)} examples run in examples-smoke "
-            f"({len(ALLOW_BUILD_ONLY_EXAMPLES)} build-only)"
+            f"({len(ALLOW_BUILD_ONLY_EXAMPLES)} build-only), "
+            f"{len(REQUIRED_SMOKE_VALIDATORS)} artifact validators wired"
         )
     return 0 if ok else 1
 

@@ -1,0 +1,449 @@
+#!/usr/bin/env python3
+"""Validate the run-health telemetry artifacts (DESIGN.md §12).
+
+Usage: check_metrics.py METRICS.jsonl REPORT.json
+       check_metrics.py --self-test
+
+Checks the schema contract the metrics exporter
+(`rust/src/metrics/export.rs`) guarantees and CI relies on:
+
+JSONL (one JSON object per recorded step):
+  * every line is strict JSON with the full StepRecord field set;
+  * numeric fields are numbers or null (non-finite f64s serialize as
+    null — by design for skipped steps' NaN grad norms);
+  * ``step`` is strictly increasing, ``wall_s`` and ``tokens`` are
+    non-decreasing (cumulative clocks);
+  * non-skipped steps carry numeric grad_norm/trust_ratio;
+  * ``overlap_eff`` is in [0, 1], ``loss_scale`` is positive.
+
+Report (single ``lans-metrics-report-v1`` document):
+  * run totals are consistent (skipped <= steps);
+  * each time summary's percentiles are ordered p50 <= p90 <= p99 <= max;
+  * counters are non-negative integers, histogram bucket counts sum to
+    the histogram count, bucket indices are in [0, 64);
+  * ``health.healthy`` is exactly "no warn-severity verdict";
+  * ``model`` is null or carries model/measured/delta numbers.
+
+Cross-checks (when both files are given): line count == report steps,
+skipped-line count == report skipped_steps, last tokens == report tokens.
+
+An empty JSONL with a zero-step report passes (a run of zero steps is a
+valid run).  Exit code 0 on pass, 1 with a diagnostic otherwise.
+"""
+
+import json
+import sys
+
+REPORT_SCHEMA = "lans-metrics-report-v1"
+HIST_BUCKETS = 64
+
+JSONL_FIELDS = (
+    "step", "lr", "loss", "loss_ema", "grad_norm", "trust_ratio", "tokens",
+    "wall_s", "loss_scale", "skipped", "comm_s", "compute_s", "overlap_eff",
+    "note",
+)
+TIME_FIELDS = ("samples", "mean_s", "p50_s", "p90_s", "p99_s", "max_s")
+VERDICT_FIELDS = ("kind", "severity", "step", "value", "threshold", "message")
+
+
+class CheckError(Exception):
+    pass
+
+
+def fail(msg):
+    raise CheckError(msg)
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def is_num_or_null(x):
+    return x is None or is_num(x)
+
+
+def is_int(x):
+    return isinstance(x, int) and not isinstance(x, bool)
+
+
+# ---------------------------------------------------------------------------
+# JSONL
+# ---------------------------------------------------------------------------
+
+def check_jsonl_text(text):
+    """Validate the per-step JSONL body; returns (steps, skipped, last_tokens)."""
+    prev_step, prev_wall, prev_tokens = None, None, None
+    n, skipped = 0, 0
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            fail(f"jsonl line {i}: blank line inside the series")
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"jsonl line {i}: not valid JSON: {e}")
+        if not isinstance(r, dict):
+            fail(f"jsonl line {i}: not an object")
+        for field in JSONL_FIELDS:
+            if field not in r:
+                fail(f"jsonl line {i}: missing {field!r}")
+        if not is_int(r["step"]) or r["step"] < 1:
+            fail(f"jsonl line {i}: bad step {r['step']!r}")
+        if prev_step is not None and r["step"] <= prev_step:
+            fail(f"jsonl line {i}: step {r['step']} not after {prev_step}")
+        prev_step = r["step"]
+        if not isinstance(r["skipped"], bool):
+            fail(f"jsonl line {i}: skipped is {r['skipped']!r}, want bool")
+        if not isinstance(r["note"], str):
+            fail(f"jsonl line {i}: note is {r['note']!r}, want string")
+        for field in ("lr", "loss", "loss_ema", "grad_norm", "trust_ratio",
+                      "wall_s", "loss_scale", "comm_s", "compute_s",
+                      "overlap_eff"):
+            if not is_num_or_null(r[field]):
+                fail(f"jsonl line {i}: {field} is {r[field]!r}, want number or null")
+        if not r["skipped"]:
+            for field in ("grad_norm", "trust_ratio"):
+                if not is_num(r[field]):
+                    fail(f"jsonl line {i}: applied step with non-numeric {field}")
+        else:
+            skipped += 1
+        if not is_int(r["tokens"]) or r["tokens"] < 0:
+            fail(f"jsonl line {i}: bad tokens {r['tokens']!r}")
+        if prev_tokens is not None and r["tokens"] < prev_tokens:
+            fail(f"jsonl line {i}: tokens {r['tokens']} below previous {prev_tokens}")
+        prev_tokens = r["tokens"]
+        if is_num(r["wall_s"]):
+            if r["wall_s"] < 0:
+                fail(f"jsonl line {i}: negative wall_s {r['wall_s']}")
+            if prev_wall is not None and r["wall_s"] < prev_wall:
+                fail(f"jsonl line {i}: wall_s {r['wall_s']} below previous {prev_wall}")
+            prev_wall = r["wall_s"]
+        if is_num(r["overlap_eff"]) and not 0.0 <= r["overlap_eff"] <= 1.0:
+            fail(f"jsonl line {i}: overlap_eff {r['overlap_eff']} outside [0, 1]")
+        if is_num(r["loss_scale"]) and r["loss_scale"] <= 0:
+            fail(f"jsonl line {i}: loss_scale {r['loss_scale']} not positive")
+        n += 1
+    return n, skipped, prev_tokens
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+def check_time_summary(label, t):
+    if not isinstance(t, dict):
+        fail(f"{label}: not an object")
+    for field in TIME_FIELDS:
+        if field not in t:
+            fail(f"{label}: missing {field!r}")
+    if not is_int(t["samples"]) or t["samples"] < 0:
+        fail(f"{label}: bad samples {t['samples']!r}")
+    for field in TIME_FIELDS[1:]:
+        if not is_num_or_null(t[field]):
+            fail(f"{label}: {field} is {t[field]!r}, want number or null")
+    if t["samples"] > 0:
+        p50, p90, p99, mx = t["p50_s"], t["p90_s"], t["p99_s"], t["max_s"]
+        if not all(is_num(x) for x in (p50, p90, p99, mx)):
+            fail(f"{label}: non-numeric percentile with samples > 0")
+        if not (p50 <= p90 <= p99 <= mx):
+            fail(f"{label}: percentiles out of order: {p50} {p90} {p99} max {mx}")
+
+
+def check_report_doc(doc):
+    """Validate a parsed report document; returns (steps, skipped, tokens)."""
+    if not isinstance(doc, dict):
+        fail("report: top level must be an object")
+    if doc.get("schema") != REPORT_SCHEMA:
+        fail(f"report: schema is {doc.get('schema')!r}, want {REPORT_SCHEMA!r}")
+    for field in ("steps", "skipped_steps", "tokens"):
+        if not is_int(doc.get(field)) or doc[field] < 0:
+            fail(f"report: bad {field} {doc.get(field)!r}")
+    if doc["skipped_steps"] > doc["steps"]:
+        fail(f"report: skipped_steps {doc['skipped_steps']} > steps {doc['steps']}")
+    for field in ("tokens_per_second", "final_loss", "final_loss_ema"):
+        if field not in doc or not is_num_or_null(doc[field]):
+            fail(f"report: {field} is {doc.get(field)!r}, want number or null")
+    if not isinstance(doc.get("diverged"), bool):
+        fail(f"report: diverged is {doc.get('diverged')!r}, want bool")
+
+    for field in ("step_time", "comm_time", "compute_time"):
+        if field not in doc:
+            fail(f"report: missing {field!r}")
+        check_time_summary(field, doc[field])
+    if doc["step_time"]["samples"] != doc["steps"]:
+        fail(
+            f"report: step_time.samples {doc['step_time']['samples']} "
+            f"!= steps {doc['steps']}"
+        )
+
+    counters = doc.get("counters")
+    if not isinstance(counters, dict):
+        fail("report: counters must be an object")
+    for name, v in counters.items():
+        if not is_int(v) or v < 0:
+            fail(f"report: counter {name!r} is {v!r}, want non-negative int")
+    gauges = doc.get("gauges")
+    if not isinstance(gauges, dict):
+        fail("report: gauges must be an object")
+    for name, v in gauges.items():
+        if not is_num_or_null(v):
+            fail(f"report: gauge {name!r} is {v!r}, want number or null")
+
+    hists = doc.get("histograms")
+    if not isinstance(hists, dict):
+        fail("report: histograms must be an object")
+    for name, h in hists.items():
+        label = f"histogram {name!r}"
+        if not isinstance(h, dict):
+            fail(f"{label}: not an object")
+        for field in ("count", "sum", "mean", "p50", "p90", "p99", "buckets"):
+            if field not in h:
+                fail(f"{label}: missing {field!r}")
+        if not is_int(h["count"]) or h["count"] < 0:
+            fail(f"{label}: bad count {h['count']!r}")
+        if not isinstance(h["buckets"], list):
+            fail(f"{label}: buckets must be a list")
+        total = 0
+        for pair in h["buckets"]:
+            if (not isinstance(pair, list) or len(pair) != 2
+                    or not is_int(pair[0]) or not is_int(pair[1])):
+                fail(f"{label}: bucket entry {pair!r}, want [index, count]")
+            idx, cnt = pair
+            if not 0 <= idx < HIST_BUCKETS:
+                fail(f"{label}: bucket index {idx} outside [0, {HIST_BUCKETS})")
+            if cnt <= 0:
+                fail(f"{label}: sparse bucket with non-positive count {cnt}")
+            total += cnt
+        if total != h["count"]:
+            fail(f"{label}: bucket counts sum to {total}, count says {h['count']}")
+        if h["count"] > 0:
+            p50, p90, p99 = h["p50"], h["p90"], h["p99"]
+            if not all(is_num(x) for x in (p50, p90, p99)):
+                fail(f"{label}: non-numeric percentile with count > 0")
+            if not (p50 <= p90 <= p99):
+                fail(f"{label}: percentiles out of order: {p50} {p90} {p99}")
+
+    health = doc.get("health")
+    if not isinstance(health, dict) or not isinstance(health.get("healthy"), bool):
+        fail("report: health must be an object with a bool 'healthy'")
+    verdicts = health.get("verdicts")
+    if not isinstance(verdicts, list):
+        fail("report: health.verdicts must be a list")
+    warns = 0
+    for i, v in enumerate(verdicts):
+        if not isinstance(v, dict):
+            fail(f"report: verdict {i} is not an object")
+        for field in VERDICT_FIELDS:
+            if field not in v:
+                fail(f"report: verdict {i} missing {field!r}")
+        if v["severity"] not in ("info", "warn"):
+            fail(f"report: verdict {i} severity {v['severity']!r}")
+        if not is_int(v["step"]) or v["step"] < 0:
+            fail(f"report: verdict {i} bad step {v['step']!r}")
+        if v["severity"] == "warn":
+            warns += 1
+    if health["healthy"] != (warns == 0):
+        fail(
+            f"report: healthy={health['healthy']} but {warns} warn verdict(s) "
+            f"— the verdict list is the source of truth"
+        )
+
+    model = doc.get("model", "absent")
+    if model == "absent":
+        fail("report: missing 'model' (null when no prediction was supplied)")
+    if model is not None:
+        if not isinstance(model, dict):
+            fail("report: model must be null or an object")
+        for field in ("model_step_time_s", "measured_step_time_s", "delta_frac"):
+            if field not in model or not is_num_or_null(model[field]):
+                fail(f"report: model.{field} is {model.get(field)!r}")
+    return doc["steps"], doc["skipped_steps"], doc["tokens"]
+
+
+def check_pair(jsonl_text, report_doc):
+    n, skipped, last_tokens = check_jsonl_text(jsonl_text)
+    steps, rep_skipped, tokens = check_report_doc(report_doc)
+    if n != steps:
+        fail(f"cross-check: {n} jsonl lines but report says {steps} steps")
+    if skipped != rep_skipped:
+        fail(
+            f"cross-check: {skipped} skipped jsonl lines but report says "
+            f"{rep_skipped}"
+        )
+    if n > 0 and last_tokens != tokens:
+        fail(
+            f"cross-check: last jsonl tokens {last_tokens} but report says "
+            f"{tokens}"
+        )
+    return n, skipped
+
+
+# ---------------------------------------------------------------------------
+# Self-test: an in-memory fixture matrix — one valid pair, then corruptions
+# that each must be caught.  Keeps the checker honest without artifacts.
+# ---------------------------------------------------------------------------
+
+def fixture_line(step, **over):
+    r = {
+        "step": step, "lr": 1e-3, "loss": 5.0 - 0.1 * step,
+        "loss_ema": 5.0 - 0.05 * step, "grad_norm": 1.0, "trust_ratio": 0.9,
+        "tokens": 64 * step, "wall_s": 0.01 * step, "loss_scale": 65536.0,
+        "skipped": False, "comm_s": 0.002, "compute_s": 0.006,
+        "overlap_eff": 0.5, "note": "",
+    }
+    r.update(over)
+    return r
+
+
+def fixture_pair():
+    lines = [fixture_line(t) for t in range(1, 5)]
+    lines[2].update(skipped=True, grad_norm=None, trust_ratio=None,
+                    note='overflow, scale -> 32768 "half"')
+    jsonl = "\n".join(json.dumps(r) for r in lines) + "\n"
+    ts = {"samples": 4, "mean_s": 0.01, "p50_s": 0.01, "p90_s": 0.01,
+          "p99_s": 0.01, "max_s": 0.01}
+    report = {
+        "schema": REPORT_SCHEMA, "steps": 4, "skipped_steps": 1,
+        "tokens": 256, "tokens_per_second": 6400.0,
+        "final_loss": 4.6, "final_loss_ema": 4.8, "diverged": False,
+        "step_time": dict(ts), "comm_time": dict(ts), "compute_time": dict(ts),
+        "counters": {"wire.intra_bytes": 4096, "scaler.backoffs": 1},
+        "gauges": {"scaler.scale": 32768.0},
+        "histograms": {
+            "optim.trust_ratio": {
+                "count": 3, "sum": 2.7, "mean": 0.9, "p50": 0.9,
+                "p90": 0.9, "p99": 0.9, "buckets": [[33, 3]],
+            },
+        },
+        "health": {
+            "healthy": False,
+            "verdicts": [{
+                "kind": "loss_scale_thrash", "severity": "warn", "step": 3,
+                "value": 1.0, "threshold": 3.0, "message": "1 backoff",
+            }],
+        },
+        "model": {"model_step_time_s": 0.009, "measured_step_time_s": 0.01,
+                  "delta_frac": 0.111},
+    }
+    return jsonl, report
+
+
+def self_test():
+    import copy
+
+    jsonl, report = fixture_pair()
+    check_pair(jsonl, report)  # the clean fixture must pass
+
+    def corrupt_jsonl(name, mutate):
+        lines = [json.loads(x) for x in jsonl.splitlines()]
+        mutate(lines)
+        return name, "\n".join(json.dumps(r) for r in lines) + "\n", report
+
+    def corrupt_report(name, mutate):
+        doc = copy.deepcopy(report)
+        mutate(doc)
+        return name, jsonl, doc
+
+    def drop(d, k):
+        d.pop(k)
+
+    cases = [
+        corrupt_jsonl("step not increasing",
+                      lambda ls: ls[1].update(step=1)),
+        corrupt_jsonl("wall clock runs backwards",
+                      lambda ls: ls[3].update(wall_s=0.001)),
+        corrupt_jsonl("tokens shrink",
+                      lambda ls: ls[3].update(tokens=1)),
+        corrupt_jsonl("overlap_eff above 1",
+                      lambda ls: ls[0].update(overlap_eff=1.5)),
+        corrupt_jsonl("non-positive loss scale",
+                      lambda ls: ls[0].update(loss_scale=0.0)),
+        corrupt_jsonl("applied step with null grad_norm",
+                      lambda ls: ls[0].update(grad_norm=None)),
+        corrupt_jsonl("missing field",
+                      lambda ls: drop(ls[0], "loss_ema")),
+        corrupt_jsonl("string where number expected",
+                      lambda ls: ls[0].update(loss="4.5")),
+        corrupt_report("wrong schema tag",
+                       lambda d: d.update(schema="bogus-v0")),
+        corrupt_report("skipped exceeds steps",
+                       lambda d: d.update(skipped_steps=9)),
+        corrupt_report("percentiles out of order",
+                       lambda d: d["step_time"].update(p50_s=0.5)),
+        corrupt_report("samples vs steps mismatch",
+                       lambda d: d["step_time"].update(samples=3)),
+        corrupt_report("negative counter",
+                       lambda d: d["counters"].update({"wire.intra_bytes": -1})),
+        corrupt_report("histogram count vs buckets",
+                       lambda d: d["histograms"]["optim.trust_ratio"].update(count=7)),
+        corrupt_report("bucket index out of range",
+                       lambda d: d["histograms"]["optim.trust_ratio"].update(
+                           buckets=[[64, 3]])),
+        corrupt_report("healthy contradicts warn verdict",
+                       lambda d: d["health"].update(healthy=True)),
+        corrupt_report("verdict with unknown severity",
+                       lambda d: d["health"]["verdicts"][0].update(severity="fatal")),
+        corrupt_report("model missing entirely",
+                       lambda d: drop(d, "model")),
+        ("jsonl/report step count mismatch",
+         jsonl + json.dumps(fixture_line(9, tokens=999, wall_s=9.0)) + "\n",
+         report),
+    ]
+    for name, jl, rep in cases:
+        try:
+            check_pair(jl, rep)
+        except CheckError:
+            continue
+        print(f"check_metrics: SELF-TEST FAIL: {name!r} was not caught",
+              file=sys.stderr)
+        sys.exit(1)
+
+    # an empty run is valid: no lines, zero-step report
+    empty_report = copy.deepcopy(report)
+    empty_report.update(steps=0, skipped_steps=0, tokens=0, final_loss=None,
+                        final_loss_ema=None, tokens_per_second=None)
+    for k in ("step_time", "comm_time", "compute_time"):
+        empty_report[k] = {"samples": 0, "mean_s": 0.0, "p50_s": 0.0,
+                           "p90_s": 0.0, "p99_s": 0.0, "max_s": 0.0}
+    empty_report["histograms"] = {}
+    empty_report["health"] = {"healthy": True, "verdicts": []}
+    check_pair("", empty_report)
+
+    print(f"check_metrics: self-test OK ({len(cases)} corruptions caught, "
+          f"clean + empty fixtures pass)")
+
+
+def main():
+    if sys.argv[1:] == ["--self-test"]:
+        try:
+            self_test()
+        except CheckError as e:
+            print(f"check_metrics: SELF-TEST FAIL: clean fixture rejected: {e}",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
+    if len(sys.argv) != 3:
+        print("usage: check_metrics.py METRICS.jsonl REPORT.json | --self-test",
+              file=sys.stderr)
+        sys.exit(1)
+    jsonl_path, report_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(jsonl_path, encoding="utf-8") as f:
+            jsonl_text = f.read()
+        with open(report_path, encoding="utf-8") as f:
+            report_doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_metrics: FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    try:
+        n, skipped = check_pair(jsonl_text, report_doc)
+    except CheckError as e:
+        print(f"check_metrics: FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"check_metrics: OK: {n} steps ({skipped} skipped), report schema "
+        f"{REPORT_SCHEMA} valid, series and report agree"
+    )
+
+
+if __name__ == "__main__":
+    main()
