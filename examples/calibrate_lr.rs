@@ -3,7 +3,7 @@
 //! the constants in benches/table2_convergence.rs).
 
 use anyhow::Result;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{from_ratios, Hyper};
 use lans::precision::{DType, LossScale};
@@ -53,6 +53,8 @@ fn main() -> Result<()> {
                 trace: None,
                 metrics: MetricsConfig::default(),
                 stop_on_divergence: false,
+                flight: FlightConfig::default(),
+                inject_failure: None,
             };
             let mut tr = Trainer::with_engine(cfg, engine.clone())?;
             let rep = tr.run()?;

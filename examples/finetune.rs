@@ -11,7 +11,7 @@
 //!     cargo run --release --example finetune
 
 use anyhow::Result;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -65,6 +65,8 @@ fn main() -> Result<()> {
             trace: None,
             metrics: MetricsConfig::default(),
             stop_on_divergence: true,
+            flight: FlightConfig::default(),
+            inject_failure: None,
         };
         let rep = Trainer::with_engine(cfg, engine.clone())?.run()?;
         assert_eq!(rep.status, TrainStatus::Completed);
@@ -112,6 +114,8 @@ fn main() -> Result<()> {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
 
     println!("=== finetune (adamw_bgn, §4) from the pretrained checkpoint ===");

@@ -12,7 +12,7 @@
 //!     make artifacts && cargo run --release --example mixed_precision
 
 use anyhow::Result;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -79,6 +79,8 @@ fn main() -> Result<()> {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
 
     let mut trainer = Trainer::new(cfg)?;

@@ -18,7 +18,7 @@
 
 use anyhow::Result;
 use lans::collective::hierarchical_phase_wire_bytes;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FailurePoint, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -68,6 +68,8 @@ fn base_cfg(meta: std::path::PathBuf, topology: Topology, inter: DType, steps: u
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     }
 }
 
@@ -218,5 +220,58 @@ fn main() -> Result<()> {
         "registry inter bytes vs ledger"
     );
     println!("\n{}", lans::metrics::export::render_summary(rep));
+
+    // ---- flight recorder: an injected worker failure must seal a bundle ---
+    // (DESIGN.md §13) — re-run the grid config with the flight recorder
+    // armed and worker 5 rigged to fail mid-run.  The run must abort, and
+    // the sealed postmortem bundle must pre-attribute the injected lane.
+    // CI validates the bundle with tools/check_postmortem.py and renders it
+    // with `lans-inspect postmortem`.
+    println!("\n=== flight recorder: injected failure on worker 5 ===");
+    let bundle = std::path::PathBuf::from("target/multi_node_postmortem.json");
+    let _ = std::fs::remove_file(&bundle); // stale bundle must not mask a miss
+    let mut cfg_f = base_cfg(
+        std::path::PathBuf::from("artifacts/bert-tiny_s64_b4.meta.json"),
+        Topology::grid(2, 4),
+        DType::F32,
+        12,
+    );
+    cfg_f.flight = FlightConfig { enabled: true, steps: 8, bundle: Some(bundle.clone()) };
+    cfg_f.inject_failure = Some(FailurePoint { step: 6, worker: 5 });
+    let mut t_fail = Trainer::with_engine(cfg_f, Engine::cpu()?)?;
+    let err = match t_fail.run() {
+        Ok(_) => anyhow::bail!("injected failure must abort the run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("injected failure"),
+        "abort must cite the injection, got: {err:#}"
+    );
+    assert!(bundle.exists(), "flight recorder armed but no bundle sealed");
+
+    let bj = lans::util::json::Json::parse(&std::fs::read_to_string(&bundle)?)
+        .expect("bundle must be valid JSON");
+    assert_eq!(bj.expect("schema").as_str(), Some("lans-postmortem-v1"));
+    let trig = bj.expect("trigger");
+    assert_eq!(trig.expect("kind").as_str(), Some("worker_failure"));
+    assert_eq!(trig.expect("step").as_f64(), Some(6.0));
+    let culprit = bj.expect("culprit");
+    assert_eq!(
+        culprit.expect("lane").as_str(),
+        Some("worker-5"),
+        "bundle must pre-attribute the injected lane"
+    );
+    let frames = bj.expect("frames").as_arr().expect("frames array");
+    assert!(!frames.is_empty() && frames.len() <= 8, "ring bound violated");
+    assert_eq!(
+        frames.last().unwrap().expect("step").as_f64(),
+        Some(6.0),
+        "last retained frame must be the failing step"
+    );
+    println!(
+        "injected failure at step 6 sealed {} ({} frames, culprit worker-5) ✔",
+        bundle.display(),
+        frames.len()
+    );
     Ok(())
 }

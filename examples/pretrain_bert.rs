@@ -16,7 +16,7 @@
 //!     # optional: pretrain_bert <phase1_steps> (default 150)
 
 use anyhow::Result;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::Hyper;
 use lans::precision::{DType, LossScale};
@@ -84,6 +84,8 @@ fn main() -> Result<()> {
             ..MetricsConfig::default()
         },
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
     let mut t1 = Trainer::with_engine(cfg1, engine.clone())?;
     println!(
@@ -145,6 +147,8 @@ fn main() -> Result<()> {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
     let mut t2 = Trainer::with_engine(cfg2, engine)?;
     println!(

@@ -7,7 +7,7 @@
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{Hyper, Schedule};
 use lans::precision::{DType, LossScale};
@@ -64,6 +64,8 @@ fn main() -> Result<()> {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
 
     let mut trainer = Trainer::new(cfg)?;

@@ -17,7 +17,7 @@
 
 use std::path::PathBuf;
 
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{TrainStatus, Trainer};
 use lans::optim::{sqrt_scaled_lr, Hyper};
 use lans::precision::{DType, LossScale};
@@ -91,6 +91,8 @@ fn main() {
             trace: None,
             metrics: MetricsConfig::default(),
             stop_on_divergence: false,
+            flight: FlightConfig::default(),
+            inject_failure: None,
         };
         let mut tr = Trainer::with_engine(cfg, engine.clone()).expect("trainer");
         eprintln!("running {label}: batch {batch}, {steps} steps, eta {eta:.4} …");

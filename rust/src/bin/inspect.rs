@@ -1,0 +1,550 @@
+//! `lans-inspect` — forensic CLI over the run artifacts the trainer emits.
+//!
+//! Four subcommands, each reading one artifact kind:
+//!
+//! * `summary <report.json>` — render a metrics report (schema
+//!   `lans-metrics-report-v1`) as a human-readable digest: throughput,
+//!   loss, timing percentiles, health verdicts.
+//! * `timeline <trace.json> [--step N] [--width W]` — ASCII view of a
+//!   Chrome-trace export: one row per lane, spans drawn to scale so
+//!   stragglers and overlap gaps are visible without opening a browser.
+//! * `diff <baseline.json> <candidate.json> [--threshold PCT]` — compare
+//!   two metrics reports; exits nonzero when the candidate regresses
+//!   (p50 step time beyond the threshold, or healthy → unhealthy) so CI
+//!   can gate on it.
+//! * `postmortem <bundle.json>` — turn a flight-recorder bundle (schema
+//!   `lans-postmortem-v1`) into a culprit report: what tripped, which
+//!   lane/stage is implicated, and the last-K steps leading up to it.
+//!
+//! Everything is read via the crate's own strict JSON parser — no new
+//! dependencies, and a malformed artifact fails loudly with its path.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use lans::util::json::Json;
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut flags = HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{a}'"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| format!("flag --{key} is missing a value"))?;
+            flags.insert(key.to_string(), val.clone());
+        }
+        Ok(Args { flags })
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "usage: lans-inspect <command> ...
+  summary    <report.json>                           digest of a metrics report
+  timeline   <trace.json> [--step N] [--width W]     ASCII span timeline
+  diff       <baseline.json> <candidate.json> [--threshold PCT]
+                                                     compare two reports (exit 1 on regression)
+  postmortem <bundle.json>                           culprit report from a flight bundle";
+
+fn run(argv: &[String]) -> Result<(), String> {
+    match argv.first().map(String::as_str) {
+        Some("summary") => {
+            let path = argv.get(1).ok_or("summary: missing <report.json>")?;
+            cmd_summary(path)
+        }
+        Some("timeline") => {
+            let path = argv.get(1).ok_or("timeline: missing <trace.json>")?;
+            let args = Args::parse(&argv[2..])?;
+            let step = match args.flags.get("step") {
+                None => None,
+                Some(v) => Some(
+                    v.parse::<u64>()
+                        .map_err(|_| format!("--step expects an integer, got '{v}'"))?,
+                ),
+            };
+            let width = args.get_usize("width", 100)?;
+            cmd_timeline(path, step, width.max(20))
+        }
+        Some("diff") => {
+            let base = argv.get(1).ok_or("diff: missing <baseline.json>")?;
+            let cand = argv.get(2).ok_or("diff: missing <candidate.json>")?;
+            let args = Args::parse(&argv[3..])?;
+            let threshold = args.get_f64("threshold", 20.0)?;
+            cmd_diff(base, cand, threshold)
+        }
+        Some("postmortem") => {
+            let path = argv.get(1).ok_or("postmortem: missing <bundle.json>")?;
+            cmd_postmortem(path)
+        }
+        Some(other) => Err(format!("unknown command '{other}'\n{USAGE}")),
+        None => Err(USAGE.to_string()),
+    }
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: invalid JSON: {e:?}"))
+}
+
+/// Required key lookup with the artifact path in the error.
+fn want<'a>(j: &'a Json, key: &str, path: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("{path}: missing key '{key}'"))
+}
+
+fn f64_of(j: &Json, key: &str, path: &str) -> Result<f64, String> {
+    want(j, key, path)?
+        .as_f64()
+        .ok_or_else(|| format!("{path}: key '{key}' is not a number"))
+}
+
+fn str_of<'a>(j: &'a Json, key: &str, path: &str) -> Result<&'a str, String> {
+    want(j, key, path)?
+        .as_str()
+        .ok_or_else(|| format!("{path}: key '{key}' is not a string"))
+}
+
+// ---------------------------------------------------------------- summary --
+
+fn check_schema(j: &Json, expect: &str, path: &str) -> Result<(), String> {
+    let got = str_of(j, "schema", path)?;
+    if got != expect {
+        return Err(format!("{path}: schema is '{got}', expected '{expect}'"));
+    }
+    Ok(())
+}
+
+fn timing_line(j: &Json, key: &str, path: &str) -> Result<Option<String>, String> {
+    let Some(t) = j.get(key) else { return Ok(None) };
+    if matches!(t, Json::Null) {
+        return Ok(None);
+    }
+    let samples = f64_of(t, "samples", path)?;
+    if samples == 0.0 {
+        return Ok(None);
+    }
+    Ok(Some(format!(
+        "  {key:<13} mean {:>9.6}s  p50 {:>9.6}s  p90 {:>9.6}s  p99 {:>9.6}s  max {:>9.6}s  ({} samples)",
+        f64_of(t, "mean_s", path)?,
+        f64_of(t, "p50_s", path)?,
+        f64_of(t, "p90_s", path)?,
+        f64_of(t, "p99_s", path)?,
+        f64_of(t, "max_s", path)?,
+        samples as u64,
+    )))
+}
+
+fn cmd_summary(path: &str) -> Result<(), String> {
+    let j = load(path)?;
+    check_schema(&j, "lans-metrics-report-v1", path)?;
+
+    let steps = f64_of(&j, "steps", path)? as u64;
+    let skipped = f64_of(&j, "skipped_steps", path)? as u64;
+    let tokens = f64_of(&j, "tokens", path)?;
+    // null on zero-step runs (non-finite values serialize as null)
+    let tps = want(&j, "tokens_per_second", path)?.as_f64().unwrap_or(f64::NAN);
+    let loss = want(&j, "final_loss", path)?.as_f64().unwrap_or(f64::NAN);
+    let ema = want(&j, "final_loss_ema", path)?.as_f64().unwrap_or(f64::NAN);
+    let diverged = want(&j, "diverged", path)?.as_bool().unwrap_or(false);
+
+    println!("run summary — {path}");
+    println!(
+        "  steps         {steps} ({skipped} skipped)  tokens {tokens:.0}  throughput {tps:.0} tok/s"
+    );
+    println!("  final loss    {loss:.6} (ema {ema:.6}){}", if diverged { "  DIVERGED" } else { "" });
+    for key in ["step_time", "comm_time", "compute_time"] {
+        if let Some(line) = timing_line(&j, key, path)? {
+            println!("{line}");
+        }
+    }
+    if let Some(m @ Json::Obj(_)) = j.get("model") {
+        let model = f64_of(m, "model_step_time_s", path)?;
+        let measured = f64_of(m, "measured_step_time_s", path)?;
+        let delta = f64_of(m, "delta_frac", path)?;
+        println!(
+            "  perf model    predicted {model:.6}s  measured {measured:.6}s  delta {:+.1}%",
+            delta * 100.0
+        );
+    }
+    let health = want(&j, "health", path)?;
+    let healthy = want(health, "healthy", path)?.as_bool().unwrap_or(false);
+    let verdicts = want(health, "verdicts", path)?
+        .as_arr()
+        .ok_or_else(|| format!("{path}: health.verdicts is not an array"))?;
+    println!("  health        {}", if healthy { "healthy" } else { "UNHEALTHY" });
+    for v in verdicts {
+        let sev = str_of(v, "severity", path)?;
+        let kind = str_of(v, "kind", path)?;
+        let step = f64_of(v, "step", path)? as u64;
+        let msg = str_of(v, "message", path)?;
+        let detail = v.get("detail").and_then(Json::as_str).unwrap_or("");
+        if detail.is_empty() {
+            println!("    [{sev}] {kind} @ step {step}: {msg}");
+        } else {
+            println!("    [{sev}] {kind} @ step {step}: {msg} ({detail})");
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- timeline --
+
+struct TlSpan {
+    name: String,
+    cat: String,
+    start_us: f64,
+    dur_us: f64,
+    step: u64,
+}
+
+/// Category → single glyph so dense rows stay legible.
+fn cat_glyph(cat: &str) -> char {
+    match cat {
+        "sched" => 's',
+        "wait" => '.',
+        "comm" => 'c',
+        "compute" => '#',
+        "pool" => 'p',
+        "convert" => 'v',
+        "step" => '=',
+        _ => '?',
+    }
+}
+
+fn cmd_timeline(path: &str, step: Option<u64>, width: usize) -> Result<(), String> {
+    let j = load(path)?;
+    let events = want(&j, "traceEvents", path)?
+        .as_arr()
+        .ok_or_else(|| format!("{path}: traceEvents is not an array"))?;
+
+    // tid → lane name from "M" metadata events
+    let mut lane_names: HashMap<u64, String> = HashMap::new();
+    let mut lanes: Vec<(u64, Vec<TlSpan>)> = Vec::new();
+    for ev in events {
+        let ph = str_of(ev, "ph", path)?;
+        let tid = f64_of(ev, "tid", path)? as u64;
+        if ph == "M" {
+            if let Some(name) = ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str) {
+                lane_names.insert(tid, name.to_string());
+            }
+            continue;
+        }
+        if ph != "X" {
+            continue;
+        }
+        let ev_step = ev
+            .get("args")
+            .and_then(|a| a.get("step"))
+            .and_then(Json::as_f64)
+            .map(|s| s as u64);
+        if let (Some(want_step), Some(got)) = (step, ev_step) {
+            if got != want_step {
+                continue;
+            }
+        }
+        let span = TlSpan {
+            name: str_of(ev, "name", path)?.to_string(),
+            cat: ev.get("cat").and_then(Json::as_str).unwrap_or("?").to_string(),
+            start_us: f64_of(ev, "ts", path)?,
+            dur_us: f64_of(ev, "dur", path)?,
+            step: ev_step.unwrap_or(0),
+        };
+        match lanes.iter_mut().find(|(t, _)| *t == tid) {
+            Some((_, v)) => v.push(span),
+            None => lanes.push((tid, vec![span])),
+        }
+    }
+    if lanes.iter().all(|(_, v)| v.is_empty()) {
+        return Err(match step {
+            Some(s) => format!("{path}: no spans for step {s}"),
+            None => format!("{path}: no spans in trace"),
+        });
+    }
+
+    let t0 = lanes
+        .iter()
+        .flat_map(|(_, v)| v.iter())
+        .map(|s| s.start_us)
+        .fold(f64::INFINITY, f64::min);
+    let t1 = lanes
+        .iter()
+        .flat_map(|(_, v)| v.iter())
+        .map(|s| s.start_us + s.dur_us)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let total_us = (t1 - t0).max(1e-9);
+    let scale = width as f64 / total_us;
+
+    let steps: Vec<u64> = {
+        let mut v: Vec<u64> = lanes.iter().flat_map(|(_, s)| s.iter().map(|x| x.step)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    println!("timeline — {path}");
+    match step {
+        Some(s) => println!("  step {s}, span {:.3} ms, 1 col = {:.1} µs", total_us / 1e3, 1.0 / scale),
+        None => println!(
+            "  steps {:?}, span {:.3} ms, 1 col = {:.1} µs",
+            steps,
+            total_us / 1e3,
+            1.0 / scale
+        ),
+    }
+    println!("  glyphs: s=sched .=wait c=comm #=compute p=pool v=convert ==step");
+
+    lanes.sort_by_key(|(tid, _)| *tid);
+    let name_w = lanes
+        .iter()
+        .map(|(tid, _)| lane_names.get(tid).map_or(6, String::len))
+        .max()
+        .unwrap_or(6)
+        .max(6);
+    for (tid, spans) in &lanes {
+        let default_name = format!("tid {tid}");
+        let name = lane_names.get(tid).cloned().unwrap_or(default_name);
+        let mut row: Vec<char> = vec![' '; width];
+        // draw big spans first so short ones stay visible on top
+        let mut order: Vec<&TlSpan> = spans.iter().collect();
+        order.sort_by(|a, b| b.dur_us.total_cmp(&a.dur_us));
+        for s in order {
+            let lo = (((s.start_us - t0) * scale) as usize).min(width - 1);
+            let hi = ((((s.start_us + s.dur_us) - t0) * scale).ceil() as usize).clamp(lo + 1, width);
+            let g = cat_glyph(&s.cat);
+            for cell in &mut row[lo..hi] {
+                *cell = g;
+            }
+        }
+        println!("  {name:<name_w$} |{}|", row.iter().collect::<String>());
+    }
+
+    // per-lane busiest span, so the picture has numbers attached
+    println!("  longest span per lane:");
+    for (tid, spans) in &lanes {
+        let default_name = format!("tid {tid}");
+        let name = lane_names.get(tid).cloned().unwrap_or(default_name);
+        if let Some(s) = spans.iter().max_by(|a, b| a.dur_us.total_cmp(&b.dur_us)) {
+            println!(
+                "    {name:<name_w$} {:<18} [{}] {:.3} ms @ step {}",
+                s.name,
+                s.cat,
+                s.dur_us / 1e3,
+                s.step
+            );
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- diff --
+
+fn delta_pct(base: f64, cand: f64) -> f64 {
+    if base == 0.0 {
+        if cand == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (cand - base) / base * 100.0
+    }
+}
+
+fn cmd_diff(base_path: &str, cand_path: &str, threshold: f64) -> Result<(), String> {
+    let base = load(base_path)?;
+    let cand = load(cand_path)?;
+    check_schema(&base, "lans-metrics-report-v1", base_path)?;
+    check_schema(&cand, "lans-metrics-report-v1", cand_path)?;
+
+    println!("diff — baseline {base_path} vs candidate {cand_path}");
+    let mut regressions: Vec<String> = Vec::new();
+
+    // scalar rows: (label, key, lower-is-better)
+    let scalar_rows = [
+        ("tokens/s", "tokens_per_second", false),
+        ("final loss", "final_loss", true),
+        ("final loss ema", "final_loss_ema", true),
+        ("skipped steps", "skipped_steps", true),
+    ];
+    for (label, key, _lower_better) in scalar_rows {
+        // null (zero-step run) compares as NaN: printed, never a regression
+        let b = want(&base, key, base_path)?.as_f64().unwrap_or(f64::NAN);
+        let c = want(&cand, key, cand_path)?.as_f64().unwrap_or(f64::NAN);
+        println!("  {label:<16} {b:>12.4} -> {c:>12.4}  ({:+.1}%)", delta_pct(b, c));
+    }
+
+    for key in ["step_time", "comm_time", "compute_time"] {
+        let (Some(bt), Some(ct)) = (base.get(key), cand.get(key)) else { continue };
+        if matches!(bt, Json::Null) || matches!(ct, Json::Null) {
+            continue;
+        }
+        if f64_of(bt, "samples", base_path)? == 0.0 || f64_of(ct, "samples", cand_path)? == 0.0 {
+            continue;
+        }
+        for q in ["p50_s", "p90_s", "p99_s"] {
+            let b = f64_of(bt, q, base_path)?;
+            let c = f64_of(ct, q, cand_path)?;
+            let pct = delta_pct(b, c);
+            println!("  {key}.{q:<8} {b:>12.6} -> {c:>12.6}  ({pct:+.1}%)");
+            if key == "step_time" && q == "p50_s" && pct > threshold {
+                regressions.push(format!(
+                    "step_time.p50 regressed {pct:+.1}% (threshold +{threshold:.1}%)"
+                ));
+            }
+        }
+    }
+
+    let healthy = |j: &Json, p: &str| -> Result<bool, String> {
+        Ok(want(j, "health", p)?.get("healthy").and_then(Json::as_bool).unwrap_or(false))
+    };
+    let (bh, ch) = (healthy(&base, base_path)?, healthy(&cand, cand_path)?);
+    println!(
+        "  health           {:>12} -> {:>12}",
+        if bh { "healthy" } else { "unhealthy" },
+        if ch { "healthy" } else { "unhealthy" }
+    );
+    if bh && !ch {
+        regressions.push("health regressed: baseline healthy, candidate unhealthy".to_string());
+    }
+    let bd = want(&base, "diverged", base_path)?.as_bool().unwrap_or(false);
+    let cd = want(&cand, "diverged", cand_path)?.as_bool().unwrap_or(false);
+    if !bd && cd {
+        regressions.push("candidate diverged; baseline did not".to_string());
+    }
+
+    if regressions.is_empty() {
+        println!("  verdict: OK (threshold +{threshold:.1}% on step_time.p50)");
+        Ok(())
+    } else {
+        for r in &regressions {
+            println!("  REGRESSION: {r}");
+        }
+        Err(format!("{} regression(s) detected", regressions.len()))
+    }
+}
+
+// ------------------------------------------------------------- postmortem --
+
+fn cmd_postmortem(path: &str) -> Result<(), String> {
+    let j = load(path)?;
+    check_schema(&j, "lans-postmortem-v1", path)?;
+
+    let trig = want(&j, "trigger", path)?;
+    let kind = str_of(trig, "kind", path)?;
+    let t_step = f64_of(trig, "step", path)? as u64;
+    let msg = str_of(trig, "message", path)?;
+
+    println!("postmortem — {path}");
+    println!("  trigger   {kind} @ step {t_step}");
+    println!("            {msg}");
+
+    match want(&j, "culprit", path)? {
+        Json::Null => println!("  culprit   (none attributed)"),
+        c => {
+            let lane = str_of(c, "lane", path)?;
+            let stage = str_of(c, "stage", path)?;
+            let dur = f64_of(c, "dur_s", path)?;
+            println!("  culprit   lane '{lane}', stage '{stage}' ({dur:.3e}s)");
+        }
+    }
+
+    let flight_steps = f64_of(&j, "flight_steps", path)? as usize;
+    let frames = want(&j, "frames", path)?
+        .as_arr()
+        .ok_or_else(|| format!("{path}: frames is not an array"))?;
+    println!("  flight    {} of up to {flight_steps} frames retained", frames.len());
+    println!("            step     loss       grad_norm  scale      applied  flags");
+    for f in frames {
+        let step = f64_of(f, "step", path)? as u64;
+        let partial = want(f, "partial", path)?.as_bool().unwrap_or(false);
+        let scale = f64_of(f, "loss_scale", path)?;
+        let applied = f64_of(f, "applied_steps", path)? as u64;
+        let (loss, gnorm, skipped) = match want(f, "record", path)? {
+            Json::Null => (None, None, false),
+            r => (
+                r.get("loss").and_then(Json::as_f64),
+                r.get("grad_norm").and_then(Json::as_f64),
+                r.get("skipped").and_then(Json::as_bool).unwrap_or(false),
+            ),
+        };
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:<10.4}"),
+            None => format!("{:<10}", "-"),
+        };
+        let mut flags = Vec::new();
+        if partial {
+            flags.push("partial");
+        }
+        if skipped {
+            flags.push("skipped");
+        }
+        println!(
+            "            {step:<8} {} {} {scale:<10.1} {applied:<8} {}",
+            fmt_opt(loss),
+            fmt_opt(gnorm),
+            flags.join(",")
+        );
+    }
+
+    let verdicts = want(&j, "verdicts", path)?
+        .as_arr()
+        .ok_or_else(|| format!("{path}: verdicts is not an array"))?;
+    if verdicts.is_empty() {
+        println!("  verdicts  (none in retained window)");
+    } else {
+        println!("  verdicts:");
+        for v in verdicts {
+            let sev = str_of(v, "severity", path)?;
+            let vkind = str_of(v, "kind", path)?;
+            let vstep = f64_of(v, "step", path)? as u64;
+            let vmsg = str_of(v, "message", path)?;
+            let detail = v.get("detail").and_then(Json::as_str).unwrap_or("");
+            if detail.is_empty() {
+                println!("    [{sev}] {vkind} @ step {vstep}: {vmsg}");
+            } else {
+                println!("    [{sev}] {vkind} @ step {vstep}: {vmsg} ({detail})");
+            }
+        }
+    }
+
+    if let Some(Json::Obj(cfg)) = j.get("config") {
+        println!("  config echo:");
+        for (k, v) in cfg {
+            println!("    {k} = {}", v.as_str().unwrap_or("?"));
+        }
+    }
+    Ok(())
+}

@@ -114,6 +114,60 @@ pub struct TrainConfig {
     pub stop_on_divergence: bool,
     /// run-health telemetry knobs (`[metrics]` section, DESIGN.md §12)
     pub metrics: MetricsConfig,
+    /// flight-recorder / postmortem knobs (`[flight]` section, DESIGN.md §13)
+    pub flight: FlightConfig,
+    /// chaos knob: synthesize a worker failure at `step@worker` (e.g.
+    /// `"20@5"` kills worker 5's step-20 reply).  The run fails exactly as
+    /// a real mid-step death would — and, with the flight recorder armed,
+    /// seals a postmortem bundle naming the injected lane.  `None`
+    /// (default) injects nothing
+    pub inject_failure: Option<FailurePoint>,
+}
+
+/// Flight-recorder knobs (`[flight]` section).  All off by default — the
+/// recorder then costs one relaxed atomic load per seam and the trainer's
+/// output is bit-identical to a build without the subsystem (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub struct FlightConfig {
+    /// retain the last-K-steps ring without necessarily sealing to disk
+    pub enabled: bool,
+    /// ring capacity K: how many trailing steps of frames to retain
+    pub steps: usize,
+    /// seal a `lans-postmortem-v1` bundle here on the first trigger (Warn
+    /// health verdict, skip burst, worker failure, pool poison); setting
+    /// this arms the recorder
+    pub bundle: Option<PathBuf>,
+}
+
+impl Default for FlightConfig {
+    fn default() -> FlightConfig {
+        FlightConfig { enabled: false, steps: 32, bundle: None }
+    }
+}
+
+impl FlightConfig {
+    /// Whether the trainer should arm the flight recorder.
+    pub fn active(&self) -> bool {
+        self.enabled || self.bundle.is_some()
+    }
+}
+
+/// A single injected worker failure: worker `worker` dies at step `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailurePoint {
+    pub step: u64,
+    pub worker: usize,
+}
+
+impl FailurePoint {
+    /// Parse the `"step@worker"` config form.
+    pub fn parse(s: &str) -> Option<FailurePoint> {
+        let (step, worker) = s.split_once('@')?;
+        Some(FailurePoint {
+            step: step.trim().parse().ok()?,
+            worker: worker.trim().parse().ok()?,
+        })
+    }
 }
 
 /// Run-telemetry knobs (`[metrics]` section).  All off by default — the
@@ -289,6 +343,26 @@ impl TrainConfig {
             model_step_time_s,
         };
 
+        let flight = FlightConfig {
+            enabled: doc.bool_or("flight", "enabled", false),
+            steps: doc.usize_or("flight", "steps", 32).max(2),
+            bundle: doc
+                .get("flight", "bundle")
+                .and_then(Value::as_str)
+                .map(|s| base.join(s)),
+        };
+        let inject_failure = match doc.get("train", "inject_failure") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().unwrap_or_default();
+                Some(FailurePoint::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "inject_failure must be \"<step>@<worker>\" (e.g. \"20@5\"), got {v:?}"
+                    )
+                })?)
+            }
+        };
+
         Ok(TrainConfig {
             meta_path,
             optimizer: doc.str_or("train", "optimizer", "lans").to_string(),
@@ -335,6 +409,8 @@ impl TrainConfig {
                 .map(|s| base.join(s)),
             stop_on_divergence: doc.bool_or("train", "stop_on_divergence", true),
             metrics,
+            flight,
+            inject_failure,
         })
     }
 
@@ -524,6 +600,70 @@ mod tests {
                 "{body} should be rejected"
             );
         }
+    }
+
+    #[test]
+    fn flight_knobs_parse() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[flight]\nsteps = 8\n\
+             bundle = \"out/postmortem.json\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new("/base")).unwrap();
+        assert_eq!(c.flight.steps, 8);
+        assert_eq!(c.flight.bundle.as_deref(), Some(Path::new("/base/out/postmortem.json")));
+        assert!(c.flight.active(), "a bundle path arms the recorder");
+
+        // default: off — the no-overhead contract path
+        let doc = Document::parse("[model]\nmeta = \"m.json\"").unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert!(!c.flight.active());
+        assert_eq!(c.flight.steps, 32);
+        assert!(c.flight.bundle.is_none());
+
+        // `enabled` retains the ring without a bundle file
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[flight]\nenabled = true",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().flight.active());
+
+        // the ring floor keeps a degenerate K from discarding the trigger step
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[flight]\nsteps = 0",
+        )
+        .unwrap();
+        assert_eq!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().flight.steps, 2);
+    }
+
+    #[test]
+    fn inject_failure_knob_parses() {
+        let doc = Document::parse(
+            "[model]\nmeta = \"m.json\"\n[train]\ninject_failure = \"20@5\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc, Path::new(".")).unwrap();
+        assert_eq!(c.inject_failure, Some(FailurePoint { step: 20, worker: 5 }));
+
+        let doc = Document::parse("[model]\nmeta = \"m.json\"").unwrap();
+        assert_eq!(TrainConfig::from_doc(&doc, Path::new(".")).unwrap().inject_failure, None);
+
+        for body in [
+            "inject_failure = \"20\"",
+            "inject_failure = \"x@y\"",
+            "inject_failure = \"@3\"",
+            "inject_failure = 20",
+        ] {
+            let doc = Document::parse(&format!(
+                "[model]\nmeta = \"m.json\"\n[train]\n{body}"
+            ))
+            .unwrap();
+            assert!(
+                TrainConfig::from_doc(&doc, Path::new(".")).is_err(),
+                "{body} should be rejected"
+            );
+        }
+        assert_eq!(FailurePoint::parse(" 7 @ 2 "), Some(FailurePoint { step: 7, worker: 2 }));
     }
 
     #[test]

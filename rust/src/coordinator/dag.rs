@@ -123,6 +123,15 @@ impl<'scope> StepDag<'scope> {
             for (id, st) in self.stages.iter_mut().enumerate() {
                 let _run = trace::span_detail(trace::CAT_SCHED, st.label, id as u64);
                 match st.run.take() {
+                    // with the flight recorder armed, contain-attribute-
+                    // re-raise so the postmortem names the exact stage; the
+                    // disarmed path stays a plain call (one relaxed load)
+                    Some(f) if crate::obs::flight::enabled() => {
+                        if let Err(p) = catch_unwind(AssertUnwindSafe(f)) {
+                            crate::obs::flight::note_panic("dag", st.label);
+                            std::panic::resume_unwind(p);
+                        }
+                    }
                     Some(f) => f(),
                     None => panic!("stage {:?} ran twice", st.label),
                 }
@@ -207,6 +216,9 @@ impl<'scope> StepDag<'scope> {
                     }
                 }
                 Err(p) => {
+                    // name the panicking stage for the flight recorder
+                    // before the payload crosses back to the caller
+                    crate::obs::flight::note_panic("dag", labels[id]);
                     let mut slot = payload.lock().unwrap();
                     if slot.is_none() {
                         *slot = Some(p);

@@ -21,8 +21,9 @@ use crate::collective::{
 };
 use crate::config::{OptBackend, TrainConfig};
 use crate::metrics::export::{self, RunReport};
-use crate::metrics::health::{HealthConfig, HealthMonitor};
+use crate::metrics::health::{HealthConfig, HealthMonitor, Severity};
 use crate::metrics::{log as mlog, registry, Recorder};
+use crate::obs::{flight, postmortem};
 use crate::optim::{
     make_optimizer, BlockTable, Optimizer, ParallelExecutor, ShardPlan, ShardedOptimizer,
 };
@@ -125,6 +126,17 @@ impl Trainer {
                 "resume_opt_state requires shard_optimizer = true and a \
                  resume_from checkpoint"
             );
+        }
+        if let Some(f) = &cfg.inject_failure {
+            if f.worker >= cfg.workers {
+                bail!(
+                    "inject_failure names worker {} but the run has only {} \
+                     workers (0..{})",
+                    f.worker,
+                    cfg.workers,
+                    cfg.workers - 1
+                );
+            }
         }
         if (cfg.grad_dtype.is_half() || cfg.intra_dtype.is_half() || cfg.loss_scale.enabled())
             && cfg.backend != OptBackend::Native
@@ -338,6 +350,43 @@ impl Trainer {
         }
         let mut step_traces: Vec<trace::StepTrace> = Vec::new();
 
+        // flight recorder (DESIGN.md §13): arm the last-K ring and register
+        // the seal metadata up front, so a trigger raised from a panicking
+        // pool thread can write the bundle without the trainer's help.
+        // Arming implies span collection (the ring retains timelines); the
+        // Chrome trace file is still written only when `[train] trace`
+        // asks for it.  The guard disarms on every exit path — including a
+        // worker-failure bail, whose bundle is already on disk by then.
+        let flight_on = cfg.flight.active();
+        if flight_on {
+            flight::arm(flight::SealMeta {
+                bundle: cfg.flight.bundle.clone(),
+                config_echo: config_echo(cfg),
+                cap: cfg.flight.steps,
+            });
+            trace::enable();
+        }
+        struct FlightDisarm {
+            armed: bool,
+            owns_trace: bool,
+        }
+        impl Drop for FlightDisarm {
+            fn drop(&mut self) {
+                if self.armed {
+                    flight::disarm();
+                }
+                if self.owns_trace {
+                    // span collection was on only for the ring: switch it
+                    // back off on every exit path, including a bail
+                    trace::disable();
+                }
+            }
+        }
+        let _flight_guard = FlightDisarm {
+            armed: flight_on,
+            owns_trace: flight_on && cfg.trace.is_none(),
+        };
+
         // run-health telemetry (DESIGN.md §12): arm the registry for the
         // whole run when any `[metrics]` knob is active.  Disabled, every
         // seam is one relaxed atomic load; enabled, the registry only
@@ -378,7 +427,33 @@ impl Trainer {
             let mut total_micros = 0usize;
             let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(replies.len());
             for r in replies {
-                if let Some(e) = r.error {
+                // chaos injection (ROADMAP item 2's failure model): treat
+                // the designated worker's reply as a mid-step death
+                let error = r.error.or_else(|| {
+                    cfg.inject_failure
+                        .filter(|f| f.step == t && f.worker == r.worker)
+                        .map(|f| {
+                            format!(
+                                "worker {}: injected failure (inject_failure = \
+                                 \"{}@{}\")",
+                                r.worker, f.step, f.worker
+                            )
+                        })
+                });
+                if let Some(e) = error {
+                    if flight_on {
+                        // seal the bundle before surfacing the error: the
+                        // ring holds the preceding steps plus a partial
+                        // frame with whatever spans this step produced
+                        let partial = trace::enabled().then(|| trace::collect(t));
+                        flight::push_frame(flight::FlightFrame::partial(t, partial));
+                        if let Some(p) = flight::worker_failure(t, r.worker, &e) {
+                            mlog::warn(
+                                "flight",
+                                &format!("postmortem bundle sealed to {}", p.display()),
+                            );
+                        }
+                    }
                     bail!("step {t}: {e}");
                 }
                 loss_sum += r.loss_sum;
@@ -603,15 +678,27 @@ impl Trainer {
             }
             steps_run = t;
             drop(step_span);
+            // this step's timeline feeds up to three consumers: the TSV
+            // aggregates (always), the Chrome trace file (cfg.trace), and
+            // the flight ring (flight_on) — cloned only when both want it
+            let mut step_trace: Option<trace::StepTrace> = None;
             if trace::enabled() {
                 let st = trace::collect(t);
                 recorder.set_step_timing(st.comm_s(), st.compute_s(), st.overlap_efficiency());
-                step_traces.push(st);
+                if cfg.trace.is_some() && flight_on {
+                    step_traces.push(st.clone());
+                    step_trace = Some(st);
+                } else if cfg.trace.is_some() {
+                    step_traces.push(st);
+                } else {
+                    step_trace = Some(st);
+                }
             }
 
             // feed the anomaly detector AFTER the trace collect so the
             // record carries this step's comm/compute split.  wall_s is a
             // cumulative clock — health wants per-step durations, so diff.
+            let verdicts_before = health.as_ref().map_or(0, |h| h.verdicts().len());
             if let Some(h) = health.as_mut() {
                 if let Some(r) = recorder.records.last() {
                     let wall = (r.wall_s - prev_wall).max(0.0);
@@ -624,6 +711,67 @@ impl Trainer {
                         r.loss_ema,
                         backoff,
                         recorder.divergence_ceiling,
+                    );
+                }
+            }
+
+            if flight_on {
+                // upgrade fresh straggler verdicts from "a step was slow"
+                // to the slowest (lane, stage) by interval math over this
+                // step's spans, and pick the first fresh Warn as a trigger
+                let culprit = step_trace.as_ref().and_then(postmortem::slowest_stage);
+                let mut warn_trigger: Option<flight::Trigger> = None;
+                if let Some(h) = health.as_mut() {
+                    for i in verdicts_before..h.verdicts().len() {
+                        if h.verdicts()[i].kind.starts_with("straggler") {
+                            if let Some(c) = culprit.as_ref() {
+                                h.set_detail(
+                                    i,
+                                    format!(
+                                        "{} — slowest stage '{}' ({:.3e}s)",
+                                        c.lane, c.stage, c.dur_s
+                                    ),
+                                );
+                            }
+                        }
+                        let v = &h.verdicts()[i];
+                        if v.severity == Severity::Warn && warn_trigger.is_none() {
+                            warn_trigger = Some(flight::Trigger {
+                                kind: "health_verdict",
+                                step: t,
+                                message: v.message.clone(),
+                                culprit: culprit.clone(),
+                            });
+                        }
+                    }
+                }
+                // retain the frame BEFORE evaluating triggers, so a sealed
+                // bundle includes the offending step itself
+                let skipped_now =
+                    recorder.records.last().is_some_and(|r| r.skipped);
+                flight::push_frame(flight::FlightFrame {
+                    step: t,
+                    record: recorder.records.last().cloned(),
+                    trace: step_trace,
+                    verdicts: health
+                        .as_ref()
+                        .map_or(Vec::new(), |h| h.verdicts()[verdicts_before..].to_vec()),
+                    counter_deltas: Vec::new(),
+                    loss_scale: scale_s as f64,
+                    scaler_overflows: scaler.as_ref().map_or(0, |s| s.overflows()),
+                    applied_steps: t - recorder.skipped_steps(),
+                });
+                let sealed = if let Some(trig) = warn_trigger {
+                    flight::trigger(trig)
+                } else if skipped_now {
+                    flight::check_skip_burst(t)
+                } else {
+                    None
+                };
+                if let Some(p) = sealed {
+                    mlog::warn(
+                        "flight",
+                        &format!("postmortem bundle sealed to {}", p.display()),
                     );
                 }
             }
@@ -678,6 +826,10 @@ impl Trainer {
             recorder.write_tsv(path)?;
         }
 
+        // end-of-run accounting for the rate-limited log sink: one summary
+        // line per label that overran its limit, before the sink goes quiet
+        mlog::drain_suppression_summary();
+
         // seal the telemetry run: snapshot before disabling so late worker
         // teardown can't race new observations into the report
         let metrics_report: Option<RunReport> = if metrics_on {
@@ -722,4 +874,31 @@ impl Trainer {
         }
         Ok(sum / self.cfg.eval_batches as f64)
     }
+}
+
+/// The run-configuration echo landed in a postmortem bundle: enough to
+/// reproduce the run's shape (and its RNG provenance, via the seeds)
+/// without shipping the whole config file.
+fn config_echo(cfg: &TrainConfig) -> Vec<(String, String)> {
+    [
+        ("optimizer", cfg.optimizer.clone()),
+        ("backend", format!("{:?}", cfg.backend)),
+        ("workers", cfg.workers.to_string()),
+        ("threads", cfg.threads.to_string()),
+        ("topology", format!("{:?}", cfg.topology)),
+        ("grad_dtype", cfg.grad_dtype.name().to_string()),
+        ("intra_dtype", cfg.intra_dtype.name().to_string()),
+        ("loss_scale", format!("{:?}", cfg.loss_scale)),
+        ("shard_optimizer", cfg.shard_optimizer.to_string()),
+        ("bucket_mb", cfg.bucket_mb.to_string()),
+        ("overlap", cfg.overlap.to_string()),
+        ("global_batch", cfg.global_batch.to_string()),
+        ("steps", cfg.steps.to_string()),
+        ("seed", cfg.seed.to_string()),
+        ("data_seed", cfg.data.seed.to_string()),
+        ("flight_steps", cfg.flight.steps.to_string()),
+    ]
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), v))
+    .collect()
 }

@@ -18,6 +18,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod precision;
 pub mod runtime;

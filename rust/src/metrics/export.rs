@@ -136,7 +136,7 @@ pub fn build_report(
 // lives here too: JSON output must be strict, so non-finite f64s become null.
 // ---------------------------------------------------------------------------
 
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -154,7 +154,7 @@ fn esc(s: &str) -> String {
 
 /// f64 → strict-JSON number, or `null` for NaN/inf (skipped steps record
 /// NaN grad norms by design).
-fn num(v: f64) -> String {
+pub(crate) fn num(v: f64) -> String {
     if v.is_finite() {
         // `{}` prints integral f64s without a dot; that is still valid JSON
         format!("{v}")
@@ -186,7 +186,7 @@ fn jsonl_line(r: &StepRecord) -> String {
     )
 }
 
-fn create_with_parents(path: &Path) -> Result<std::fs::File> {
+pub(crate) fn create_with_parents(path: &Path) -> Result<std::fs::File> {
     if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating parent directory {}", dir.display()))?;
@@ -216,16 +216,17 @@ fn time_summary_json(t: &TimeSummary) -> String {
     )
 }
 
-fn verdict_json(v: &Verdict) -> String {
+pub(crate) fn verdict_json(v: &Verdict) -> String {
     format!(
         "{{\"kind\":\"{}\",\"severity\":\"{}\",\"step\":{},\"value\":{},\
-         \"threshold\":{},\"message\":\"{}\"}}",
+         \"threshold\":{},\"message\":\"{}\",\"detail\":\"{}\"}}",
         esc(v.kind),
         v.severity.as_str(),
         v.step,
         num(v.value),
         num(v.threshold),
-        esc(&v.message)
+        esc(&v.message),
+        esc(&v.detail)
     )
 }
 
@@ -400,11 +401,12 @@ pub fn render_summary(rep: &RunReport) -> String {
         out.push('\n');
         for v in &rep.verdicts {
             out.push_str(&format!(
-                "    [{}] {} @ step {}: {}\n",
+                "    [{}] {} @ step {}: {} ({})\n",
                 v.severity.as_str(),
                 v.kind,
                 v.step,
-                v.message
+                v.message,
+                v.detail
             ));
         }
     }

@@ -91,6 +91,10 @@ pub struct Verdict {
     /// the threshold it tripped against
     pub threshold: f64,
     pub message: String,
+    /// where the blame points: lane + offending stage label when flight
+    /// data was available (`obs::postmortem::slowest_stage`), the step
+    /// index otherwise.  Always non-empty.
+    pub detail: String,
 }
 
 /// Rolling anomaly detector; feed it once per recorded step.
@@ -180,6 +184,7 @@ impl HealthMonitor {
                                 med / base,
                                 base
                             ),
+                            detail: format!("step {step}"),
                         });
                     }
                 }
@@ -211,6 +216,7 @@ impl HealthMonitor {
                      oscillating, not settling",
                     self.cfg.window
                 ),
+                detail: format!("step {step}"),
             });
             // re-arm instead of firing every subsequent step
             self.backoff_steps.clear();
@@ -239,6 +245,7 @@ impl HealthMonitor {
                         self.best_ema.unwrap_or(f64::NAN),
                         self.steps_since_best
                     ),
+                    detail: format!("step {step}"),
                 });
             }
         }
@@ -260,6 +267,7 @@ impl HealthMonitor {
                          divergence ceiling {divergence_ceiling:.6}",
                         self.cfg.divergence_warn_frac * 100.0
                     ),
+                    detail: format!("step {step}"),
                 });
             }
         }
@@ -309,12 +317,23 @@ impl HealthMonitor {
                     "step {step} {lane} time {x:.3e}s vs trailing median {med:.3e}s \
                      (robust z = {z:.1})"
                 ),
+                detail: format!("step {step}"),
             });
         }
     }
 
     pub fn verdicts(&self) -> &[Verdict] {
         &self.verdicts
+    }
+
+    /// Upgrade a verdict's attribution after the fact.  The trainer calls
+    /// this on freshly-raised straggler verdicts when the flight recorder
+    /// has the step's span timeline: `detail` then names the slowest
+    /// (lane, stage) instead of just the step index.
+    pub fn set_detail(&mut self, idx: usize, detail: String) {
+        if let Some(v) = self.verdicts.get_mut(idx) {
+            v.detail = detail;
+        }
     }
 
     /// Healthy ⇔ no warn-severity verdicts (info verdicts don't fail a run).

@@ -72,6 +72,36 @@ pub fn reset_rate_limits() {
     s.counts.clear();
 }
 
+/// End-of-run accounting for the rate limiter: one summary line per label
+/// that overran [`LABEL_LIMIT`], saying how many lines were dropped after
+/// the suppression notice.  The trainer calls this at sink drain/seal so a
+/// pathological run (hundreds of skipped steps) leaves an audit trail
+/// instead of vanishing silently.  Summary lines bypass the per-label
+/// limit (they ARE the accounting) but still respect the level knob.
+pub fn drain_suppression_summary() {
+    if level() < LogLevel::Normal {
+        return;
+    }
+    let mut s = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    let overruns: Vec<(&'static str, u64)> = s
+        .counts
+        .iter()
+        .filter(|&&(_, c)| c > LABEL_LIMIT + 1)
+        .map(|&(l, c)| (l, c - (LABEL_LIMIT + 1)))
+        .collect();
+    for (label, dropped) in overruns {
+        let line = format!(
+            "[log] label '{label}': suppressed {dropped} line{} this run \
+             (limit {LABEL_LIMIT}/run)",
+            if dropped == 1 { "" } else { "s" }
+        );
+        match &mut s.capture {
+            Some(buf) => buf.push(line),
+            None => eprintln!("{line}"),
+        }
+    }
+}
+
 /// Begin capturing emitted lines (tests); ends with [`capture_end`].
 pub fn capture_begin() {
     let mut s = SINK.lock().unwrap_or_else(|e| e.into_inner());
@@ -188,6 +218,46 @@ mod tests {
         capture_begin();
         info("skip", "fresh run");
         assert_eq!(capture_end(), vec!["[skip] fresh run".to_string()]);
+    }
+
+    #[test]
+    fn drain_summary_accounts_for_dropped_lines() {
+        let _g = test_lock();
+        set_level(LogLevel::Normal);
+        reset_rate_limits();
+        capture_begin();
+        // 'skip' overruns by 9 dropped lines; 'eval' stays under the limit
+        for i in 0..(LABEL_LIMIT + 10) {
+            info("skip", &format!("overflow {i}"));
+        }
+        info("eval", "fine");
+        drain_suppression_summary();
+        let lines = capture_end();
+        let summary: Vec<&String> =
+            lines.iter().filter(|l| l.starts_with("[log]")).collect();
+        assert_eq!(summary.len(), 1, "exactly one overrunning label: {lines:?}");
+        assert_eq!(
+            summary[0],
+            &format!("[log] label 'skip': suppressed 9 lines this run (limit {LABEL_LIMIT}/run)")
+        );
+
+        // a clean run emits no summary at all
+        reset_rate_limits();
+        capture_begin();
+        info("skip", "one line");
+        drain_suppression_summary();
+        assert_eq!(capture_end(), vec!["[skip] one line".to_string()]);
+
+        // quiet mode silences the accounting like everything else
+        reset_rate_limits();
+        capture_begin();
+        for i in 0..(LABEL_LIMIT + 5) {
+            info("skip", &format!("overflow {i}"));
+        }
+        set_level(LogLevel::Quiet);
+        drain_suppression_summary();
+        set_level(LogLevel::Normal);
+        assert!(!capture_end().iter().any(|l| l.starts_with("[log]")));
     }
 
     #[test]

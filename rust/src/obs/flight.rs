@@ -1,0 +1,421 @@
+//! The flight recorder: a bounded ring of per-step forensic frames plus
+//! the global arming/trigger state machine.
+//!
+//! The ring itself ([`FlightRing`]) is a plain struct so retention can be
+//! property-tested without touching process-global state.  The global half
+//! mirrors `trace/` and `metrics/registry`: one relaxed [`AtomicBool`] is
+//! the only thing a disarmed seam ever touches, and everything mutable
+//! lives behind a single [`Mutex`].
+//!
+//! Sealing is one-shot: the *first* trigger wins, later triggers are
+//! no-ops.  The seal metadata (bundle path, config echo) is registered at
+//! arm time, so a trigger raised from a panicking pool thread
+//! ([`note_panic`]) can seal a bundle without any trainer cooperation —
+//! the whole point of a flight recorder is surviving the crash.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::health::Verdict;
+use crate::metrics::log as mlog;
+use crate::metrics::recorder::StepRecord;
+use crate::trace::StepTrace;
+
+/// Skipped frames in the retained window that count as a burst.
+pub const SKIP_BURST: usize = 3;
+
+/// One retained step: everything the other observability layers computed
+/// for it, cloned into the ring.
+#[derive(Debug, Clone)]
+pub struct FlightFrame {
+    pub step: u64,
+    /// the recorder row; `None` for a partial frame (the step died before
+    /// the recorder saw it — worker failure mid-step)
+    pub record: Option<StepRecord>,
+    /// the step's span timeline (partial for a dying step)
+    pub trace: Option<StepTrace>,
+    /// health verdicts raised *this* step
+    pub verdicts: Vec<Verdict>,
+    /// registry counter increments since the previous frame
+    pub counter_deltas: Vec<(&'static str, u64)>,
+    /// loss scale in effect (1.0 when scaling is off)
+    pub loss_scale: f64,
+    /// cumulative scaler overflow count (0 when scaling is off)
+    pub scaler_overflows: u64,
+    /// optimizer step clock: steps actually applied (skips excluded)
+    pub applied_steps: u64,
+}
+
+impl FlightFrame {
+    /// A frame for a step that died before the recorder saw it.
+    pub fn partial(step: u64, trace: Option<StepTrace>) -> FlightFrame {
+        FlightFrame {
+            step,
+            record: None,
+            trace,
+            verdicts: Vec::new(),
+            counter_deltas: Vec::new(),
+            loss_scale: 1.0,
+            scaler_overflows: 0,
+            applied_steps: 0,
+        }
+    }
+}
+
+/// Fixed-capacity ring retaining exactly the last `cap` pushed frames.
+#[derive(Debug)]
+pub struct FlightRing {
+    cap: usize,
+    frames: VecDeque<FlightFrame>,
+}
+
+impl FlightRing {
+    pub fn new(cap: usize) -> FlightRing {
+        let cap = cap.max(1);
+        FlightRing { cap, frames: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, f: FlightFrame) {
+        if self.frames.len() == self.cap {
+            self.frames.pop_front();
+        }
+        self.frames.push_back(f);
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    pub fn frames(&self) -> impl DoubleEndedIterator<Item = &FlightFrame> {
+        self.frames.iter()
+    }
+
+    pub fn last_step(&self) -> Option<u64> {
+        self.frames.back().map(|f| f.step)
+    }
+
+    /// Retained step indices, oldest first.
+    pub fn steps(&self) -> Vec<u64> {
+        self.frames.iter().map(|f| f.step).collect()
+    }
+
+    /// Skipped (overflow) frames in the retained window.
+    pub fn skipped_frames(&self) -> usize {
+        self.frames
+            .iter()
+            .filter(|f| f.record.as_ref().is_some_and(|r| r.skipped))
+            .count()
+    }
+}
+
+/// Where the culprit pre-attribution points: one (lane, stage) pair and,
+/// when it came from interval math, how long that stage held the lane.
+#[derive(Debug, Clone)]
+pub struct Culprit {
+    pub lane: String,
+    pub stage: String,
+    pub dur_s: f64,
+}
+
+/// What sealed the bundle.  `kind` is one of `health_verdict` |
+/// `skip_burst` | `worker_failure` | `pool_poison`.
+#[derive(Debug, Clone)]
+pub struct Trigger {
+    pub kind: &'static str,
+    pub step: u64,
+    pub message: String,
+    pub culprit: Option<Culprit>,
+}
+
+/// Registered at arm time so any thread can seal without the trainer.
+#[derive(Debug, Clone)]
+pub struct SealMeta {
+    /// bundle destination; `None` keeps the ring without sealing to disk
+    pub bundle: Option<PathBuf>,
+    /// run configuration echo, landed verbatim in the bundle
+    pub config_echo: Vec<(String, String)>,
+    /// ring capacity K
+    pub cap: usize,
+}
+
+struct FlightState {
+    ring: FlightRing,
+    meta: SealMeta,
+    /// previous frame's counter values, for delta computation
+    last_counters: Vec<(&'static str, u64)>,
+    /// the trigger that sealed this run, if any (first wins)
+    sealed: Option<Trigger>,
+    /// where the bundle actually landed
+    last_bundle: Option<PathBuf>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<FlightState>> = Mutex::new(None);
+
+/// The one disarmed-path cost: a relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the recorder: reset the ring to `meta.cap` frames and register the
+/// seal metadata.  Re-arming discards any previous state.
+pub fn arm(meta: SealMeta) {
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(FlightState {
+        ring: FlightRing::new(meta.cap),
+        last_counters: Vec::new(),
+        sealed: None,
+        last_bundle: None,
+        meta,
+    });
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm and drop all state; returns the sealed bundle path, if any.
+pub fn disarm() -> Option<PathBuf> {
+    ENABLED.store(false, Ordering::Relaxed);
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    g.take().and_then(|s| s.last_bundle)
+}
+
+/// The trigger that sealed the armed run, if any.
+pub fn sealed_trigger() -> Option<Trigger> {
+    let g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    g.as_ref().and_then(|s| s.sealed.clone())
+}
+
+/// Push one step's frame.  Counter deltas are computed here against the
+/// previous frame's registry snapshot (zeros when the registry is off).
+pub fn push_frame(mut frame: FlightFrame) {
+    if !enabled() {
+        return;
+    }
+    let snap = crate::metrics::registry::snapshot();
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(st) = g.as_mut() else { return };
+    frame.counter_deltas = snap
+        .counters
+        .iter()
+        .map(|&(name, v)| {
+            let prev = st
+                .last_counters
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map_or(0, |&(_, p)| p);
+            (name, v.saturating_sub(prev))
+        })
+        .collect();
+    st.last_counters = snap.counters;
+    st.ring.push(frame);
+}
+
+/// Raise a trigger.  The first trigger per armed run wins: it is recorded,
+/// and if a bundle path was registered the retained window is sealed to
+/// disk.  Returns the bundle path when a bundle was just written.
+pub fn trigger(t: Trigger) -> Option<PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let st = g.as_mut()?;
+    if st.sealed.is_some() {
+        return None;
+    }
+    st.sealed = Some(t.clone());
+    let path = st.meta.bundle.clone()?;
+    match super::postmortem::write_bundle(&path, &st.meta, &st.ring, &t) {
+        Ok(()) => {
+            st.last_bundle = Some(path.clone());
+            Some(path)
+        }
+        Err(e) => {
+            mlog::warn("flight", &format!("failed to seal postmortem bundle: {e:#}"));
+            None
+        }
+    }
+}
+
+/// Skip-burst trigger: call after pushing a skipped frame.  Fires when at
+/// least [`SKIP_BURST`] retained frames are skips.
+pub fn check_skip_burst(step: u64) -> Option<PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    let n = {
+        let g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+        g.as_ref().map_or(0, |s| s.ring.skipped_frames())
+    };
+    if n < SKIP_BURST {
+        return None;
+    }
+    trigger(Trigger {
+        kind: "skip_burst",
+        step,
+        message: format!(
+            "{n} skipped steps within the retained window — the loss scaler \
+             is burning batches, not settling"
+        ),
+        culprit: Some(Culprit {
+            lane: "coordinator".to_string(),
+            stage: "loss_scale".to_string(),
+            dur_s: 0.0,
+        }),
+    })
+}
+
+/// Worker-failure trigger: seals before the trainer surfaces the error, so
+/// the bundle names the failed lane even though the run is about to bail.
+pub fn worker_failure(step: u64, worker: usize, err: &str) -> Option<PathBuf> {
+    trigger(Trigger {
+        kind: "worker_failure",
+        step,
+        message: format!("worker {worker} failed at step {step}: {err}"),
+        culprit: Some(Culprit {
+            lane: format!("worker-{worker}"),
+            stage: "worker_grads".to_string(),
+            dur_s: 0.0,
+        }),
+    })
+}
+
+/// Panic hook for the pool / DAG scheduler: called from the thread that
+/// detected a poisoned region or a panicked stage, *before* the panic is
+/// re-raised.  Must stay cheap and lock-light — it runs on an unwinding
+/// path.  `origin` is "pool" or "dag"; `stage` is the panicking stage's
+/// label ("pool_region" when the pool cannot know).
+pub fn note_panic(origin: &'static str, stage: &'static str) {
+    if !enabled() {
+        return;
+    }
+    let step = {
+        let g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+        g.as_ref().and_then(|s| s.ring.last_step()).unwrap_or(0)
+    };
+    trigger(Trigger {
+        kind: "pool_poison",
+        step,
+        message: format!("{origin}: stage '{stage}' panicked and poisoned the region"),
+        culprit: Some(Culprit {
+            lane: origin.to_string(),
+            stage: stage.to_string(),
+            dur_s: 0.0,
+        }),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(step: u64, skipped: bool) -> FlightFrame {
+        FlightFrame {
+            step,
+            record: Some(StepRecord {
+                step,
+                lr: 1e-3,
+                loss: 1.0,
+                loss_ema: 1.0,
+                grad_norm: 1.0,
+                trust_ratio: 1.0,
+                tokens: 256,
+                wall_s: step as f64 * 0.01,
+                loss_scale: 1.0,
+                skipped,
+                comm_s: 0.0,
+                compute_s: 0.0,
+                overlap_eff: 0.0,
+                note: String::new(),
+            }),
+            trace: None,
+            verdicts: Vec::new(),
+            counter_deltas: Vec::new(),
+            loss_scale: 1.0,
+            scaler_overflows: 0,
+            applied_steps: step,
+        }
+    }
+
+    #[test]
+    fn ring_retains_exactly_last_k() {
+        let mut r = FlightRing::new(4);
+        for t in 1..=10 {
+            r.push(frame(t, false));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.steps(), vec![7, 8, 9, 10]);
+        assert_eq!(r.last_step(), Some(10));
+    }
+
+    #[test]
+    fn ring_cap_floor_is_one() {
+        let mut r = FlightRing::new(0);
+        r.push(frame(1, false));
+        r.push(frame(2, false));
+        assert_eq!(r.steps(), vec![2]);
+    }
+
+    #[test]
+    fn skipped_frames_counts_only_skips() {
+        let mut r = FlightRing::new(8);
+        for t in 1..=6 {
+            r.push(frame(t, t % 2 == 0));
+        }
+        assert_eq!(r.skipped_frames(), 3);
+        // eviction forgets old skips
+        let mut r = FlightRing::new(2);
+        r.push(frame(1, true));
+        r.push(frame(2, false));
+        r.push(frame(3, false));
+        assert_eq!(r.skipped_frames(), 0);
+    }
+
+    #[test]
+    fn first_trigger_wins_and_disarm_clears() {
+        // serialize against other global-state tests via the metrics lock
+        let _g = mlog::test_lock();
+        arm(SealMeta { bundle: None, config_echo: Vec::new(), cap: 4 });
+        assert!(enabled());
+        push_frame(frame(1, false));
+        trigger(Trigger { kind: "skip_burst", step: 1, message: "first".into(), culprit: None });
+        trigger(Trigger {
+            kind: "worker_failure",
+            step: 2,
+            message: "second".into(),
+            culprit: None,
+        });
+        let t = sealed_trigger().expect("first trigger recorded");
+        assert_eq!(t.kind, "skip_burst");
+        assert_eq!(t.message, "first");
+        assert_eq!(disarm(), None, "no bundle path registered");
+        assert!(!enabled());
+        assert!(sealed_trigger().is_none());
+    }
+
+    #[test]
+    fn disarmed_seams_are_inert() {
+        let _g = mlog::test_lock();
+        let _ = disarm();
+        push_frame(frame(1, false));
+        assert!(trigger(Trigger {
+            kind: "pool_poison",
+            step: 0,
+            message: "ignored".into(),
+            culprit: None
+        })
+        .is_none());
+        assert!(check_skip_burst(1).is_none());
+        note_panic("pool", "pool_region");
+        assert!(sealed_trigger().is_none());
+    }
+}

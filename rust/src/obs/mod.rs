@@ -1,0 +1,28 @@
+//! Forensic observability: the flight recorder and postmortem bundles.
+//!
+//! The third observability layer (DESIGN.md §13).  `trace/` answers *where
+//! the time went* while you watch; `metrics/` answers *is the run healthy*
+//! at the end; this module answers *what happened in the last K steps
+//! before it went wrong* — after the process is already dead.
+//!
+//! [`flight`] keeps a bounded ring of per-step [`flight::FlightFrame`]s
+//! (recorder row, span timeline, fresh health verdicts, registry counter
+//! deltas, loss-scaler and step-clock state).  On a trigger — a Warn
+//! health verdict, a loss-scale skip burst, an injected worker failure, or
+//! a poisoned pool region / panicked DAG stage — [`postmortem`] seals the
+//! retained window into a versioned JSON bundle on disk, pre-attributed to
+//! the slowest (lane, stage) by interval math over the retained spans.
+//! `lans-inspect postmortem` renders the bundle; `tools/check_postmortem.py`
+//! validates it in CI.
+//!
+//! Overhead contract (same as the other two layers): disarmed, every seam
+//! is one relaxed atomic load and a predictable branch — no allocation, no
+//! locks, no clock reads.  Armed, the recorder only *observes* (clones of
+//! already-computed state); training bits are identical either way, which
+//! `prop_flight_recorder_toggle_is_bit_invisible` enforces.
+
+pub mod flight;
+pub mod postmortem;
+
+pub use flight::{Culprit, FlightFrame, FlightRing, SealMeta, Trigger};
+pub use postmortem::{slowest_stage, BUNDLE_SCHEMA};

@@ -1,0 +1,293 @@
+//! Postmortem bundles: seal the flight ring to a versioned JSON file and
+//! pre-attribute the culprit (lane, stage) by interval math.
+//!
+//! The bundle is the crash-dump counterpart of the metrics `RunReport`:
+//! written once, by whichever thread raised the trigger, with everything
+//! an operator needs to answer "which stage, on which lane, at which
+//! step" without the process that died.  Serialization is the same
+//! hand-rolled strict JSON as `metrics/export` (no serde): every f64 goes
+//! through `num()` (non-finite → `null`), every string through `esc()`.
+//! `tools/check_postmortem.py` is the schema's keeper.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::flight::{Culprit, FlightFrame, FlightRing, SealMeta, Trigger};
+use crate::metrics::export::{create_with_parents, esc, num, verdict_json};
+use crate::trace::{self, StepTrace};
+
+/// Version tag; bump on any breaking change to the bundle layout.
+pub const BUNDLE_SCHEMA: &str = "lans-postmortem-v1";
+
+/// The slowest (lane, stage) of a step: group the step's `sched` / `comm`
+/// / `compute` spans by (lane, label), take each group's union measure
+/// (nested and repeated spans count once), and return the largest.  This
+/// is what upgrades a straggler verdict from "a step was slow" to "the
+/// reduce-scatter on lans-pool-3 held the step".
+pub fn slowest_stage(st: &StepTrace) -> Option<Culprit> {
+    let mut groups: Vec<(&str, &'static str, Vec<(f64, f64)>)> = Vec::new();
+    for lane in &st.lanes {
+        for s in &lane.spans {
+            if s.cat != trace::CAT_SCHED
+                && s.cat != trace::CAT_COMM
+                && s.cat != trace::CAT_COMPUTE
+            {
+                continue;
+            }
+            let iv = (s.start_s, s.end_s());
+            match groups
+                .iter_mut()
+                .find(|(l, lab, _)| *l == lane.name && *lab == s.label)
+            {
+                Some((_, _, ivs)) => ivs.push(iv),
+                None => groups.push((&lane.name, s.label, vec![iv])),
+            }
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(lane, label, ivs)| {
+            let dur = trace::measure(&trace::merge(ivs));
+            (lane.to_string(), label, dur)
+        })
+        .max_by(|a, b| a.2.total_cmp(&b.2))
+        .map(|(lane, stage, dur_s)| Culprit { lane, stage: stage.to_string(), dur_s })
+}
+
+fn culprit_json(c: &Culprit) -> String {
+    format!(
+        "{{\"lane\": \"{}\", \"stage\": \"{}\", \"dur_s\": {}}}",
+        esc(&c.lane),
+        esc(&c.stage),
+        num(c.dur_s)
+    )
+}
+
+fn spans_json(st: &StepTrace) -> String {
+    let mut out = String::from("[");
+    let mut first = true;
+    for lane in &st.lanes {
+        for s in &lane.spans {
+            if !first {
+                out.push_str(", ");
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"lane\": \"{}\", \"cat\": \"{}\", \"label\": \"{}\", \
+                 \"start_s\": {}, \"dur_s\": {}, \"detail\": {}}}",
+                esc(&lane.name),
+                esc(s.cat),
+                esc(s.label),
+                num(s.start_s),
+                num(s.dur_s),
+                s.detail
+            ));
+        }
+    }
+    out.push(']');
+    out
+}
+
+fn frame_json(f: &FlightFrame) -> String {
+    let record = match &f.record {
+        Some(r) => format!(
+            "{{\"lr\": {}, \"loss\": {}, \"loss_ema\": {}, \"grad_norm\": {}, \
+             \"trust_ratio\": {}, \"tokens\": {}, \"wall_s\": {}, \"comm_s\": {}, \
+             \"compute_s\": {}, \"overlap_eff\": {}, \"skipped\": {}, \"note\": \"{}\"}}",
+            num(r.lr),
+            num(r.loss),
+            num(r.loss_ema),
+            num(r.grad_norm),
+            num(r.trust_ratio),
+            r.tokens,
+            num(r.wall_s),
+            num(r.comm_s),
+            num(r.compute_s),
+            num(r.overlap_eff),
+            r.skipped,
+            esc(&r.note)
+        ),
+        None => "null".to_string(),
+    };
+    let deltas = f
+        .counter_deltas
+        .iter()
+        .map(|(n, v)| format!("\"{}\": {v}", esc(n)))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let verdicts = f.verdicts.iter().map(verdict_json).collect::<Vec<_>>().join(", ");
+    let spans = match &f.trace {
+        Some(st) => spans_json(st),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"step\": {}, \"partial\": {}, \"applied_steps\": {}, \"loss_scale\": {}, \
+         \"scaler_overflows\": {}, \"record\": {record}, \"counter_deltas\": {{{deltas}}}, \
+         \"verdicts\": [{verdicts}], \"spans\": {spans}}}",
+        f.step,
+        f.record.is_none(),
+        f.applied_steps,
+        num(f.loss_scale),
+        f.scaler_overflows
+    )
+}
+
+/// Render the whole bundle.  Split from [`write_bundle`] for tests.
+pub fn bundle_json(meta: &SealMeta, ring: &FlightRing, trig: &Trigger) -> String {
+    // pre-attribution: an explicit culprit from the trigger wins; a timing
+    // trigger without one falls back to interval math over the newest
+    // retained timeline
+    let culprit = trig.culprit.clone().or_else(|| {
+        ring.frames()
+            .filter_map(|f| f.trace.as_ref())
+            .next_back()
+            .and_then(slowest_stage)
+    });
+    let config = meta
+        .config_echo
+        .iter()
+        .map(|(k, v)| format!("    \"{}\": \"{}\"", esc(k), esc(v)))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let frames = ring
+        .frames()
+        .map(|f| format!("    {}", frame_json(f)))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let verdicts = ring
+        .frames()
+        .flat_map(|f| f.verdicts.iter())
+        .map(|v| format!("    {}", verdict_json(v)))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let snap = crate::metrics::registry::snapshot();
+    let counters = snap
+        .counters
+        .iter()
+        .map(|(n, v)| format!("\"{}\": {v}", esc(n)))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let gauges = snap
+        .gauges
+        .iter()
+        .map(|(n, v)| format!("\"{}\": {}", esc(n), num(*v)))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let scaler = ring
+        .frames()
+        .next_back()
+        .map(|f| {
+            format!(
+                "{{\"loss_scale\": {}, \"overflows\": {}}}",
+                num(f.loss_scale),
+                f.scaler_overflows
+            )
+        })
+        .unwrap_or_else(|| "null".to_string());
+    format!(
+        "{{\n  \"schema\": \"{BUNDLE_SCHEMA}\",\n  \"trigger\": {{\"kind\": \"{}\", \
+         \"step\": {}, \"message\": \"{}\"}},\n  \"culprit\": {},\n  \"config\": {{\n{}\n  }},\n  \
+         \"flight_steps\": {},\n  \"frames\": [\n{}\n  ],\n  \"verdicts\": [\n{}\n  ],\n  \
+         \"registry\": {{\"counters\": {{{counters}}}, \"gauges\": {{{gauges}}}}},\n  \
+         \"scaler\": {scaler}\n}}\n",
+        esc(trig.kind),
+        trig.step,
+        esc(&trig.message),
+        culprit.as_ref().map(culprit_json).unwrap_or_else(|| "null".to_string()),
+        config,
+        ring.cap(),
+        frames,
+        verdicts,
+    )
+}
+
+/// Seal the retained window to `path` (parents created on demand).
+pub(crate) fn write_bundle(
+    path: &Path,
+    meta: &SealMeta,
+    ring: &FlightRing,
+    trig: &Trigger,
+) -> Result<()> {
+    let mut f = create_with_parents(path)?;
+    f.write_all(bundle_json(meta, ring, trig).as_bytes())
+        .with_context(|| format!("writing postmortem bundle {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Lane, TraceSpan};
+
+    fn span(cat: &'static str, label: &'static str, start: f64, dur: f64) -> TraceSpan {
+        TraceSpan { cat, label, start_s: start, dur_s: dur, detail: 0 }
+    }
+
+    #[test]
+    fn slowest_stage_unions_per_lane_label() {
+        let st = StepTrace {
+            step: 7,
+            lanes: vec![
+                Lane {
+                    name: "coordinator".into(),
+                    spans: vec![
+                        span(trace::CAT_COMM, "reduce_scatter", 0.0, 0.004),
+                        // overlapping re-entry must union, not sum
+                        span(trace::CAT_COMM, "reduce_scatter", 0.002, 0.003),
+                        span(trace::CAT_STEP, "train_step", 0.0, 0.020),
+                    ],
+                },
+                Lane {
+                    name: "lans-pool-1".into(),
+                    spans: vec![span(trace::CAT_COMPUTE, "optim_step", 0.001, 0.009)],
+                },
+            ],
+        };
+        let c = slowest_stage(&st).expect("culprit");
+        assert_eq!(c.lane, "lans-pool-1");
+        assert_eq!(c.stage, "optim_step");
+        assert!((c.dur_s - 0.009).abs() < 1e-12);
+        // the step-category wrapper must not win: it is not a stage
+        assert_ne!(c.stage, "train_step");
+    }
+
+    #[test]
+    fn slowest_stage_empty_trace_is_none() {
+        assert!(slowest_stage(&StepTrace { step: 0, lanes: Vec::new() }).is_none());
+    }
+
+    #[test]
+    fn bundle_json_is_valid_and_versioned() {
+        let meta = SealMeta {
+            bundle: None,
+            config_echo: vec![("seed".into(), "42".into()), ("opt".into(), "lans".into())],
+            cap: 4,
+        };
+        let mut ring = FlightRing::new(4);
+        let mut f = FlightFrame::partial(3, None);
+        f.loss_scale = 1024.0;
+        ring.push(f);
+        let trig = Trigger {
+            kind: "worker_failure",
+            step: 3,
+            message: "worker 1 failed: \"injected\"".into(),
+            culprit: Some(Culprit {
+                lane: "worker-1".into(),
+                stage: "worker_grads".into(),
+                dur_s: 0.0,
+            }),
+        };
+        let s = bundle_json(&meta, &ring, &trig);
+        let j = crate::util::json::Json::parse(&s).expect("bundle parses");
+        assert_eq!(j.expect("schema").as_str(), Some(BUNDLE_SCHEMA));
+        assert_eq!(j.expect("trigger").expect("kind").as_str(), Some("worker_failure"));
+        assert_eq!(j.expect("culprit").expect("lane").as_str(), Some("worker-1"));
+        assert_eq!(j.expect("config").expect("seed").as_str(), Some("42"));
+        let frames = j.expect("frames").as_arr().expect("frames array");
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].expect("step").as_usize(), Some(3));
+        assert_eq!(frames[0].expect("partial").as_bool(), Some(true));
+    }
+}

@@ -257,8 +257,9 @@ pub fn collect(step: u64) -> StepTrace {
     StepTrace { step, lanes }
 }
 
-/// Merge sorted-or-not intervals into a disjoint ascending list.
-fn merge(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+/// Merge sorted-or-not intervals into a disjoint ascending list.  Shared
+/// with `obs::postmortem`'s culprit attribution.
+pub(crate) fn merge(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
     iv.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
     for (s, e) in iv {
@@ -270,7 +271,7 @@ fn merge(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
     out
 }
 
-fn measure(iv: &[(f64, f64)]) -> f64 {
+pub(crate) fn measure(iv: &[(f64, f64)]) -> f64 {
     iv.iter().map(|(s, e)| e - s).sum()
 }
 

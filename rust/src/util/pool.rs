@@ -461,9 +461,13 @@ fn run_region(shared: &Shared, count: usize, run: &(dyn Fn(usize) + Sync)) {
     }
 
     if let Some(payload) = caller_panic {
+        // the flight recorder seals its postmortem bundle before the panic
+        // leaves this frame — after the unwind there is nobody left to ask
+        crate::obs::flight::note_panic("pool", "pool_region");
         std::panic::resume_unwind(payload);
     }
     if region.poisoned.load(Ordering::Relaxed) {
+        crate::obs::flight::note_panic("pool", "pool_region");
         // resume the first worker's payload so the original panic
         // message and location survive the thread hop
         if let Some(payload) = region.payload.lock().unwrap().take() {

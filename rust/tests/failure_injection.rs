@@ -4,7 +4,7 @@
 use std::path::{Path, PathBuf};
 
 use lans::checkpoint::Checkpoint;
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::Trainer;
 use lans::optim::{BlockTable, Hyper, Schedule, ShardedOptimizer};
 use lans::precision::{DType, LossScale};
@@ -55,6 +55,8 @@ fn base_cfg(meta: PathBuf) -> TrainConfig {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     }
 }
 

@@ -1735,3 +1735,126 @@ fn prop_health_seeded_faults_are_flagged() {
         assert!(!mon.healthy(), "fault flagged but run still called healthy");
     });
 }
+
+// ---------------------------------------------------------------------------
+// flight recorder properties (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_flight_ring_retains_exactly_last_k() {
+    // the bounded-memory contract: however many frames a run pushes, the
+    // ring holds exactly min(pushed, K) frames and they are precisely the
+    // *last* K steps, in order.  K=0 is clamped to 1 so a misconfigured
+    // cap can never make a sealed bundle frameless.
+    use lans::obs::{FlightFrame, FlightRing};
+    for_cases(200, |seed, rng| {
+        let cap = rng.below_usize(64); // includes the degenerate 0
+        let pushes = rng.below_usize(200);
+        let first_step = 1 + rng.below(1000);
+        let mut ring = FlightRing::new(cap);
+        let eff_cap = cap.max(1);
+        assert_eq!(ring.cap(), eff_cap);
+        for i in 0..pushes {
+            ring.push(FlightFrame::partial(first_step + i as u64, None));
+        }
+        assert_eq!(
+            ring.len(),
+            pushes.min(eff_cap),
+            "seed {seed}: cap {cap}, {pushes} pushes"
+        );
+        let want: Vec<u64> = (0..pushes as u64)
+            .map(|i| first_step + i)
+            .skip(pushes.saturating_sub(eff_cap))
+            .collect();
+        assert_eq!(ring.steps(), want, "seed {seed}: ring must keep the LAST K steps");
+        assert_eq!(ring.last_step(), want.last().copied());
+        assert_eq!(ring.is_empty(), pushes == 0);
+    });
+}
+
+#[test]
+fn prop_flight_recorder_toggle_is_bit_invisible() {
+    // the flight recorder's half of the overhead contract, mirroring
+    // `prop_metrics_registry_toggle_is_bit_invisible`: arming the recorder
+    // — frames pushed every step, a bundle sealed at the end — must not
+    // change a single bit of parameters, collective outputs or step stats
+    // versus the disarmed run, because the recorder only *observes* state
+    // the trainer already computed.
+    let _g = METRICS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for_cases(15, |seed, rng| {
+        let nblocks = 1 + rng.below_usize(4);
+        let specs: Vec<(String, usize, bool)> = (0..nblocks)
+            .map(|i| (format!("b{i}"), 1 + rng.below_usize(6000), rng.next_f64() < 0.5))
+            .collect();
+        let table = BlockTable::new(&specs);
+        let w = 2 + rng.below_usize(4);
+        let pool = ThreadPool::new(4);
+        let x0: Vec<f32> = (0..table.total).map(|_| rng.normal_f32()).collect();
+        let grads: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..table.total).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let bundle = std::env::temp_dir().join(format!("lans_flight_prop_{seed}.json"));
+        let _ = std::fs::remove_file(&bundle);
+
+        let run_leg = |armed: bool| -> (Vec<f32>, Vec<Vec<f32>>, Vec<(f64, f64)>) {
+            lans::obs::flight::disarm(); // leave no state from prior legs/tests
+            if armed {
+                lans::obs::flight::arm(lans::obs::SealMeta {
+                    bundle: Some(bundle.clone()),
+                    config_echo: vec![("seed".into(), format!("{seed}"))],
+                    cap: 8,
+                });
+            }
+            let mut opt = make_optimizer("lans", table.clone(), Hyper::default()).unwrap();
+            let mut x = x0.clone();
+            let mut stats = Vec::new();
+            for (t, g) in grads.iter().enumerate() {
+                let s = opt.step_parallel(&pool, &mut x, g, 0.003);
+                stats.push((s.grad_norm, s.mean_trust_ratio));
+                if lans::obs::flight::enabled() {
+                    lans::obs::flight::push_frame(lans::obs::FlightFrame::partial(
+                        1 + t as u64,
+                        None,
+                    ));
+                }
+            }
+            let mut b = bufs.clone();
+            hierarchical_allreduce_pooled(
+                &mut b,
+                &Topology::flat(w),
+                TierPrecision::fp32(),
+                &pool,
+            );
+            if armed {
+                let sealed = lans::obs::flight::trigger(lans::obs::Trigger {
+                    kind: "health_verdict",
+                    step: grads.len() as u64,
+                    message: "proptest seal".into(),
+                    culprit: None,
+                });
+                assert!(sealed.is_some(), "armed leg with bundle path must seal");
+                lans::obs::flight::disarm();
+            }
+            (x, b, stats)
+        };
+
+        let (x_off, b_off, s_off) = run_leg(false);
+        let (x_on, b_on, s_on) = run_leg(true);
+        assert_eq!(x_off, x_on, "arming the flight recorder changed the parameter bits");
+        assert_eq!(b_off, b_on, "arming the flight recorder changed the collective bits");
+        assert_eq!(s_off, s_on, "arming the flight recorder changed the step stats");
+
+        // and the armed leg actually sealed a valid, versioned bundle
+        let bj = Json::parse(&std::fs::read_to_string(&bundle).unwrap()).unwrap();
+        assert_eq!(bj.expect("schema").as_str(), Some(lans::obs::BUNDLE_SCHEMA));
+        assert_eq!(
+            bj.expect("frames").as_arr().unwrap().len(),
+            grads.len().min(8),
+            "sealed bundle frame count vs ring cap"
+        );
+        let _ = std::fs::remove_file(&bundle);
+    });
+}

@@ -8,7 +8,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use lans::config::{DataConfig, MetricsConfig, OptBackend, TrainConfig};
+use lans::config::{DataConfig, FlightConfig, MetricsConfig, OptBackend, TrainConfig};
 use lans::coordinator::{DataSource, TrainStatus, Trainer};
 use lans::optim::{make_optimizer, BlockTable, Hyper, Optimizer, Schedule};
 use lans::precision::{DType, LossScale};
@@ -179,6 +179,8 @@ fn trainer_loss_decreases_small_run() {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
     let mut tr = Trainer::new(cfg).unwrap();
     assert_eq!(tr.effective_batch(), 16);
@@ -233,6 +235,8 @@ fn trainer_on_declared_topology_keeps_bits_and_accounts_wire() {
         trace: None,
         metrics: MetricsConfig::default(),
         stop_on_divergence: true,
+        flight: FlightConfig::default(),
+        inject_failure: None,
     };
     let grid = Topology::grid(2, 2);
 

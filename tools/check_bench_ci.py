@@ -86,6 +86,9 @@ REQUIRED_SMOKE_VALIDATORS = [
     ("tools/check_trace.py", "tools/check_trace.py"),
     ("tools/check_metrics.py --self-test", "check_metrics.py --self-test"),
     ("tools/check_metrics.py (smoke artifacts)", "check_metrics.py target/"),
+    ("tools/check_postmortem.py --self-test", "check_postmortem.py --self-test"),
+    ("tools/check_postmortem.py (smoke bundle)", "check_postmortem.py target/"),
+    ("lans-inspect postmortem render", "--bin lans-inspect"),
 ]
 
 

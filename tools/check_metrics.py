@@ -43,7 +43,8 @@ JSONL_FIELDS = (
     "note",
 )
 TIME_FIELDS = ("samples", "mean_s", "p50_s", "p90_s", "p99_s", "max_s")
-VERDICT_FIELDS = ("kind", "severity", "step", "value", "threshold", "message")
+VERDICT_FIELDS = ("kind", "severity", "step", "value", "threshold", "message",
+                  "detail")
 
 
 class CheckError(Exception):
@@ -239,6 +240,12 @@ def check_report_doc(doc):
             fail(f"report: verdict {i} severity {v['severity']!r}")
         if not is_int(v["step"]) or v["step"] < 0:
             fail(f"report: verdict {i} bad step {v['step']!r}")
+        if not isinstance(v["detail"], str) or not v["detail"]:
+            fail(
+                f"report: verdict {i} detail is {v['detail']!r}, want "
+                f"non-empty string (the monitor always attributes at least "
+                f"the step index)"
+            )
         if v["severity"] == "warn":
             warns += 1
     if health["healthy"] != (warns == 0):
@@ -319,6 +326,7 @@ def fixture_pair():
             "verdicts": [{
                 "kind": "loss_scale_thrash", "severity": "warn", "step": 3,
                 "value": 1.0, "threshold": 3.0, "message": "1 backoff",
+                "detail": "step 3",
             }],
         },
         "model": {"model_step_time_s": 0.009, "measured_step_time_s": 0.01,
@@ -382,6 +390,10 @@ def self_test():
                        lambda d: d["health"].update(healthy=True)),
         corrupt_report("verdict with unknown severity",
                        lambda d: d["health"]["verdicts"][0].update(severity="fatal")),
+        corrupt_report("verdict with empty detail",
+                       lambda d: d["health"]["verdicts"][0].update(detail="")),
+        corrupt_report("verdict missing detail",
+                       lambda d: drop(d["health"]["verdicts"][0], "detail")),
         corrupt_report("model missing entirely",
                        lambda d: drop(d, "model")),
         ("jsonl/report step count mismatch",

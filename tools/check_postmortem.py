@@ -1,0 +1,457 @@
+#!/usr/bin/env python3
+"""Validate a flight-recorder postmortem bundle (DESIGN.md §13).
+
+Usage: check_postmortem.py BUNDLE.json
+       check_postmortem.py --self-test
+
+Checks the schema contract the bundle writer
+(`rust/src/obs/postmortem.rs`) guarantees and CI relies on:
+
+Envelope (single ``lans-postmortem-v1`` document):
+  * ``trigger`` names one of the four trigger kinds, a step, and a
+    non-empty message;
+  * ``culprit`` is null or a (lane, stage, dur_s) pre-attribution;
+  * ``config`` is a flat string→string echo of the run's knobs;
+  * ``registry`` carries non-negative integer counters and numeric (or
+    null) gauges; ``scaler`` is null or (loss_scale, overflows).
+
+Frames (the retained last-K window):
+  * non-empty, at most ``flight_steps`` entries;
+  * steps strictly consecutive (+1 — the ring never gaps);
+  * ``partial`` is exactly "no StepRecord" (the failing step's frame);
+  * spans, when present, carry the full (lane, cat, label, timing) set.
+
+Trigger↔evidence cross-checks:
+  * the trigger step is the last retained frame's step (or one past it,
+    for panics sealed before the frame landed);
+  * ``worker_failure`` must pre-attribute a ``worker-N`` lane and end on
+    a partial frame;
+  * ``health_verdict`` must retain a warn-severity verdict at the
+    trigger step;
+  * ``skip_burst`` must retain at least SKIP_BURST skipped frames;
+  * ``pool_poison`` must say what panicked.
+
+Exit code 0 on pass, 1 with a diagnostic otherwise.
+"""
+
+import json
+import sys
+
+BUNDLE_SCHEMA = "lans-postmortem-v1"
+TRIGGER_KINDS = ("health_verdict", "skip_burst", "worker_failure", "pool_poison")
+# mirrors rust/src/obs/flight.rs::SKIP_BURST
+SKIP_BURST = 3
+
+VERDICT_FIELDS = ("kind", "severity", "step", "value", "threshold", "message",
+                  "detail")
+FRAME_FIELDS = ("step", "partial", "applied_steps", "loss_scale",
+                "scaler_overflows", "record", "counter_deltas", "verdicts",
+                "spans")
+RECORD_FIELDS = ("lr", "loss", "loss_ema", "grad_norm", "trust_ratio",
+                 "tokens", "wall_s", "comm_s", "compute_s", "overlap_eff",
+                 "skipped", "note")
+SPAN_FIELDS = ("lane", "cat", "label", "start_s", "dur_s", "detail")
+
+
+class CheckError(Exception):
+    pass
+
+
+def fail(msg):
+    raise CheckError(msg)
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def is_num_or_null(x):
+    return x is None or is_num(x)
+
+
+def is_int(x):
+    return isinstance(x, int) and not isinstance(x, bool)
+
+
+def check_verdict(label, v):
+    if not isinstance(v, dict):
+        fail(f"{label}: not an object")
+    for field in VERDICT_FIELDS:
+        if field not in v:
+            fail(f"{label}: missing {field!r}")
+    if v["severity"] not in ("info", "warn"):
+        fail(f"{label}: severity {v['severity']!r}")
+    if not is_int(v["step"]) or v["step"] < 0:
+        fail(f"{label}: bad step {v['step']!r}")
+    if not isinstance(v["detail"], str) or not v["detail"]:
+        fail(f"{label}: detail is {v['detail']!r}, want non-empty string")
+
+
+def check_frame(label, f):
+    if not isinstance(f, dict):
+        fail(f"{label}: not an object")
+    for field in FRAME_FIELDS:
+        if field not in f:
+            fail(f"{label}: missing {field!r}")
+    if not is_int(f["step"]) or f["step"] < 0:
+        fail(f"{label}: bad step {f['step']!r}")
+    if not isinstance(f["partial"], bool):
+        fail(f"{label}: partial is {f['partial']!r}, want bool")
+    if not is_int(f["applied_steps"]) or f["applied_steps"] < 0:
+        fail(f"{label}: bad applied_steps {f['applied_steps']!r}")
+    if not is_num_or_null(f["loss_scale"]):
+        fail(f"{label}: loss_scale is {f['loss_scale']!r}")
+    if not is_int(f["scaler_overflows"]) or f["scaler_overflows"] < 0:
+        fail(f"{label}: bad scaler_overflows {f['scaler_overflows']!r}")
+
+    record = f["record"]
+    if f["partial"] != (record is None):
+        fail(f"{label}: partial={f['partial']} but record is "
+             f"{'null' if record is None else 'present'} — partial means "
+             f"exactly 'no StepRecord'")
+    if record is not None:
+        if not isinstance(record, dict):
+            fail(f"{label}: record must be null or an object")
+        for field in RECORD_FIELDS:
+            if field not in record:
+                fail(f"{label}: record missing {field!r}")
+        if not isinstance(record["skipped"], bool):
+            fail(f"{label}: record.skipped is {record['skipped']!r}")
+        for field in ("lr", "loss", "loss_ema", "grad_norm", "trust_ratio",
+                      "wall_s", "comm_s", "compute_s", "overlap_eff"):
+            if not is_num_or_null(record[field]):
+                fail(f"{label}: record.{field} is {record[field]!r}")
+
+    if not isinstance(f["counter_deltas"], dict):
+        fail(f"{label}: counter_deltas must be an object")
+    for name, v in f["counter_deltas"].items():
+        if not is_int(v) or v < 0:
+            fail(f"{label}: counter delta {name!r} is {v!r}")
+    if not isinstance(f["verdicts"], list):
+        fail(f"{label}: verdicts must be a list")
+    for i, v in enumerate(f["verdicts"]):
+        check_verdict(f"{label} verdict {i}", v)
+
+    spans = f["spans"]
+    if spans is not None:
+        if not isinstance(spans, list):
+            fail(f"{label}: spans must be null or a list")
+        for i, s in enumerate(spans):
+            slabel = f"{label} span {i}"
+            if not isinstance(s, dict):
+                fail(f"{slabel}: not an object")
+            for field in SPAN_FIELDS:
+                if field not in s:
+                    fail(f"{slabel}: missing {field!r}")
+            for field in ("start_s", "dur_s"):
+                if not is_num(s[field]) or s[field] < 0:
+                    fail(f"{slabel}: {field} is {s[field]!r}")
+
+
+def check_bundle_doc(doc):
+    """Validate a parsed bundle; returns (trigger_kind, trigger_step, frames)."""
+    if not isinstance(doc, dict):
+        fail("bundle: top level must be an object")
+    if doc.get("schema") != BUNDLE_SCHEMA:
+        fail(f"bundle: schema is {doc.get('schema')!r}, want {BUNDLE_SCHEMA!r}")
+
+    trig = doc.get("trigger")
+    if not isinstance(trig, dict):
+        fail("bundle: trigger must be an object")
+    for field in ("kind", "step", "message"):
+        if field not in trig:
+            fail(f"bundle: trigger missing {field!r}")
+    kind = trig["kind"]
+    if kind not in TRIGGER_KINDS:
+        fail(f"bundle: trigger kind {kind!r}, want one of {TRIGGER_KINDS}")
+    if not is_int(trig["step"]) or trig["step"] < 0:
+        fail(f"bundle: bad trigger step {trig['step']!r}")
+    if not isinstance(trig["message"], str) or not trig["message"]:
+        fail("bundle: trigger message must be a non-empty string")
+
+    culprit = doc.get("culprit", "absent")
+    if culprit == "absent":
+        fail("bundle: missing 'culprit' (null when nothing was attributed)")
+    if culprit is not None:
+        if not isinstance(culprit, dict):
+            fail("bundle: culprit must be null or an object")
+        for field in ("lane", "stage"):
+            if not isinstance(culprit.get(field), str) or not culprit[field]:
+                fail(f"bundle: culprit {field} is {culprit.get(field)!r}, "
+                     f"want non-empty string")
+        if not is_num_or_null(culprit.get("dur_s", "absent")):
+            fail(f"bundle: culprit dur_s is {culprit.get('dur_s')!r}")
+
+    config = doc.get("config")
+    if not isinstance(config, dict):
+        fail("bundle: config must be an object")
+    for k, v in config.items():
+        if not isinstance(v, str):
+            fail(f"bundle: config {k!r} is {v!r}, want string (the echo is "
+                 f"rendered, not typed)")
+
+    flight_steps = doc.get("flight_steps")
+    if not is_int(flight_steps) or flight_steps < 1:
+        fail(f"bundle: bad flight_steps {flight_steps!r}")
+
+    frames = doc.get("frames")
+    if not isinstance(frames, list) or not frames:
+        fail("bundle: frames must be a non-empty list — a sealed bundle "
+             "always retains at least the triggering window")
+    if len(frames) > flight_steps:
+        fail(f"bundle: {len(frames)} frames exceed flight_steps {flight_steps}")
+    for i, f in enumerate(frames):
+        check_frame(f"frame {i}", f)
+    for prev, cur in zip(frames, frames[1:]):
+        if cur["step"] != prev["step"] + 1:
+            fail(f"bundle: frame steps gap: {prev['step']} -> {cur['step']} "
+                 f"(the ring retains consecutive steps)")
+
+    verdicts = doc.get("verdicts")
+    if not isinstance(verdicts, list):
+        fail("bundle: verdicts must be a list")
+    for i, v in enumerate(verdicts):
+        check_verdict(f"bundle verdict {i}", v)
+    flattened = [(v["kind"], v["step"]) for f in frames for v in f["verdicts"]]
+    if [(v["kind"], v["step"]) for v in verdicts] != flattened:
+        fail("bundle: top-level verdicts must flatten the frame verdicts, "
+             "in order")
+
+    registry = doc.get("registry")
+    if not isinstance(registry, dict):
+        fail("bundle: registry must be an object")
+    counters = registry.get("counters")
+    if not isinstance(counters, dict):
+        fail("bundle: registry.counters must be an object")
+    for name, v in counters.items():
+        if not is_int(v) or v < 0:
+            fail(f"bundle: counter {name!r} is {v!r}")
+    gauges = registry.get("gauges")
+    if not isinstance(gauges, dict):
+        fail("bundle: registry.gauges must be an object")
+    for name, v in gauges.items():
+        if not is_num_or_null(v):
+            fail(f"bundle: gauge {name!r} is {v!r}")
+
+    scaler = doc.get("scaler", "absent")
+    if scaler == "absent":
+        fail("bundle: missing 'scaler' (null when no frame was retained)")
+    if scaler is not None:
+        if not isinstance(scaler, dict):
+            fail("bundle: scaler must be null or an object")
+        if not is_num_or_null(scaler.get("loss_scale", "absent")):
+            fail(f"bundle: scaler.loss_scale is {scaler.get('loss_scale')!r}")
+        if not is_int(scaler.get("overflows")) or scaler["overflows"] < 0:
+            fail(f"bundle: scaler.overflows is {scaler.get('overflows')!r}")
+
+    # ---- trigger ↔ evidence cross-checks ---------------------------------
+    last_step = frames[-1]["step"]
+    if not 0 <= trig["step"] - last_step <= 1:
+        fail(f"bundle: trigger step {trig['step']} vs last frame {last_step} "
+             f"— the trigger must be at (or one past) the retained window")
+
+    if kind == "worker_failure":
+        if culprit is None or not culprit["lane"].startswith("worker-"):
+            fail(f"bundle: worker_failure must pre-attribute a worker-N "
+                 f"lane, culprit is {culprit!r}")
+        if not frames[-1]["partial"]:
+            fail("bundle: worker_failure must end on a partial frame (the "
+                 "step died before its record existed)")
+    elif kind == "health_verdict":
+        if not any(v["severity"] == "warn" and v["step"] == trig["step"]
+                   for v in verdicts):
+            fail(f"bundle: health_verdict trigger at step {trig['step']} "
+                 f"but no warn verdict at that step is retained")
+    elif kind == "skip_burst":
+        skipped = sum(1 for f in frames
+                      if f["record"] is not None and f["record"]["skipped"])
+        if skipped < SKIP_BURST:
+            fail(f"bundle: skip_burst trigger but only {skipped} skipped "
+                 f"frame(s) retained (burst threshold {SKIP_BURST})")
+    elif kind == "pool_poison":
+        if "panicked" not in trig["message"]:
+            fail("bundle: pool_poison trigger must say what panicked, "
+                 f"message is {trig['message']!r}")
+    return kind, trig["step"], frames
+
+
+# ---------------------------------------------------------------------------
+# Self-test: one clean fixture per trigger kind, then a corruption matrix.
+# ---------------------------------------------------------------------------
+
+def fixture_frame(step, **over):
+    f = {
+        "step": step, "partial": False, "applied_steps": step,
+        "loss_scale": 65536.0, "scaler_overflows": 0,
+        "record": {
+            "lr": 1e-3, "loss": 5.0 - 0.1 * step, "loss_ema": 5.0,
+            "grad_norm": 1.0, "trust_ratio": 0.9, "tokens": 64 * step,
+            "wall_s": 0.01 * step, "comm_s": 0.002, "compute_s": 0.006,
+            "overlap_eff": 0.5, "skipped": False, "note": "",
+        },
+        "counter_deltas": {"wire.intra_bytes": 4096},
+        "verdicts": [],
+        "spans": [{"lane": "coordinator", "cat": "comm", "label": "allreduce",
+                   "start_s": 0.001, "dur_s": 0.002, "detail": 0}],
+    }
+    f.update(over)
+    return f
+
+
+def fixture_bundle(kind):
+    frames = [fixture_frame(t) for t in range(3, 7)]
+    trig = {"kind": kind, "step": 6, "message": "fixture trigger"}
+    culprit = {"lane": "coordinator", "stage": "allreduce", "dur_s": 0.002}
+    if kind == "worker_failure":
+        frames[-1] = fixture_frame(6, partial=True, record=None, spans=None)
+        trig["message"] = "worker 5 failed at step 6: injected failure"
+        culprit = {"lane": "worker-5", "stage": "worker_grads", "dur_s": None}
+    elif kind == "health_verdict":
+        warn = {"kind": "straggler", "severity": "warn", "step": 6,
+                "value": 0.2, "threshold": 0.015, "message": "step 13x median",
+                "detail": "lans-pool-3 — slowest stage 'allreduce' (2.0e-3s)"}
+        frames[-1]["verdicts"] = [warn]
+    elif kind == "skip_burst":
+        for f in frames[1:]:
+            f["record"]["skipped"] = True
+            f["applied_steps"] = frames[0]["step"]
+        trig["message"] = "3 consecutive scale backoffs"
+        culprit = {"lane": "coordinator", "stage": "loss_scale", "dur_s": None}
+    elif kind == "pool_poison":
+        trig["message"] = "dag: stage 'bucket-2' panicked and poisoned the region"
+        culprit = None
+    return {
+        "schema": BUNDLE_SCHEMA,
+        "trigger": trig,
+        "culprit": culprit,
+        "config": {"optimizer": "lans", "workers": "8", "seed": "42"},
+        "flight_steps": 8,
+        "frames": frames,
+        "verdicts": [v for f in frames for v in f["verdicts"]],
+        "registry": {"counters": {"wire.intra_bytes": 16384},
+                     "gauges": {"scaler.scale": 65536.0}},
+        "scaler": {"loss_scale": 65536.0, "overflows": 0},
+    }
+
+
+def self_test():
+    import copy
+
+    for kind in TRIGGER_KINDS:
+        check_bundle_doc(fixture_bundle(kind))  # every clean kind must pass
+
+    def corrupt(name, kind, mutate):
+        doc = copy.deepcopy(fixture_bundle(kind))
+        mutate(doc)
+        return name, doc
+
+    def drop(d, k):
+        d.pop(k)
+
+    cases = [
+        corrupt("wrong schema tag", "health_verdict",
+                lambda d: d.update(schema="bogus-v0")),
+        corrupt("unknown trigger kind", "health_verdict",
+                lambda d: d["trigger"].update(kind="gremlins")),
+        corrupt("empty trigger message", "health_verdict",
+                lambda d: d["trigger"].update(message="")),
+        corrupt("culprit missing entirely", "health_verdict",
+                lambda d: drop(d, "culprit")),
+        corrupt("culprit with empty lane", "health_verdict",
+                lambda d: d["culprit"].update(lane="")),
+        corrupt("typed config value", "health_verdict",
+                lambda d: d["config"].update(workers=8)),
+        corrupt("frames empty", "health_verdict",
+                lambda d: d.update(frames=[], verdicts=[])),
+        corrupt("frames exceed flight_steps", "health_verdict",
+                lambda d: d.update(flight_steps=2)),
+        corrupt("frame step gap", "health_verdict",
+                lambda d: d["frames"][2].update(step=9)),
+        corrupt("partial frame with a record", "worker_failure",
+                lambda d: d["frames"][-1].update(
+                    record=fixture_frame(6)["record"])),
+        corrupt("full frame without a record", "health_verdict",
+                lambda d: d["frames"][0].update(record=None)),
+        corrupt("negative counter delta", "health_verdict",
+                lambda d: d["frames"][0]["counter_deltas"].update(
+                    {"wire.intra_bytes": -4})),
+        corrupt("span missing timing", "health_verdict",
+                lambda d: drop(d["frames"][0]["spans"][0], "dur_s")),
+        corrupt("verdict without detail", "health_verdict",
+                lambda d: drop(d["frames"][-1]["verdicts"][0], "detail")),
+        corrupt("top-level verdicts out of sync", "health_verdict",
+                lambda d: d.update(verdicts=[])),
+        corrupt("trigger far past the window", "health_verdict",
+                lambda d: d["trigger"].update(step=20)),
+        corrupt("trigger before the window", "health_verdict",
+                lambda d: d["trigger"].update(step=3)),
+        corrupt("worker_failure without worker lane", "worker_failure",
+                lambda d: d["culprit"].update(lane="coordinator")),
+        corrupt("worker_failure ending on a full frame", "worker_failure",
+                lambda d: d["frames"][-1].update(
+                    partial=False, record=fixture_frame(6)["record"])),
+        corrupt("health_verdict without the warn", "health_verdict",
+                lambda d: d["frames"][-1]["verdicts"][0].update(severity="info")),
+        corrupt("skip_burst without the skips", "skip_burst",
+                lambda d: [f["record"].update(skipped=False)
+                           for f in d["frames"]]),
+        corrupt("pool_poison without a panic message", "pool_poison",
+                lambda d: d["trigger"].update(message="something went wrong")),
+        corrupt("negative registry counter", "health_verdict",
+                lambda d: d["registry"]["counters"].update(
+                    {"wire.intra_bytes": -1})),
+        corrupt("scaler missing entirely", "health_verdict",
+                lambda d: drop(d, "scaler")),
+    ]
+    # the health_verdict warn must be *at the trigger step*: move it off
+    moved = copy.deepcopy(fixture_bundle("health_verdict"))
+    moved["frames"][-1]["verdicts"][0]["step"] = 4
+    moved["verdicts"] = [v for f in moved["frames"] for v in f["verdicts"]]
+    cases.append(("health_verdict warn at the wrong step", moved))
+
+    for name, doc in cases:
+        try:
+            check_bundle_doc(doc)
+        except CheckError:
+            continue
+        print(f"check_postmortem: SELF-TEST FAIL: {name!r} was not caught",
+              file=sys.stderr)
+        sys.exit(1)
+
+    print(f"check_postmortem: self-test OK ({len(TRIGGER_KINDS)} clean "
+          f"fixtures pass, {len(cases)} corruptions caught)")
+
+
+def main():
+    if sys.argv[1:] == ["--self-test"]:
+        try:
+            self_test()
+        except CheckError as e:
+            print(f"check_postmortem: SELF-TEST FAIL: clean fixture rejected: {e}",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
+    if len(sys.argv) != 2:
+        print("usage: check_postmortem.py BUNDLE.json | --self-test",
+              file=sys.stderr)
+        sys.exit(1)
+    path = sys.argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_postmortem: FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    try:
+        kind, step, frames = check_bundle_doc(doc)
+    except CheckError as e:
+        print(f"check_postmortem: FAIL: {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"check_postmortem: OK: {path}: {kind} @ step {step}, "
+        f"{len(frames)} retained frame(s), schema {BUNDLE_SCHEMA} valid"
+    )
+
+
+if __name__ == "__main__":
+    main()
